@@ -1,0 +1,49 @@
+//! Quickstart: sort one array on a simulated 2-D OHHC and print the
+//! paper's headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ohhc_qsort::config::{Backend, Construction, Distribution, ExperimentConfig};
+use ohhc_qsort::coordinator::OhhcSorter;
+
+fn main() -> anyhow::Result<()> {
+    // One cell of the paper's sweep: 2-D OHHC, G = P (144 processors),
+    // 4 MB of random i32 keys, the paper's threaded-simulation backend.
+    let cfg = ExperimentConfig {
+        dimension: 2,
+        construction: Construction::FullGroup,
+        distribution: Distribution::Random,
+        elements: 1 << 20,
+        backend: Backend::Threaded,
+        workers: 0, // one OS thread per simulated processor, as in the paper
+        ..Default::default()
+    };
+
+    let sorter = OhhcSorter::new(&cfg)?;
+    let net = sorter.network();
+    println!(
+        "topology: {} groups × {} processors = {} (d={}, {})",
+        net.groups,
+        net.procs_per_group,
+        net.total_processors(),
+        cfg.dimension,
+        cfg.construction.label(),
+    );
+
+    let report = sorter.run()?;
+    println!("sorted {} keys", report.elements);
+    println!("  sequential: {:?}", report.sequential_time);
+    println!("  parallel:   {:?}", report.parallel_time);
+    println!(
+        "  speedup:    {:.3}x  ({:+.1}% — the paper's relative-speedup axis)",
+        report.speedup, report.speedup_pct
+    );
+    println!("  efficiency: {:.4}", report.efficiency);
+    println!(
+        "  local-sort work: {} comparisons, {} swaps across {} processors",
+        report.counters.comparisons, report.counters.swaps, report.processors
+    );
+    Ok(())
+}

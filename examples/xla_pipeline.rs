@@ -1,0 +1,66 @@
+//! XLA runtime tour: load every AOT artifact, run the Pallas partition
+//! kernel and the bitonic block sorter through PJRT, and time the
+//! native-vs-XLA divide engines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_pipeline
+//! ```
+
+use ohhc_qsort::config::DivideEngine;
+use ohhc_qsort::coordinator::{divide_native, divide_with_engine};
+use ohhc_qsort::runtime::{ArtifactRegistry, XlaSortBlocks};
+use ohhc_qsort::workload;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::open(Path::new("artifacts"))?;
+    println!(
+        "PJRT platform: {} ({} devices), chunk = {}",
+        reg.client().platform_name(),
+        reg.client().device_count(),
+        reg.chunk()
+    );
+    println!("{} artifacts:", reg.names().len());
+    for name in reg.names() {
+        let sig = reg.sig(&name)?;
+        println!(
+            "  {name:<28} {:>7} B  {} inputs → {} outputs",
+            sig.bytes,
+            sig.inputs.len(),
+            sig.outputs.len()
+        );
+    }
+
+    // Divide: native vs the L1 Pallas kernel through PJRT.
+    let n = 1 << 19;
+    let data = workload::random(n, 99);
+    println!("\ndivide engines on {n} keys, P = 144:");
+    let t0 = Instant::now();
+    let native = divide_native(&data, 144)?;
+    let t_native = t0.elapsed();
+    let t0 = Instant::now();
+    let xla = divide_with_engine(&data, 144, DivideEngine::Xla, Some(&reg))?;
+    let t_xla = t0.elapsed();
+    anyhow::ensure!(native.sizes() == xla.sizes(), "engines disagree");
+    println!("  native: {t_native:?}");
+    println!("  xla:    {t_xla:?}  (interpret-mode Pallas through PJRT CPU;");
+    println!("          real-TPU projection in DESIGN.md §Perf-estimates)");
+
+    // Bitonic block sorter.
+    println!("\nbitonic block sorter (XLA) on simulated processor payloads:");
+    let sorter = XlaSortBlocks::new(&reg, 1024)?;
+    for len in [500usize, 4096, 30_000] {
+        let payload = workload::random(len, len as u64);
+        let t0 = Instant::now();
+        let sorted = sorter.sort(&payload)?;
+        let dt = t0.elapsed();
+        let mut expect = payload;
+        expect.sort_unstable();
+        anyhow::ensure!(sorted == expect, "bitonic mismatch at {len}");
+        println!("  payload {len:>6} keys → sorted ✓ in {dt:?}");
+    }
+
+    println!("\nxla pipeline OK");
+    Ok(())
+}

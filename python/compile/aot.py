@@ -1,0 +1,152 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* for the rust runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Artifacts written (all shapes static, all outputs single tuples):
+
+  partition_n{N}_p{P}.hlo.txt   (x[N]i32, lo[1]i32, sub[1]i32) -> (ids[N], hist[P])
+  minmax_n{N}.hlo.txt           (x[N]i32) -> (min[1], max[1])
+  divide_n{N}_p{P}.hlo.txt      (x[N]i32) -> (ids[N], hist[P], lo[1], sub[1])
+  bitonic_n{N}_b{B}.hlo.txt     (x[N]i32) -> (sorted[N])
+
+P sweeps the eight OHHC processor counts of paper Table 1.1 (both G=P and
+G=P/2 constructions, d_h = 1..4).  A manifest.json records every artifact's
+signature so the rust registry can validate shapes at load time.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--chunk 65536]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Paper Table 1.1: processors per OHHC for d_h = 1..4.
+P_FULL = [36, 144, 576, 2304]  # G = P
+P_HALF = [18, 72, 288, 1152]  # G = P/2
+ALL_P = sorted(set(P_FULL + P_HALF))
+
+DEFAULT_CHUNK = 65536  # int32 elements per streamed chunk (256 KiB)
+BITONIC_BLOCKS = [1024, 4096]
+SPLITTER_P = [36, 144]  # PSRS-baseline splitter partition variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all(chunk: int):
+    """Yield (name, hlo_text, signature) for every artifact."""
+    s1 = _spec((1,))
+    sx = _spec((chunk,))
+
+    yield (
+        f"minmax_n{chunk}",
+        to_hlo_text(jax.jit(lambda x: model.minmax_chunk(x)).lower(sx)),
+        {"inputs": [["s32", [chunk]]], "outputs": [["s32", [1]], ["s32", [1]]]},
+    )
+
+    for p in ALL_P:
+        yield (
+            f"partition_n{chunk}_p{p}",
+            to_hlo_text(
+                jax.jit(
+                    lambda x, lo, sub, p=p: model.partition_chunk(
+                        x, lo, sub, num_buckets=p
+                    )
+                ).lower(sx, s1, s1)
+            ),
+            {
+                "inputs": [["s32", [chunk]], ["s32", [1]], ["s32", [1]]],
+                "outputs": [["s32", [chunk]], ["s32", [p]]],
+            },
+        )
+        yield (
+            f"divide_n{chunk}_p{p}",
+            to_hlo_text(
+                jax.jit(lambda x, p=p: model.divide(x, num_buckets=p)).lower(sx)
+            ),
+            {
+                "inputs": [["s32", [chunk]]],
+                "outputs": [
+                    ["s32", [chunk]],
+                    ["s32", [p]],
+                    ["s32", [1]],
+                    ["s32", [1]],
+                ],
+            },
+        )
+
+    for b in BITONIC_BLOCKS:
+        yield (
+            f"bitonic_n{chunk}_b{b}",
+            to_hlo_text(
+                jax.jit(lambda x, b=b: model.sort_chunk(x, block_size=b)).lower(sx)
+            ),
+            {"inputs": [["s32", [chunk]]], "outputs": [["s32", [chunk]]]},
+        )
+
+    # Splitter-based partition (PSRS baseline) at two representative
+    # processor counts (full sweep is cheap to add if needed).
+    from .kernels import splitter as splitter_kernel
+
+    for p in SPLITTER_P:
+        yield (
+            f"splitter_n{chunk}_p{p}",
+            to_hlo_text(
+                jax.jit(
+                    lambda x, sp, p=p: splitter_kernel.partition_by_splitters(
+                        x, sp, num_buckets=p
+                    )
+                ).lower(sx, _spec((p - 1,)))
+            ),
+            {
+                "inputs": [["s32", [chunk]], ["s32", [p - 1]]],
+                "outputs": [["s32", [chunk]], ["s32", [p]]],
+            },
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--chunk", type=int, default=DEFAULT_CHUNK)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest = {"chunk": args.chunk, "artifacts": {}}
+    total = 0
+    for name, text, sig in lower_all(args.chunk):
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        sig["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        sig["bytes"] = len(text)
+        manifest["artifacts"][name] = sig
+        total += len(text)
+        print(f"  wrote {path.name}  ({len(text)} chars)")
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"{len(manifest['artifacts'])} artifacts, {total} chars -> {out}")
+
+
+if __name__ == "__main__":
+    main()

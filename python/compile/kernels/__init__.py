@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the OHHC parallel Quick Sort pipeline.
+
+Two kernels implement the paper's compute hot-spots:
+
+* :mod:`.partition` — the "array division procedure" (paper §3.1): given a
+  block of ``int32`` keys plus the global ``lo``/``subdivider`` step point,
+  emit the target-bucket id of every element and a bucket-occupancy
+  histogram.  The histogram is computed as a one-hot matmul so it maps onto
+  the MXU on a real TPU.
+* :mod:`.bitonic` — a data-independent bitonic sorting network over a
+  VMEM-resident block, the TPU-friendly replacement for the branchy
+  sequential Quick Sort each simulated processor runs locally.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend (including the rust CPU client).  ``ref.py`` holds the
+pure-``jnp`` oracles pytest checks them against.
+"""
+
+from . import bitonic, partition, ref, splitter  # noqa: F401

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: bitonic sorting network over VMEM-resident blocks.
+
+Each simulated OHHC processor sorts its payload locally.  The paper uses
+sequential Quick Sort (branchy, data-dependent — fine on a CPU thread);
+the TPU-idiomatic equivalent is a **bitonic network**: ``log²(n)``
+compare-exchange stages, each a fully vectorized gather + min/max + select
+with *no* data-dependent control flow (DESIGN.md §Hardware-Adaptation).
+
+The grid dimension sorts many independent blocks at once — exactly the
+"one sub-array per processor" shape of the paper's algorithm.  The network
+is unrolled at trace time (the stage structure is static), so the lowered
+HLO is a flat chain of fused elementwise ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _bitonic_kernel(x_ref, o_ref, *, block: int):
+    """Sort one block ascending with a full bitonic network."""
+    x = x_ref[...]
+    idx = jax.lax.iota(jnp.int32, block)
+    k = 2
+    while k <= block:  # merge size doubles each stage
+        j = k // 2
+        while j >= 1:  # compare-exchange distance halves
+            partner = idx ^ j
+            px = x[partner]
+            # Ascending region if bit k of the index is clear.
+            up = (idx & k) == 0
+            # Lower index of the pair keeps min in ascending regions.
+            is_lower = idx < partner
+            keep_min = jnp.logical_xor(is_lower, jnp.logical_not(up))
+            mn = jnp.minimum(x, px)
+            mx = jnp.maximum(x, px)
+            x = jnp.where(keep_min, mn, mx)
+            j //= 2
+        k *= 2
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def sort_blocks(x, *, block_size: int = DEFAULT_BLOCK):
+    """Sort each ``block_size`` slice of ``x`` independently (ascending).
+
+    Args:
+      x: ``(n,) int32`` with ``n`` a multiple of ``block_size`` (power of 2).
+        Pad with ``i32::MAX`` to sort a shorter payload.
+
+    Returns:
+      ``(n,) int32`` with every block sorted.
+    """
+    n = x.shape[0]
+    if block_size & (block_size - 1) != 0:
+        raise ValueError(f"block_size={block_size} must be a power of two")
+    if n % block_size != 0:
+        raise ValueError(f"n={n} not a multiple of block_size={block_size}")
+    grid = (n // block_size,)
+    return pl.pallas_call(
+        functools.partial(_bitonic_kernel, block=block_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_size,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_size,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: the paper's array division procedure (§3.1).
+
+For every ``int32`` key the kernel computes its **target bucket**
+
+    bucket(v) = clamp((v - lo) // subdivider, 0, P - 1)
+
+where ``subdivider = (max - min) / P`` is the paper's step point, and
+simultaneously accumulates a **bucket occupancy histogram** so the
+coordinator can size the per-processor payloads without a second pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* the input array is streamed HBM→VMEM in ``block_size`` tiles via the
+  Pallas grid (``BlockSpec`` below expresses the schedule the paper's
+  threadblock-free CPU code does implicitly);
+* the bucket-id computation is element-wise (VPU);
+* the per-tile histogram is a ``one_hot(ids, P)ᵀ · 1`` contraction — a
+  ``(block, P)`` matmul shape that lands on the MXU with int accumulation;
+* the histogram output block is *revisited* by every grid step
+  (``index_map=lambda i: (0,)``) so it accumulates across tiles, the
+  canonical Pallas reduction pattern.
+
+Everything is lowered with ``interpret=True`` — on CPU the same HLO runs
+under the rust PJRT client; real-TPU numbers are estimated in DESIGN §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 8192 int32 = 32 KiB of keys in VMEM; with the (block, P)
+# one-hot intermediate at P=2304 the peak tile footprint is
+# 8192*2304*4 B ≈ 75 MiB *logically*, but XLA fuses the one-hot into the
+# reduction so only the (P,) accumulator materializes.  See DESIGN §Perf.
+DEFAULT_BLOCK = 8192
+
+
+def _partition_kernel(x_ref, lo_ref, sub_ref, ids_ref, hist_ref, *, num_buckets: int):
+    """One grid step: bucket-ids for this tile + histogram accumulation."""
+    x = x_ref[...]
+    lo = lo_ref[0]
+    sub = sub_ref[0]
+
+    # Element-wise bucket assignment (VPU).  Inputs are shifted by ``lo`` so
+    # the quotient is non-negative; clamp handles v == max landing on P.
+    ids = (x - lo) // sub
+    ids = jnp.clip(ids, 0, num_buckets - 1).astype(jnp.int32)
+    ids_ref[...] = ids
+
+    # Tile histogram as a one-hot contraction (MXU-shaped on real TPU).
+    one_hot = (ids[:, None] == jax.lax.iota(jnp.int32, num_buckets)[None, :])
+    tile_hist = jnp.sum(one_hot.astype(jnp.int32), axis=0)
+
+    # Accumulate across grid steps: zero on the first visit, add after.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += tile_hist
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_size"))
+def partition(x, lo, sub, *, num_buckets: int, block_size: int = DEFAULT_BLOCK):
+    """Fused bucket-id + histogram over a 1-D int32 array.
+
+    Args:
+      x: ``(n,) int32`` keys; ``n`` must be a multiple of ``block_size``.
+      lo: ``(1,) int32`` global minimum (the paper's ``min masterArray``).
+      sub: ``(1,) int32`` step point ``SubDivider`` (must be >= 1).
+      num_buckets: ``P`` — number of processors / target sub-arrays (static).
+      block_size: VMEM tile length (static).
+
+    Returns:
+      ``(ids, hist)`` — ``(n,) int32`` bucket per element and ``(num_buckets,)
+      int32`` occupancy counts.
+    """
+    n = x.shape[0]
+    if n % block_size != 0:
+        raise ValueError(f"n={n} not a multiple of block_size={block_size}")
+    grid = (n // block_size,)
+    return pl.pallas_call(
+        functools.partial(_partition_kernel, num_buckets=num_buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((num_buckets,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, lo, sub)
+
+
+def _minmax_kernel(x_ref, min_ref, max_ref):
+    """One grid step of the global min/max reduction."""
+    x = x_ref[...]
+    tile_min = jnp.min(x)
+    tile_max = jnp.max(x)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        min_ref[0] = tile_min
+        max_ref[0] = tile_max
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        min_ref[0] = jnp.minimum(min_ref[0], tile_min)
+        max_ref[0] = jnp.maximum(max_ref[0], tile_max)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def minmax(x, *, block_size: int = DEFAULT_BLOCK):
+    """Global (min, max) of a 1-D int32 array, tiled like :func:`partition`."""
+    n = x.shape[0]
+    if n % block_size != 0:
+        raise ValueError(f"n={n} not a multiple of block_size={block_size}")
+    grid = (n // block_size,)
+    return pl.pallas_call(
+        _minmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_size,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(x)

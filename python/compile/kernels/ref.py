@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are deliberately written with the most obvious jnp primitives —
+no pallas, no tiling — so a mismatch always implicates the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def subdivider(lo, hi, num_buckets: int):
+    """Paper §3.1 step point: ``SubDivider = (max - min) / P`` (floored, >= 1).
+
+    The paper divides the raw value by ``SubDivider``; we shift by ``lo``
+    first so the bucket index is well-defined for arbitrary signed inputs
+    (fidelity note in DESIGN.md §3).  Arithmetic is int32 (matching the
+    kernel and the paper's ``int`` keys): key ranges must span < 2^31.
+    """
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    return jnp.maximum((hi - lo) // num_buckets, 1).astype(jnp.int32)
+
+
+def bucket_ids(x, lo, sub, num_buckets: int):
+    """Target bucket of every element: ``clamp((x - lo) / sub, 0, P-1)``."""
+    ids = (jnp.asarray(x, jnp.int32) - jnp.asarray(lo, jnp.int32)) // jnp.asarray(
+        sub, jnp.int32
+    )
+    return jnp.clip(ids, 0, num_buckets - 1).astype(jnp.int32)
+
+
+def histogram(ids, num_buckets: int):
+    """Bucket occupancy counts (length ``num_buckets``)."""
+    return jnp.bincount(ids, length=num_buckets).astype(jnp.int32)
+
+
+def partition(x, lo, sub, num_buckets: int):
+    """Oracle for the fused partition kernel: (bucket ids, histogram)."""
+    ids = bucket_ids(x, lo, sub, num_buckets)
+    return ids, histogram(ids, num_buckets)
+
+
+def minmax(x):
+    """Oracle for the min/max reduction: (min, max) as int32 scalars."""
+    return jnp.min(x).astype(jnp.int32), jnp.max(x).astype(jnp.int32)
+
+
+def sort_block(x):
+    """Oracle for the bitonic block sorter (ascending)."""
+    return jnp.sort(x)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: splitter-based partition (the PSRS baseline's hot
+spot).
+
+Where the paper's step-point divider computes ``(v - lo) / SubDivider``,
+sample-sort algorithms (PSRS — see rust ``baselines::psrs``) bucket by a
+*sorted splitter list*: ``bucket(v) = #{s in splitters : v > s}``.  On TPU
+that count is a comparison matrix ``(block, P-1)`` reduced over the
+splitter axis — the same MXU-friendly shape as the partition kernel's
+one-hot histogram, and robust to skewed key distributions where the
+step-point divider collapses (see EXPERIMENTS.md ablation).
+
+Lowered with ``interpret=True`` like every kernel in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192
+
+
+def _splitter_kernel(x_ref, sp_ref, ids_ref, hist_ref, *, num_buckets: int):
+    """One grid step: splitter-rank bucket ids + histogram accumulation."""
+    x = x_ref[...]
+    sp = sp_ref[...]  # (num_buckets - 1,) sorted splitters
+    # bucket(v) = number of splitters strictly below v — a (block, P-1)
+    # comparison matrix summed over the splitter axis.
+    ids = jnp.sum(
+        (x[:, None] > sp[None, :]).astype(jnp.int32), axis=1
+    ).astype(jnp.int32)
+    ids_ref[...] = ids
+
+    one_hot = ids[:, None] == jax.lax.iota(jnp.int32, num_buckets)[None, :]
+    tile_hist = jnp.sum(one_hot.astype(jnp.int32), axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += tile_hist
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_size"))
+def partition_by_splitters(
+    x, splitters, *, num_buckets: int, block_size: int = DEFAULT_BLOCK
+):
+    """Bucket ``x`` by a sorted splitter list.
+
+    Args:
+      x: ``(n,) int32`` keys, ``n`` a multiple of ``block_size``.
+      splitters: ``(num_buckets - 1,) int32`` ascending splitters.
+      num_buckets: bucket count ``P`` (static).
+
+    Returns:
+      ``(ids, hist)`` — bucket per element and occupancy counts.
+    """
+    n = x.shape[0]
+    if n % block_size != 0:
+        raise ValueError(f"n={n} not a multiple of block_size={block_size}")
+    if splitters.shape != (num_buckets - 1,):
+        raise ValueError(
+            f"need {num_buckets - 1} splitters, got {splitters.shape}"
+        )
+    grid = (n // block_size,)
+    return pl.pallas_call(
+        functools.partial(_splitter_kernel, num_buckets=num_buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((num_buckets - 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((num_buckets,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, splitters)

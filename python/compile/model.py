@@ -1,0 +1,65 @@
+"""Layer-2 JAX compute graphs for the OHHC parallel Quick Sort.
+
+Three exported graphs, each calling the L1 Pallas kernels so they lower
+into the same HLO module:
+
+* :func:`divide` — the full array-division pipeline of paper §3.1 for a
+  single resident chunk: global min/max → SubDivider step point → fused
+  bucket-id + histogram.  Returns ``(ids, hist, lo, sub)``.
+* :func:`partition_chunk` — the chunked variant the rust coordinator uses
+  on large arrays: ``lo``/``sub`` are *inputs* (computed once globally by
+  :func:`minmax_chunk` reductions over all chunks), so the graph is pure
+  streaming with fixed shapes.
+* :func:`sort_chunk` — bitonic block sorter for local payload sorting.
+
+The rust runtime loads the AOT-lowered HLO of these graphs (see aot.py);
+python never runs on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic, partition
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_size"))
+def divide(x, *, num_buckets: int, block_size: int = partition.DEFAULT_BLOCK):
+    """Single-chunk array division: min/max + step point + partition.
+
+    Args:
+      x: ``(n,) int32`` master array chunk (n a multiple of ``block_size``).
+      num_buckets: ``P`` — processors in the target OHHC.
+
+    Returns:
+      ``(ids, hist, lo, sub)`` with shapes ``(n,), (P,), (1,), (1,)``.
+    """
+    lo, hi = partition.minmax(x, block_size=block_size)
+    sub = jnp.maximum((hi - lo) // num_buckets, 1).astype(jnp.int32)
+    ids, hist = partition.partition(
+        x, lo, sub, num_buckets=num_buckets, block_size=block_size
+    )
+    return ids, hist, lo, sub
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def minmax_chunk(x, *, block_size: int = partition.DEFAULT_BLOCK):
+    """Per-chunk (min, max); the caller folds across chunks."""
+    return partition.minmax(x, block_size=block_size)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_size"))
+def partition_chunk(
+    x, lo, sub, *, num_buckets: int, block_size: int = partition.DEFAULT_BLOCK
+):
+    """Streaming partition of one chunk with a precomputed step point."""
+    return partition.partition(
+        x, lo, sub, num_buckets=num_buckets, block_size=block_size
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def sort_chunk(x, *, block_size: int = bitonic.DEFAULT_BLOCK):
+    """Sort each ``block_size`` slice of the chunk (pad with i32::MAX)."""
+    return bitonic.sort_blocks(x, block_size=block_size)

@@ -1,0 +1,81 @@
+"""Bitonic block-sorter kernel vs jnp.sort oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bitonic, ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+@pytest.mark.parametrize("block", [64, 256, 1024])
+def test_single_block_sorted(block):
+    x = RNG.integers(-(2**30), 2**30, size=block, dtype=np.int32)
+    y = bitonic.sort_blocks(jnp.asarray(x), block_size=block)
+    np.testing.assert_array_equal(np.asarray(y), np.sort(x))
+
+
+def test_multi_block_independent():
+    block, nblocks = 256, 8
+    x = RNG.integers(0, 10**6, size=block * nblocks, dtype=np.int32)
+    y = np.asarray(bitonic.sort_blocks(jnp.asarray(x), block_size=block))
+    for b in range(nblocks):
+        seg = slice(b * block, (b + 1) * block)
+        np.testing.assert_array_equal(y[seg], np.sort(x[seg]))
+
+
+def test_padding_with_max_sentinel():
+    # Shorter payloads are padded with i32::MAX; sentinel sorts to the tail.
+    block = 128
+    payload = RNG.integers(0, 1000, size=77, dtype=np.int32)
+    x = np.full(block, np.iinfo(np.int32).max, dtype=np.int32)
+    x[:77] = payload
+    y = np.asarray(bitonic.sort_blocks(jnp.asarray(x), block_size=block))
+    np.testing.assert_array_equal(y[:77], np.sort(payload))
+    assert (y[77:] == np.iinfo(np.int32).max).all()
+
+
+def test_already_sorted_and_reversed():
+    block = 512
+    asc = np.arange(block, dtype=np.int32)
+    for x in (asc, asc[::-1].copy()):
+        y = np.asarray(bitonic.sort_blocks(jnp.asarray(x), block_size=block))
+        np.testing.assert_array_equal(y, asc)
+
+
+def test_duplicates_preserved():
+    block = 256
+    x = RNG.integers(0, 4, size=block, dtype=np.int32)  # heavy duplication
+    y = np.asarray(bitonic.sort_blocks(jnp.asarray(x), block_size=block))
+    np.testing.assert_array_equal(y, np.sort(x))
+    np.testing.assert_array_equal(np.bincount(y, minlength=4), np.bincount(x, minlength=4))
+
+
+def test_rejects_non_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        bitonic.sort_blocks(jnp.zeros(300, jnp.int32), block_size=300)
+
+
+def test_rejects_misaligned_length():
+    with pytest.raises(ValueError, match="multiple"):
+        bitonic.sort_blocks(jnp.zeros(100, jnp.int32), block_size=64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    block=st.sampled_from([32, 64, 128, 256]),
+    nblocks=st.integers(1, 4),
+)
+def test_bitonic_hypothesis_sweep(seed, block, nblocks):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**31), 2**31 - 1, size=block * nblocks, dtype=np.int64)
+    x = x.astype(np.int32)
+    y = np.asarray(bitonic.sort_blocks(jnp.asarray(x), block_size=block))
+    for b in range(nblocks):
+        seg = slice(b * block, (b + 1) * block)
+        expected = np.asarray(ref.sort_block(jnp.asarray(x[seg])))
+        np.testing.assert_array_equal(y[seg], expected)

@@ -1,0 +1,81 @@
+"""L2 graph tests: the divide pipeline and chunked variants compose."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xD1CE)
+
+
+def test_divide_end_to_end():
+    p = 36
+    x = RNG.integers(0, 2**24, size=8192, dtype=np.int32)
+    ids, hist, lo, sub = model.divide(jnp.asarray(x), num_buckets=p, block_size=2048)
+    assert lo[0] == x.min()
+    exp_sub = ref.subdivider(jnp.asarray(x.min()), jnp.asarray(x.max()), p)
+    assert sub[0] == exp_sub
+    rids, rhist = ref.partition(jnp.asarray(x), jnp.asarray(x.min()), exp_sub, p)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(rhist))
+
+
+def test_chunked_equals_single_shot():
+    """minmax_chunk folds + partition_chunk over chunks == divide in one go."""
+    p, chunk = 18, 2048
+    x = RNG.integers(-(2**20), 2**20, size=4 * chunk, dtype=np.int32)
+    xs = jnp.asarray(x)
+
+    # Global reduction across chunks (what the rust coordinator does).
+    lo, hi = np.int32(2**31 - 1), np.int32(-(2**31))
+    for c in range(4):
+        mn, mx = model.minmax_chunk(xs[c * chunk : (c + 1) * chunk], block_size=512)
+        lo, hi = min(lo, int(mn[0])), max(hi, int(mx[0]))
+    sub = int(ref.subdivider(jnp.asarray(lo), jnp.asarray(hi), p))
+
+    ids_parts, hist = [], np.zeros(p, np.int64)
+    for c in range(4):
+        ids_c, hist_c = model.partition_chunk(
+            xs[c * chunk : (c + 1) * chunk],
+            jnp.asarray([lo], jnp.int32),
+            jnp.asarray([sub], jnp.int32),
+            num_buckets=p,
+            block_size=512,
+        )
+        ids_parts.append(np.asarray(ids_c))
+        hist += np.asarray(hist_c)
+
+    one_ids, one_hist, one_lo, one_sub = model.divide(
+        xs, num_buckets=p, block_size=512
+    )
+    assert int(one_lo[0]) == lo and int(one_sub[0]) == sub
+    np.testing.assert_array_equal(np.concatenate(ids_parts), np.asarray(one_ids))
+    np.testing.assert_array_equal(hist, np.asarray(one_hist).astype(np.int64))
+
+
+def test_bucket_concatenation_is_sorted():
+    """The paper's no-merge property: sorting each bucket then concatenating
+    buckets in rank order yields the globally sorted array."""
+    p = 36
+    x = RNG.integers(0, 10**7, size=4096, dtype=np.int32)
+    ids, hist, _, _ = model.divide(jnp.asarray(x), num_buckets=p, block_size=1024)
+    ids = np.asarray(ids)
+    out = np.concatenate([np.sort(x[ids == b]) for b in range(p)])
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_sort_chunk_blocks():
+    x = RNG.integers(0, 2**30, size=4096, dtype=np.int32)
+    y = np.asarray(model.sort_chunk(jnp.asarray(x), block_size=1024))
+    for b in range(4):
+        seg = slice(b * 1024, (b + 1) * 1024)
+        np.testing.assert_array_equal(y[seg], np.sort(x[seg]))
+
+
+@pytest.mark.parametrize("p", [6, 72, 288])
+def test_divide_histogram_conservation(p):
+    x = RNG.integers(0, 2**28, size=2048, dtype=np.int32)
+    _, hist, _, _ = model.divide(jnp.asarray(x), num_buckets=p, block_size=512)
+    assert int(np.asarray(hist).sum()) == len(x)

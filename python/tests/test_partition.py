@@ -1,0 +1,107 @@
+"""Partition kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import partition, ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def _run(x: np.ndarray, p: int, block: int):
+    xs = jnp.asarray(x)
+    lo, hi = ref.minmax(xs)
+    sub = ref.subdivider(lo, hi, p)
+    ids, hist = partition.partition(
+        xs, jnp.asarray([lo]), jnp.asarray([sub]), num_buckets=p, block_size=block
+    )
+    rids, rhist = ref.partition(xs, lo, sub, p)
+    return np.asarray(ids), np.asarray(hist), np.asarray(rids), np.asarray(rhist)
+
+
+@pytest.mark.parametrize("p", [6, 18, 36, 144])
+@pytest.mark.parametrize("block", [512, 2048])
+def test_partition_matches_ref_random(p, block):
+    x = RNG.integers(-(2**20), 2**20, size=4 * block, dtype=np.int32)
+    ids, hist, rids, rhist = _run(x, p, block)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(hist, rhist)
+
+
+def test_partition_single_block():
+    x = RNG.integers(0, 1000, size=1024, dtype=np.int32)
+    ids, hist, rids, rhist = _run(x, 36, 1024)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(hist, rhist)
+
+
+def test_partition_histogram_is_conserved():
+    x = RNG.integers(0, 2**24, size=8192, dtype=np.int32)
+    _, hist, _, _ = _run(x, 72, 2048)
+    assert hist.sum() == len(x)
+
+
+def test_partition_constant_array_one_bucket():
+    # max == min -> subdivider clamps to 1, all ids identical (bucket 0).
+    x = np.full(2048, 42, dtype=np.int32)
+    ids, hist, _, _ = _run(x, 36, 1024)
+    assert (ids == 0).all()
+    assert hist[0] == 2048 and hist[1:].sum() == 0
+
+def test_partition_ids_are_monotone_in_value():
+    # Bucket id must be non-decreasing in the key value: this is what makes
+    # rank-order concatenation produce a sorted array with no merge step.
+    x = np.sort(RNG.integers(-(2**16), 2**16, size=4096, dtype=np.int32))
+    ids, _, _, _ = _run(x, 18, 1024)
+    assert (np.diff(ids) >= 0).all()
+
+
+def test_partition_extremes_land_in_end_buckets():
+    x = RNG.integers(0, 2**20, size=2048, dtype=np.int32)
+    xs = jnp.asarray(x)
+    lo, hi = ref.minmax(xs)
+    sub = ref.subdivider(lo, hi, 36)
+    ids, _ = partition.partition(
+        xs, jnp.asarray([lo]), jnp.asarray([sub]), num_buckets=36, block_size=1024
+    )
+    ids = np.asarray(ids)
+    assert ids[x.argmin()] == 0
+    assert ids[x.argmax()] == 35  # clamp puts v == max in the last bucket
+
+
+def test_minmax_matches_ref():
+    x = RNG.integers(-(2**30), 2**30, size=16384, dtype=np.int32)
+    mn, mx = partition.minmax(jnp.asarray(x), block_size=2048)
+    assert mn[0] == x.min() and mx[0] == x.max()
+
+
+def test_rejects_misaligned_length():
+    x = jnp.zeros(1000, jnp.int32)
+    with pytest.raises(ValueError, match="multiple"):
+        partition.partition(
+            x, jnp.zeros(1, jnp.int32), jnp.ones(1, jnp.int32), num_buckets=6,
+            block_size=512,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    p=st.sampled_from([6, 18, 36, 72]),
+    nblocks=st.integers(1, 4),
+    blk=st.sampled_from([256, 512, 1024]),
+    lo=st.integers(-(2**20), 2**20),
+    span=st.integers(1, 2**22),
+)
+def test_partition_hypothesis_sweep(seed, p, nblocks, blk, lo, span):
+    """Hypothesis sweep over shapes, bucket counts, and value ranges."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(lo, lo + span + 1, size=nblocks * blk, dtype=np.int64)
+    x = x.astype(np.int32)
+    ids, hist, rids, rhist = _run(x, p, blk)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(hist, rhist)
+    assert hist.sum() == len(x)

@@ -1,0 +1,103 @@
+"""Splitter-partition kernel vs jnp.searchsorted oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import splitter
+
+RNG = np.random.default_rng(0x5711)
+
+
+def oracle(x: np.ndarray, splitters: np.ndarray, p: int):
+    ids = np.searchsorted(splitters, x, side="left")
+    # side="left": count of splitters < x ... we need strictly-below count
+    # of "v > s" = count of s < v = searchsorted left.
+    hist = np.bincount(ids, minlength=p)
+    return ids.astype(np.int32), hist.astype(np.int32)
+
+
+def run(x, splitters, p, block):
+    ids, hist = splitter.partition_by_splitters(
+        jnp.asarray(x), jnp.asarray(splitters), num_buckets=p, block_size=block
+    )
+    return np.asarray(ids), np.asarray(hist)
+
+
+@pytest.mark.parametrize("p", [4, 36, 144])
+def test_matches_searchsorted(p):
+    x = RNG.integers(0, 2**24, size=2048, dtype=np.int32)
+    splitters = np.sort(RNG.integers(0, 2**24, size=p - 1, dtype=np.int32))
+    ids, hist = run(x, splitters, p, 512)
+    rids, rhist = oracle(x, splitters, p)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(hist, rhist)
+
+
+def test_monotone_ids_on_sorted_input():
+    x = np.sort(RNG.integers(0, 10**6, size=1024, dtype=np.int32))
+    splitters = np.sort(RNG.integers(0, 10**6, size=35, dtype=np.int32))
+    ids, _ = run(x, splitters, 36, 256)
+    assert (np.diff(ids) >= 0).all()
+
+
+def test_skewed_input_balances_with_sample_splitters():
+    # The PSRS property: sample-derived splitters balance a skewed input
+    # that the step-point divider would collapse into one bucket.
+    n, p = 4096, 16
+    skew = np.concatenate(
+        [
+            RNG.integers(0, 100, size=int(n * 0.95)),
+            RNG.integers(0, 2**24, size=n - int(n * 0.95)),
+        ]
+    ).astype(np.int32)
+    RNG.shuffle(skew)
+    samples = np.sort(skew)[:: n // (p * 4)]
+    splitters = np.sort(samples)[:: max(1, len(samples) // (p - 1))][: p - 1]
+    while len(splitters) < p - 1:
+        splitters = np.append(splitters, splitters[-1])
+    _, hist = run(skew, np.sort(splitters.astype(np.int32)), p, 1024)
+    assert hist.sum() == n
+    assert hist.max() < n * 0.5  # far from total collapse
+
+
+def test_splitter_boundaries_exact():
+    # v == splitter goes LEFT (count of strictly-smaller splitters).
+    x = np.array([5, 5, 5, 6, 4, 0, 9] + [0] * 249, dtype=np.int32)
+    splitters = np.array([5], dtype=np.int32)
+    ids, hist = run(x, splitters, 2, 256)
+    assert ids[0] == 0 and ids[3] == 1 and ids[4] == 0 and ids[6] == 1
+    assert hist.sum() == 256
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="multiple"):
+        splitter.partition_by_splitters(
+            jnp.zeros(100, jnp.int32), jnp.zeros(3, jnp.int32), num_buckets=4,
+            block_size=64,
+        )
+    with pytest.raises(ValueError, match="splitters"):
+        splitter.partition_by_splitters(
+            jnp.zeros(128, jnp.int32), jnp.zeros(9, jnp.int32), num_buckets=4,
+            block_size=64,
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    p=st.sampled_from([2, 8, 36]),
+    blk=st.sampled_from([128, 512]),
+    nblocks=st.integers(1, 3),
+)
+def test_hypothesis_sweep(seed, p, blk, nblocks):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**20), 2**20, size=blk * nblocks, dtype=np.int32)
+    splitters = np.sort(rng.integers(-(2**20), 2**20, size=p - 1, dtype=np.int32))
+    ids, hist = run(x, splitters, p, blk)
+    rids, rhist = oracle(x, splitters, p)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(hist, rhist)
+    assert hist.sum() == len(x)

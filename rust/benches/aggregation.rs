@@ -1,0 +1,55 @@
+//! Bench: the three-phase gather (Figs 3.1–3.5) in isolation — schedule
+//! computation, threaded gather, and the DES event loop, per
+//! dimension/construction.  Backs the Theorem 3/6 discussion and the L3
+//! §Perf pass (event-queue overhead).
+
+use ohhc_qsort::config::{Construction, LinkModel};
+use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::sim::engine::DesSimulator;
+use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::workload;
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("== aggregation: schedule computation");
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let net = Ohhc::new(d, c).unwrap();
+            b.run(&format!("plan/d={d}/{}", c.label()), || gather_plan(&net));
+        }
+    }
+
+    println!("\n== aggregation: threaded gather (pre-sorted buckets, waves)");
+    for d in 1..=3 {
+        let net = Ohhc::new(d, Construction::FullGroup).unwrap();
+        let plans = gather_plan(&net);
+        let n = net.total_processors();
+        let per = 4096usize;
+        let buckets: Vec<Vec<i32>> = (0..n)
+            .map(|i| {
+                let mut v = workload::random(per, i as u64);
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let total = n * per;
+        let sim = ThreadedSimulator::new(&net, &plans).with_mode(ThreadMode::Waves);
+        b.run(&format!("gather/waves/d={d}"), || {
+            sim.run(buckets.clone(), total).unwrap()
+        });
+    }
+
+    println!("\n== aggregation: DES event loop");
+    for d in 1..=4 {
+        let net = Ohhc::new(d, Construction::FullGroup).unwrap();
+        let plans = gather_plan(&net);
+        let sizes = vec![4096usize; net.total_processors()];
+        let des = DesSimulator::new(&net, &plans, LinkModel::default());
+        b.run(&format!("des/d={d}/{} procs", net.total_processors()), || {
+            des.run(&sizes, None).unwrap()
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: the array-division hot path (paper §3.1) — native rust vs the
+//! XLA AOT artifact (L1 Pallas partition kernel via PJRT).
+//!
+//! This is the §Perf focus bench: the divide runs once per sort but
+//! touches every key twice (min/max + bucket scatter).
+
+use ohhc_qsort::config::DivideEngine;
+use ohhc_qsort::coordinator::{divide_native, divide_with_engine};
+use ohhc_qsort::runtime::ArtifactRegistry;
+use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::workload;
+use std::path::Path;
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("== divide: native engine by size and bucket count");
+    for n in [1 << 18, 1 << 20, 1 << 22] {
+        let data = workload::random(n, 3);
+        for p in [36usize, 576, 2304] {
+            b.run(&format!("native/n={n}/p={p}"), || {
+                divide_native(&data, p).unwrap()
+            });
+        }
+    }
+
+    println!("\n== divide: XLA artifact engine (PJRT CPU, interpret-mode Pallas)");
+    match ArtifactRegistry::open(Path::new("artifacts")) {
+        Ok(reg) => {
+            let data = workload::random(1 << 18, 3);
+            for p in [36usize, 576] {
+                b.run(&format!("xla/n={}/p={p}", data.len()), || {
+                    divide_with_engine(&data, p, DivideEngine::Xla, Some(&reg)).unwrap()
+                });
+            }
+        }
+        Err(e) => println!("  (skipped: {e}; run `make artifacts`)"),
+    }
+
+    println!("\n== divide: phase breakdown (native, n=2^20, p=576)");
+    let data = workload::random(1 << 20, 3);
+    b.run("phase/minmax-scan", || {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for &v in &data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    });
+    b.run("phase/full-divide", || divide_native(&data, 576).unwrap());
+}

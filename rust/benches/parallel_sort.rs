@@ -1,0 +1,88 @@
+//! Bench: end-to-end OHHC parallel sort — the paper's Figs 6.2/6.3 path.
+//!
+//! One case per (dimension × construction) on random input plus the 4-D
+//! distribution sweep, on both threaded modes.
+
+use ohhc_qsort::config::{
+    Backend, Construction, Distribution, ExperimentConfig,
+};
+use ohhc_qsort::coordinator::OhhcSorter;
+use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::util::par;
+use ohhc_qsort::workload::Workload;
+
+fn cfg(d: u32, c: Construction, dist: Distribution, n: usize, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dimension: d,
+        construction: c,
+        distribution: dist,
+        elements: n,
+        backend: Backend::Threaded,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let n = 1 << 20;
+    let pool = par::available_workers();
+
+    println!("== parallel_sort: Fig 6.2 — dimension sweep, random, G=P (waves)");
+    for d in 1..=4 {
+        let c = cfg(d, Construction::FullGroup, Distribution::Random, n, pool);
+        let sorter = OhhcSorter::new(&c).unwrap();
+        let w = Workload::new(Distribution::Random, n, 42);
+        b.run(&format!("fig6.2/d={d}/n={n}"), || sorter.run_on(&w).unwrap());
+    }
+
+    println!("\n== parallel_sort: Fig 6.3 — distribution sweep, d=4, G=P (waves)");
+    for dist in Distribution::ALL {
+        let c = cfg(4, Construction::FullGroup, dist, n, pool);
+        let sorter = OhhcSorter::new(&c).unwrap();
+        let w = Workload::new(dist, n, 42);
+        b.run(&format!("fig6.3/{}", dist.label()), || sorter.run_on(&w).unwrap());
+    }
+
+    println!("\n== parallel_sort: construction ablation, d=2, random");
+    for (label, c) in [
+        ("G=P", Construction::FullGroup),
+        ("G=P/2", Construction::HalfGroup),
+    ] {
+        let c = cfg(2, c, Distribution::Random, n, pool);
+        let sorter = OhhcSorter::new(&c).unwrap();
+        let w = Workload::new(Distribution::Random, n, 42);
+        b.run(&format!("ablation/construction={label}"), || {
+            sorter.run_on(&w).unwrap()
+        });
+    }
+
+    println!("\n== parallel_sort: paper-faithful direct threads vs waves, d=1, G=P");
+    for (label, workers) in [("direct(36 threads)", 0usize), ("waves(pool)", pool)] {
+        let c = cfg(1, Construction::FullGroup, Distribution::Random, n, workers);
+        let sorter = OhhcSorter::new(&c).unwrap();
+        let w = Workload::new(Distribution::Random, n, 42);
+        b.run(&format!("ablation/mode={label}"), || sorter.run_on(&w).unwrap());
+    }
+
+    println!("\n== parallel_sort: baseline sorts (related-work comparators, P≈144)");
+    let data = Workload::new(Distribution::Random, n, 42).data;
+    b.run("baseline/psrs(p=144)", || {
+        ohhc_qsort::baselines::psrs_sort(&data, 144)
+    });
+    b.run("baseline/hypercube-bitonic(2^7)", || {
+        ohhc_qsort::baselines::hypercube_bitonic_sort(&data, 7)
+    });
+    b.run("baseline/fork-join(depth=3)", || {
+        let mut v = data.clone();
+        ohhc_qsort::baselines::shared_fork_sort(&mut v, 3);
+        v
+    });
+    b.run("baseline/ohhc-step-point(d=2,G=P)", || {
+        let c = cfg(2, Construction::FullGroup, Distribution::Random, n, pool);
+        OhhcSorter::new(&c)
+            .unwrap()
+            .run_on(&Workload::new(Distribution::Random, n, 42))
+            .unwrap()
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench: sequential Quick Sort — the paper's Fig 6.1 path.
+//!
+//! Covers all four distributions at three sizes, the four pivot
+//! strategies (ablation: why the paper's numbers imply a middle pivot),
+//! and `slice::sort_unstable` as the roofline reference for §Perf.
+
+use ohhc_qsort::config::Distribution;
+use ohhc_qsort::sort::{quicksort_with, PivotStrategy};
+use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::workload;
+
+fn main() {
+    let b = Bench::from_env();
+    println!("== seq_sort: Fig 6.1 — sequential quicksort by distribution/size");
+    for dist in Distribution::ALL {
+        for n in [1 << 18, 1 << 20, 1 << 22] {
+            let data = workload::generate(dist, n, 42);
+            b.run(&format!("fig6.1/{}/n={n}", dist.label()), || {
+                let mut v = data.clone();
+                quicksort_with(&mut v, PivotStrategy::Middle)
+            });
+        }
+    }
+
+    println!("\n== seq_sort: pivot-strategy ablation (random, n=2^20)");
+    let data = workload::random(1 << 20, 7);
+    for pivot in [
+        PivotStrategy::Middle,
+        PivotStrategy::MedianOfThree,
+        PivotStrategy::Random,
+    ] {
+        b.run(&format!("ablation/pivot={pivot:?}"), || {
+            let mut v = data.clone();
+            quicksort_with(&mut v, pivot)
+        });
+    }
+
+    println!("\n== seq_sort: roofline reference");
+    b.run("roofline/slice::sort_unstable/n=2^20", || {
+        let mut v = data.clone();
+        v.sort_unstable();
+        v
+    });
+    b.run("roofline/clone-only/n=2^20", || data.clone());
+}

@@ -1,0 +1,65 @@
+//! Bench: topology construction, routing, and the structural-property
+//! sweep — OHHC vs classic baselines (ring / mesh / hypercube) at matched
+//! node counts.  Backs the §1.5 connectivity motivation ablation.
+
+use ohhc_qsort::config::Construction;
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::topology::routing;
+use ohhc_qsort::topology::{hypercube, mesh, ring, NetworkProperties};
+use ohhc_qsort::util::bench::Bench;
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("== topology: OHHC construction");
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            b.run(&format!("build/d={d}/{}", c.label()), || {
+                Ohhc::new(d, c).unwrap()
+            });
+        }
+    }
+
+    println!("\n== topology: deterministic routing throughput (d=3, G=P)");
+    let net = Ohhc::new(3, Construction::FullGroup).unwrap();
+    let n = net.total_processors();
+    b.run("route/all-pairs-sampled", || {
+        let mut hops = 0usize;
+        for s in (0..n).step_by(17) {
+            for t in (0..n).step_by(13) {
+                hops += routing::route(&net, net.addr(s), net.addr(t)).len() - 1;
+            }
+        }
+        hops
+    });
+
+    println!("\n== topology: structural properties, OHHC vs baselines (36 nodes)");
+    let ohhc1 = Ohhc::new(1, Construction::FullGroup).unwrap();
+    b.run("props/ohhc-d1(36)", || {
+        NetworkProperties::compute(ohhc1.graph())
+    });
+    b.run("props/ring(36)", || {
+        NetworkProperties::compute(&ring::ring_graph(36))
+    });
+    b.run("props/mesh(6x6)", || {
+        NetworkProperties::compute(&mesh::mesh_graph(6, 6))
+    });
+    b.run("props/hypercube(2^5=32)", || {
+        NetworkProperties::compute(&hypercube::hypercube_graph(5))
+    });
+
+    println!("\n== topology: properties at scale (d=3 full, 576 nodes)");
+    let big = Ohhc::new(3, Construction::FullGroup).unwrap();
+    b.run("props/ohhc-d3(576)", || {
+        NetworkProperties::compute(big.graph())
+    });
+
+    println!("\n== summary table (printed once, for EXPERIMENTS.md):");
+    for d in 1..=3 {
+        let net = Ohhc::new(d, Construction::FullGroup).unwrap();
+        let p = NetworkProperties::compute(net.graph());
+        println!("  OHHC d={d} (G=P): {p}");
+        let r = NetworkProperties::compute(&ring::ring_graph(p.nodes));
+        println!("  ring({}):       {r}", p.nodes);
+    }
+}

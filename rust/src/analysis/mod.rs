@@ -1,0 +1,7 @@
+//! Analytical model — closed forms of the paper's Theorems 1–6 (§4,
+//! Table 4.1) and their validation against the simulators.
+
+pub mod theorems;
+pub mod validate;
+
+pub use theorems::*;

@@ -1,0 +1,144 @@
+//! Closed forms of the paper's analytical assessment (§4 / Table 4.1).
+
+/// Theorem 1 — average parallel time complexity `Θ((n/P)·log(n/P))`,
+/// returned as the Θ-argument (comparisons).
+pub fn theorem1_parallel_work(n: f64, p: f64) -> f64 {
+    let chunk = n / p;
+    if chunk < 2.0 {
+        chunk
+    } else {
+        chunk * chunk.log2()
+    }
+}
+
+/// Sequential counterpart `Θ(n·log n)`.
+pub fn sequential_work(n: f64) -> f64 {
+    if n < 2.0 {
+        n
+    } else {
+        n * n.log2()
+    }
+}
+
+/// Theorem 3 — total communication steps `12·G·d_h − 2` (source →
+/// destinations → source).
+///
+/// **Fidelity note:** the paper's derivation counts `(d_h − 1)·6` inter-cell
+/// steps per group, i.e. it implicitly assumes `P = 6·d_h` processors per
+/// group.  That matches the true per-group tree size `P − 1 = 6·2^(d−1) − 1`
+/// only for `d_h ≤ 2`; from `d_h = 3` the closed form undercounts the tree
+/// the algorithm actually walks.  [`exact_tree_steps`] gives the exact
+/// count; `validate::theorem3` compares both against the DES trace.
+pub fn theorem3_comm_steps(groups: usize, dimension: u32) -> usize {
+    12 * groups * dimension as usize - 2
+}
+
+/// Exact link traversals of one scatter+gather over the schedule tree:
+/// `2·(G·P − 1)` (every non-master node receives once and sends once).
+pub fn exact_tree_steps(groups: usize, procs_per_group: usize) -> usize {
+    2 * (groups * procs_per_group - 1)
+}
+
+/// Electrical-step component of Theorem 3: `12·G·d_h − 2·G`.
+pub fn theorem3_electrical_steps(groups: usize, dimension: u32) -> usize {
+    12 * groups * dimension as usize - 2 * groups
+}
+
+/// Optical-step component of Theorem 3: `2·G − 2`.
+pub fn theorem3_optical_steps(groups: usize) -> usize {
+    2 * groups - 2
+}
+
+/// Theorem 4 — speedup `Θ(P·log n / (log n − log P))`.
+pub fn theorem4_speedup(n: f64, p: f64) -> f64 {
+    p * n.log2() / (n.log2() - p.log2())
+}
+
+/// Theorem 5 — efficiency `Θ(log n / (log n − log P))`.
+pub fn theorem5_efficiency(n: f64, p: f64) -> f64 {
+    n.log2() / (n.log2() - p.log2())
+}
+
+/// Theorem 6 — message delay `Θ(t · (2·d_h + 3))` with `t = n/P` on
+/// average and `t ≈ n` in the worst case of partitioning.
+pub fn theorem6_message_delay(t: f64, dimension: u32) -> f64 {
+    t * (2.0 * dimension as f64 + 3.0)
+}
+
+/// Longest store-and-forward route in links: group diameter, optical hop,
+/// group diameter again — `2·(d_h + 1) + 1 = 2·d_h + 3` (the paper's `L`).
+pub fn longest_route_links(dimension: u32) -> u32 {
+    2 * dimension + 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem1_matches_hand_values() {
+        // n = 1024, P = 4 → chunk 256, work 256·8 = 2048.
+        assert!((theorem1_parallel_work(1024.0, 4.0) - 2048.0).abs() < 1e-9);
+        assert!((sequential_work(1024.0) - 10240.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem3_closed_form_values() {
+        // d=1, G=6 (full): 12·6·1 − 2 = 70; electrical 60, optical 10.
+        assert_eq!(theorem3_comm_steps(6, 1), 70);
+        assert_eq!(theorem3_electrical_steps(6, 1), 60);
+        assert_eq!(theorem3_optical_steps(6), 10);
+        // Components sum to the total.
+        for (g, d) in [(6usize, 1u32), (12, 2), (24, 3), (48, 4)] {
+            assert_eq!(
+                theorem3_electrical_steps(g, d) + theorem3_optical_steps(g),
+                theorem3_comm_steps(g, d)
+            );
+        }
+    }
+
+    #[test]
+    fn theorem3_vs_exact_tree() {
+        // The paper's form matches the exact tree for d ≤ 2 …
+        assert_eq!(theorem3_comm_steps(6, 1), exact_tree_steps(6, 6));
+        assert_eq!(theorem3_comm_steps(12, 2), exact_tree_steps(12, 12));
+        // … and undercounts from d = 3 (documented fidelity gap).
+        assert!(theorem3_comm_steps(24, 3) < exact_tree_steps(24, 24));
+        assert!(theorem3_comm_steps(48, 4) < exact_tree_steps(48, 48));
+    }
+
+    #[test]
+    fn theorem4_5_consistency() {
+        // E = S / P must hold between the closed forms.
+        for (n, p) in [(1e6, 36.0), (4e6, 144.0), (1.5e7, 2304.0)] {
+            let s = theorem4_speedup(n, p);
+            let e = theorem5_efficiency(n, p);
+            assert!((s / p - e).abs() < 1e-9, "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_p_efficiency_shrinks() {
+        let n = 1e7;
+        let s36 = theorem4_speedup(n, 36.0);
+        let s2304 = theorem4_speedup(n, 2304.0);
+        assert!(s2304 > s36);
+        let e36 = theorem5_efficiency(n, 36.0);
+        let e2304 = theorem5_efficiency(n, 2304.0);
+        // Efficiency DEGRADES toward … wait: Θ(log n/(log n − log P))
+        // *increases* with P — the Θ form hides the constant-factor
+        // communication costs that make measured efficiency fall (the
+        // paper's Figs 6.12–6.19).  Both behaviours are real; we assert
+        // the closed form here and the measured trend in the figures.
+        assert!(e2304 > e36);
+    }
+
+    #[test]
+    fn theorem6_delay_shapes() {
+        assert_eq!(longest_route_links(1), 5);
+        assert_eq!(longest_route_links(4), 11);
+        let avg = theorem6_message_delay(1e6 / 36.0, 1);
+        let worst = theorem6_message_delay(1e6, 1);
+        assert!(worst / avg > 30.0);
+    }
+}

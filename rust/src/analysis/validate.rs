@@ -1,0 +1,87 @@
+//! Empirical validation of the analytical model against the DES.
+//!
+//! The paper derives Theorems 3 and 6 but never measures them (its
+//! threaded simulation has no link model).  Here the DES trace supplies
+//! the measured counterparts, and the comparison is part of the test
+//! suite and the `table_4_1` figure output.
+
+use crate::analysis::theorems;
+use crate::config::{Construction, LinkModel};
+use crate::schedule::gather_plan;
+use crate::sim::engine::DesSimulator;
+use crate::topology::ohhc::Ohhc;
+
+/// Measured-vs-analytical comparison for one topology.
+#[derive(Debug, Clone)]
+pub struct Theorem3Check {
+    /// OHHC dimension.
+    pub dimension: u32,
+    /// Groups.
+    pub groups: usize,
+    /// Paper's closed form `12·G·d_h − 2`.
+    pub paper_form: usize,
+    /// Exact tree steps `2·(G·P − 1)`.
+    pub exact_form: usize,
+    /// Steps measured from the DES trace.
+    pub measured: usize,
+    /// Optical steps measured.
+    pub measured_optical: usize,
+    /// Paper's optical component `2·G − 2`.
+    pub paper_optical: usize,
+}
+
+/// Run the DES once on a uniform workload and compare step counts.
+pub fn theorem3(dimension: u32, construction: Construction) -> Theorem3Check {
+    let net = Ohhc::new(dimension, construction).expect("valid dimension");
+    let plans = gather_plan(&net);
+    let n = net.total_processors();
+    let sizes = vec![64usize; n];
+    let out = DesSimulator::new(&net, &plans, LinkModel::default())
+        .run(&sizes, None)
+        .expect("DES run");
+    let (elec, opt) = out.trace.steps();
+    Theorem3Check {
+        dimension,
+        groups: net.groups,
+        paper_form: theorems::theorem3_comm_steps(net.groups, dimension),
+        exact_form: theorems::exact_tree_steps(net.groups, net.procs_per_group),
+        measured: elec + opt,
+        measured_optical: opt,
+        paper_optical: theorems::theorem3_optical_steps(net.groups),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_steps_equal_exact_tree_form() {
+        for d in 1..=3 {
+            for c in [Construction::FullGroup, Construction::HalfGroup] {
+                let chk = theorem3(d, c);
+                assert_eq!(chk.measured, chk.exact_form, "d={d} {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_form_matches_exact_for_low_dimensions_full_group() {
+        // The paper's 12·G·d_h − 2 equals the exact tree count at d ≤ 2
+        // (where P = 6·d_h holds), and optical counts match at every d.
+        for d in 1..=2 {
+            let chk = theorem3(d, Construction::FullGroup);
+            assert_eq!(chk.paper_form, chk.measured, "d={d}");
+        }
+        for d in 1..=4 {
+            let chk = theorem3(d, Construction::FullGroup);
+            assert_eq!(chk.measured_optical, chk.paper_optical, "d={d}");
+        }
+    }
+
+    #[test]
+    fn paper_form_undercounts_at_high_dimension() {
+        let chk = theorem3(3, Construction::FullGroup);
+        assert!(chk.paper_form < chk.measured);
+    }
+}

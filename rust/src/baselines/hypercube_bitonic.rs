@@ -1,0 +1,160 @@
+//! Bitonic sort on a binary hypercube — the classic network-sort baseline
+//! for interconnection-topology papers.
+//!
+//! `P = 2^k` processors each hold `n/P` keys.  The algorithm is the
+//! block-wise bitonic network: for every stage `(k, j)` of the bitonic
+//! schedule, processor `i` compare-splits its block with partner `i ⊕ j`
+//! across a hypercube link, keeping the low half when it should ascend
+//! and the high half otherwise.  Link traversals are counted so the
+//! ablation bench can compare against the OHHC gather tree's
+//! `2·(G·P − 1)`.
+
+use crate::sort::quicksort;
+
+/// Outcome of a hypercube bitonic sort.
+#[derive(Debug)]
+pub struct BitonicOutcome {
+    /// The sorted keys.
+    pub sorted: Vec<i32>,
+    /// Hypercube link traversals performed (2 per compare-split: both
+    /// partners ship their block).
+    pub link_traversals: usize,
+    /// Compare-split stages executed: `k(k+1)/2` for `P = 2^k`.
+    pub stages: usize,
+}
+
+/// Sort on a `2^log_p`-processor hypercube.
+pub fn hypercube_bitonic_sort(data: &[i32], log_p: u32) -> BitonicOutcome {
+    let p = 1usize << log_p;
+    let n = data.len();
+    if n == 0 {
+        return BitonicOutcome {
+            sorted: Vec::new(),
+            link_traversals: 0,
+            stages: 0,
+        };
+    }
+
+    // Distribute contiguous blocks, padded so every processor holds the
+    // same count (sentinels sort to the top and are stripped at the end).
+    let block = n.div_ceil(p);
+    let mut blocks: Vec<Vec<i32>> = (0..p)
+        .map(|i| {
+            let lo = (i * block).min(n);
+            let hi = ((i + 1) * block).min(n);
+            let mut b = data[lo..hi].to_vec();
+            b.resize(block, i32::MAX);
+            b
+        })
+        .collect();
+
+    // Local sorts seed the network.
+    for b in &mut blocks {
+        quicksort(b);
+    }
+
+    let mut traversals = 0usize;
+    let mut stages = 0usize;
+    let mut k = 2usize;
+    while k <= p {
+        let mut j = k / 2;
+        while j >= 1 {
+            stages += 1;
+            for i in 0..p {
+                let partner = i ^ j;
+                if i < partner {
+                    let ascending = i & k == 0;
+                    compare_split(&mut blocks, i, partner, ascending);
+                    traversals += 2; // both blocks cross the link
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+
+    let mut sorted: Vec<i32> = blocks.concat();
+    sorted.truncate(n);
+    BitonicOutcome {
+        sorted,
+        link_traversals: traversals,
+        stages,
+    }
+}
+
+/// Merge two sorted blocks; `lo_idx` keeps the low half when `ascending`.
+fn compare_split(blocks: &mut [Vec<i32>], lo_idx: usize, hi_idx: usize, ascending: bool) {
+    let block = blocks[lo_idx].len();
+    let mut merged = Vec::with_capacity(2 * block);
+    {
+        let (a, b) = (&blocks[lo_idx], &blocks[hi_idx]);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            if a[i] <= b[j] {
+                merged.push(a[i]);
+                i += 1;
+            } else {
+                merged.push(b[j]);
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&a[i..]);
+        merged.extend_from_slice(&b[j..]);
+    }
+    if ascending {
+        blocks[lo_idx].copy_from_slice(&merged[..block]);
+        blocks[hi_idx].copy_from_slice(&merged[block..]);
+    } else {
+        blocks[lo_idx].copy_from_slice(&merged[block..]);
+        blocks[hi_idx].copy_from_slice(&merged[..block]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::workload;
+
+    #[test]
+    fn sorts_all_distributions() {
+        for dist in Distribution::ALL {
+            for log_p in [0u32, 2, 5] {
+                let data = workload::generate(dist, 20_000, 13);
+                let out = hypercube_bitonic_sort(&data, log_p);
+                let mut expect = data;
+                expect.sort_unstable();
+                assert_eq!(out.sorted, expect, "{dist:?} 2^{log_p}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_count_is_k_choose_triangle() {
+        // P = 2^k → k(k+1)/2 compare-split stages.
+        let data = workload::random(4096, 1);
+        for (log_p, expect) in [(1u32, 1usize), (2, 3), (3, 6), (4, 10)] {
+            let out = hypercube_bitonic_sort(&data, log_p);
+            assert_eq!(out.stages, expect, "2^{log_p}");
+        }
+    }
+
+    #[test]
+    fn traversal_count_scales_with_p_log2_p() {
+        // Each stage moves every block across a link: P traversals/stage.
+        let data = workload::random(4096, 2);
+        let out = hypercube_bitonic_sort(&data, 4);
+        assert_eq!(out.link_traversals, 16 * 10); // P · stages
+    }
+
+    #[test]
+    fn uneven_and_tiny_inputs() {
+        for n in [0usize, 1, 5, 1000] {
+            let data = workload::random(n, n as u64 + 1);
+            let out = hypercube_bitonic_sort(&data, 3);
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(out.sorted, expect, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline parallel sorts the paper's related-work section compares
+//! against (multithreaded Quick Sort variants [5–7], hypercube-style
+//! network sorts), implemented on the same substrates so the ablation
+//! benches can answer *"is the OHHC step-point design the interesting
+//! part, or would any parallel sort do?"*
+//!
+//! * [`shared_fork`] — shared-memory fork/join Quick Sort (the classic
+//!   multithreaded variant of refs [5–7]): partition in place, fork the
+//!   halves onto new threads down to a depth budget.
+//! * [`psrs`] — Parallel Sorting by Regular Sampling: sample-based
+//!   splitters instead of the paper's value-range step points; robust to
+//!   skew where the step-point divider is not.
+//! * [`hypercube_bitonic`] — bitonic compare-split sort on the binary
+//!   hypercube (the classic network-sort baseline for interconnection
+//!   topologies).
+
+pub mod hypercube_bitonic;
+pub mod psrs;
+pub mod shared_fork;
+
+pub use hypercube_bitonic::hypercube_bitonic_sort;
+pub use psrs::psrs_sort;
+pub use shared_fork::shared_fork_sort;

@@ -1,0 +1,86 @@
+//! Shared-memory fork/join Quick Sort — the multithreaded baseline of the
+//! paper's refs [5–7]: no interconnection topology, just recursive
+//! partition with the two halves forked onto OS threads down to a depth
+//! budget, then sequential Quick Sort below it.
+
+use crate::sort::{quicksort, SortCounters};
+
+/// Sort in place with `2^fork_depth` maximum concurrent branches.
+/// Returns summed counters from the sequential leaves.
+pub fn shared_fork_sort(data: &mut [i32], fork_depth: u32) -> SortCounters {
+    fn go(data: &mut [i32], depth: u32) -> SortCounters {
+        if data.len() < 2 {
+            return SortCounters::default();
+        }
+        if depth == 0 || data.len() < 4096 {
+            return quicksort(data);
+        }
+        // Three-way partition around the middle element (out-of-place for
+        // clarity — this is a baseline, and the buffer is reused by the
+        // copy-back).  Equal keys settle in the middle and never recurse.
+        let pivot = data[data.len() / 2];
+        let mut less = Vec::with_capacity(data.len() / 2);
+        let mut greater = Vec::with_capacity(data.len() / 2);
+        let mut equal = 0usize;
+        for &v in data.iter() {
+            match v.cmp(&pivot) {
+                std::cmp::Ordering::Less => less.push(v),
+                std::cmp::Ordering::Equal => equal += 1,
+                std::cmp::Ordering::Greater => greater.push(v),
+            }
+        }
+        let (nl, ng) = (less.len(), greater.len());
+        data[..nl].copy_from_slice(&less);
+        data[nl..nl + equal].fill(pivot);
+        data[nl + equal..].copy_from_slice(&greater);
+        let (left, rest) = data.split_at_mut(nl);
+        let (_, right) = rest.split_at_mut(equal);
+        debug_assert_eq!(right.len(), ng);
+        let (cl, cr) = std::thread::scope(|scope| {
+            let hl = scope.spawn(move || go(left, depth - 1));
+            let cr = go(right, depth - 1);
+            (hl.join().expect("fork panicked"), cr)
+        });
+        cl + cr
+    }
+    go(data, fork_depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::sort::is_sorted;
+    use crate::workload;
+
+    #[test]
+    fn sorts_all_distributions_at_depths() {
+        for dist in Distribution::ALL {
+            for depth in [0, 1, 3] {
+                let mut v = workload::generate(dist, 50_000, 7);
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                shared_fork_sort(&mut v, depth);
+                assert_eq!(v, expect, "{dist:?} depth={depth}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_edge_cases() {
+        for v in [vec![], vec![5], vec![2, 1], vec![3; 100]] {
+            let mut s = v.clone();
+            shared_fork_sort(&mut s, 2);
+            assert!(is_sorted(&s));
+            assert_eq!(s.len(), v.len());
+        }
+    }
+
+    #[test]
+    fn counters_come_from_leaves() {
+        let mut v = workload::random(100_000, 3);
+        let c = shared_fork_sort(&mut v, 2);
+        assert!(c.comparisons > 0);
+        assert!(is_sorted(&v));
+    }
+}

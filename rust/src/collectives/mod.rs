@@ -1,0 +1,23 @@
+//! Collective communication primitives on the OHHC.
+//!
+//! The paper's algorithm is one specific collective composition
+//! (scatter → compute → gather).  This module provides the standard
+//! collective menu on the same topology — broadcast, scatter, gather,
+//! reduce, all-reduce — each as a *static schedule* (lists of
+//! `(step, src, dst)` link traversals) plus an executor, so alternative
+//! sort algorithms (see [`crate::baselines`]) and future OHHC work can
+//! reuse them.  Every schedule is validated against the topology (each
+//! hop is a physical link) and counted against its analytic bound.
+//!
+//! Schedules reuse the paper's gather tree (Figs 3.1–3.5): broadcast is
+//! the reverse of gather, reduce shares gather's structure with an
+//! associative combiner, all-reduce is reduce + broadcast.
+
+mod schedule;
+
+pub use schedule::{
+    all_reduce_steps, broadcast_schedule, gather_schedule, reduce, CollectiveStep,
+};
+
+#[cfg(test)]
+mod tests;

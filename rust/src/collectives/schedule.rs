@@ -1,0 +1,100 @@
+//! Collective schedules derived from the gather tree.
+
+use crate::schedule::NodePlan;
+use crate::sim::threaded::gather_wave_order;
+use crate::topology::graph::LinkKind;
+use crate::topology::ohhc::Ohhc;
+
+/// One link traversal of a collective, tagged with its wave index
+/// (traversals in the same wave are concurrent on disjoint links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollectiveStep {
+    /// Parallel wave this traversal belongs to (0-based).
+    pub wave: usize,
+    /// Sender flat id.
+    pub src: usize,
+    /// Receiver flat id.
+    pub dst: usize,
+    /// Link medium.
+    pub kind: LinkKind,
+}
+
+/// Depth of every node in the gather tree (master = 0).
+fn tree_depths(net: &Ohhc, plans: &[NodePlan]) -> Vec<usize> {
+    let n = net.total_processors();
+    let mut depth = vec![0usize; n];
+    for id in 0..n {
+        let mut cur = id;
+        let mut d = 0;
+        while let Some(parent) = plans[cur].last().send_to {
+            cur = net.id(parent);
+            d += 1;
+        }
+        depth[id] = d;
+    }
+    depth
+}
+
+/// Gather schedule: every non-master node sends its (accumulated) payload
+/// to its tree parent, deepest nodes first.  Wave `w` holds the nodes at
+/// depth `max_depth − w`, so a node's children always fire before it.
+pub fn gather_schedule(net: &Ohhc, plans: &[NodePlan]) -> Vec<CollectiveStep> {
+    let depth = tree_depths(net, plans);
+    let max_depth = depth.iter().copied().max().unwrap_or(0);
+    let mut steps = Vec::with_capacity(net.total_processors().saturating_sub(1));
+    for id in gather_wave_order(net, plans) {
+        if let Some(parent) = plans[id].last().send_to {
+            let dst = net.id(parent);
+            steps.push(CollectiveStep {
+                wave: max_depth - depth[id],
+                src: id,
+                dst,
+                kind: net
+                    .graph()
+                    .edge_kind(id, dst)
+                    .expect("tree edge must be physical"),
+            });
+        }
+    }
+    steps
+}
+
+/// Broadcast (= scatter) schedule: the gather tree reversed, shallow
+/// nodes first.  Identical traversal count, mirrored wave order.
+pub fn broadcast_schedule(net: &Ohhc, plans: &[NodePlan]) -> Vec<CollectiveStep> {
+    let depth = tree_depths(net, plans);
+    let mut steps: Vec<CollectiveStep> = gather_schedule(net, plans)
+        .into_iter()
+        .map(|s| CollectiveStep {
+            wave: depth[s.src] - 1, // parent's depth
+            src: s.dst,
+            dst: s.src,
+            kind: s.kind,
+        })
+        .collect();
+    steps.sort_by_key(|s| s.wave);
+    steps
+}
+
+/// Execute a reduction over per-node values with combiner `f`, following
+/// the gather schedule.  Returns the master's reduced value.
+pub fn reduce<T: Clone>(
+    net: &Ohhc,
+    plans: &[NodePlan],
+    values: &[T],
+    mut f: impl FnMut(&T, &T) -> T,
+) -> T {
+    assert_eq!(values.len(), net.total_processors());
+    let mut acc: Vec<T> = values.to_vec();
+    for step in gather_schedule(net, plans) {
+        acc[step.dst] = f(&acc[step.dst], &acc[step.src]);
+    }
+    acc[0].clone()
+}
+
+/// Link-traversal count of an all-reduce (reduce + broadcast) — the
+/// quantity Theorem 3 bounds for the sort's scatter+gather pair, reused
+/// here: `2·(G·P − 1)`.
+pub fn all_reduce_steps(net: &Ohhc) -> usize {
+    2 * (net.total_processors() - 1)
+}

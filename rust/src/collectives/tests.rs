@@ -1,0 +1,131 @@
+//! Collective schedule validation.
+
+use super::*;
+use crate::config::Construction;
+use crate::schedule::gather_plan;
+use crate::topology::ohhc::Ohhc;
+
+fn net(d: u32, c: Construction) -> Ohhc {
+    Ohhc::new(d, c).unwrap()
+}
+
+#[test]
+fn gather_schedule_covers_every_non_master_once() {
+    for d in 1..=3 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let n = net(d, c);
+            let plans = gather_plan(&n);
+            let steps = gather_schedule(&n, &plans);
+            assert_eq!(steps.len(), n.total_processors() - 1, "d={d} {c:?}");
+            let mut seen = std::collections::HashSet::new();
+            for s in &steps {
+                assert!(seen.insert(s.src), "node {} sends twice", s.src);
+                assert!(n.graph().has_edge(s.src, s.dst));
+            }
+            assert!(!seen.contains(&0), "master must not send");
+        }
+    }
+}
+
+#[test]
+fn waves_respect_dependencies() {
+    // A node's send wave must come strictly after all its children's.
+    let n = net(2, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let steps = gather_schedule(&n, &plans);
+    let wave_of: std::collections::HashMap<usize, usize> =
+        steps.iter().map(|s| (s.src, s.wave)).collect();
+    for s in &steps {
+        if let Some(&parent_wave) = wave_of.get(&s.dst) {
+            assert!(
+                s.wave < parent_wave,
+                "{} (wave {}) not before parent {} (wave {})",
+                s.src,
+                s.wave,
+                s.dst,
+                parent_wave
+            );
+        }
+    }
+}
+
+#[test]
+fn broadcast_is_gather_reversed() {
+    let n = net(2, Construction::HalfGroup);
+    let plans = gather_plan(&n);
+    let g = gather_schedule(&n, &plans);
+    let b = broadcast_schedule(&n, &plans);
+    assert_eq!(g.len(), b.len());
+    let g_edges: std::collections::HashSet<(usize, usize)> =
+        g.iter().map(|s| (s.src, s.dst)).collect();
+    for s in &b {
+        assert!(g_edges.contains(&(s.dst, s.src)), "{s:?} not a reversed edge");
+    }
+    // Broadcast waves are non-decreasing and start at the master.
+    assert_eq!(b[0].src, 0);
+    assert!(b.windows(2).all(|w| w[0].wave <= w[1].wave));
+}
+
+#[test]
+fn broadcast_reaches_every_node() {
+    let n = net(3, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let mut reached = vec![false; n.total_processors()];
+    reached[0] = true;
+    for s in broadcast_schedule(&n, &plans) {
+        assert!(reached[s.src], "node {} forwards before receiving", s.src);
+        reached[s.dst] = true;
+    }
+    assert!(reached.iter().all(|&r| r));
+}
+
+#[test]
+fn reduce_computes_sum_and_max() {
+    let n = net(1, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let values: Vec<u64> = (0..n.total_processors() as u64).collect();
+    let sum = reduce(&n, &plans, &values, |a, b| a + b);
+    assert_eq!(sum, (0..36).sum::<u64>());
+    let max = reduce(&n, &plans, &values, |a, b| *a.max(b));
+    assert_eq!(max, 35);
+}
+
+#[test]
+fn reduce_is_deterministic_for_noncommutative_observation() {
+    // Tree reduction fixes the combine order; same inputs → same result
+    // even for a non-commutative combiner (string concat length proxy).
+    let n = net(1, Construction::HalfGroup);
+    let plans = gather_plan(&n);
+    let values: Vec<String> = (0..n.total_processors())
+        .map(|i| format!("<{i}>"))
+        .collect();
+    let a = reduce(&n, &plans, &values, |x, y| format!("{x}{y}"));
+    let b = reduce(&n, &plans, &values, |x, y| format!("{x}{y}"));
+    assert_eq!(a, b);
+    // Every node's tag appears exactly once.
+    for i in 0..n.total_processors() {
+        assert_eq!(a.matches(&format!("<{i}>")).count(), 1, "{a}");
+    }
+}
+
+#[test]
+fn all_reduce_step_bound_matches_theorem3_exact_form() {
+    for d in 1..=4 {
+        let n = net(d, Construction::FullGroup);
+        assert_eq!(
+            all_reduce_steps(&n),
+            crate::analysis::theorems::exact_tree_steps(n.groups, n.procs_per_group)
+        );
+    }
+}
+
+#[test]
+fn optical_steps_in_gather_equal_nonzero_groups() {
+    let n = net(2, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let optical = gather_schedule(&n, &plans)
+        .iter()
+        .filter(|s| s.kind == crate::topology::LinkKind::Optical)
+        .count();
+    assert_eq!(optical, n.groups - 1);
+}

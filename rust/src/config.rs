@@ -1,0 +1,438 @@
+//! Experiment configuration: the knobs the paper sweeps (§5) plus
+//! simulator backends.  Configs can be built in code or loaded from a
+//! simple `key = value` file (one assignment per line, `#` comments) —
+//! see `examples/experiment.conf`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// OHHC construction rule (paper §1.5, Table 1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Construction {
+    /// `G = P`: as many groups as processors per group (full OHHC).
+    FullGroup,
+    /// `G = P/2`: half as many groups as processors per group.
+    HalfGroup,
+}
+
+impl Construction {
+    /// Number of groups for a given per-group processor count.
+    pub fn groups(self, procs_per_group: usize) -> usize {
+        match self {
+            Construction::FullGroup => procs_per_group,
+            Construction::HalfGroup => procs_per_group / 2,
+        }
+    }
+
+    /// Short label used in figure series / CSV headers.
+    pub fn label(self) -> &'static str {
+        match self {
+            Construction::FullGroup => "G=P",
+            Construction::HalfGroup => "G=P/2",
+        }
+    }
+
+    /// Parse from config text (`full` / `half`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "full" | "g=p" | "full_group" => Ok(Construction::FullGroup),
+            "half" | "g=p/2" | "half_group" => Ok(Construction::HalfGroup),
+            other => Err(Error::Config(format!("unknown construction `{other}`"))),
+        }
+    }
+}
+
+/// Input distribution (paper §5: random, sorted, reverse sorted, local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// Uniform random keys.
+    Random,
+    /// Already sorted ascending.
+    Sorted,
+    /// Sorted descending (the paper's "reversed sorted").
+    ReverseSorted,
+    /// The paper's "local distribution": values clustered around their
+    /// position so each region of the array spans a narrow value band.
+    Local,
+}
+
+impl Distribution {
+    /// All four distributions in the paper's presentation order.
+    pub const ALL: [Distribution; 4] = [
+        Distribution::Random,
+        Distribution::Sorted,
+        Distribution::ReverseSorted,
+        Distribution::Local,
+    ];
+
+    /// Label used in figures / CSV.
+    pub fn label(self) -> &'static str {
+        match self {
+            Distribution::Random => "random",
+            Distribution::Sorted => "sorted",
+            Distribution::ReverseSorted => "reverse_sorted",
+            Distribution::Local => "local",
+        }
+    }
+
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "random" => Ok(Distribution::Random),
+            "sorted" => Ok(Distribution::Sorted),
+            "reverse_sorted" | "reversed" => Ok(Distribution::ReverseSorted),
+            "local" => Ok(Distribution::Local),
+            other => Err(Error::Config(format!("unknown distribution `{other}`"))),
+        }
+    }
+}
+
+/// Which simulation backend executes the parallel algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// OS threads + channels — the paper's own methodology (§5).
+    Threaded,
+    /// Discrete-event simulation with electrical/optical link models.
+    DiscreteEvent,
+}
+
+impl Backend {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threaded" => Ok(Backend::Threaded),
+            "des" | "discrete_event" => Ok(Backend::DiscreteEvent),
+            other => Err(Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// How the array-division (bucket id + histogram) hot path is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivideEngine {
+    /// Pure-rust implementation (default fast path).
+    Native,
+    /// The AOT-compiled XLA artifact (L1 Pallas kernel via PJRT).
+    Xla,
+}
+
+impl DivideEngine {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(DivideEngine::Native),
+            "xla" => Ok(DivideEngine::Xla),
+            other => Err(Error::Config(format!("unknown divide engine `{other}`"))),
+        }
+    }
+}
+
+/// Link timing parameters for the discrete-event backend.
+///
+/// Defaults follow the optoelectronic literature's usual assumption that an
+/// optical OTIS hop has lower latency and much higher bandwidth than an
+/// electronic hop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Fixed per-hop latency of an electronic (intra-group) link, in ns.
+    pub electrical_latency_ns: f64,
+    /// Bytes/ns of an electronic link.
+    pub electrical_bandwidth: f64,
+    /// Fixed per-hop latency of an optical (inter-group) link, in ns.
+    pub optical_latency_ns: f64,
+    /// Bytes/ns of an optical link.
+    pub optical_bandwidth: f64,
+    /// Virtual ns charged per key-comparison of local compute.
+    pub compute_ns_per_cmp: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            electrical_latency_ns: 50.0,
+            electrical_bandwidth: 1.0, // ~1 GB/s electronic
+            optical_latency_ns: 25.0,
+            optical_bandwidth: 16.0, // ~16 GB/s optical
+            compute_ns_per_cmp: 1.0,
+        }
+    }
+}
+
+/// A single experiment: one cell of the paper's 216-run sweep.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// OHHC dimension `d_h` (paper sweeps 1..=4).
+    pub dimension: u32,
+    /// `G = P` or `G = P/2`.
+    pub construction: Construction,
+    /// Input key distribution.
+    pub distribution: Distribution,
+    /// Number of `i32` keys (paper: 10–60 MB → 2.5–15 M keys).
+    pub elements: usize,
+    /// RNG seed for workload generation (fixed for reproducibility).
+    pub seed: u64,
+    /// Simulation backend.
+    pub backend: Backend,
+    /// Division engine for the scatter phase.
+    pub divide_engine: DivideEngine,
+    /// DES link model (ignored by the threaded backend — the paper's
+    /// conclusion notes thread simulation cannot express link speeds).
+    pub link_model: LinkModel,
+    /// Worker threads for the threaded backend; `0` = one OS thread per
+    /// simulated processor (the paper's method, oversubscribed).
+    pub workers: usize,
+    /// Directory holding `*.hlo.txt` AOT artifacts.
+    pub artifact_dir: PathBuf,
+    /// Repetitions for timing figures (median reported).
+    pub repetitions: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dimension: 1,
+            construction: Construction::FullGroup,
+            distribution: Distribution::Random,
+            elements: 1 << 20,
+            seed: 0x0511C0DE,
+            backend: Backend::Threaded,
+            divide_engine: DivideEngine::Native,
+            link_model: LinkModel::default(),
+            workers: 0,
+            artifact_dir: PathBuf::from("artifacts"),
+            repetitions: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Processors per OHHC group: `6 * 2^(d-1)` (paper §1.4).
+    pub fn procs_per_group(&self) -> usize {
+        6 * (1 << (self.dimension as usize - 1))
+    }
+
+    /// Number of groups under the configured construction.
+    pub fn groups(&self) -> usize {
+        self.construction.groups(self.procs_per_group())
+    }
+
+    /// Total processors = `G * P` (paper Table 1.1 "# of processors").
+    pub fn total_processors(&self) -> usize {
+        self.groups() * self.procs_per_group()
+    }
+
+    /// Validate the configuration against the paper's parameter space.
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=6).contains(&self.dimension) {
+            return Err(Error::Config(format!(
+                "dimension must be 1..=6 (paper sweeps 1..=4), got {}",
+                self.dimension
+            )));
+        }
+        if self.elements == 0 {
+            return Err(Error::Config("elements must be > 0".into()));
+        }
+        if self.elements < self.total_processors() {
+            return Err(Error::Config(format!(
+                "elements ({}) < total processors ({}); every processor needs \
+                 a chance at a payload",
+                self.elements,
+                self.total_processors()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Load a config from a `key = value` file (see
+    /// `examples/experiment.conf` for all keys).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = ExperimentConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad = |e: String| Error::Config(format!("line {}: {e}", lineno + 1));
+            match key {
+                "dimension" => {
+                    cfg.dimension = value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "construction" => {
+                    cfg.construction =
+                        Construction::parse(value).map_err(|e| bad(e.to_string()))?
+                }
+                "distribution" => {
+                    cfg.distribution =
+                        Distribution::parse(value).map_err(|e| bad(e.to_string()))?
+                }
+                "elements" => cfg.elements = value.parse().map_err(|e| bad(format!("{e}")))?,
+                "seed" => cfg.seed = value.parse().map_err(|e| bad(format!("{e}")))?,
+                "backend" => {
+                    cfg.backend = Backend::parse(value).map_err(|e| bad(e.to_string()))?
+                }
+                "divide_engine" => {
+                    cfg.divide_engine =
+                        DivideEngine::parse(value).map_err(|e| bad(e.to_string()))?
+                }
+                "workers" => cfg.workers = value.parse().map_err(|e| bad(format!("{e}")))?,
+                "artifact_dir" => cfg.artifact_dir = PathBuf::from(value),
+                "repetitions" => {
+                    cfg.repetitions = value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "electrical_latency_ns" => {
+                    cfg.link_model.electrical_latency_ns =
+                        value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "electrical_bandwidth" => {
+                    cfg.link_model.electrical_bandwidth =
+                        value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "optical_latency_ns" => {
+                    cfg.link_model.optical_latency_ns =
+                        value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "optical_bandwidth" => {
+                    cfg.link_model.optical_bandwidth =
+                        value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                "compute_ns_per_cmp" => {
+                    cfg.link_model.compute_ns_per_cmp =
+                        value.parse().map_err(|e| bad(format!("{e}")))?
+                }
+                other => return Err(bad(format!("unknown key `{other}`"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Paper array sizes: 10–60 MB of `i32` (§5), scaled by `scale` so the
+    /// full sweep fits a session budget (`scale = 1.0` is paper scale).
+    pub fn paper_sizes(scale: f64) -> Vec<usize> {
+        [10usize, 20, 30, 40, 50, 60]
+            .iter()
+            .map(|mb| ((mb * (1 << 20) / 4) as f64 * scale) as usize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_1_1_full_group_counts() {
+        // Paper Table 1.1, G = P column.
+        let expect = [(1, 6, 36), (2, 12, 144), (3, 24, 576), (4, 48, 2304)];
+        for (d, groups, total) in expect {
+            let cfg = ExperimentConfig {
+                dimension: d,
+                construction: Construction::FullGroup,
+                ..Default::default()
+            };
+            assert_eq!(cfg.groups(), groups, "d={d} groups");
+            assert_eq!(cfg.total_processors(), total, "d={d} processors");
+        }
+    }
+
+    #[test]
+    fn table_1_1_half_group_counts() {
+        // Paper Table 1.1, G = P/2 column.
+        let expect = [(1, 3, 18), (2, 6, 72), (3, 12, 288), (4, 24, 1152)];
+        for (d, groups, total) in expect {
+            let cfg = ExperimentConfig {
+                dimension: d,
+                construction: Construction::HalfGroup,
+                ..Default::default()
+            };
+            assert_eq!(cfg.groups(), groups, "d={d} groups");
+            assert_eq!(cfg.total_processors(), total, "d={d} processors");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_dimension() {
+        let cfg = ExperimentConfig {
+            dimension: 0,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = ExperimentConfig {
+            dimension: 7,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_tiny_arrays() {
+        let cfg = ExperimentConfig {
+            dimension: 4,
+            elements: 100, // < 2304 processors
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn paper_sizes_scale() {
+        let full = ExperimentConfig::paper_sizes(1.0);
+        assert_eq!(full[0], 10 * (1 << 20) / 4); // 10 MB of i32
+        assert_eq!(full.len(), 6);
+        let tenth = ExperimentConfig::paper_sizes(0.1);
+        assert!(tenth[5] < full[5] / 9);
+    }
+
+    #[test]
+    fn config_file_round_trip() {
+        let dir = std::env::temp_dir().join("ohhc_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.conf");
+        std::fs::write(
+            &path,
+            "# comment\n\
+             dimension = 2\n\
+             construction = half   # inline comment\n\
+             distribution = sorted\n\
+             elements = 123456\n\
+             backend = des\n\
+             divide_engine = xla\n\
+             optical_bandwidth = 32.0\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.dimension, 2);
+        assert_eq!(cfg.construction, Construction::HalfGroup);
+        assert_eq!(cfg.distribution, Distribution::Sorted);
+        assert_eq!(cfg.elements, 123456);
+        assert_eq!(cfg.backend, Backend::DiscreteEvent);
+        assert_eq!(cfg.divide_engine, DivideEngine::Xla);
+        assert_eq!(cfg.link_model.optical_bandwidth, 32.0);
+    }
+
+    #[test]
+    fn config_file_rejects_unknown_keys() {
+        let dir = std::env::temp_dir().join("ohhc_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.conf");
+        std::fs::write(&path, "no_such_key = 1\n").unwrap();
+        assert!(ExperimentConfig::from_file(&path).is_err());
+        std::fs::write(&path, "dimension 2\n").unwrap();
+        assert!(ExperimentConfig::from_file(&path).is_err());
+    }
+
+    #[test]
+    fn enum_parsers() {
+        assert!(Construction::parse("full").is_ok());
+        assert!(Construction::parse("xxx").is_err());
+        assert!(Distribution::parse("reversed").is_ok());
+        assert!(Backend::parse("threaded").is_ok());
+        assert!(DivideEngine::parse("xla").is_ok());
+    }
+}

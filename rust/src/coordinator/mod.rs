@@ -1,0 +1,17 @@
+//! The coordinator: the paper's end-to-end parallel Quick Sort (§3.2).
+//!
+//! 1. **Divide** (§3.1) — compute the SubDivider step point and bucket
+//!    every key ([`divide_native`]); natively or through the XLA artifact.
+//! 2. **Scatter** — hand each simulated processor its bucket.
+//! 3. **Local sort + three-phase gather** — run the static schedule on the
+//!    threaded backend (wall clock, the paper's method) or the DES
+//!    (virtual time + link models).
+//! 4. **Verify** — the reassembled output must be a sorted permutation of
+//!    the input (checked on every run; the paper's "automatically sorted"
+//!    claim is enforced, not assumed).
+
+mod divide;
+mod ohhc_sort;
+
+pub use divide::{bucket_of, divide_native, divide_with_engine, BucketFn, Divided};
+pub use ohhc_sort::{OhhcSorter, SortReport};

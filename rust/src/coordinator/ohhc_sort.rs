@@ -1,0 +1,276 @@
+//! End-to-end OHHC parallel Quick Sort driver.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::coordinator::divide::{divide_with_engine, Divided};
+use crate::error::{Error, Result};
+use crate::runtime::ArtifactRegistry;
+use crate::schedule::{gather_plan, NodePlan};
+use crate::sim::engine::DesSimulator;
+use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
+use crate::sort::{is_sorted, quicksort, SortCounters};
+use crate::topology::ohhc::Ohhc;
+use crate::workload::Workload;
+
+/// Everything one experiment run produces — the raw material for every
+/// figure in the paper's §6.
+#[derive(Debug)]
+pub struct SortReport {
+    /// Keys sorted.
+    pub elements: usize,
+    /// Total processors simulated.
+    pub processors: usize,
+    /// Wall time of the sequential baseline on the same input.
+    pub sequential_time: Duration,
+    /// Wall time of the parallel run (divide + scatter + sort + gather).
+    pub parallel_time: Duration,
+    /// Wall time of the divide phase alone.
+    pub divide_time: Duration,
+    /// Summed local-sort counters (parallel run).
+    pub counters: SortCounters,
+    /// Counters of the sequential baseline.
+    pub sequential_counters: SortCounters,
+    /// Load imbalance factor of the division.
+    pub imbalance: f64,
+    /// DES virtual completion time (ns), when the DES backend ran.
+    pub des_completion_ns: Option<f64>,
+    /// DES communication steps `(electrical, optical)`.
+    pub des_steps: Option<(usize, usize)>,
+    /// Full DES communication trace (for `--trace-out` export).
+    pub des_trace: Option<crate::sim::trace::CommTrace>,
+    /// Relative speedup `T_s / T_p`.
+    pub speedup: f64,
+    /// The paper's percentage presentation: `(T_s - T_p) / T_s · 100`.
+    pub speedup_pct: f64,
+    /// Efficiency `T_s / (P · T_p)`.
+    pub efficiency: f64,
+}
+
+/// Reusable experiment driver: topology + plans built once.
+pub struct OhhcSorter {
+    cfg: ExperimentConfig,
+    net: Ohhc,
+    plans: Vec<NodePlan>,
+    registry: Option<ArtifactRegistry>,
+}
+
+impl OhhcSorter {
+    /// Construct for a validated configuration.
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let net = Ohhc::new(cfg.dimension, cfg.construction)?;
+        let plans = gather_plan(&net);
+        let registry = match cfg.divide_engine {
+            crate::config::DivideEngine::Xla => {
+                Some(ArtifactRegistry::open(&cfg.artifact_dir)?)
+            }
+            crate::config::DivideEngine::Native => None,
+        };
+        Ok(OhhcSorter {
+            cfg: cfg.clone(),
+            net,
+            plans,
+            registry,
+        })
+    }
+
+    /// The topology in use.
+    pub fn network(&self) -> &Ohhc {
+        &self.net
+    }
+
+    /// Run the paper's full experiment cell: sequential baseline plus the
+    /// parallel run on the configured backend, with verification.
+    pub fn run(&self) -> Result<SortReport> {
+        let workload = Workload::new(self.cfg.distribution, self.cfg.elements, self.cfg.seed);
+        self.run_on(&workload)
+    }
+
+    /// Run on an externally supplied workload.
+    pub fn run_on(&self, workload: &Workload) -> Result<SortReport> {
+        let data = &workload.data;
+
+        // Sequential baseline (paper Fig 6.1).
+        let mut seq = data.clone();
+        let t0 = Instant::now();
+        let sequential_counters = quicksort(&mut seq);
+        let sequential_time = t0.elapsed();
+        debug_assert!(is_sorted(&seq));
+
+        // Parallel run.
+        let t0 = Instant::now();
+        let divided = divide_with_engine(
+            data,
+            self.net.total_processors(),
+            self.cfg.divide_engine,
+            self.registry.as_ref(),
+        )?;
+        let divide_time = t0.elapsed();
+        let imbalance = divided.imbalance();
+
+        let (parallel_time, counters, des) = match self.cfg.backend {
+            Backend::Threaded => self.run_threaded(divided, data.len(), &seq, divide_time)?,
+            Backend::DiscreteEvent => {
+                self.run_des(divided, data.len(), &seq, divide_time)?
+            }
+        };
+
+        let ts = sequential_time.as_secs_f64();
+        let tp = parallel_time.as_secs_f64();
+        let p = self.net.total_processors() as f64;
+        Ok(SortReport {
+            elements: data.len(),
+            processors: self.net.total_processors(),
+            sequential_time,
+            parallel_time,
+            divide_time,
+            counters,
+            sequential_counters,
+            imbalance,
+            des_completion_ns: des.as_ref().map(|d| d.0),
+            des_steps: des.as_ref().map(|d| d.1.trace.steps()),
+            des_trace: des.map(|d| d.1.trace),
+            speedup: ts / tp,
+            speedup_pct: (ts - tp) / ts * 100.0,
+            efficiency: ts / (p * tp),
+        })
+    }
+
+    fn run_threaded(
+        &self,
+        divided: Divided,
+        total_len: usize,
+        expect: &[i32],
+        divide_time: Duration,
+    ) -> Result<(Duration, SortCounters, Option<(f64, crate::sim::engine::DesOutcome)>)> {
+        let mode = if self.cfg.workers == 0 {
+            ThreadMode::Direct
+        } else {
+            ThreadMode::Waves
+        };
+        let out = ThreadedSimulator::new(&self.net, &self.plans)
+            .with_mode(mode)
+            .run(divided.buckets, total_len)?;
+        if out.sorted != expect {
+            return Err(Error::Invariant(
+                "parallel output differs from sequential baseline".into(),
+            ));
+        }
+        Ok((divide_time + out.parallel_time, out.counters, None))
+    }
+
+    fn run_des(
+        &self,
+        divided: Divided,
+        total_len: usize,
+        expect: &[i32],
+        divide_time: Duration,
+    ) -> Result<(Duration, SortCounters, Option<(f64, crate::sim::engine::DesOutcome)>)> {
+        // Real local sorts (for counters + verified output) feed exact
+        // work into the DES clock.
+        let sizes = divided.sizes();
+        let mut counters_vec = Vec::with_capacity(sizes.len());
+        let mut subarrays = Vec::with_capacity(sizes.len());
+        let t0 = Instant::now();
+        let mut counters = SortCounters::default();
+        for (i, mut b) in divided.buckets.into_iter().enumerate() {
+            let c = quicksort(&mut b);
+            counters_vec.push(c);
+            counters += c;
+            subarrays.push((i, b));
+        }
+        let _host_sort = t0.elapsed();
+
+        let mut out = Vec::with_capacity(total_len);
+        for (_, b) in &subarrays {
+            out.extend_from_slice(b);
+        }
+        if out != expect {
+            return Err(Error::Invariant(
+                "DES-path output differs from sequential baseline".into(),
+            ));
+        }
+
+        let des = DesSimulator::new(&self.net, &self.plans, self.cfg.link_model)
+            .run(&sizes, Some(&counters_vec))?;
+        let virtual_time = Duration::from_nanos(des.completion_ns as u64);
+        Ok((
+            divide_time + virtual_time,
+            counters,
+            Some((des.completion_ns, des)),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Construction, Distribution, DivideEngine};
+
+    fn cfg(d: u32, c: Construction, backend: Backend) -> ExperimentConfig {
+        ExperimentConfig {
+            dimension: d,
+            construction: c,
+            distribution: Distribution::Random,
+            elements: 40_000,
+            backend,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn threaded_end_to_end_d1_full() {
+        let report = OhhcSorter::new(&cfg(1, Construction::FullGroup, Backend::Threaded))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.elements, 40_000);
+        assert_eq!(report.processors, 36);
+        assert!(report.parallel_time > Duration::ZERO);
+        assert!(report.speedup > 0.0);
+        assert!((0.0..=1.5).contains(&report.efficiency));
+    }
+
+    #[test]
+    fn threaded_end_to_end_d2_half_waves() {
+        let mut c = cfg(2, Construction::HalfGroup, Backend::Threaded);
+        c.workers = 8; // waves mode
+        let report = OhhcSorter::new(&c).unwrap().run().unwrap();
+        assert_eq!(report.processors, 72);
+        assert!(report.counters.comparisons > 0);
+    }
+
+    #[test]
+    fn des_end_to_end_reports_steps() {
+        let report = OhhcSorter::new(&cfg(1, Construction::FullGroup, Backend::DiscreteEvent))
+            .unwrap()
+            .run()
+            .unwrap();
+        let (elec, opt) = report.des_steps.unwrap();
+        // Scatter + gather trees: 2·(N−1) traversals, G−1 optical each way.
+        assert_eq!(elec + opt, 2 * (36 - 1));
+        assert_eq!(opt, 2 * (6 - 1));
+        assert!(report.des_completion_ns.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn all_distributions_verify() {
+        for dist in Distribution::ALL {
+            let mut c = cfg(1, Construction::HalfGroup, Backend::Threaded);
+            c.distribution = dist;
+            c.workers = 4;
+            let report = OhhcSorter::new(&c).unwrap().run().unwrap();
+            assert!(report.counters.recursion_calls > 0, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn xla_divide_engine_end_to_end() {
+        let mut c = cfg(1, Construction::FullGroup, Backend::Threaded);
+        c.divide_engine = DivideEngine::Xla;
+        c.workers = 4;
+        let report = OhhcSorter::new(&c).unwrap().run().unwrap();
+        assert_eq!(report.processors, 36);
+    }
+}

@@ -1,0 +1,40 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the OHHC sort library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Invalid experiment / topology configuration.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// An AOT artifact is missing or its signature does not match.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Failure inside the XLA/PJRT runtime.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// A simulated processor panicked or a channel closed unexpectedly.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Payload conservation / sortedness invariant violated.
+    #[error("invariant violated: {0}")]
+    Invariant(String),
+
+    /// I/O error (config files, CSV output, artifacts).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

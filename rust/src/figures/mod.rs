@@ -1,0 +1,545 @@
+//! Figure harness: regenerates **every** table and figure of the paper's
+//! evaluation (§6) from live runs — Table 1.1, Table 4.1, Figs 6.1–6.24.
+//!
+//! Cells of the paper's 216-run sweep (dimension × construction ×
+//! distribution × size) are executed once and cached; every figure then
+//! projects the cells it needs.  `scale` shrinks the paper's 10–60 MB
+//! sizes so the full sweep fits a session budget (ratios — speedup,
+//! efficiency, counter shapes — are scale-robust; EXPERIMENTS.md reports
+//! both scaled and spot-checked paper-scale cells).
+
+use std::collections::HashMap;
+
+use crate::analysis::validate;
+use crate::config::{Backend, Construction, Distribution, ExperimentConfig};
+use crate::coordinator::OhhcSorter;
+use crate::error::{Error, Result};
+use crate::metrics::{Figure, Series, Summary};
+use crate::sort::SortCounters;
+use crate::workload::Workload;
+
+/// All regenerable figure/table ids, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "table_1_1", "table_4_1", "fig_6_1", "fig_6_2", "fig_6_3", "fig_6_4", "fig_6_5",
+    "fig_6_6", "fig_6_7", "fig_6_8", "fig_6_9", "fig_6_10", "fig_6_11", "fig_6_12",
+    "fig_6_13", "fig_6_14", "fig_6_15", "fig_6_16", "fig_6_17", "fig_6_18", "fig_6_19",
+    "fig_6_20", "fig_6_21", "fig_6_22", "fig_6_23", "fig_6_24",
+];
+
+const DIMS: [u32; 4] = [1, 2, 3, 4];
+
+/// One cached sweep cell.
+#[derive(Debug, Clone)]
+struct Cell {
+    seq_secs: f64,
+    par_secs: f64,
+    processors: usize,
+    counters: SortCounters,
+    seq_counters: SortCounters,
+}
+
+/// The harness: configuration + cell cache.
+pub struct FigureHarness {
+    /// Scale factor on the paper's 10–60 MB sizes (1.0 = paper scale).
+    pub scale: f64,
+    /// Repetitions per timing cell (median taken).
+    pub repetitions: usize,
+    /// `0` = paper-faithful one-thread-per-processor; otherwise waves.
+    pub workers: usize,
+    /// Workload seed.
+    pub seed: u64,
+    cache: HashMap<(u32, Construction, Distribution, usize), Cell>,
+}
+
+impl FigureHarness {
+    /// New harness at a given scale.
+    pub fn new(scale: f64) -> Self {
+        FigureHarness {
+            scale,
+            repetitions: 1,
+            workers: num_workers(),
+            seed: 0x0511C0DE,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// The six paper sizes, scaled, in keys.
+    pub fn sizes(&self) -> Vec<usize> {
+        ExperimentConfig::paper_sizes(self.scale)
+    }
+
+    /// Size axis in (unscaled) paper MB labels: 10..60.
+    fn mb_labels() -> [f64; 6] {
+        [10.0, 20.0, 30.0, 40.0, 50.0, 60.0]
+    }
+
+    /// Run (or fetch) one sweep cell.
+    fn cell(
+        &mut self,
+        d: u32,
+        c: Construction,
+        dist: Distribution,
+        n: usize,
+    ) -> Result<Cell> {
+        let key = (d, c, dist, n);
+        if let Some(cell) = self.cache.get(&key) {
+            return Ok(cell.clone());
+        }
+        let cfg = ExperimentConfig {
+            dimension: d,
+            construction: c,
+            distribution: dist,
+            elements: n,
+            backend: Backend::Threaded,
+            workers: self.workers,
+            seed: self.seed,
+            ..Default::default()
+        };
+        let sorter = OhhcSorter::new(&cfg)?;
+        let workload = Workload::new(dist, n, self.seed);
+        let mut seq = Vec::with_capacity(self.repetitions);
+        let mut par = Vec::with_capacity(self.repetitions);
+        let mut cell = None;
+        for _ in 0..self.repetitions.max(1) {
+            let r = sorter.run_on(&workload)?;
+            seq.push(r.sequential_time.as_secs_f64());
+            par.push(r.parallel_time.as_secs_f64());
+            cell = Some(Cell {
+                seq_secs: 0.0,
+                par_secs: 0.0,
+                processors: r.processors,
+                counters: r.counters,
+                seq_counters: r.sequential_counters,
+            });
+        }
+        let mut cell = cell.expect("at least one repetition");
+        cell.seq_secs = Summary::of(&seq).median;
+        cell.par_secs = Summary::of(&par).median;
+        self.cache.insert(key, cell.clone());
+        Ok(cell)
+    }
+
+    /// Generate one figure by paper id.
+    pub fn generate(&mut self, id: &str) -> Result<Figure> {
+        match id {
+            "table_1_1" => self.table_1_1(),
+            "table_4_1" => self.table_4_1(),
+            "fig_6_1" => self.fig_6_1(),
+            "fig_6_2" => self.fig_6_2(),
+            "fig_6_3" => self.fig_6_3(),
+            "fig_6_4" => self.speedup_fig("fig_6_4", Construction::FullGroup, Distribution::Random),
+            "fig_6_5" => self.speedup_fig("fig_6_5", Construction::FullGroup, Distribution::Sorted),
+            "fig_6_6" => self.speedup_fig(
+                "fig_6_6",
+                Construction::FullGroup,
+                Distribution::ReverseSorted,
+            ),
+            "fig_6_7" => self.speedup_fig("fig_6_7", Construction::FullGroup, Distribution::Local),
+            "fig_6_8" => self.speedup_fig("fig_6_8", Construction::HalfGroup, Distribution::Random),
+            "fig_6_9" => self.speedup_fig("fig_6_9", Construction::HalfGroup, Distribution::Sorted),
+            "fig_6_10" => self.speedup_fig(
+                "fig_6_10",
+                Construction::HalfGroup,
+                Distribution::ReverseSorted,
+            ),
+            "fig_6_11" => self.speedup_fig("fig_6_11", Construction::HalfGroup, Distribution::Local),
+            "fig_6_12" => self.efficiency_fig("fig_6_12", Construction::FullGroup, Distribution::Random),
+            "fig_6_13" => self.efficiency_fig("fig_6_13", Construction::FullGroup, Distribution::Sorted),
+            "fig_6_14" => self.efficiency_fig(
+                "fig_6_14",
+                Construction::FullGroup,
+                Distribution::ReverseSorted,
+            ),
+            "fig_6_15" => self.efficiency_fig("fig_6_15", Construction::FullGroup, Distribution::Local),
+            "fig_6_16" => self.efficiency_fig("fig_6_16", Construction::HalfGroup, Distribution::Random),
+            "fig_6_17" => self.efficiency_fig("fig_6_17", Construction::HalfGroup, Distribution::Sorted),
+            "fig_6_18" => self.efficiency_fig(
+                "fig_6_18",
+                Construction::HalfGroup,
+                Distribution::ReverseSorted,
+            ),
+            "fig_6_19" => self.efficiency_fig("fig_6_19", Construction::HalfGroup, Distribution::Local),
+            "fig_6_20" => self.counter_fig("fig_6_20", Distribution::Random),
+            "fig_6_21" => self.counter_fig("fig_6_21", Distribution::Sorted),
+            "fig_6_22" => self.fig_6_22(),
+            "fig_6_23" => self.fig_6_23(),
+            "fig_6_24" => self.fig_6_24(),
+            other => Err(Error::Config(format!("unknown figure id `{other}`"))),
+        }
+    }
+
+    // ---- Tables ---------------------------------------------------------
+
+    fn table_1_1(&mut self) -> Result<Figure> {
+        let mut g_full = Vec::new();
+        let mut p_full = Vec::new();
+        let mut g_half = Vec::new();
+        let mut p_half = Vec::new();
+        for d in DIMS {
+            let full = crate::topology::ohhc::Ohhc::new(d, Construction::FullGroup)?;
+            let half = crate::topology::ohhc::Ohhc::new(d, Construction::HalfGroup)?;
+            g_full.push((d as f64, full.groups as f64));
+            p_full.push((d as f64, full.total_processors() as f64));
+            g_half.push((d as f64, half.groups as f64));
+            p_half.push((d as f64, half.total_processors() as f64));
+        }
+        Ok(Figure {
+            id: "table_1_1".into(),
+            title: "OHHC dimensions and processor counts".into(),
+            x_label: "dimension".into(),
+            y_label: "count".into(),
+            series: vec![
+                Series { label: "groups(G=P)".into(), points: g_full },
+                Series { label: "procs(G=P)".into(), points: p_full },
+                Series { label: "groups(G=P/2)".into(), points: g_half },
+                Series { label: "procs(G=P/2)".into(), points: p_half },
+            ],
+        })
+    }
+
+    fn table_4_1(&mut self) -> Result<Figure> {
+        // Analytical assessment, evaluated + checked against the DES.
+        let mut paper = Vec::new();
+        let mut exact = Vec::new();
+        let mut measured = Vec::new();
+        let mut optical = Vec::new();
+        for d in DIMS {
+            let chk = validate::theorem3(d, Construction::FullGroup);
+            paper.push((d as f64, chk.paper_form as f64));
+            exact.push((d as f64, chk.exact_form as f64));
+            measured.push((d as f64, chk.measured as f64));
+            optical.push((d as f64, chk.measured_optical as f64));
+        }
+        Ok(Figure {
+            id: "table_4_1".into(),
+            title: "Theorem 3 communication steps: paper form vs exact vs DES".into(),
+            x_label: "dimension".into(),
+            y_label: "steps".into(),
+            series: vec![
+                Series { label: "paper(12Gd-2)".into(), points: paper },
+                Series { label: "exact(2(GP-1))".into(), points: exact },
+                Series { label: "DES-measured".into(), points: measured },
+                Series { label: "DES-optical".into(), points: optical },
+            ],
+        })
+    }
+
+    // ---- Execution-time figures ------------------------------------------
+
+    fn fig_6_1(&mut self) -> Result<Figure> {
+        let sizes = self.sizes();
+        let mut series = Vec::new();
+        for dist in Distribution::ALL {
+            let mut pts = Vec::new();
+            for (i, &n) in sizes.iter().enumerate() {
+                // Dimension is irrelevant for the sequential baseline;
+                // reuse d=1 cells.
+                let cell = self.cell(1, Construction::FullGroup, dist, n)?;
+                pts.push((Self::mb_labels()[i], cell.seq_secs));
+            }
+            series.push(Series { label: dist.label().into(), points: pts });
+        }
+        Ok(Figure {
+            id: "fig_6_1".into(),
+            title: "Sequential Quick Sort over array types and sizes".into(),
+            x_label: "MB".into(),
+            y_label: "seconds".into(),
+            series,
+        })
+    }
+
+    fn fig_6_2(&mut self) -> Result<Figure> {
+        let sizes = self.sizes();
+        let mut series = Vec::new();
+        for d in DIMS {
+            let mut pts = Vec::new();
+            for (i, &n) in sizes.iter().enumerate() {
+                let cell = self.cell(d, Construction::FullGroup, Distribution::Random, n)?;
+                pts.push((Self::mb_labels()[i], cell.par_secs));
+            }
+            series.push(Series { label: format!("d={d}"), points: pts });
+        }
+        Ok(Figure {
+            id: "fig_6_2".into(),
+            title: "Parallel run time, random distribution, G=P".into(),
+            x_label: "MB".into(),
+            y_label: "seconds".into(),
+            series,
+        })
+    }
+
+    fn fig_6_3(&mut self) -> Result<Figure> {
+        let sizes = self.sizes();
+        let mut series = Vec::new();
+        for dist in Distribution::ALL {
+            let mut pts = Vec::new();
+            for (i, &n) in sizes.iter().enumerate() {
+                let cell = self.cell(4, Construction::FullGroup, dist, n)?;
+                pts.push((Self::mb_labels()[i], cell.par_secs));
+            }
+            series.push(Series { label: dist.label().into(), points: pts });
+        }
+        Ok(Figure {
+            id: "fig_6_3".into(),
+            title: "4-D OHHC parallel run time over array types and sizes".into(),
+            x_label: "MB".into(),
+            y_label: "seconds".into(),
+            series,
+        })
+    }
+
+    // ---- Speedup / efficiency families -----------------------------------
+
+    fn speedup_fig(
+        &mut self,
+        id: &str,
+        c: Construction,
+        dist: Distribution,
+    ) -> Result<Figure> {
+        let sizes = self.sizes();
+        let mut series = Vec::new();
+        for d in DIMS {
+            let mut pts = Vec::new();
+            for (i, &n) in sizes.iter().enumerate() {
+                let cell = self.cell(d, c, dist, n)?;
+                let pct = (cell.seq_secs - cell.par_secs) / cell.seq_secs * 100.0;
+                pts.push((Self::mb_labels()[i], pct));
+            }
+            series.push(Series { label: format!("d={d}"), points: pts });
+        }
+        Ok(Figure {
+            id: id.into(),
+            title: format!(
+                "Relative speedup (%), {} distribution, {}",
+                dist.label(),
+                c.label()
+            ),
+            x_label: "MB".into(),
+            y_label: "speedup %".into(),
+            series,
+        })
+    }
+
+    fn efficiency_fig(
+        &mut self,
+        id: &str,
+        c: Construction,
+        dist: Distribution,
+    ) -> Result<Figure> {
+        let sizes = self.sizes();
+        let mut series = Vec::new();
+        for d in DIMS {
+            let mut pts = Vec::new();
+            for (i, &n) in sizes.iter().enumerate() {
+                let cell = self.cell(d, c, dist, n)?;
+                let e = cell.seq_secs / (cell.processors as f64 * cell.par_secs) * 100.0;
+                pts.push((Self::mb_labels()[i], e));
+            }
+            series.push(Series { label: format!("d={d}"), points: pts });
+        }
+        Ok(Figure {
+            id: id.into(),
+            title: format!(
+                "Efficiency ratio (%), {} distribution, {}",
+                dist.label(),
+                c.label()
+            ),
+            x_label: "MB".into(),
+            y_label: "efficiency %".into(),
+            series,
+        })
+    }
+
+    // ---- Counter figures (6.20–6.24) --------------------------------------
+
+    /// The paper's "30 MB" column: third size.
+    fn thirty_mb(&self) -> usize {
+        self.sizes()[2]
+    }
+
+    fn counter_fig(&mut self, id: &str, dist: Distribution) -> Result<Figure> {
+        let n = self.thirty_mb();
+        let mut rec = Vec::new();
+        let mut iters = Vec::new();
+        let mut swaps = Vec::new();
+        // x = 0 is the sequential (undivided) baseline, showing how much
+        // the division procedure alone reshapes the work.
+        let seq = self.cell(1, Construction::FullGroup, dist, n)?.seq_counters;
+        rec.push((0.0, seq.recursion_calls as f64));
+        iters.push((0.0, seq.iterations as f64));
+        swaps.push((0.0, seq.swaps as f64));
+        for d in DIMS {
+            let cell = self.cell(d, Construction::FullGroup, dist, n)?;
+            rec.push((d as f64, cell.counters.recursion_calls as f64));
+            iters.push((d as f64, cell.counters.iterations as f64));
+            swaps.push((d as f64, cell.counters.swaps as f64));
+        }
+        Ok(Figure {
+            id: id.into(),
+            title: format!(
+                "Recursions/iterations/swaps vs dimension, 30 MB {}",
+                dist.label()
+            ),
+            x_label: "dimension".into(),
+            y_label: "count".into(),
+            series: vec![
+                Series { label: "recursion_calls".into(), points: rec },
+                Series { label: "iterations".into(), points: iters },
+                Series { label: "swaps".into(), points: swaps },
+            ],
+        })
+    }
+
+    fn fig_6_22(&mut self) -> Result<Figure> {
+        let n = self.thirty_mb();
+        let mut srt = Vec::new();
+        let mut rnd = Vec::new();
+        for d in DIMS {
+            let cs = self.cell(d, Construction::FullGroup, Distribution::Sorted, n)?;
+            let cr = self.cell(d, Construction::FullGroup, Distribution::Random, n)?;
+            srt.push((d as f64, cs.counters.swaps as f64));
+            rnd.push((d as f64, cr.counters.swaps as f64));
+        }
+        Ok(Figure {
+            id: "fig_6_22".into(),
+            title: "Swaps: sorted vs random, 30 MB".into(),
+            x_label: "dimension".into(),
+            y_label: "swaps".into(),
+            series: vec![
+                Series { label: "sorted".into(), points: srt },
+                Series { label: "random".into(), points: rnd },
+            ],
+        })
+    }
+
+    fn fig_6_23(&mut self) -> Result<Figure> {
+        let n = self.thirty_mb();
+        let mut pts = Vec::new();
+        for d in DIMS {
+            let cell = self.cell(d, Construction::FullGroup, Distribution::Sorted, n)?;
+            pts.push((d as f64, cell.counters.comparisons as f64));
+        }
+        Ok(Figure {
+            id: "fig_6_23".into(),
+            title: "Comparison steps vs dimension (sorted input)".into(),
+            x_label: "dimension".into(),
+            y_label: "comparisons".into(),
+            series: vec![Series { label: "comparisons".into(), points: pts }],
+        })
+    }
+
+    fn fig_6_24(&mut self) -> Result<Figure> {
+        let n = self.thirty_mb();
+        let mut pts = Vec::new();
+        for d in DIMS {
+            let cell = self.cell(d, Construction::FullGroup, Distribution::Sorted, n)?;
+            pts.push((d as f64, cell.counters.swaps as f64));
+        }
+        Ok(Figure {
+            id: "fig_6_24".into(),
+            title: "Swaps vs dimension (sorted input)".into(),
+            x_label: "dimension".into(),
+            y_label: "swaps".into(),
+            series: vec![Series { label: "swaps".into(), points: pts }],
+        })
+    }
+}
+
+/// Worker-count default: the host's parallelism (waves mode).
+fn num_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn harness() -> FigureHarness {
+        // Tiny scale keeps the test fast while exercising every code path.
+        let mut h = FigureHarness::new(0.004); // ~10k–63k keys
+        h.workers = 4;
+        h
+    }
+
+    #[test]
+    fn table_1_1_matches_paper() {
+        let fig = harness().generate("table_1_1").unwrap();
+        let procs_full = &fig.series[1].points;
+        assert_eq!(
+            procs_full.iter().map(|p| p.1 as usize).collect::<Vec<_>>(),
+            vec![36, 144, 576, 2304]
+        );
+        let procs_half = &fig.series[3].points;
+        assert_eq!(
+            procs_half.iter().map(|p| p.1 as usize).collect::<Vec<_>>(),
+            vec![18, 72, 288, 1152]
+        );
+    }
+
+    #[test]
+    fn table_4_1_measured_equals_exact() {
+        let fig = harness().generate("table_4_1").unwrap();
+        let exact = &fig.series[1].points;
+        let measured = &fig.series[2].points;
+        assert_eq!(exact, measured);
+    }
+
+    #[test]
+    fn fig_6_1_has_four_series_six_sizes() {
+        let fig = harness().generate("fig_6_1").unwrap();
+        assert_eq!(fig.series.len(), 4);
+        for s in &fig.series {
+            assert_eq!(s.points.len(), 6);
+            assert!(s.points.iter().all(|p| p.1 > 0.0));
+        }
+    }
+
+    #[test]
+    fn counter_figures_show_iteration_decay() {
+        // The paper's Fig 6.20 claim: iterations fall sharply with d while
+        // recursions stay ~flat.
+        let mut h = harness();
+        let fig = h.generate("fig_6_20").unwrap();
+        // Points are x = 0 (sequential), 1, 2, 3, 4.
+        let iters = &fig.series[1].points;
+        assert_eq!(iters.len(), 5);
+        assert!(
+            iters[1].1 > 1.5 * iters[4].1,
+            "iterations {} → {}",
+            iters[1].1,
+            iters[4].1
+        );
+        let rec = &fig.series[0].points;
+        let ratio = rec[1].1 / rec[4].1;
+        assert!((0.5..2.0).contains(&ratio), "recursions moved {ratio}x");
+    }
+
+    #[test]
+    fn fig_6_22_sorted_swaps_far_below_random() {
+        let fig = harness().generate("fig_6_22").unwrap();
+        let sorted = &fig.series[0].points;
+        let random = &fig.series[1].points;
+        for (s, r) in sorted.iter().zip(random) {
+            assert!(s.1 * 10.0 < r.1, "sorted {} vs random {}", s.1, r.1);
+        }
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(harness().generate("fig_9_9").is_err());
+    }
+
+    #[test]
+    fn all_ids_generate() {
+        // Smoke: every advertised id produces a figure (cells cached, so
+        // this is one sweep at tiny scale).
+        let mut h = harness();
+        for id in ALL_IDS {
+            let fig = h.generate(id).unwrap();
+            assert_eq!(&fig.id, id);
+            assert!(!fig.series.is_empty(), "{id}");
+        }
+    }
+}

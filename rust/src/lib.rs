@@ -1,0 +1,56 @@
+//! # ohhc-qsort — Parallel Quick Sort on the OTIS Hyper Hexa-Cell network
+//!
+//! A full reproduction of *"Implementing Parallel Quick Sort Algorithm on
+//! OTIS Hyper Hexa-Cell (OHHC) Interconnection Network"* (Nsour & Fasha,
+//! 2021), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the OHHC topology library, a discrete-event
+//!   optoelectronic network simulator, a paper-faithful multithreaded
+//!   simulation backend, the instrumented sequential Quick Sort, the
+//!   scatter / local-sort / three-phase-gather coordinator, workload
+//!   generators, metrics, the analytical model (Theorems 1–6) and the
+//!   figure-regeneration harness.
+//! * **Layer 2 (python/compile/model.py)** — the array-division compute
+//!   graph (min/max → SubDivider → bucket-id + histogram) and a bitonic
+//!   block sorter, written in JAX.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   partition histogram (MXU-shaped one-hot contraction) and the bitonic
+//!   network, lowered with `interpret=True`.
+//!
+//! Python runs only at `make artifacts`; [`runtime`] loads the AOT HLO via
+//! PJRT so the request path is pure rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ohhc_qsort::config::{Construction, Distribution, ExperimentConfig};
+//! use ohhc_qsort::coordinator::OhhcSorter;
+//!
+//! let cfg = ExperimentConfig {
+//!     dimension: 2,
+//!     construction: Construction::FullGroup, // G = P
+//!     distribution: Distribution::Random,
+//!     elements: 1 << 20,
+//!     ..Default::default()
+//! };
+//! let report = OhhcSorter::new(&cfg).unwrap().run().unwrap();
+//! println!("sorted {} keys in {:?}", report.elements, report.parallel_time);
+//! ```
+
+pub mod analysis;
+pub mod baselines;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod figures;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod sort;
+pub mod topology;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

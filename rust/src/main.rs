@@ -1,0 +1,479 @@
+//! `ohhc-qsort` — CLI launcher for the OHHC parallel Quick Sort system.
+//!
+//! Subcommands:
+//!
+//! * `run`      — one experiment cell (dimension × construction ×
+//!   distribution × size), printed as a full report.
+//! * `figures`  — regenerate paper tables/figures into CSV + stdout.
+//! * `sweep`    — the paper's full 216-run sweep, CSV per cell.
+//! * `topo`     — topology properties (OHHC and baselines).
+//! * `validate` — analytical-model checks against the DES.
+//! * `artifacts`— inspect the AOT artifact registry (PJRT).
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`); run with
+//! `help` for usage.
+
+use std::path::PathBuf;
+
+use ohhc_qsort::analysis::validate;
+use ohhc_qsort::config::{
+    Backend, Construction, Distribution, DivideEngine, ExperimentConfig,
+};
+use ohhc_qsort::coordinator::OhhcSorter;
+use ohhc_qsort::figures::{FigureHarness, ALL_IDS};
+use ohhc_qsort::runtime::ArtifactRegistry;
+use ohhc_qsort::topology::{hhc, hypercube, mesh, ring, NetworkProperties, Ohhc};
+use ohhc_qsort::util::par;
+
+const USAGE: &str = "\
+ohhc-qsort — parallel Quick Sort on the OTIS Hyper Hexa-Cell network
+            (Nsour & Fasha 2021 reproduction)
+
+USAGE: ohhc-qsort <command> [options]
+
+COMMANDS
+  run        run one experiment cell
+             --dimension N        OHHC dimension (default 1)
+             --construction C     full | half (default full)
+             --distribution D     random | sorted | reversed | local
+             --elements N         i32 keys (default 1048576)
+             --backend B          threaded | des (default threaded)
+             --xla-divide         divide via the XLA AOT artifact
+             --workers N          0 = one OS thread per processor (default)
+             --config FILE        load a key=value experiment file
+             --trace-out FILE     dump the DES comm trace as JSON (des only)
+  figures    regenerate paper tables/figures
+             --out DIR            CSV output directory (default results)
+             --only ID[,ID...]    subset (default: all 26 ids)
+             --scale F            size scale vs paper 10-60 MB (default 0.1)
+             --repetitions N      timing reps per cell (default 1)
+             --direct             paper-faithful 1 thread per processor
+             --plot               render ASCII charts alongside the tables
+  baselines  ablation: OHHC sort vs PSRS vs hypercube bitonic vs fork/join
+             --elements N         i32 keys (default 1048576)
+             --skewed             use a skewed workload (step-point stress)
+  sweep      the paper's full 216-run sweep
+             --out FILE           CSV path (default results/sweep.csv)
+             --scale F            size scale (default 0.1)
+             --max-dimension N    default 4
+  topo       print topology properties
+             --dimension N        default 1
+             --baselines          include ring/mesh/hypercube
+  validate   check Theorem 3 against the DES
+  artifacts  inspect the AOT artifact registry
+             --dir DIR            default artifacts
+  help       this text
+";
+
+/// Tiny argument cursor over `--key value` / `--flag` style options.
+struct Args {
+    args: Vec<String>,
+}
+
+impl Args {
+    fn new(args: Vec<String>) -> Self {
+        Args { args }
+    }
+
+    /// Consume `--name value`; error if the flag appears without a value.
+    fn opt(&mut self, name: &str) -> anyhow::Result<Option<String>> {
+        if let Some(i) = self.args.iter().position(|a| a == name) {
+            if i + 1 >= self.args.len() {
+                anyhow::bail!("{name} requires a value");
+            }
+            let v = self.args.remove(i + 1);
+            self.args.remove(i);
+            Ok(Some(v))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Consume a boolean `--flag`.
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.args.iter().position(|a| a == name) {
+            self.args.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Parse a typed option with a default.
+    fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name)? {
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad value for {name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Everything consumed?
+    fn finish(self) -> anyhow::Result<()> {
+        if self.args.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unrecognized arguments: {:?}", self.args)
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let mut args = Args::new(argv);
+    match cmd.as_str() {
+        "run" => cmd_run(&mut args)?,
+        "figures" => cmd_figures(&mut args)?,
+        "baselines" => cmd_baselines(&mut args)?,
+        "sweep" => cmd_sweep(&mut args)?,
+        "topo" => cmd_topo(&mut args)?,
+        "validate" => cmd_validate()?,
+        "artifacts" => cmd_artifacts(&mut args)?,
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+        other => anyhow::bail!("unknown command `{other}` (try `help`)"),
+    }
+    args.finish()
+}
+
+fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
+    let trace_out = args.opt("--trace-out")?;
+    let cfg = if let Some(path) = args.opt("--config")? {
+        ExperimentConfig::from_file(&PathBuf::from(path))?
+    } else {
+        ExperimentConfig {
+            dimension: args.parse_or("--dimension", 1u32)?,
+            construction: Construction::parse(
+                &args.opt("--construction")?.unwrap_or("full".into()),
+            )?,
+            distribution: Distribution::parse(
+                &args.opt("--distribution")?.unwrap_or("random".into()),
+            )?,
+            elements: args.parse_or("--elements", 1usize << 20)?,
+            backend: Backend::parse(&args.opt("--backend")?.unwrap_or("threaded".into()))?,
+            divide_engine: if args.flag("--xla-divide") {
+                DivideEngine::Xla
+            } else {
+                DivideEngine::Native
+            },
+            workers: args.parse_or("--workers", 0usize)?,
+            ..Default::default()
+        }
+    };
+    let sorter = OhhcSorter::new(&cfg)?;
+    let net = sorter.network();
+    println!(
+        "OHHC d={} {} → {} groups × {} processors = {}",
+        cfg.dimension,
+        cfg.construction.label(),
+        net.groups,
+        net.procs_per_group,
+        net.total_processors()
+    );
+    let r = sorter.run()?;
+    println!("elements            {}", r.elements);
+    println!("sequential time     {:?}", r.sequential_time);
+    println!("parallel time       {:?}", r.parallel_time);
+    println!("  divide phase      {:?}", r.divide_time);
+    println!(
+        "speedup             {:.4}x ({:.2}%)",
+        r.speedup, r.speedup_pct
+    );
+    println!("efficiency          {:.4}", r.efficiency);
+    println!("imbalance           {:.3}", r.imbalance);
+    println!(
+        "counters            recursions={} iterations={} swaps={} comparisons={}",
+        r.counters.recursion_calls, r.counters.iterations, r.counters.swaps, r.counters.comparisons
+    );
+    if let Some(ns) = r.des_completion_ns {
+        println!("DES completion      {:.1} µs", ns / 1000.0);
+    }
+    if let Some((e, o)) = r.des_steps {
+        println!("DES comm steps      electrical={e} optical={o}");
+    }
+    if let Some(path) = trace_out {
+        match &r.des_trace {
+            Some(trace) => {
+                std::fs::write(&path, trace.to_json().dump())?;
+                println!("DES trace           → {path}");
+            }
+            None => anyhow::bail!("--trace-out requires --backend des"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
+    use ohhc_qsort::baselines::{hypercube_bitonic_sort, psrs_sort, shared_fork_sort};
+    use ohhc_qsort::coordinator::divide_native;
+    use ohhc_qsort::sort::quicksort;
+    use std::time::Instant;
+
+    let n: usize = args.parse_or("--elements", 1usize << 20)?;
+    let skewed = args.flag("--skewed");
+    let p = 144; // 2-D OHHC, G = P
+
+    let data: Vec<i32> = if skewed {
+        // 95% of keys in a narrow band — the step-point stress test.
+        let mut rng = ohhc_qsort::util::rng::Rng::new(77);
+        (0..n)
+            .map(|_| {
+                if rng.below(100) < 95 {
+                    rng.range_i64(0, 1000) as i32
+                } else {
+                    rng.range_i64(0, 1 << 24) as i32
+                }
+            })
+            .collect()
+    } else {
+        ohhc_qsort::workload::random(n, 77)
+    };
+    println!(
+        "baseline ablation: {n} keys, {} workload, P = {p}",
+        if skewed { "skewed" } else { "random" }
+    );
+
+    let mut seq = data.clone();
+    let t0 = Instant::now();
+    quicksort(&mut seq);
+    println!("{:<34} {:>12.3?}", "sequential quicksort", t0.elapsed());
+
+    // OHHC step-point sort (full pipeline, waves).
+    let cfg = ExperimentConfig {
+        dimension: 2,
+        construction: Construction::FullGroup,
+        elements: n,
+        workers: par::available_workers(),
+        ..Default::default()
+    };
+    let sorter = OhhcSorter::new(&cfg)?;
+    let w = ohhc_qsort::workload::Workload {
+        data: data.clone(),
+        distribution: Distribution::Random,
+        seed: 77,
+    };
+    let r = sorter.run_on(&w)?;
+    println!(
+        "{:<34} {:>12.3?}  imbalance {:.2}",
+        "OHHC step-point sort (paper)", r.parallel_time, r.imbalance
+    );
+
+    let t0 = Instant::now();
+    let psrs = psrs_sort(&data, p);
+    anyhow::ensure!(psrs.sorted == seq, "psrs mismatch");
+    println!(
+        "{:<34} {:>12.3?}  imbalance {:.2}",
+        "PSRS (sample splitters)",
+        t0.elapsed(),
+        psrs.imbalance
+    );
+
+    let t0 = Instant::now();
+    let bit = hypercube_bitonic_sort(&data, 7); // 128 processors
+    anyhow::ensure!(bit.sorted == seq, "bitonic mismatch");
+    println!(
+        "{:<34} {:>12.3?}  {} link traversals / {} stages",
+        "hypercube bitonic (128 procs)",
+        t0.elapsed(),
+        bit.link_traversals,
+        bit.stages
+    );
+
+    let mut forked = data.clone();
+    let t0 = Instant::now();
+    shared_fork_sort(&mut forked, 3);
+    anyhow::ensure!(forked == seq, "fork/join mismatch");
+    println!(
+        "{:<34} {:>12.3?}",
+        "fork/join quicksort (depth 3)",
+        t0.elapsed()
+    );
+
+    let step = divide_native(&data, p)?;
+    println!(
+        "\ndivision balance: step-point imbalance {:.2} vs PSRS {:.2} — {}",
+        step.imbalance(),
+        psrs.imbalance,
+        if step.imbalance() > 2.0 * psrs.imbalance {
+            "sample splitters win on this workload (paper's step points assume near-uniform key ranges)"
+        } else {
+            "comparable on this workload"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &mut Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.opt("--out")?.unwrap_or("results".into()));
+    let only = args.opt("--only")?;
+    let scale: f64 = args.parse_or("--scale", 0.1)?;
+    let repetitions: usize = args.parse_or("--repetitions", 1)?;
+    let direct = args.flag("--direct");
+    let plot = args.flag("--plot");
+
+    let mut h = FigureHarness::new(scale);
+    h.repetitions = repetitions;
+    if direct {
+        h.workers = 0;
+    }
+    let ids: Vec<String> = match only {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => ALL_IDS.iter().map(|s| s.to_string()).collect(),
+    };
+    for id in &ids {
+        let fig = h.generate(id)?;
+        let path = fig.write_csv(&out)?;
+        println!("{}", fig.to_text());
+        if plot {
+            println!("{}", ohhc_qsort::metrics::plot::render(&fig, 64, 18));
+        }
+        println!("  → {}\n", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
+    use std::io::Write;
+    let out = PathBuf::from(args.opt("--out")?.unwrap_or("results/sweep.csv".into()));
+    let scale: f64 = args.parse_or("--scale", 0.1)?;
+    let max_dimension: u32 = args.parse_or("--max-dimension", 4)?;
+
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(&out)?;
+    writeln!(
+        f,
+        "dimension,construction,distribution,mb,elements,seq_secs,par_secs,\
+         speedup,speedup_pct,efficiency,imbalance,recursions,iterations,swaps,comparisons"
+    )?;
+    let sizes = ExperimentConfig::paper_sizes(scale);
+    let mb = [10, 20, 30, 40, 50, 60];
+    let mut runs = 0;
+    for d in 1..=max_dimension {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            for dist in Distribution::ALL {
+                for (i, &n) in sizes.iter().enumerate() {
+                    let cfg = ExperimentConfig {
+                        dimension: d,
+                        construction: c,
+                        distribution: dist,
+                        elements: n,
+                        workers: par::available_workers(),
+                        ..Default::default()
+                    };
+                    let r = OhhcSorter::new(&cfg)?.run()?;
+                    writeln!(
+                        f,
+                        "{d},{},{},{},{n},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{}",
+                        c.label(),
+                        dist.label(),
+                        mb[i],
+                        r.sequential_time.as_secs_f64(),
+                        r.parallel_time.as_secs_f64(),
+                        r.speedup,
+                        r.speedup_pct,
+                        r.efficiency,
+                        r.imbalance,
+                        r.counters.recursion_calls,
+                        r.counters.iterations,
+                        r.counters.swaps,
+                        r.counters.comparisons,
+                    )?;
+                    runs += 1;
+                    eprint!("\r{runs} runs");
+                }
+            }
+        }
+    }
+    eprintln!("\nwrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_topo(args: &mut Args) -> anyhow::Result<()> {
+    let dimension: u32 = args.parse_or("--dimension", 1)?;
+    let baselines = args.flag("--baselines");
+    for c in [Construction::FullGroup, Construction::HalfGroup] {
+        let net = Ohhc::new(dimension, c)?;
+        let p = NetworkProperties::compute(net.graph());
+        println!("OHHC d={dimension} {:<6} {p}", c.label());
+    }
+    let hhc_g = hhc::hhc_graph(dimension);
+    println!(
+        "HHC  d={dimension}        {}",
+        NetworkProperties::compute(&hhc_g)
+    );
+    if baselines {
+        let n = Ohhc::new(dimension, Construction::FullGroup)?.total_processors();
+        println!(
+            "ring({n})          {}",
+            NetworkProperties::compute(&ring::ring_graph(n))
+        );
+        let side = (n as f64).sqrt().round() as usize;
+        println!(
+            "mesh({side}x{side})        {}",
+            NetworkProperties::compute(&mesh::mesh_graph(side, side))
+        );
+        let dims = (n as f64).log2().floor() as u32;
+        println!(
+            "hypercube(2^{dims})    {}",
+            NetworkProperties::compute(&hypercube::hypercube_graph(dims))
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> anyhow::Result<()> {
+    println!("Theorem 3 (communication steps) — DES vs closed forms:");
+    println!(
+        "{:>3} {:>8} {:>14} {:>14} {:>12} {:>12}",
+        "d", "groups", "paper(12Gd-2)", "exact(2(GP-1))", "measured", "optical"
+    );
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let chk = validate::theorem3(d, c);
+            println!(
+                "{d:>3} {:>8} {:>14} {:>14} {:>12} {:>12}  {}",
+                chk.groups,
+                chk.paper_form,
+                chk.exact_form,
+                chk.measured,
+                chk.measured_optical,
+                c.label()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &mut Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.opt("--dir")?.unwrap_or("artifacts".into()));
+    let reg = ArtifactRegistry::open(&dir)?;
+    println!(
+        "platform: {} ({} devices), chunk={}",
+        reg.client().platform_name(),
+        reg.client().device_count(),
+        reg.chunk()
+    );
+    for name in reg.names() {
+        let sig = reg.sig(&name)?;
+        println!(
+            "  {name:<28} {:>8} B  in={:?} out={:?}",
+            sig.bytes,
+            sig.inputs.iter().map(|i| &i.1).collect::<Vec<_>>(),
+            sig.outputs.iter().map(|o| &o.1).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

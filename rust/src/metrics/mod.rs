@@ -1,0 +1,159 @@
+//! Metrics: the paper's evaluation quantities (§4.3–§4.5, §6) plus basic
+//! statistics and CSV emission for the figure harness.
+
+pub mod plot;
+mod stats;
+
+pub use stats::Summary;
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Relative speedup `T_s / T_p` (paper §6.2 definition).
+pub fn speedup(ts_secs: f64, tp_secs: f64) -> f64 {
+    ts_secs / tp_secs
+}
+
+/// The paper's *percentage improvement* presentation of speedup — its
+/// figures report "up to 20%" meaning `(T_s − T_p)/T_s`.
+pub fn speedup_pct(ts_secs: f64, tp_secs: f64) -> f64 {
+    (ts_secs - tp_secs) / ts_secs * 100.0
+}
+
+/// Efficiency `E = T_s / (P · T_p)` (paper §4.4 / §6.3).
+pub fn efficiency(ts_secs: f64, tp_secs: f64, processors: usize) -> f64 {
+    ts_secs / (processors as f64 * tp_secs)
+}
+
+/// A labeled data series destined for one figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label (e.g. "d=3").
+    pub label: String,
+    /// `(x, y)` points.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// One regenerated figure: id, axis names, series.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// Paper identifier ("fig_6_4", "table_1_1", ...).
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// X-axis label.
+    pub x_label: String,
+    /// Y-axis label.
+    pub y_label: String,
+    /// The series.
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    /// Write the figure as CSV: header `x,<label1>,<label2>,...`, one row
+    /// per x value (series are aligned on x).
+    pub fn write_csv(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "# {} — {}", self.id, self.title)?;
+        write!(f, "{}", self.x_label)?;
+        for s in &self.series {
+            write!(f, ",{}", s.label)?;
+        }
+        writeln!(f)?;
+        // Collect the union of x values, sorted.
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.0))
+            .collect();
+        xs.sort_by(f64::total_cmp);
+        xs.dedup();
+        for x in xs {
+            write!(f, "{x}")?;
+            for s in &self.series {
+                match s.points.iter().find(|p| p.0 == x) {
+                    Some(&(_, y)) => write!(f, ",{y:.6}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(path)
+    }
+
+    /// Render as an aligned text table (what the CLI prints).
+    pub fn to_text(&self) -> String {
+        let mut out = format!("== {} — {}\n", self.id, self.title);
+        out.push_str(&format!("{:>12}", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!("{:>16}", s.label));
+        }
+        out.push('\n');
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.0))
+            .collect();
+        xs.sort_by(f64::total_cmp);
+        xs.dedup();
+        for x in xs {
+            out.push_str(&format!("{x:>12.2}"));
+            for s in &self.series {
+                match s.points.iter().find(|p| p.0 == x) {
+                    Some(&(_, y)) => out.push_str(&format!("{y:>16.4}")),
+                    None => out.push_str(&format!("{:>16}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_efficiency_formulas() {
+        // T_s = 10s, T_p = 5s on 4 processors.
+        assert!((speedup(10.0, 5.0) - 2.0).abs() < 1e-12);
+        assert!((speedup_pct(10.0, 5.0) - 50.0).abs() < 1e-12);
+        assert!((efficiency(10.0, 5.0, 4) - 0.5).abs() < 1e-12);
+        // Slower parallel run → negative percentage, as in the paper's
+        // low-dimension cells.
+        assert!(speedup_pct(10.0, 12.0) < 0.0);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let fig = Figure {
+            id: "fig_test".into(),
+            title: "t".into(),
+            x_label: "mb".into(),
+            y_label: "s".into(),
+            series: vec![
+                Series {
+                    label: "d=1".into(),
+                    points: vec![(10.0, 1.0), (20.0, 2.0)],
+                },
+                Series {
+                    label: "d=2".into(),
+                    points: vec![(10.0, 0.5)],
+                },
+            ],
+        };
+        let dir = std::env::temp_dir().join("ohhc_fig_test");
+        let path = fig.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("mb,d=1,d=2"));
+        assert!(text.contains("10,1.000000,0.500000"));
+        assert!(text.contains("20,2.000000,"));
+        let rendered = fig.to_text();
+        assert!(rendered.contains("fig_test"));
+    }
+}

@@ -1,0 +1,166 @@
+//! ASCII line charts for figures — lets `ohhc-qsort figures --plot`
+//! render every regenerated paper figure directly in the terminal, next
+//! to the CSV.
+
+use super::Figure;
+
+/// Glyphs assigned to series, in order.
+const GLYPHS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render a figure as an ASCII chart of `width × height` characters
+/// (plus axes and legend).
+pub fn render(fig: &Figure, width: usize, height: usize) -> String {
+    let width = width.max(16);
+    let height = height.max(6);
+    let points: Vec<(f64, f64)> = fig
+        .series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .collect();
+    if points.is_empty() {
+        return format!("{} (no data)\n", fig.id);
+    }
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &points {
+        x_min = x_min.min(x);
+        x_max = x_max.max(x);
+        y_min = y_min.min(y);
+        y_max = y_max.max(y);
+    }
+    if (x_max - x_min).abs() < f64::EPSILON {
+        x_max = x_min + 1.0;
+    }
+    if (y_max - y_min).abs() < f64::EPSILON {
+        y_max = y_min + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, series) in fig.series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        // Plot points and connect consecutive ones with interpolation.
+        let mut prev: Option<(usize, usize)> = None;
+        let mut pts = series.points.clone();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for &(x, y) in &pts {
+            let cx = (((x - x_min) / (x_max - x_min)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y_min) / (y_max - y_min)) * (height - 1) as f64).round() as usize;
+            let cy = height - 1 - cy; // row 0 is the top
+            if let Some((px, py)) = prev {
+                // Linear interpolation between chart cells.
+                let steps = cx.abs_diff(px).max(cy.abs_diff(py)).max(1);
+                for s in 0..=steps {
+                    let ix = px as f64 + (cx as f64 - px as f64) * s as f64 / steps as f64;
+                    let iy = py as f64 + (cy as f64 - py as f64) * s as f64 / steps as f64;
+                    let cell = &mut grid[iy.round() as usize][ix.round() as usize];
+                    if *cell == ' ' {
+                        *cell = if s == 0 || s == steps { glyph } else { '.' };
+                    }
+                }
+            }
+            grid[cy][cx] = glyph;
+            prev = Some((cx, cy));
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{} — {}\n", fig.id, fig.title));
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{y_max:>10.2} |")
+        } else if r == height - 1 {
+            format!("{y_min:>10.2} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>12}{:<10.2}{:>width$.2}  ({})\n",
+        "",
+        x_min,
+        x_max,
+        fig.x_label,
+        width = width - 10
+    ));
+    for (si, s) in fig.series.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>12}{} = {}\n",
+            "",
+            GLYPHS[si % GLYPHS.len()],
+            s.label
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Series;
+
+    fn fig() -> Figure {
+        Figure {
+            id: "t".into(),
+            title: "test".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            series: vec![
+                Series {
+                    label: "up".into(),
+                    points: vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)],
+                },
+                Series {
+                    label: "down".into(),
+                    points: vec![(0.0, 4.0), (2.0, 0.0)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_with_axes_and_legend() {
+        let s = render(&fig(), 40, 10);
+        assert!(s.contains("t — test"));
+        assert!(s.contains("* = up"));
+        assert!(s.contains("o = down"));
+        assert!(s.contains('|'));
+        assert!(s.lines().count() > 12);
+    }
+
+    #[test]
+    fn handles_degenerate_figures() {
+        let empty = Figure {
+            id: "e".into(),
+            title: "".into(),
+            x_label: "".into(),
+            y_label: "".into(),
+            series: vec![],
+        };
+        assert!(render(&empty, 40, 10).contains("no data"));
+        let flat = Figure {
+            series: vec![Series {
+                label: "c".into(),
+                points: vec![(1.0, 5.0), (2.0, 5.0)],
+            }],
+            ..fig()
+        };
+        let s = render(&flat, 30, 8);
+        assert!(s.contains('c') || s.contains('*'));
+    }
+
+    #[test]
+    fn glyphs_appear_in_grid() {
+        let s = render(&fig(), 40, 12);
+        let body: String = s
+            .lines()
+            .filter(|l| l.contains('|'))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(body.contains('*'));
+        assert!(body.contains('o'));
+    }
+}

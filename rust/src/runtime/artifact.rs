@@ -1,0 +1,236 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt`, validates their
+//! signatures against `manifest.json`, and compiles them (once) on the
+//! PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Declared I/O signature of one artifact (from `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    /// Input `(dtype, shape)` pairs.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Output `(dtype, shape)` pairs.
+    pub outputs: Vec<(String, Vec<usize>)>,
+    /// Truncated sha256 of the HLO text.
+    pub sha256: String,
+    /// HLO text size.
+    pub bytes: usize,
+}
+
+/// `manifest.json` written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Chunk length every streaming artifact was lowered for.
+    pub chunk: usize,
+    /// Artifact name → signature.
+    pub artifacts: HashMap<String, ArtifactSig>,
+}
+
+impl ArtifactManifest {
+    /// Parse the manifest JSON document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let bad = |m: &str| Error::Artifact(format!("bad manifest.json: {m}"));
+        let chunk = j
+            .get("chunk")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing `chunk`"))?;
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| bad("missing `artifacts`"))?;
+        for (name, a) in arts {
+            let io = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad(&format!("{name}: missing `{key}`")))?
+                    .iter()
+                    .map(|pair| {
+                        let pair = pair
+                            .as_arr()
+                            .filter(|p| p.len() == 2)
+                            .ok_or_else(|| bad(&format!("{name}: bad {key} entry")))?;
+                        let dtype = pair[0]
+                            .as_str()
+                            .ok_or_else(|| bad(&format!("{name}: bad dtype")))?
+                            .to_string();
+                        let shape = pair[1]
+                            .as_arr()
+                            .ok_or_else(|| bad(&format!("{name}: bad shape")))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| bad(&format!("{name}: bad dim")))
+                            })
+                            .collect::<Result<Vec<usize>>>()?;
+                        Ok((dtype, shape))
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    inputs: io("inputs")?,
+                    outputs: io("outputs")?,
+                    sha256: a
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    bytes: a
+                        .get("bytes")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| bad(&format!("{name}: missing bytes")))?,
+                },
+            );
+        }
+        Ok(ArtifactManifest { chunk, artifacts })
+    }
+}
+
+/// Registry + lazy compilation cache.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry over an artifact directory (reads `manifest.json`,
+    /// creates the PJRT CPU client).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = ArtifactManifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The chunk length artifacts were lowered for.
+    pub fn chunk(&self) -> usize {
+        self.manifest.chunk
+    }
+
+    /// Names of all known artifacts.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Signature of an artifact.
+    pub fn sig(&self, name: &str) -> Result<&ArtifactSig> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact `{name}`")))
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let sig = self.sig(name)?;
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("missing {}: {e}", path.display())))?;
+        if text.len() != sig.bytes {
+            return Err(Error::Artifact(format!(
+                "{name}: size {} != manifest {} (stale artifacts? re-run `make artifacts`)",
+                text.len(),
+                sig.bytes
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// The PJRT client (platform info, diagnostics).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn open_registry_and_list() {
+        let reg = ArtifactRegistry::open(&artifact_dir()).expect("make artifacts first");
+        assert_eq!(reg.chunk(), 65536);
+        let names = reg.names();
+        assert!(names.iter().any(|n| n == "minmax_n65536"), "{names:?}");
+        assert!(names.iter().any(|n| n == "partition_n65536_p36"));
+        assert!(names.iter().any(|n| n == "bitonic_n65536_b1024"));
+        // Paper Table 1.1: all eight processor counts are covered.
+        for p in [18, 36, 72, 144, 288, 576, 1152, 2304] {
+            assert!(
+                names.iter().any(|n| n == &format!("partition_n65536_p{p}")),
+                "missing partition for P={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let reg = ArtifactRegistry::open(&artifact_dir()).unwrap();
+        assert!(reg.sig("nope").is_err());
+        assert!(reg.executable("nope").is_err());
+    }
+
+    #[test]
+    fn signatures_describe_shapes() {
+        let reg = ArtifactRegistry::open(&artifact_dir()).unwrap();
+        let sig = reg.sig("partition_n65536_p36").unwrap();
+        assert_eq!(sig.inputs.len(), 3); // x, lo, sub
+        assert_eq!(sig.inputs[0].1, vec![65536]);
+        assert_eq!(sig.outputs[1].1, vec![36]); // histogram
+    }
+
+    #[test]
+    fn manifest_parser_rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        assert!(ArtifactManifest::parse(r#"{"chunk": 4}"#).is_err());
+        assert!(ArtifactManifest::parse(
+            r#"{"chunk": 4, "artifacts": {"a": {"inputs": [], "outputs": []}}}"#
+        )
+        .is_err()); // missing bytes
+        let ok = ArtifactManifest::parse(
+            r#"{"chunk": 4, "artifacts":
+               {"a": {"inputs": [["s32",[4]]], "outputs": [["s32",[1]]],
+                      "sha256": "x", "bytes": 10}}}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.artifacts["a"].inputs[0].1, vec![4]);
+    }
+}

@@ -1,0 +1,16 @@
+//! XLA/PJRT runtime — loads the AOT-compiled L1/L2 artifacts and runs them
+//! from the rust hot path.  Python never executes at request time.
+//!
+//! Flow (see /opt/xla-example/load_hlo/ for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file(artifact)` →
+//! `client.compile(...)` → `executable.execute(...)`.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (aot.py documents the same constraint).
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactRegistry, ArtifactSig};
+pub use executor::{DivideOutput, XlaDivide, XlaSortBlocks, XlaSplitterPartition, CHUNK};

@@ -1,0 +1,23 @@
+//! Static gather/scatter schedules — the paper's coordination contribution.
+//!
+//! The OHHC Quick Sort never negotiates at runtime: every processor knows,
+//! **statically from its position**, how many sub-arrays it must accumulate
+//! before forwarding and where to forward them (paper §3.2 and Figs
+//! 3.1–3.5).  This module computes those wait-for/send rules for any
+//! dimension and both constructions, generalizing the paper's full-group
+//! pseudocode; the tests verify that on `G = P` the computed counts
+//! collapse to the paper's closed forms
+//! (`normal = P+1`, `aggregate = 2·normal`, `head = 6·normal`,
+//! `master = 5·normal + 1`).
+//!
+//! Gather proceeds in conceptual phases — (a) inner-HHC, (b) hypercube,
+//! (c) OTIS optical, then (d)+(e) repeat (a)+(b) inside group 0 — but no
+//! barrier exists between them: the cumulative wait counts alone enforce
+//! the ordering, exactly as in the paper.
+
+mod plan;
+
+pub use plan::{gather_plan, gather_subtree, scatter_order, GatherAction, NodePlan, Phase};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,257 @@
+//! Gather-plan computation (Figs 3.1–3.5, generalized).
+
+use crate::topology::hypercube::first_set_bit;
+use crate::topology::ohhc::{Addr, Ohhc};
+
+/// Which algorithm phase an action belongs to (for traces and figures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Fig 3.1 — inner hexa-cell accumulation (electrical).
+    InnerHhc,
+    /// Fig 3.2 — hypercube accumulation across cells (electrical).
+    HyperCube,
+    /// Fig 3.3 — optical transpose hop to group 0.
+    Otis,
+    /// Fig 3.4 — inner hexa-cell accumulation inside group 0.
+    MasterInnerHhc,
+    /// Fig 3.5 — hypercube accumulation inside group 0.
+    MasterHyperCube,
+}
+
+/// One step of a node's gather role: accumulate until `wait_for`
+/// sub-arrays are held (own payload included), then forward everything to
+/// `send_to` (`None` marks the master's terminal wait).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherAction {
+    /// Phase label.
+    pub phase: Phase,
+    /// Cumulative sub-array count that must be held before acting.
+    pub wait_for: usize,
+    /// Destination, or `None` when this node is the final sink.
+    pub send_to: Option<Addr>,
+}
+
+/// A processor's complete static role in the gather.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodePlan {
+    /// Who this plan belongs to.
+    pub addr: Addr,
+    /// Ordered actions; empty only for pure leaf senders (never — every
+    /// node at least sends or terminally waits).
+    pub actions: Vec<GatherAction>,
+}
+
+impl NodePlan {
+    /// Final action of the node (the send that ends its participation, or
+    /// the master's terminal wait).
+    pub fn last(&self) -> &GatherAction {
+        self.actions.last().expect("plans are never empty")
+    }
+}
+
+/// Sub-arrays *initially* held by a node once the OTIS phase has delivered
+/// (1 own everywhere; group-0 processors `1..G` additionally receive one
+/// whole group's accumulation of `P` sub-arrays over their optical link).
+fn initial_load(net: &Ohhc, a: Addr) -> usize {
+    let l = a.local();
+    if a.group == 0 && l >= 1 && l < net.groups {
+        1 + net.procs_per_group
+    } else {
+        1
+    }
+}
+
+/// Sum of initial loads over one hexa-cell of group 0.
+fn cell_load(net: &Ohhc, cell: usize) -> usize {
+    (0..6)
+        .map(|n| {
+            initial_load(
+                net,
+                Addr {
+                    group: 0,
+                    cell,
+                    node: n,
+                },
+            )
+        })
+        .sum()
+}
+
+/// Compute every processor's gather plan, indexed by flat node id.
+pub fn gather_plan(net: &Ohhc) -> Vec<NodePlan> {
+    let mut plans = Vec::with_capacity(net.total_processors());
+    for id in 0..net.total_processors() {
+        let a = net.addr(id);
+        plans.push(if a.group == 0 {
+            group0_plan(net, a)
+        } else {
+            worker_group_plan(net, a)
+        });
+    }
+    plans
+}
+
+/// Plan for a node in a non-zero group (Figs 3.1–3.3).
+fn worker_group_plan(net: &Ohhc, a: Addr) -> NodePlan {
+    let g = a.group;
+    let at = |cell, node| Addr {
+        group: g,
+        cell,
+        node,
+    };
+    let mut actions = Vec::new();
+    match a.node {
+        // Fig 3.1: triangle-B nodes forward over the matching.
+        3 => actions.push(GatherAction {
+            phase: Phase::InnerHhc,
+            wait_for: 1,
+            send_to: Some(at(a.cell, 1)),
+        }),
+        4 => actions.push(GatherAction {
+            phase: Phase::InnerHhc,
+            wait_for: 1,
+            send_to: Some(at(a.cell, 2)),
+        }),
+        5 => actions.push(GatherAction {
+            phase: Phase::InnerHhc,
+            wait_for: 1,
+            send_to: Some(at(a.cell, 0)),
+        }),
+        // Fig 3.1: aggregation nodes 1 and 2 wait for their matched feeder.
+        1 | 2 => actions.push(GatherAction {
+            phase: Phase::InnerHhc,
+            wait_for: 2,
+            send_to: Some(at(a.cell, 0)),
+        }),
+        // Cell heads.
+        0 => {
+            if a.cell == 0 {
+                // Group head: Fig 3.3 — wait for the whole group, then one
+                // optical hop to processor `g` of group 0.
+                actions.push(GatherAction {
+                    phase: Phase::Otis,
+                    wait_for: net.procs_per_group,
+                    send_to: Some({
+                        let (cell, node) = (g / 6, g % 6);
+                        Addr {
+                            group: 0,
+                            cell,
+                            node,
+                        }
+                    }),
+                });
+            } else {
+                // Fig 3.2: wait for the reduction subtree (6·2^(fsb-1)),
+                // then clear the lowest set bit.
+                let fsb = first_set_bit(a.cell);
+                let subtree = 6 * (1usize << (fsb - 1));
+                let parent = a.cell & (a.cell - 1);
+                actions.push(GatherAction {
+                    phase: Phase::HyperCube,
+                    wait_for: subtree,
+                    send_to: Some(at(parent, 0)),
+                });
+            }
+        }
+        _ => unreachable!("hexa-cell node ids are 0..6"),
+    }
+    NodePlan { addr: a, actions }
+}
+
+/// Plan for a node of group 0 (Figs 3.4 / 3.5): identical flow, but wait
+/// amounts account for the optical payloads its processors already hold.
+fn group0_plan(net: &Ohhc, a: Addr) -> NodePlan {
+    let at = |cell, node| Addr {
+        group: 0,
+        cell,
+        node,
+    };
+    let own = initial_load(net, a);
+    let load_of = |cell, node| initial_load(net, at(cell, node));
+    let mut actions = Vec::new();
+    match a.node {
+        3 => actions.push(GatherAction {
+            phase: Phase::MasterInnerHhc,
+            wait_for: own,
+            send_to: Some(at(a.cell, 1)),
+        }),
+        4 => actions.push(GatherAction {
+            phase: Phase::MasterInnerHhc,
+            wait_for: own,
+            send_to: Some(at(a.cell, 2)),
+        }),
+        5 => actions.push(GatherAction {
+            phase: Phase::MasterInnerHhc,
+            wait_for: own,
+            send_to: Some(at(a.cell, 0)),
+        }),
+        1 | 2 => {
+            // Wait for own load plus the matched feeder's (3→1, 4→2).
+            let feeder = a.node + 2;
+            actions.push(GatherAction {
+                phase: Phase::MasterInnerHhc,
+                wait_for: own + load_of(a.cell, feeder),
+                send_to: Some(at(a.cell, 0)),
+            });
+        }
+        0 => {
+            if a.cell == 0 {
+                // The master: terminal wait for every sub-array in the
+                // machine (paper: masterHHCHeadNodeWaitFor, then the
+                // hypercube waits of Fig 3.5 subsume into the total).
+                actions.push(GatherAction {
+                    phase: Phase::MasterHyperCube,
+                    wait_for: net.groups * net.procs_per_group,
+                    send_to: None,
+                });
+            } else {
+                // Cell head: subtree sum of cell loads (Fig 3.5's
+                // `normalHHCHeadNodeWaitFor · 2^(bit-1)` generalized).
+                let fsb = first_set_bit(a.cell);
+                let subtree_cells = 1usize << (fsb - 1);
+                let wait: usize = (a.cell..a.cell + subtree_cells)
+                    .map(|c| cell_load(net, c))
+                    .sum();
+                let parent = a.cell & (a.cell - 1);
+                actions.push(GatherAction {
+                    phase: Phase::MasterHyperCube,
+                    wait_for: wait,
+                    send_to: Some(at(parent, 0)),
+                });
+            }
+        }
+        _ => unreachable!(),
+    }
+    NodePlan { addr: a, actions }
+}
+
+/// Scatter order: the reverse of the gather tree.  Returns, for every node,
+/// the gather destination (= scatter source), with the master mapped to
+/// `None`.  The distribution phase walks this tree root-to-leaves; the
+/// threaded backend hands payloads over directly (shared memory, as the
+/// paper's C++ threads do) while the DES charges store-and-forward costs
+/// per tree edge.
+pub fn scatter_order(plans: &[NodePlan]) -> Vec<Option<Addr>> {
+    plans.iter().map(|p| p.last().send_to).collect()
+}
+
+/// The subtree of processors whose gather payloads flow through `root`
+/// (including `root` itself) — used by the DES scatter phase to size the
+/// forwarded batches.
+pub fn gather_subtree(net: &Ohhc, plans: &[NodePlan], root: usize) -> Vec<usize> {
+    let parents = scatter_order(plans);
+    (0..net.total_processors())
+        .filter(|&p| {
+            let mut cur = p;
+            loop {
+                if cur == root {
+                    return true;
+                }
+                match parents[cur] {
+                    Some(next) => cur = net.id(next),
+                    None => return false,
+                }
+            }
+        })
+        .collect()
+}

@@ -1,0 +1,282 @@
+//! Schedule validation: the computed wait-for counts must collapse to the
+//! paper's closed forms on `G = P`, conserve payloads in both
+//! constructions, and form a deadlock-free forwarding tree.
+
+use super::*;
+use crate::config::Construction;
+use crate::topology::ohhc::{Addr, Ohhc};
+
+fn net(d: u32, c: Construction) -> Ohhc {
+    Ohhc::new(d, c).unwrap()
+}
+
+#[test]
+fn fig_3_1_inner_hhc_rules() {
+    // Worker-group cells: 5→0, 3→1, 4→2, {1,2}→0 with waits 1/1/1/2/2/6.
+    let n = net(2, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let a = |cell, node| Addr {
+        group: 3,
+        cell,
+        node,
+    };
+    let plan_of = |addr: Addr| &plans[n.id(addr)];
+
+    let p5 = plan_of(a(1, 5));
+    assert_eq!(p5.actions[0].wait_for, 1);
+    assert_eq!(p5.actions[0].send_to, Some(a(1, 0)));
+
+    let p3 = plan_of(a(1, 3));
+    assert_eq!(p3.actions[0].send_to, Some(a(1, 1)));
+    let p4 = plan_of(a(1, 4));
+    assert_eq!(p4.actions[0].send_to, Some(a(1, 2)));
+
+    for node in [1, 2] {
+        let p = plan_of(a(1, node));
+        assert_eq!(p.actions[0].wait_for, 2, "node {node}");
+        assert_eq!(p.actions[0].send_to, Some(a(1, 0)));
+    }
+}
+
+#[test]
+fn fig_3_2_hypercube_rules() {
+    // d=3 → 4 cells per group.  Cell 3 (fsb=1) waits 6, sends to cell 2;
+    // cell 2 (fsb=2) waits 12, sends to cell 0; cell 1 waits 6 → cell 0.
+    let n = net(3, Construction::FullGroup);
+    let plans = gather_plan(&n);
+    let head = |cell| Addr {
+        group: 2,
+        cell,
+        node: 0,
+    };
+    let act = |cell: usize| plans[n.id(head(cell))].actions[0];
+
+    assert_eq!(act(3).wait_for, 6);
+    assert_eq!(act(3).send_to, Some(head(2)));
+    assert_eq!(act(2).wait_for, 12);
+    assert_eq!(act(2).send_to, Some(head(0)));
+    assert_eq!(act(1).wait_for, 6);
+    assert_eq!(act(1).send_to, Some(head(0)));
+    assert_eq!(act(1).phase, Phase::HyperCube);
+}
+
+#[test]
+fn fig_3_3_otis_rules() {
+    // Group heads wait for the whole group (6·2^(d-1)) and forward over
+    // the optical transpose to processor g of group 0.
+    for d in 1..=4 {
+        let n = net(d, Construction::FullGroup);
+        let plans = gather_plan(&n);
+        for g in 1..n.groups {
+            let head = Addr {
+                group: g,
+                cell: 0,
+                node: 0,
+            };
+            let act = plans[n.id(head)].actions[0];
+            assert_eq!(act.wait_for, n.procs_per_group, "d={d} g={g}");
+            assert_eq!(act.phase, Phase::Otis);
+            let dst = act.send_to.unwrap();
+            assert_eq!(dst.group, 0);
+            assert_eq!(dst.local(), g, "d={d} g={g}");
+            // And that send is a single optical hop (the link exists).
+            assert_eq!(n.optical_partner(head), Some(dst));
+        }
+    }
+}
+
+#[test]
+fn fig_3_4_group0_closed_forms_full_construction() {
+    // Paper Fig 3.4 (G = P): normal = G·?…  With GetHHCGroupsNumber(d)·6
+    // = P processors per group, normal = P + 1.
+    for d in 1..=4 {
+        let n = net(d, Construction::FullGroup);
+        let plans = gather_plan(&n);
+        let p = n.procs_per_group;
+        let normal = p + 1;
+        let a = |cell, node| Addr {
+            group: 0,
+            cell,
+            node,
+        };
+
+        // Nodes 3/4/5 of every cell wait exactly their own load.
+        for cell in 0..n.cells_per_group() {
+            for node in [3, 4, 5] {
+                let act = plans[n.id(a(cell, node))].actions[0];
+                let expected = if a(cell, node).local() < n.groups {
+                    normal // holds an optical batch
+                } else {
+                    1
+                };
+                assert_eq!(act.wait_for, expected, "d={d} cell={cell} node={node}");
+            }
+            // Aggregation nodes 1/2: own + feeder = 2·normal when both
+            // hold optical batches (always true in G = P: local < G).
+            for node in [1, 2] {
+                let act = plans[n.id(a(cell, node))].actions[0];
+                let self_load = if a(cell, node).local() < n.groups {
+                    normal
+                } else {
+                    1
+                };
+                let feeder_load = if a(cell, node + 2).local() < n.groups {
+                    normal
+                } else {
+                    1
+                };
+                assert_eq!(act.wait_for, self_load + feeder_load);
+            }
+        }
+
+        // In G = P every group-0 processor except the master holds an
+        // optical batch, so cell 0's aggregate inflow at the master is
+        // 5·normal + 1 — the paper's masterHHCHeadNodeWaitFor — and the
+        // machine total is G·P.
+        let master = plans[n.id(a(0, 0))].actions[0];
+        assert_eq!(master.wait_for, n.groups * p, "d={d}");
+        assert_eq!(master.send_to, None);
+        if d == 1 {
+            // Single cell: the master's terminal wait IS Fig 3.4's value.
+            assert_eq!(master.wait_for, 5 * normal + 1);
+        }
+    }
+}
+
+#[test]
+fn fig_3_5_group0_hypercube_closed_form() {
+    // Cell heads of group 0 wait 6·normal·2^(fsb-1) in G = P (all six
+    // nodes of each cell hold normal = P+1... except cells whose locals
+    // exceed G — impossible in full construction).
+    for d in 2..=4 {
+        let n = net(d, Construction::FullGroup);
+        let plans = gather_plan(&n);
+        let normal = n.procs_per_group + 1;
+        for cell in 1..n.cells_per_group() {
+            let head = Addr {
+                group: 0,
+                cell,
+                node: 0,
+            };
+            let act = plans[n.id(head)].actions[0];
+            let fsb = cell.trailing_zeros() + 1;
+            let expected = 6 * normal * (1usize << (fsb - 1));
+            assert_eq!(act.wait_for, expected, "d={d} cell={cell}");
+            assert_eq!(act.phase, Phase::MasterHyperCube);
+        }
+    }
+}
+
+#[test]
+fn conservation_both_constructions() {
+    // The master's terminal wait equals the total number of sub-arrays,
+    // and every non-master node forwards exactly once.
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let n = net(d, c);
+            let plans = gather_plan(&n);
+            let total = n.groups * n.procs_per_group;
+            let master = &plans[0];
+            assert_eq!(master.last().wait_for, total, "d={d} {c:?}");
+            assert_eq!(master.last().send_to, None);
+            let senders = plans
+                .iter()
+                .filter(|p| p.last().send_to.is_some())
+                .count();
+            assert_eq!(senders, total - 1, "d={d} {c:?}");
+        }
+    }
+}
+
+#[test]
+fn forwarding_tree_is_acyclic_and_rooted_at_master() {
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let n = net(d, c);
+            let plans = gather_plan(&n);
+            let parents = scatter_order(&plans);
+            for id in 0..n.total_processors() {
+                let mut cur = id;
+                let mut hops = 0;
+                while let Some(parent) = parents[cur] {
+                    cur = n.id(parent);
+                    hops += 1;
+                    assert!(
+                        hops <= n.total_processors(),
+                        "cycle at {id} (d={d} {c:?})"
+                    );
+                }
+                assert_eq!(cur, 0, "node {id} does not drain to the master");
+            }
+        }
+    }
+}
+
+#[test]
+fn wait_counts_are_satisfiable() {
+    // Every node's wait must equal its own initial load plus the loads of
+    // the children that send to it — otherwise the gather deadlocks.
+    // Simulate the counting abstractly (no payloads, just counts).
+    for d in 1..=4 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let n = net(d, c);
+            let plans = gather_plan(&n);
+            let total = n.total_processors();
+            // initial loads: 1 everywhere + P for group-0 locals 1..G
+            // (delivered by the OTIS sends, which we replay like messages).
+            let mut held: Vec<usize> = vec![1; total];
+            let mut done = vec![false; total];
+            let mut progressed = true;
+            while progressed {
+                progressed = false;
+                for id in 0..total {
+                    if done[id] {
+                        continue;
+                    }
+                    let act = plans[id].last();
+                    if held[id] >= act.wait_for {
+                        assert_eq!(
+                            held[id], act.wait_for,
+                            "node {id} over-accumulated (d={d} {c:?})"
+                        );
+                        if let Some(dst) = act.send_to {
+                            held[n.id(dst)] += held[id];
+                            held[id] = 0;
+                        }
+                        done[id] = true;
+                        progressed = true;
+                    }
+                }
+            }
+            assert!(done.iter().all(|&x| x), "gather deadlocked (d={d} {c:?})");
+            assert_eq!(held[0], n.groups * n.procs_per_group);
+        }
+    }
+}
+
+#[test]
+fn gather_subtrees_partition_the_machine() {
+    let n = net(2, Construction::HalfGroup);
+    let plans = gather_plan(&n);
+    // The master's subtree is everything.
+    assert_eq!(
+        gather_subtree(&n, &plans, 0).len(),
+        n.total_processors()
+    );
+    // A worker-group head's subtree is its whole group.
+    let head = n.id(Addr {
+        group: 1,
+        cell: 0,
+        node: 0,
+    });
+    let sub = gather_subtree(&n, &plans, head);
+    assert_eq!(sub.len(), n.procs_per_group);
+    assert!(sub.iter().all(|&p| n.addr(p).group == 1));
+    // A leaf's subtree is itself.
+    let leaf = n.id(Addr {
+        group: 1,
+        cell: 0,
+        node: 3,
+    });
+    assert_eq!(gather_subtree(&n, &plans, leaf), vec![leaf]);
+}

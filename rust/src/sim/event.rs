@@ -1,0 +1,123 @@
+//! Discrete-event core: virtual clock and the event queue.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time in picoseconds (integer so ordering is total and exact).
+pub type Time = u64;
+
+/// Picoseconds per nanosecond.
+pub const PS_PER_NS: f64 = 1000.0;
+
+/// Convert nanoseconds (model units) to picosecond ticks.
+pub fn ns_to_ticks(ns: f64) -> Time {
+    (ns * PS_PER_NS).round() as Time
+}
+
+/// Convert ticks back to nanoseconds.
+pub fn ticks_to_ns(t: Time) -> f64 {
+    t as f64 / PS_PER_NS
+}
+
+/// An event scheduled on the queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event<P> {
+    /// Firing time.
+    pub time: Time,
+    /// Monotonic tie-breaker (FIFO among simultaneous events).
+    pub seq: u64,
+    /// Payload.
+    pub payload: P,
+}
+
+impl<P: Eq> Ord for Event<P> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl<P: Eq> PartialOrd for Event<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with deterministic FIFO tie-breaking.
+#[derive(Debug)]
+pub struct EventQueue<P: Eq> {
+    heap: BinaryHeap<Reverse<Event<P>>>,
+    seq: u64,
+    processed: u64,
+}
+
+impl<P: Eq> Default for EventQueue<P> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            processed: 0,
+        }
+    }
+}
+
+impl<P: Eq> EventQueue<P> {
+    /// New empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `payload` at `time`.
+    pub fn push(&mut self, time: Time, payload: P) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time, seq, payload }));
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event<P>> {
+        let e = self.heap.pop().map(|Reverse(e)| e);
+        if e.is_some() {
+            self.processed += 1;
+        }
+        e
+    }
+
+    /// Events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending event count.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(20, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a1", "a2", "b", "c"]);
+        assert_eq!(q.processed(), 4);
+    }
+
+    #[test]
+    fn tick_conversions_round_trip() {
+        assert_eq!(ns_to_ticks(1.0), 1000);
+        assert_eq!(ns_to_ticks(0.5), 500);
+        assert!((ticks_to_ns(ns_to_ticks(123.456)) - 123.456).abs() < 1e-9);
+    }
+}

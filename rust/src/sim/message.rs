@@ -1,0 +1,72 @@
+//! Message payloads exchanged by simulated processors.
+
+/// One sorted sub-array tagged with its bucket rank.  Because the step-
+/// point division is order-preserving across buckets (paper §3.1), the
+/// master reassembles the sorted output by writing each sub-array at its
+/// bucket's prefix offset — no merge required.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubArray {
+    /// Bucket rank (equal to the owning processor's flat id).
+    pub bucket: u32,
+    /// Sorted keys.
+    pub data: Vec<i32>,
+}
+
+impl SubArray {
+    /// Payload size in bytes (4 bytes per key) — what the DES link model
+    /// charges for.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// A batch of sub-arrays traveling together (the paper's nodes forward
+/// their whole accumulated payload in one send).
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    /// Accumulated sub-arrays, in arrival order (ranks restore order).
+    pub subarrays: Vec<SubArray>,
+}
+
+impl Batch {
+    /// Batch holding a single sub-array.
+    pub fn single(sub: SubArray) -> Self {
+        Batch {
+            subarrays: vec![sub],
+        }
+    }
+
+    /// Number of sub-arrays in the batch.
+    pub fn count(&self) -> usize {
+        self.subarrays.len()
+    }
+
+    /// Total payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.subarrays.iter().map(SubArray::bytes).sum()
+    }
+
+    /// Absorb another batch.
+    pub fn merge(&mut self, other: Batch) {
+        self.subarrays.extend(other.subarrays);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let mut b = Batch::single(SubArray {
+            bucket: 0,
+            data: vec![1, 2, 3],
+        });
+        b.merge(Batch::single(SubArray {
+            bucket: 1,
+            data: vec![4],
+        }));
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.bytes(), 16);
+    }
+}

@@ -1,0 +1,26 @@
+//! Simulation backends for the OHHC parallel Quick Sort.
+//!
+//! Two complementary engines execute the same static schedule
+//! ([`crate::schedule`]):
+//!
+//! * [`threaded`] — **the paper's own methodology** (§5): one OS thread per
+//!   simulated processor, message passing over channels, wall-clock
+//!   timing.  Like the paper's C++ simulation it cannot express the
+//!   electrical/optical speed difference (the paper concedes this in its
+//!   conclusion).
+//! * [`engine`] — a **discrete-event simulator** with store-and-forward
+//!   link models (electrical vs optical latency/bandwidth, §1.5), virtual
+//!   time, per-message delays and communication-step traces.  This is the
+//!   engine that lets us check Theorems 3 and 6 empirically, which the
+//!   paper could only derive analytically.
+
+pub mod engine;
+pub mod event;
+pub mod message;
+pub mod threaded;
+pub mod trace;
+
+pub use engine::{DesOutcome, DesSimulator};
+pub use message::{Batch, SubArray};
+pub use threaded::{ThreadedOutcome, ThreadedSimulator};
+pub use trace::CommTrace;

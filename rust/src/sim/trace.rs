@@ -1,0 +1,174 @@
+//! Communication traces: every link traversal the DES performs, so the
+//! analytical claims (Theorem 3 step counts, Theorem 6 message delays)
+//! can be checked against simulation instead of taken on faith.
+
+use crate::schedule::Phase;
+use crate::topology::graph::LinkKind;
+
+/// One message crossing one physical link.
+#[derive(Debug, Clone, Copy)]
+pub struct MsgRecord {
+    /// Sender flat id.
+    pub src: usize,
+    /// Receiver flat id.
+    pub dst: usize,
+    /// Link medium.
+    pub kind: LinkKind,
+    /// Payload bytes.
+    pub bytes: u64,
+    /// Departure time (ns).
+    pub depart_ns: f64,
+    /// Arrival time (ns).
+    pub arrive_ns: f64,
+    /// Scatter (`None`) or the gather phase it belongs to.
+    pub phase: Option<Phase>,
+}
+
+impl MsgRecord {
+    /// End-to-end delay of this traversal (ns).
+    pub fn delay_ns(&self) -> f64 {
+        self.arrive_ns - self.depart_ns
+    }
+}
+
+/// Accumulated trace of one DES run.
+#[derive(Debug, Default, Clone)]
+pub struct CommTrace {
+    /// All link traversals, in schedule order.
+    pub records: Vec<MsgRecord>,
+}
+
+impl CommTrace {
+    /// Record one traversal.
+    pub fn record(&mut self, rec: MsgRecord) {
+        self.records.push(rec);
+    }
+
+    /// Communication steps (= link traversals) by medium:
+    /// `(electrical, optical)` — the quantities of Theorem 3.
+    pub fn steps(&self) -> (usize, usize) {
+        let e = self
+            .records
+            .iter()
+            .filter(|r| r.kind == LinkKind::Electrical)
+            .count();
+        (e, self.records.len() - e)
+    }
+
+    /// Total communication steps.
+    pub fn total_steps(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Maximum single-traversal delay in ns (Theorem 6's worst message).
+    pub fn max_delay_ns(&self) -> f64 {
+        self.records
+            .iter()
+            .map(MsgRecord::delay_ns)
+            .fold(0.0, f64::max)
+    }
+
+    /// Total bytes moved per medium: `(electrical, optical)`.
+    pub fn bytes(&self) -> (u64, u64) {
+        let mut e = 0;
+        let mut o = 0;
+        for r in &self.records {
+            match r.kind {
+                LinkKind::Electrical => e += r.bytes,
+                LinkKind::Optical => o += r.bytes,
+            }
+        }
+        (e, o)
+    }
+
+    /// Steps attributed to the scatter (distribution) phase.
+    pub fn scatter_steps(&self) -> usize {
+        self.records.iter().filter(|r| r.phase.is_none()).count()
+    }
+
+    /// Serialize the trace as JSON (for offline analysis / plotting).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("src".into(), Json::Num(r.src as f64));
+                m.insert("dst".into(), Json::Num(r.dst as f64));
+                m.insert(
+                    "kind".into(),
+                    Json::Str(
+                        match r.kind {
+                            LinkKind::Electrical => "electrical",
+                            LinkKind::Optical => "optical",
+                        }
+                        .into(),
+                    ),
+                );
+                m.insert("bytes".into(), Json::Num(r.bytes as f64));
+                m.insert("depart_ns".into(), Json::Num(r.depart_ns));
+                m.insert("arrive_ns".into(), Json::Num(r.arrive_ns));
+                m.insert(
+                    "phase".into(),
+                    match r.phase {
+                        None => Json::Str("scatter".into()),
+                        Some(p) => Json::Str(format!("{p:?}")),
+                    },
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let (e, o) = self.steps();
+        let mut top = BTreeMap::new();
+        top.insert("electrical_steps".into(), Json::Num(e as f64));
+        top.insert("optical_steps".into(), Json::Num(o as f64));
+        top.insert("max_delay_ns".into(), Json::Num(self.max_delay_ns()));
+        top.insert("records".into(), Json::Arr(records));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: LinkKind, bytes: u64, d: f64, a: f64) -> MsgRecord {
+        MsgRecord {
+            src: 0,
+            dst: 1,
+            kind,
+            bytes,
+            depart_ns: d,
+            arrive_ns: a,
+            phase: None,
+        }
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let mut t = CommTrace::default();
+        t.record(rec(LinkKind::Optical, 128, 1.0, 3.5));
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("optical_steps").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("kind").unwrap().as_str(), Some("optical"));
+        assert_eq!(recs[0].get("phase").unwrap().as_str(), Some("scatter"));
+    }
+
+    #[test]
+    fn step_and_byte_census() {
+        let mut t = CommTrace::default();
+        t.record(rec(LinkKind::Electrical, 100, 0.0, 10.0));
+        t.record(rec(LinkKind::Electrical, 50, 5.0, 9.0));
+        t.record(rec(LinkKind::Optical, 200, 2.0, 4.0));
+        assert_eq!(t.steps(), (2, 1));
+        assert_eq!(t.total_steps(), 3);
+        assert_eq!(t.bytes(), (150, 200));
+        assert!((t.max_delay_ns() - 10.0).abs() < 1e-12);
+        assert_eq!(t.scatter_steps(), 3);
+    }
+}

@@ -1,0 +1,89 @@
+//! Instrumentation counters for the sequential Quick Sort.
+//!
+//! The paper's "number of key comparisons" section splits the work into
+//! three metrics — *recursion calls*, *iterations* (partition-loop trips)
+//! and *swaps* (Figs 6.20–6.22) — plus *comparison steps* (Fig 6.23).
+
+use std::ops::{Add, AddAssign};
+
+/// Work counters accumulated by one (or a sum over many) Quick Sort runs.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SortCounters {
+    /// Recursive calls entered (including the top-level call).
+    pub recursion_calls: u64,
+    /// Partition inner-loop iterations — the paper's "iterations".
+    pub iterations: u64,
+    /// Element swaps performed.
+    pub swaps: u64,
+    /// Key comparisons — the paper's "comparison steps" (Fig 6.23).
+    pub comparisons: u64,
+    /// Maximum recursion depth reached.
+    pub max_depth: u64,
+}
+
+impl SortCounters {
+    /// A zeroed counter set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total work proxy used by the DES compute-cost model.
+    pub fn work(&self) -> u64 {
+        self.comparisons + self.swaps
+    }
+}
+
+impl Add for SortCounters {
+    type Output = SortCounters;
+    fn add(self, o: SortCounters) -> SortCounters {
+        SortCounters {
+            recursion_calls: self.recursion_calls + o.recursion_calls,
+            iterations: self.iterations + o.iterations,
+            swaps: self.swaps + o.swaps,
+            comparisons: self.comparisons + o.comparisons,
+            max_depth: self.max_depth.max(o.max_depth),
+        }
+    }
+}
+
+impl AddAssign for SortCounters {
+    fn add_assign(&mut self, o: SortCounters) {
+        *self = *self + o;
+    }
+}
+
+impl std::iter::Sum for SortCounters {
+    fn sum<I: Iterator<Item = SortCounters>>(iter: I) -> Self {
+        iter.fold(SortCounters::default(), |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_is_componentwise_with_max_depth() {
+        let a = SortCounters {
+            recursion_calls: 1,
+            iterations: 10,
+            swaps: 3,
+            comparisons: 12,
+            max_depth: 4,
+        };
+        let b = SortCounters {
+            recursion_calls: 2,
+            iterations: 20,
+            swaps: 5,
+            comparisons: 25,
+            max_depth: 2,
+        };
+        let s = a + b;
+        assert_eq!(s.recursion_calls, 3);
+        assert_eq!(s.iterations, 30);
+        assert_eq!(s.swaps, 8);
+        assert_eq!(s.comparisons, 37);
+        assert_eq!(s.max_depth, 4); // depth does not add
+        assert_eq!([a, b].into_iter().sum::<SortCounters>(), s);
+    }
+}

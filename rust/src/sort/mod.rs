@@ -1,0 +1,49 @@
+//! Sequential Quick Sort — the per-processor local sort of the paper, with
+//! full instrumentation (recursion calls, partition-loop iterations, swaps,
+//! key comparisons) backing Figs 6.20–6.24.
+
+mod counters;
+mod pivot;
+mod quicksort;
+
+pub use counters::SortCounters;
+pub use pivot::PivotStrategy;
+pub use quicksort::{quicksort, quicksort_with, Quicksort};
+
+/// Convenience: sort ascending with the paper-default configuration
+/// (last-element pivot, no cutoff) and return the counters.
+pub fn instrumented_sort(data: &mut [i32]) -> SortCounters {
+    quicksort(data)
+}
+
+/// Check ascending sortedness — used by invariant tests and the
+/// coordinator's final verification.
+pub fn is_sorted(data: &[i32]) -> bool {
+    data.windows(2).all(|w| w[0] <= w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::workload;
+
+    #[test]
+    fn sorts_all_distributions() {
+        for dist in Distribution::ALL {
+            let mut v = workload::generate(dist, 10_000, 11);
+            let mut expect = v.clone();
+            expect.sort_unstable();
+            instrumented_sort(&mut v);
+            assert_eq!(v, expect, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn is_sorted_detects_disorder() {
+        assert!(is_sorted(&[1, 2, 2, 3]));
+        assert!(is_sorted(&[]));
+        assert!(is_sorted(&[5]));
+        assert!(!is_sorted(&[2, 1]));
+    }
+}

@@ -1,0 +1,97 @@
+//! Pivot selection strategies.
+//!
+//! The paper observes that sorted / reverse-sorted inputs run *faster* than
+//! random ones (Figs 6.1, 6.3) — behaviour consistent with a middle-element
+//! pivot (sorted input becomes the best case: perfectly balanced splits,
+//! zero swaps).  `Middle` is therefore the default; `Last` (the classic
+//! CLRS choice), `MedianOfThree` and `Random` are available for the
+//! ablation bench (`benches/seq_sort.rs`).
+
+/// How the partition step picks its pivot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum PivotStrategy {
+    /// Middle element — best case on sorted data (paper-consistent default).
+    #[default]
+    Middle,
+    /// Last element (CLRS); worst case `Θ(n²)` on sorted data.
+    Last,
+    /// Median of first/middle/last keys.
+    MedianOfThree,
+    /// Pseudo-random index (xorshift over the call counter; deterministic).
+    Random,
+}
+
+impl PivotStrategy {
+    /// Pick the pivot *index* within `data[lo..=hi]`.
+    ///
+    /// `ticket` is a deterministic per-call counter the sorter threads
+    /// through so `Random` stays reproducible.
+    #[inline]
+    pub fn pick(self, data: &[i32], lo: usize, hi: usize, ticket: u64) -> usize {
+        match self {
+            PivotStrategy::Middle => lo + (hi - lo) / 2,
+            PivotStrategy::Last => hi,
+            PivotStrategy::MedianOfThree => {
+                let mid = lo + (hi - lo) / 2;
+                let (a, b, c) = (data[lo], data[mid], data[hi]);
+                // Index of the median of (a, b, c).
+                if (a <= b) == (b <= c) {
+                    mid
+                } else if (b <= a) == (a <= c) {
+                    lo
+                } else {
+                    hi
+                }
+            }
+            PivotStrategy::Random => {
+                // xorshift64* on the ticket: cheap, deterministic, good
+                // enough to defeat adversarial orders.
+                let mut x = ticket.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let r = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+                lo + (r as usize) % (hi - lo + 1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn middle_and_last_indices() {
+        let d = [5, 4, 3, 2, 1];
+        assert_eq!(PivotStrategy::Middle.pick(&d, 0, 4, 0), 2);
+        assert_eq!(PivotStrategy::Last.pick(&d, 0, 4, 0), 4);
+        assert_eq!(PivotStrategy::Middle.pick(&d, 2, 3, 0), 2);
+    }
+
+    #[test]
+    fn median_of_three_is_the_median() {
+        // All six orderings of three distinct keys.
+        for perm in [
+            [1, 2, 3],
+            [1, 3, 2],
+            [2, 1, 3],
+            [2, 3, 1],
+            [3, 1, 2],
+            [3, 2, 1],
+        ] {
+            let idx = PivotStrategy::MedianOfThree.pick(&perm, 0, 2, 0);
+            assert_eq!(perm[idx], 2, "perm {perm:?}");
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let d = [0i32; 100];
+        for t in 0..1000u64 {
+            let i = PivotStrategy::Random.pick(&d, 10, 90, t);
+            assert!((10..=90).contains(&i));
+            assert_eq!(i, PivotStrategy::Random.pick(&d, 10, 90, t));
+        }
+    }
+}

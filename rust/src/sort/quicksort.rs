@@ -1,0 +1,254 @@
+//! Instrumented sequential Quick Sort (Hoare 1962, as in the paper §1.2).
+//!
+//! Divide-and-conquer with an in-place partition; recursion is realized
+//! with an explicit stack so adversarial pivot strategies cannot overflow
+//! the OS stack at paper-scale inputs (15 M keys).  Every unit of work the
+//! paper counts — recursion calls, partition-loop iterations, swaps, key
+//! comparisons — is tallied in [`SortCounters`].
+
+use super::counters::SortCounters;
+use super::pivot::PivotStrategy;
+
+/// Configurable sorter.  The default configuration reproduces the paper's
+/// observed behaviour (middle pivot, recurse to size-1 sub-arrays).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Quicksort {
+    /// Pivot selection rule.
+    pub pivot: PivotStrategy,
+    /// Below this length, finish with insertion sort (0 = never; the
+    /// paper's algorithm recurses all the way down, so 0 is the default).
+    pub insertion_cutoff: usize,
+}
+
+impl Quicksort {
+    /// Sort ascending in place; returns the work counters.
+    pub fn sort(&self, data: &mut [i32]) -> SortCounters {
+        let mut c = SortCounters::new();
+        if data.len() < 2 {
+            // A size-0/1 array is already sorted; the paper still counts
+            // the (single) call that discovers this.
+            c.recursion_calls = 1;
+            c.max_depth = 1;
+            return c;
+        }
+        let mut ticket: u64 = 0;
+        // Explicit recursion stack of (lo, hi, depth) inclusive ranges.
+        let mut stack: Vec<(usize, usize, u64)> = Vec::with_capacity(64);
+        stack.push((0, data.len() - 1, 1));
+        while let Some((lo, hi, depth)) = stack.pop() {
+            c.recursion_calls += 1;
+            c.max_depth = c.max_depth.max(depth);
+            if lo >= hi {
+                continue;
+            }
+            if self.insertion_cutoff > 1 && hi - lo + 1 <= self.insertion_cutoff {
+                insertion_sort(&mut data[lo..=hi], &mut c);
+                continue;
+            }
+            ticket += 1;
+            let p = self.partition(data, lo, hi, ticket, &mut c);
+            // Push the larger side first so the stack depth stays O(log n).
+            let (left, right) = ((lo, p, depth + 1), (p + 1, hi, depth + 1));
+            if p - lo >= hi - p {
+                stack.push(left);
+                stack.push(right);
+            } else {
+                stack.push(right);
+                stack.push(left);
+            }
+        }
+        c
+    }
+
+    /// Hoare partition of `data[lo..=hi]`; returns `q` such that
+    /// `data[lo..=q] <= pivot <= data[q+1..=hi]` and both sides are
+    /// non-empty (CLRS invariant, paper §1.2).
+    #[inline]
+    fn partition(
+        &self,
+        data: &mut [i32],
+        lo: usize,
+        hi: usize,
+        ticket: u64,
+        c: &mut SortCounters,
+    ) -> usize {
+        let mut p = self.pivot.pick(data, lo, hi, ticket);
+        if p == hi {
+            // Hoare's scheme never terminates if the pivot sits at `hi`
+            // and is the strict maximum (j would return == hi and the
+            // range never shrinks).  Move it out of the way; `Middle`
+            // never picks `hi` for lo < hi, so the paper-default path
+            // pays nothing here.
+            data.swap(hi, lo);
+            c.swaps += 1;
+            p = lo;
+        }
+        let pivot = data[p];
+        let mut i = lo as isize - 1;
+        let mut j = hi as isize + 1;
+        loop {
+            c.iterations += 1;
+            loop {
+                i += 1;
+                c.comparisons += 1;
+                if data[i as usize] >= pivot {
+                    break;
+                }
+            }
+            loop {
+                j -= 1;
+                c.comparisons += 1;
+                if data[j as usize] <= pivot {
+                    break;
+                }
+            }
+            if i >= j {
+                return j as usize;
+            }
+            data.swap(i as usize, j as usize);
+            c.swaps += 1;
+        }
+    }
+}
+
+/// Insertion sort used below the optional cutoff.
+fn insertion_sort(data: &mut [i32], c: &mut SortCounters) {
+    for i in 1..data.len() {
+        let mut j = i;
+        while j > 0 {
+            c.comparisons += 1;
+            c.iterations += 1;
+            if data[j - 1] <= data[j] {
+                break;
+            }
+            data.swap(j - 1, j);
+            c.swaps += 1;
+            j -= 1;
+        }
+    }
+}
+
+/// Sort with the paper-default configuration.
+pub fn quicksort(data: &mut [i32]) -> SortCounters {
+    Quicksort::default().sort(data)
+}
+
+/// Sort with an explicit pivot strategy.
+pub fn quicksort_with(data: &mut [i32], pivot: PivotStrategy) -> SortCounters {
+    Quicksort {
+        pivot,
+        ..Default::default()
+    }
+    .sort(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::workload;
+
+    fn check_sorts(pivot: PivotStrategy, n: usize) {
+        for dist in Distribution::ALL {
+            let mut v = workload::generate(dist, n, 3);
+            let mut expect = v.clone();
+            expect.sort_unstable();
+            quicksort_with(&mut v, pivot);
+            assert_eq!(v, expect, "{pivot:?} {dist:?}");
+        }
+    }
+
+    #[test]
+    fn all_pivots_sort_all_distributions() {
+        for pivot in [
+            PivotStrategy::Middle,
+            PivotStrategy::MedianOfThree,
+            PivotStrategy::Random,
+        ] {
+            check_sorts(pivot, 20_000);
+        }
+        // `Last` is O(n²) on sorted inputs — keep it small but still test it.
+        check_sorts(PivotStrategy::Last, 2_000);
+    }
+
+    #[test]
+    fn edge_cases() {
+        for v in [vec![], vec![1], vec![2, 1], vec![1, 1, 1, 1]] {
+            let mut v2 = v.clone();
+            quicksort(&mut v2);
+            let mut expect = v;
+            expect.sort_unstable();
+            assert_eq!(v2, expect);
+        }
+    }
+
+    #[test]
+    fn insertion_cutoff_still_sorts() {
+        let mut v = workload::random(10_000, 9);
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        let qs = Quicksort {
+            insertion_cutoff: 16,
+            ..Default::default()
+        };
+        qs.sort(&mut v);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn sorted_input_needs_almost_no_swaps_with_middle_pivot() {
+        // The paper's key observation (Figs 6.22/6.24): sorted inputs make
+        // almost no swaps.  With a middle pivot the only swaps left are
+        // between duplicate keys straddling the pivot (no-ops by value),
+        // and a distinct-key sorted input needs exactly zero.
+        let mut v = workload::sorted(50_000, 4);
+        let c = quicksort(&mut v);
+        assert!(c.swaps < 500, "swaps {}", c.swaps); // ~duplicate pairs only
+        assert!(crate::sort::is_sorted(&v));
+
+        let mut distinct: Vec<i32> = (0..50_000).collect();
+        let c = quicksort(&mut distinct);
+        assert_eq!(c.swaps, 0);
+    }
+
+    #[test]
+    fn random_swaps_far_exceed_sorted_swaps() {
+        let mut r = workload::random(100_000, 5);
+        let mut s = workload::sorted(100_000, 5);
+        let cr = quicksort(&mut r);
+        let cs = quicksort(&mut s);
+        assert!(
+            cr.swaps > 100 * (cs.swaps + 1),
+            "random {} vs sorted {}",
+            cr.swaps,
+            cs.swaps
+        );
+    }
+
+    #[test]
+    fn counter_scaling_is_n_log_n_ish() {
+        // comparisons(2n) / comparisons(n) should be ~2.1, far below 4
+        // (which would indicate quadratic behaviour).
+        let mut a = workload::random(1 << 16, 6);
+        let mut b = workload::random(1 << 17, 6);
+        let ca = quicksort(&mut a);
+        let cb = quicksort(&mut b);
+        let ratio = cb.comparisons as f64 / ca.comparisons as f64;
+        assert!((1.8..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn depth_is_logarithmic_with_middle_pivot_on_sorted() {
+        let mut v = workload::sorted(1 << 16, 7);
+        let c = quicksort(&mut v);
+        assert!(c.max_depth <= 20, "depth {}", c.max_depth);
+    }
+
+    #[test]
+    fn last_pivot_on_sorted_is_quadratic() {
+        // Documents why the paper's timing pattern implies a middle pivot.
+        let mut v = workload::sorted(2_000, 8);
+        let c = quicksort_with(&mut v, PivotStrategy::Last);
+        assert!(c.comparisons > 1_000_000); // ~n²/2
+    }
+}

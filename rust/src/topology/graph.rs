@@ -1,0 +1,205 @@
+//! Generic undirected graph with typed links.
+//!
+//! Interconnection networks are undirected graphs `G(V, E)` where nodes are
+//! processors and edges are communication channels (paper §1.3).  The OHHC
+//! is *optoelectronic*, so every edge carries a [`LinkKind`].
+
+use std::collections::VecDeque;
+
+/// Physical medium of a link (paper §1.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Electronic link — short-distance, intra-group.
+    Electrical,
+    /// Optical link — long-distance, inter-group (OTIS transpose).
+    Optical,
+}
+
+/// Undirected graph stored as adjacency lists of `(neighbor, kind)`.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    adj: Vec<Vec<(usize, LinkKind)>>,
+    edges: usize,
+}
+
+impl Graph {
+    /// Empty graph with `n` isolated nodes.
+    pub fn with_nodes(n: usize) -> Self {
+        Graph {
+            adj: vec![Vec::new(); n],
+            edges: 0,
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// True when the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges
+    }
+
+    /// Add an undirected edge; duplicate edges are rejected (panics) since
+    /// the constructions in this crate never produce multigraphs.
+    pub fn add_edge(&mut self, u: usize, v: usize, kind: LinkKind) {
+        assert!(u != v, "self-loop {u}");
+        assert!(
+            !self.has_edge(u, v),
+            "duplicate edge ({u}, {v}) — construction bug"
+        );
+        self.adj[u].push((v, kind));
+        self.adj[v].push((u, kind));
+        self.edges += 1;
+    }
+
+    /// Whether `(u, v)` is an edge.
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].iter().any(|&(w, _)| w == v)
+    }
+
+    /// Link kind of edge `(u, v)` if present.
+    pub fn edge_kind(&self, u: usize, v: usize) -> Option<LinkKind> {
+        self.adj[u].iter().find(|&&(w, _)| w == v).map(|&(_, k)| k)
+    }
+
+    /// Neighbors of `u` with link kinds.
+    pub fn neighbors(&self, u: usize) -> &[(usize, LinkKind)] {
+        &self.adj[u]
+    }
+
+    /// Degree of `u`.
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// BFS hop distances from `src` (`u32::MAX` = unreachable).
+    pub fn bfs_distances(&self, src: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.len()];
+        let mut q = VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if dist[v] == u32::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// BFS shortest path from `src` to `dst` (inclusive of both ends).
+    pub fn shortest_path(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
+        let mut prev = vec![usize::MAX; self.len()];
+        let mut seen = vec![false; self.len()];
+        let mut q = VecDeque::new();
+        seen[src] = true;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            if u == dst {
+                let mut path = vec![dst];
+                let mut cur = dst;
+                while cur != src {
+                    cur = prev[cur];
+                    path.push(cur);
+                }
+                path.reverse();
+                return Some(path);
+            }
+            for &(v, _) in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    prev[v] = u;
+                    q.push_back(v);
+                }
+            }
+        }
+        None
+    }
+
+    /// True if every node reaches every other.
+    pub fn is_connected(&self) -> bool {
+        if self.is_empty() {
+            return true;
+        }
+        self.bfs_distances(0).iter().all(|&d| d != u32::MAX)
+    }
+
+    /// Census of edges by kind: `(electrical, optical)`.
+    pub fn edge_census(&self) -> (usize, usize) {
+        let mut e = 0;
+        let mut o = 0;
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &(v, k) in nbrs {
+                if u < v {
+                    match k {
+                        LinkKind::Electrical => e += 1,
+                        LinkKind::Optical => o += 1,
+                    }
+                }
+            }
+        }
+        (e, o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut g = Graph::with_nodes(3);
+        g.add_edge(0, 1, LinkKind::Electrical);
+        g.add_edge(1, 2, LinkKind::Electrical);
+        g.add_edge(2, 0, LinkKind::Optical);
+        g
+    }
+
+    #[test]
+    fn basic_structure() {
+        let g = triangle();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert!(g.has_edge(0, 2) && g.has_edge(2, 0));
+        assert_eq!(g.edge_kind(0, 2), Some(LinkKind::Optical));
+        assert_eq!(g.edge_kind(0, 1), Some(LinkKind::Electrical));
+        assert_eq!(g.edge_census(), (2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicate_edges_rejected() {
+        let mut g = triangle();
+        g.add_edge(0, 1, LinkKind::Electrical);
+    }
+
+    #[test]
+    fn bfs_and_paths() {
+        // Path graph 0-1-2-3.
+        let mut g = Graph::with_nodes(4);
+        g.add_edge(0, 1, LinkKind::Electrical);
+        g.add_edge(1, 2, LinkKind::Electrical);
+        g.add_edge(2, 3, LinkKind::Electrical);
+        assert_eq!(g.bfs_distances(0), vec![0, 1, 2, 3]);
+        assert_eq!(g.shortest_path(0, 3).unwrap(), vec![0, 1, 2, 3]);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let mut g = Graph::with_nodes(3);
+        g.add_edge(0, 1, LinkKind::Electrical);
+        assert!(!g.is_connected());
+        assert_eq!(g.shortest_path(0, 2), None);
+        assert_eq!(g.bfs_distances(0)[2], u32::MAX);
+    }
+}

@@ -1,0 +1,158 @@
+//! The Hyper Hexa-Cell (HHC) — paper §1.4, Figs 1.1 / 1.2.
+//!
+//! A **1-D HHC** is six processors in two fully-connected triangles,
+//! `{0,1,2}` and `{3,4,5}`, plus a perfect matching between the triangles.
+//! The matching we use is `(0,5), (1,3), (2,4)` — exactly the links the
+//! paper's aggregation rules traverse in one hop (Fig 3.1: node 5 sends
+//! *directly* to node 0, node 3 to node 1, node 4 to node 2).
+//!
+//! A **d-dimensional HHC** replaces every vertex of a `(d-1)`-dimensional
+//! hypercube with a 1-D HHC; for each hypercube edge, corresponding nodes
+//! of the two cells are joined (node `i` of cell `c` ↔ node `i` of cell
+//! `c ⊕ 2^k`).  Node count: `6 · 2^(d-1)`.
+
+use super::graph::{Graph, LinkKind};
+
+/// Nodes per 1-D hexa-cell.
+pub const CELL_SIZE: usize = 6;
+
+/// Intra-triangle + matching edges of one hexa-cell, as `(u, v)` offsets.
+pub const CELL_EDGES: [(usize, usize); 9] = [
+    // triangle A
+    (0, 1),
+    (0, 2),
+    (1, 2),
+    // triangle B
+    (3, 4),
+    (3, 5),
+    (4, 5),
+    // matching used by the paper's Fig 3.1 one-hop sends
+    (0, 5),
+    (1, 3),
+    (2, 4),
+];
+
+/// Number of hexa-cells in a d-dimensional HHC: `2^(d-1)`.
+pub fn num_cells(dimension: u32) -> usize {
+    assert!(dimension >= 1, "HHC dimension starts at 1");
+    1 << (dimension - 1)
+}
+
+/// Number of processors in a d-dimensional HHC: `6 · 2^(d-1)` (paper §1.4).
+pub fn num_nodes(dimension: u32) -> usize {
+    CELL_SIZE * num_cells(dimension)
+}
+
+/// Build a d-dimensional HHC graph.  Node index = `cell * 6 + hhc_node`.
+pub fn hhc_graph(dimension: u32) -> Graph {
+    let cells = num_cells(dimension);
+    let mut g = Graph::with_nodes(CELL_SIZE * cells);
+    for c in 0..cells {
+        let base = c * CELL_SIZE;
+        // Hexa-cell internal wiring.
+        for &(u, v) in &CELL_EDGES {
+            g.add_edge(base + u, base + v, LinkKind::Electrical);
+        }
+        // Hypercube wiring between cells: connect corresponding nodes of
+        // cells differing in one bit (add each edge once: c < partner).
+        let cube_dims = dimension - 1;
+        for k in 0..cube_dims {
+            let partner = c ^ (1 << k);
+            if c < partner {
+                for i in 0..CELL_SIZE {
+                    g.add_edge(base + i, partner * CELL_SIZE + i, LinkKind::Electrical);
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Split an intra-group node index into `(cell, hhc_node)`.
+pub fn split(node: usize) -> (usize, usize) {
+    (node / CELL_SIZE, node % CELL_SIZE)
+}
+
+/// Join `(cell, hhc_node)` into an intra-group node index.
+pub fn join(cell: usize, hhc_node: usize) -> usize {
+    debug_assert!(hhc_node < CELL_SIZE);
+    cell * CELL_SIZE + hhc_node
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_dimensional_hhc_shape() {
+        let g = hhc_graph(1);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.num_edges(), 9); // 3 + 3 + 3 (Fig 1.1)
+        // Every node has degree 3: two triangle peers + one matching peer.
+        for u in 0..6 {
+            assert_eq!(g.degree(u), 3, "node {u}");
+        }
+        // The matching the aggregation rules use (Fig 3.1).
+        assert!(g.has_edge(0, 5));
+        assert!(g.has_edge(1, 3));
+        assert!(g.has_edge(2, 4));
+        // Triangles are complete.
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 2) && g.has_edge(1, 2));
+        assert!(g.has_edge(3, 4) && g.has_edge(3, 5) && g.has_edge(4, 5));
+        // No triangle-A node links to a non-matched triangle-B node.
+        assert!(!g.has_edge(0, 3) && !g.has_edge(0, 4));
+    }
+
+    #[test]
+    fn node_counts_match_paper() {
+        // 6 · 2^(d-1): the per-group column implied by Table 1.1.
+        assert_eq!(num_nodes(1), 6);
+        assert_eq!(num_nodes(2), 12);
+        assert_eq!(num_nodes(3), 24);
+        assert_eq!(num_nodes(4), 48);
+    }
+
+    #[test]
+    fn multi_dimensional_structure() {
+        for d in 1..=4 {
+            let g = hhc_graph(d);
+            assert_eq!(g.len(), num_nodes(d));
+            assert!(g.is_connected(), "d={d} disconnected");
+            // Edge count: 9 per cell + 6 per hypercube edge.
+            let cells = num_cells(d);
+            let cube_edges = cells * (d as usize - 1) / 2;
+            assert_eq!(g.num_edges(), 9 * cells + 6 * cube_edges, "d={d}");
+            // All links inside an HHC group are electrical (paper §1.5).
+            assert_eq!(g.edge_census().1, 0, "d={d} has optical links");
+        }
+    }
+
+    #[test]
+    fn degree_is_3_plus_cube_dims() {
+        for d in 1..=4u32 {
+            let g = hhc_graph(d);
+            for u in 0..g.len() {
+                assert_eq!(g.degree(u), 3 + (d as usize - 1), "d={d} node {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_d_hhc_diameter_is_2() {
+        let g = hhc_graph(1);
+        let diam = (0..6)
+            .map(|u| g.bfs_distances(u).into_iter().max().unwrap())
+            .max()
+            .unwrap();
+        assert_eq!(diam, 2);
+    }
+
+    #[test]
+    fn split_join_round_trip() {
+        for node in 0..num_nodes(3) {
+            let (c, i) = split(node);
+            assert_eq!(join(c, i), node);
+            assert!(i < CELL_SIZE);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Binary hypercube — substrate of the d-D HHC construction and a
+//! comparison baseline for the ablation benches.
+
+use super::graph::{Graph, LinkKind};
+
+/// Build a `d`-dimensional hypercube (`2^d` nodes, `d·2^(d-1)` edges).
+pub fn hypercube_graph(dims: u32) -> Graph {
+    let n = 1usize << dims;
+    let mut g = Graph::with_nodes(n);
+    for u in 0..n {
+        for k in 0..dims {
+            let v = u ^ (1 << k);
+            if u < v {
+                g.add_edge(u, v, LinkKind::Electrical);
+            }
+        }
+    }
+    g
+}
+
+/// Index (1-based) of the least-significant set bit — the paper's
+/// `GetMyFirstLeastSignificantBit()` in Fig 3.2.  Returns 0 for input 0.
+pub fn first_set_bit(x: usize) -> u32 {
+    if x == 0 {
+        0
+    } else {
+        x.trailing_zeros() + 1
+    }
+}
+
+/// Hypercube reduction target: clear the least-significant set bit
+/// (paper Fig 3.2: `sendToHHC ← id - 2^(fsb-1)`).
+pub fn reduction_parent(x: usize) -> usize {
+    debug_assert!(x > 0, "node 0 is the reduction root");
+    x & (x - 1)
+}
+
+/// Hops of the dimension-order (e-cube) route between two cube nodes.
+pub fn ecube_route(src: usize, dst: usize) -> Vec<usize> {
+    let mut path = vec![src];
+    let mut cur = src;
+    let mut diff = src ^ dst;
+    while diff != 0 {
+        let k = diff.trailing_zeros();
+        cur ^= 1 << k;
+        diff &= diff - 1;
+        path.push(cur);
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_shape() {
+        for d in 0..=5u32 {
+            let g = hypercube_graph(d);
+            assert_eq!(g.len(), 1 << d);
+            assert_eq!(g.num_edges(), (d as usize) << (d.saturating_sub(1)));
+            assert!(g.is_connected());
+            for u in 0..g.len() {
+                assert_eq!(g.degree(u), d as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn cube_diameter_is_d() {
+        for d in 1..=5u32 {
+            let g = hypercube_graph(d);
+            let max = g.bfs_distances(0).into_iter().max().unwrap();
+            assert_eq!(max, d);
+        }
+    }
+
+    #[test]
+    fn fsb_matches_paper_numbering() {
+        // Fig 3.2's fsb is 1-based: fsb(1)=1, fsb(2)=2, fsb(4)=3, fsb(6)=2.
+        assert_eq!(first_set_bit(1), 1);
+        assert_eq!(first_set_bit(2), 2);
+        assert_eq!(first_set_bit(4), 3);
+        assert_eq!(first_set_bit(6), 2);
+        assert_eq!(first_set_bit(0), 0);
+    }
+
+    #[test]
+    fn reduction_reaches_zero() {
+        // Every node's parent chain terminates at 0 and each hop clears
+        // exactly the lowest set bit (Fig 3.2's send rule).
+        for start in 1..64usize {
+            let mut cur = start;
+            let mut hops = 0;
+            while cur != 0 {
+                let parent = reduction_parent(cur);
+                assert_eq!(parent, cur - (1 << (first_set_bit(cur) - 1)));
+                cur = parent;
+                hops += 1;
+                assert!(hops <= 6);
+            }
+            assert_eq!(hops as u32, start.count_ones());
+        }
+    }
+
+    #[test]
+    fn ecube_route_is_shortest() {
+        let g = hypercube_graph(4);
+        for src in 0..16 {
+            for dst in 0..16 {
+                let route = ecube_route(src, dst);
+                assert_eq!(route[0], src);
+                assert_eq!(*route.last().unwrap(), dst);
+                assert_eq!(route.len() - 1, (src ^ dst).count_ones() as usize);
+                for w in route.windows(2) {
+                    assert!(g.has_edge(w[0], w[1]), "{} -> {}", w[0], w[1]);
+                }
+            }
+        }
+    }
+}

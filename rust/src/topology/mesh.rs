@@ -1,0 +1,55 @@
+//! 2-D mesh topology — classic baseline for the ablation benches.
+
+use super::graph::{Graph, LinkKind};
+
+/// Build a `rows × cols` 2-D mesh (no wraparound).
+pub fn mesh_graph(rows: usize, cols: usize) -> Graph {
+    assert!(rows >= 1 && cols >= 1);
+    let mut g = Graph::with_nodes(rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let u = r * cols + c;
+            if c + 1 < cols {
+                g.add_edge(u, u + 1, LinkKind::Electrical);
+            }
+            if r + 1 < rows {
+                g.add_edge(u, u + cols, LinkKind::Electrical);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_shape() {
+        let g = mesh_graph(6, 6);
+        assert_eq!(g.len(), 36);
+        assert_eq!(g.num_edges(), 2 * 6 * 5);
+        assert!(g.is_connected());
+        // Corner degree 2, edge degree 3, interior degree 4.
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 3);
+        assert_eq!(g.degree(7), 4);
+    }
+
+    #[test]
+    fn mesh_diameter_is_manhattan() {
+        let g = mesh_graph(4, 7);
+        let diam = (0..g.len())
+            .map(|u| g.bfs_distances(u).into_iter().max().unwrap())
+            .max()
+            .unwrap();
+        assert_eq!(diam, (4 - 1) + (7 - 1));
+    }
+
+    #[test]
+    fn degenerate_mesh_is_a_path() {
+        let g = mesh_graph(1, 5);
+        assert_eq!(g.num_edges(), 4);
+        assert!(g.is_connected());
+    }
+}

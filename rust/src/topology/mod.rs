@@ -1,0 +1,33 @@
+//! Interconnection-network topology library.
+//!
+//! Implements every network the paper depends on, bottom-up:
+//!
+//! * [`graph`] — generic undirected multigraph with typed (electrical /
+//!   optical) links, BFS, and structural property extraction;
+//! * [`hhc`] — the 1-D Hyper Hexa-Cell (two fully-connected triangles plus
+//!   a perfect matching, Fig 1.1) and its d-dimensional hypercube-of-cells
+//!   generalization (Fig 1.2);
+//! * [`hypercube`] — the binary hypercube substrate (also a baseline);
+//! * [`ohhc`] — the OTIS Hyper Hexa-Cell: `G` HHC groups joined by optical
+//!   transpose links, in both `G = P` (Fig 1.3) and `G = P/2` (Fig 1.4)
+//!   constructions;
+//! * [`ring`], [`mesh`] — classic baselines for the ablation benches;
+//! * [`routing`] — deterministic routing (intra-cell, e-cube across cells,
+//!   one-hop optical across groups) validated against BFS shortest paths;
+//! * [`properties`] — degree / diameter / average-distance / link-census
+//!   reports.
+
+pub mod graph;
+pub mod hhc;
+pub mod hypercube;
+pub mod mesh;
+pub mod ohhc;
+pub mod otis;
+pub mod properties;
+pub mod ring;
+pub mod routing;
+
+pub use graph::{Graph, LinkKind};
+pub use hhc::{hhc_graph, CELL_SIZE};
+pub use ohhc::{Addr, Ohhc};
+pub use properties::NetworkProperties;

@@ -1,0 +1,300 @@
+//! The OTIS Hyper Hexa-Cell (OHHC) — paper §1.5, Figs 1.3 / 1.4, Table 1.1.
+//!
+//! `G` copies ("groups") of a d-dimensional HHC are joined by **optical**
+//! transpose links while every intra-group link stays **electrical**:
+//!
+//! * **G = P (full)** — the classic OTIS rule: processor `p` of group `g`
+//!   is optically linked to processor `g` of group `p` (for `g ≠ p`;
+//!   `g = p` nodes have no optical link, as in OTIS-Mesh et al.).
+//! * **G = P/2 (half)** — only half the groups exist.  Processors
+//!   `p < G` keep the transpose rule; processors `p ≥ G` are paired by the
+//!   involution `(g, p) ↔ (p − G, g + G)` so every processor still owns at
+//!   most one optical link and the graph stays symmetric.  (The paper
+//!   borrows the construction from Mahafzah et al. \[3\] without spelling
+//!   out the high-half wiring; DESIGN.md §3 records this choice.  The
+//!   sorting algorithm itself only ever uses the `(g,0) ↔ (0,g)` links,
+//!   which exist identically in both constructions.)
+
+use super::graph::{Graph, LinkKind};
+use super::hhc;
+use crate::config::Construction;
+use crate::error::{Error, Result};
+
+/// A processor address inside an OHHC: group, hexa-cell, node-in-cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Addr {
+    /// OTIS group index (`0..G`).
+    pub group: usize,
+    /// Hexa-cell index within the group's HHC (`0..2^(d-1)`) — the paper's
+    /// `HyperCubeNodeId` / "HHC group" in Figs 3.2/3.4.
+    pub cell: usize,
+    /// Node within the hexa-cell (`0..6`) — the paper's `HHCNodeId`.
+    pub node: usize,
+}
+
+impl Addr {
+    /// Processor index within its group (`cell * 6 + node`) — the paper's
+    /// `OTISNodeId`.
+    pub fn local(&self) -> usize {
+        hhc::join(self.cell, self.node)
+    }
+
+    /// Head of the whole machine: group 0, cell 0, node 0.
+    pub fn is_master(&self) -> bool {
+        self.group == 0 && self.cell == 0 && self.node == 0
+    }
+}
+
+/// An OHHC instance: topology graph + addressing + optical pairing.
+#[derive(Debug, Clone)]
+pub struct Ohhc {
+    /// HHC dimension `d_h`.
+    pub dimension: u32,
+    /// Construction rule (G = P or G = P/2).
+    pub construction: Construction,
+    /// Number of groups `G`.
+    pub groups: usize,
+    /// Processors per group `P`.
+    pub procs_per_group: usize,
+    graph: Graph,
+}
+
+impl Ohhc {
+    /// Build the OHHC for a dimension and construction rule.
+    pub fn new(dimension: u32, construction: Construction) -> Result<Self> {
+        if !(1..=6).contains(&dimension) {
+            return Err(Error::Config(format!("bad OHHC dimension {dimension}")));
+        }
+        let p = hhc::num_nodes(dimension);
+        let groups = construction.groups(p);
+        let total = groups * p;
+        let mut graph = Graph::with_nodes(total);
+
+        // Electrical intra-group wiring: one HHC per group.
+        let cell_graph = hhc::hhc_graph(dimension);
+        for g in 0..groups {
+            let base = g * p;
+            for u in 0..p {
+                for &(v, kind) in cell_graph.neighbors(u) {
+                    if u < v {
+                        graph.add_edge(base + u, base + v, kind);
+                    }
+                }
+            }
+        }
+
+        // Optical inter-group wiring.
+        let ohhc = Ohhc {
+            dimension,
+            construction,
+            groups,
+            procs_per_group: p,
+            graph,
+        };
+        let mut graph = ohhc.graph;
+        for g in 0..groups {
+            for pr in 0..p {
+                if let Some((g2, p2)) = optical_partner(g, pr, groups, p) {
+                    let a = g * p + pr;
+                    let b = g2 * p + p2;
+                    if a < b {
+                        graph.add_edge(a, b, LinkKind::Optical);
+                    }
+                }
+            }
+        }
+        Ok(Ohhc { graph, ..ohhc })
+    }
+
+    /// Total processors (`G · P`, Table 1.1).
+    pub fn total_processors(&self) -> usize {
+        self.groups * self.procs_per_group
+    }
+
+    /// The underlying graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Flat node id of an address.
+    pub fn id(&self, a: Addr) -> usize {
+        debug_assert!(a.group < self.groups && a.local() < self.procs_per_group);
+        a.group * self.procs_per_group + a.local()
+    }
+
+    /// Address of a flat node id.
+    pub fn addr(&self, id: usize) -> Addr {
+        let group = id / self.procs_per_group;
+        let local = id % self.procs_per_group;
+        let (cell, node) = hhc::split(local);
+        Addr { group, cell, node }
+    }
+
+    /// Optical partner of a processor, if it has one.
+    pub fn optical_partner(&self, a: Addr) -> Option<Addr> {
+        optical_partner(a.group, a.local(), self.groups, self.procs_per_group).map(
+            |(g, p)| {
+                let (cell, node) = hhc::split(p);
+                Addr {
+                    group: g,
+                    cell,
+                    node,
+                }
+            },
+        )
+    }
+
+    /// Number of hexa-cells per group.
+    pub fn cells_per_group(&self) -> usize {
+        hhc::num_cells(self.dimension)
+    }
+}
+
+/// The optical pairing rule; returns the partner `(group, processor)`.
+fn optical_partner(
+    g: usize,
+    p: usize,
+    groups: usize,
+    procs: usize,
+) -> Option<(usize, usize)> {
+    if groups == procs {
+        // Full OTIS transpose: (g, p) <-> (p, g), fixed points excluded.
+        if g == p {
+            None
+        } else {
+            Some((p, g))
+        }
+    } else {
+        // Half construction, G = P/2.
+        debug_assert_eq!(groups * 2, procs);
+        if p < groups {
+            if g == p {
+                None
+            } else {
+                Some((p, g))
+            }
+        } else {
+            // High-half involution: (g, p) <-> (p - G, g + G).
+            let (g2, p2) = (p - groups, g + groups);
+            if (g2, p2) == (g, p) {
+                None
+            } else {
+                Some((g2, p2))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_1_1_processor_counts() {
+        for (d, total_full, total_half) in
+            [(1, 36, 18), (2, 144, 72), (3, 576, 288), (4, 2304, 1152)]
+        {
+            let full = Ohhc::new(d, Construction::FullGroup).unwrap();
+            assert_eq!(full.total_processors(), total_full, "d={d} full");
+            let half = Ohhc::new(d, Construction::HalfGroup).unwrap();
+            assert_eq!(half.total_processors(), total_half, "d={d} half");
+        }
+    }
+
+    #[test]
+    fn connected_and_optical_census() {
+        for d in 1..=3 {
+            for c in [Construction::FullGroup, Construction::HalfGroup] {
+                let net = Ohhc::new(d, c).unwrap();
+                assert!(net.graph().is_connected(), "d={d} {c:?}");
+                let (elec, opt) = net.graph().edge_census();
+                // Electrical edges: G copies of the HHC's edge count.
+                let cell_edges = hhc::hhc_graph(d).num_edges();
+                assert_eq!(elec, net.groups * cell_edges, "d={d} {c:?} electrical");
+                // Optical: every processor has <= 1 optical link; in the
+                // full construction exactly G fixed points (g == p) are
+                // unpaired; the half construction has G low-half fixed
+                // points (g == p) plus G high-half ones ((g, g + G)).
+                let expected_unpaired = match c {
+                    Construction::FullGroup => net.groups,
+                    Construction::HalfGroup => 2 * net.groups,
+                };
+                let expected_opt =
+                    (net.total_processors() - expected_unpaired) / 2;
+                assert_eq!(opt, expected_opt, "d={d} {c:?} optical");
+            }
+        }
+    }
+
+    #[test]
+    fn optical_pairing_is_an_involution() {
+        for d in 1..=3 {
+            for c in [Construction::FullGroup, Construction::HalfGroup] {
+                let net = Ohhc::new(d, c).unwrap();
+                for id in 0..net.total_processors() {
+                    let a = net.addr(id);
+                    if let Some(b) = net.optical_partner(a) {
+                        assert_ne!(a, b);
+                        assert_eq!(
+                            net.optical_partner(b),
+                            Some(a),
+                            "{a:?} <-> {b:?} not symmetric"
+                        );
+                        // And the graph agrees.
+                        assert_eq!(
+                            net.graph().edge_kind(net.id(a), net.id(b)),
+                            Some(LinkKind::Optical)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn algorithm_links_exist_in_both_constructions() {
+        // Fig 3.3 requires (g, 0) <-> (0, g) for every non-zero group.
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let net = Ohhc::new(2, c).unwrap();
+            for g in 1..net.groups {
+                let head = Addr {
+                    group: g,
+                    cell: 0,
+                    node: 0,
+                };
+                let partner = net.optical_partner(head).unwrap();
+                assert_eq!(partner.group, 0, "{c:?} g={g}");
+                assert_eq!(partner.local(), g, "{c:?} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn addr_round_trip() {
+        let net = Ohhc::new(3, Construction::HalfGroup).unwrap();
+        for id in 0..net.total_processors() {
+            let a = net.addr(id);
+            assert_eq!(net.id(a), id);
+            assert!(a.node < 6);
+            assert!(a.cell < net.cells_per_group());
+            assert!(a.group < net.groups);
+        }
+        assert!(net.addr(0).is_master());
+        assert!(!net.addr(1).is_master());
+    }
+
+    #[test]
+    fn intra_group_links_electrical_inter_group_optical() {
+        let net = Ohhc::new(2, Construction::FullGroup).unwrap();
+        let g = net.graph();
+        for u in 0..net.total_processors() {
+            for &(v, kind) in g.neighbors(u) {
+                let same_group = net.addr(u).group == net.addr(v).group;
+                match kind {
+                    LinkKind::Electrical => assert!(same_group),
+                    LinkKind::Optical => assert!(!same_group),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Generic OTIS factory: `OTIS(F)` takes any electronic *factor network*
+//! `F` with `P` nodes and builds `P` optically-transposed copies —
+//! processor `p` of group `g` links to processor `g` of group `p`.
+//!
+//! The OHHC of this paper is `OTIS(HHC)`; the literature it builds on
+//! (Mahafzah et al. \[3\]) compares against `OTIS(Mesh)` and
+//! `OTIS(Hypercube)`, so those are provided as comparators for the
+//! topology bench and the §1.5 connectivity discussion.
+
+use super::graph::{Graph, LinkKind};
+use super::hypercube::hypercube_graph;
+use super::mesh::mesh_graph;
+
+/// Build `OTIS(factor)`: `P` groups of the `P`-node factor network plus
+/// the optical transpose.  Node id = `group * P + local`.
+pub fn otis_graph(factor: &Graph) -> Graph {
+    let p = factor.len();
+    let mut g = Graph::with_nodes(p * p);
+    // Electronic copies.
+    for group in 0..p {
+        let base = group * p;
+        for u in 0..p {
+            for &(v, kind) in factor.neighbors(u) {
+                if u < v {
+                    g.add_edge(base + u, base + v, kind);
+                }
+            }
+        }
+    }
+    // Optical transpose: (g, p) <-> (p, g), fixed points excluded.
+    for group in 0..p {
+        for local in group + 1..p {
+            g.add_edge(group * p + local, local * p + group, LinkKind::Optical);
+        }
+    }
+    g
+}
+
+/// `OTIS(Mesh_{r×c})` — the classic OTIS-Mesh (square factor required by
+/// the transpose, so `r·c` groups of `r·c` processors).
+pub fn otis_mesh(rows: usize, cols: usize) -> Graph {
+    otis_graph(&mesh_graph(rows, cols))
+}
+
+/// `OTIS(Q_d)` — OTIS-Hypercube with `2^d` groups of `2^d` processors.
+pub fn otis_hypercube(dims: u32) -> Graph {
+    otis_graph(&hypercube_graph(dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Construction;
+    use crate::topology::ohhc::Ohhc;
+    use crate::topology::properties::NetworkProperties;
+
+    #[test]
+    fn otis_shape_and_census() {
+        let factor = mesh_graph(2, 3); // 6 nodes, 7 edges
+        let g = otis_graph(&factor);
+        assert_eq!(g.len(), 36);
+        let (elec, opt) = g.edge_census();
+        assert_eq!(elec, 6 * 7); // one factor copy per group
+        assert_eq!(opt, (36 - 6) / 2); // transpose minus fixed points
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn otis_hhc_equals_paper_full_construction() {
+        // OTIS(HHC_d) built by the generic factory must be isomorphic (in
+        // fact identical under our labeling) to the crate's G = P OHHC.
+        for d in 1..=2u32 {
+            let ohhc = Ohhc::new(d, Construction::FullGroup).unwrap();
+            let generic = otis_graph(&crate::topology::hhc::hhc_graph(d));
+            assert_eq!(generic.len(), ohhc.graph().len());
+            assert_eq!(generic.num_edges(), ohhc.graph().num_edges());
+            for u in 0..generic.len() {
+                for &(v, kind) in generic.neighbors(u) {
+                    assert_eq!(
+                        ohhc.graph().edge_kind(u, v),
+                        Some(kind),
+                        "d={d} edge ({u},{v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn otis_transpose_is_an_involution() {
+        let g = otis_hypercube(3); // 8x8 = 64 nodes
+        for group in 0..8usize {
+            for local in 0..8usize {
+                if group == local {
+                    continue;
+                }
+                assert!(g.has_edge(group * 8 + local, local * 8 + group));
+            }
+        }
+    }
+
+    #[test]
+    fn ohhc_diameter_competitive_with_otis_mesh_at_same_size() {
+        // 36-processor comparison: OTIS(HHC_1) vs OTIS(Mesh_2x3).
+        let ohhc = NetworkProperties::compute(
+            Ohhc::new(1, Construction::FullGroup).unwrap().graph(),
+        );
+        let omesh = NetworkProperties::compute(&otis_mesh(2, 3));
+        assert_eq!(ohhc.nodes, omesh.nodes);
+        // The hexa-cell factor (diameter 2) beats the 2x3 mesh factor
+        // (diameter 3), which the OTIS construction doubles.
+        assert!(ohhc.diameter <= omesh.diameter, "{} vs {}", ohhc.diameter, omesh.diameter);
+    }
+
+    #[test]
+    fn otis_hypercube_diameter() {
+        // OTIS(Q_d) diameter is 2·d + 1 (factor diameter twice + optical).
+        for d in 1..=3u32 {
+            let p = NetworkProperties::compute(&otis_hypercube(d));
+            assert_eq!(p.diameter, 2 * d + 1, "d={d}");
+        }
+    }
+}

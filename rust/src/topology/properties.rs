@@ -1,0 +1,143 @@
+//! Structural property extraction for any topology — backs the README's
+//! architecture table, the topology ablation bench, and the DESIGN.md
+//! cost/performance comparison of OHHC vs classic networks.
+
+use crate::util::par;
+use super::graph::Graph;
+
+/// Summary of a network's static structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkProperties {
+    /// Node count.
+    pub nodes: usize,
+    /// Undirected edge count.
+    pub edges: usize,
+    /// Electrical edge count.
+    pub electrical_edges: usize,
+    /// Optical edge count.
+    pub optical_edges: usize,
+    /// Minimum node degree.
+    pub min_degree: usize,
+    /// Maximum node degree.
+    pub max_degree: usize,
+    /// Graph diameter in hops.
+    pub diameter: u32,
+    /// Mean shortest-path length over ordered pairs (u != v).
+    pub avg_distance: f64,
+    /// `nodes × diameter` — the classic cost metric for interconnects.
+    pub cost: u64,
+}
+
+impl NetworkProperties {
+    /// Compute all properties (all-pairs BFS, parallelized over sources).
+    pub fn compute(g: &Graph) -> Self {
+        let n = g.len();
+        assert!(n > 0, "empty graph");
+        let (electrical_edges, optical_edges) = g.edge_census();
+        let degrees: Vec<usize> = (0..n).map(|u| g.degree(u)).collect();
+
+        let (diameter, total): (u32, u64) = par::par_reduce_indices(
+            n,
+            par::available_workers(),
+            |range| {
+                let mut max = 0u32;
+                let mut sum = 0u64;
+                for u in range {
+                    for &d in &g.bfs_distances(u) {
+                        assert_ne!(d, u32::MAX, "graph is disconnected at {u}");
+                        max = max.max(d);
+                        sum += d as u64;
+                    }
+                }
+                (max, sum)
+            },
+            |a, b| (a.0.max(b.0), a.1 + b.1),
+            (0, 0),
+        );
+
+        let pairs = (n * (n - 1)) as f64;
+        NetworkProperties {
+            nodes: n,
+            edges: g.num_edges(),
+            electrical_edges,
+            optical_edges,
+            min_degree: *degrees.iter().min().unwrap(),
+            max_degree: *degrees.iter().max().unwrap(),
+            diameter,
+            avg_distance: if n > 1 { total as f64 / pairs } else { 0.0 },
+            cost: n as u64 * diameter as u64,
+        }
+    }
+}
+
+impl std::fmt::Display for NetworkProperties {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "nodes={} edges={} (elec={}, opt={}) degree={}..{} diameter={} \
+             avg_dist={:.3} cost={}",
+            self.nodes,
+            self.edges,
+            self.electrical_edges,
+            self.optical_edges,
+            self.min_degree,
+            self.max_degree,
+            self.diameter,
+            self.avg_distance,
+            self.cost
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Construction;
+    use crate::topology::{hhc, hypercube, ohhc::Ohhc, ring};
+
+    #[test]
+    fn hexa_cell_properties() {
+        let p = NetworkProperties::compute(&hhc::hhc_graph(1));
+        assert_eq!(p.nodes, 6);
+        assert_eq!(p.edges, 9);
+        assert_eq!(p.min_degree, 3);
+        assert_eq!(p.max_degree, 3);
+        assert_eq!(p.diameter, 2);
+    }
+
+    #[test]
+    fn group_diameter_is_d_plus_1() {
+        // Intra-group diameter d+1 — the quantity Theorem 6 uses.
+        for d in 1..=4u32 {
+            let p = NetworkProperties::compute(&hhc::hhc_graph(d));
+            assert_eq!(p.diameter, d + 1, "d={d}");
+        }
+    }
+
+    #[test]
+    fn hypercube_properties() {
+        let p = NetworkProperties::compute(&hypercube::hypercube_graph(4));
+        assert_eq!(p.nodes, 16);
+        assert_eq!(p.diameter, 4);
+        assert_eq!(p.min_degree, 4);
+    }
+
+    #[test]
+    fn ohhc_diameter_beats_ring_at_same_size() {
+        // The optical transpose keeps the OHHC diameter ~constant while a
+        // ring of 36 nodes has diameter 18 — the paper's connectivity
+        // motivation in §1.5.
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let po = NetworkProperties::compute(net.graph());
+        let pr = NetworkProperties::compute(&ring::ring_graph(po.nodes));
+        assert!(po.diameter < pr.diameter / 2);
+        assert_eq!(po.nodes, 36);
+    }
+
+    #[test]
+    #[should_panic(expected = "disconnected")]
+    fn disconnected_graph_panics() {
+        let g = Graph::with_nodes(2);
+        NetworkProperties::compute(&g);
+    }
+}

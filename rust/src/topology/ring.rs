@@ -1,0 +1,41 @@
+//! Ring topology — classic baseline (paper §1.3 mentions Ring/Mesh/Hyper
+//! Cube as the standard menu); used by the topology ablation bench.
+
+use super::graph::{Graph, LinkKind};
+
+/// Build an `n`-node ring (n >= 3).
+pub fn ring_graph(n: usize) -> Graph {
+    assert!(n >= 3, "ring needs >= 3 nodes");
+    let mut g = Graph::with_nodes(n);
+    for u in 0..n {
+        g.add_edge(u, (u + 1) % n, LinkKind::Electrical);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_shape() {
+        for n in [3, 6, 36, 144] {
+            let g = ring_graph(n);
+            assert_eq!(g.len(), n);
+            assert_eq!(g.num_edges(), n);
+            assert!(g.is_connected());
+            for u in 0..n {
+                assert_eq!(g.degree(u), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_diameter_is_half_n() {
+        for n in [6usize, 7, 36] {
+            let g = ring_graph(n);
+            let diam = g.bfs_distances(0).into_iter().max().unwrap();
+            assert_eq!(diam as usize, n / 2);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Deterministic OHHC routing.
+//!
+//! The intra-group network is the Cartesian product `HHC_cell × Q_(d-1)`
+//! (hexa-cell crossed with a binary hypercube), so dimension-order routing
+//! — cube coordinates first, then the ≤2-hop hexa-cell correction — is
+//! provably shortest inside a group.  Between groups the standard OTIS
+//! scheme applies: route electrically to processor `g2` inside the source
+//! group, take the single optical transpose hop `(g1, g2) → (g2, g1)`,
+//! then route electrically to the destination processor.
+//!
+//! `route()` is validated against BFS shortest paths in the tests.
+
+use super::graph::Graph;
+use super::hhc::{self, CELL_SIZE};
+use super::hypercube;
+use super::ohhc::{Addr, Ohhc};
+
+/// Shortest route between two nodes *within* one hexa-cell (0–2 hops),
+/// as intra-cell node indices (inclusive of endpoints).
+pub fn cell_route(from: usize, to: usize) -> Vec<usize> {
+    debug_assert!(from < CELL_SIZE && to < CELL_SIZE);
+    if from == to {
+        return vec![from];
+    }
+    if cell_adjacent(from, to) {
+        return vec![from, to];
+    }
+    // Hexa-cell diameter is 2: find the (unique smallest) common neighbor.
+    for mid in 0..CELL_SIZE {
+        if mid != from && mid != to && cell_adjacent(from, mid) && cell_adjacent(mid, to)
+        {
+            return vec![from, mid, to];
+        }
+    }
+    unreachable!("hexa-cell diameter is 2; no common neighbor of {from},{to}")
+}
+
+/// Adjacency within one hexa-cell (triangles + matching, Fig 1.1).
+pub fn cell_adjacent(a: usize, b: usize) -> bool {
+    hhc::CELL_EDGES
+        .iter()
+        .any(|&(u, v)| (u, v) == (a.min(b), b.max(a)))
+}
+
+/// Shortest route between two processors of the *same group*, as
+/// intra-group processor indices.  Cube dimensions first, then the
+/// hexa-cell correction; shortest because the group is a product graph.
+pub fn group_route(from: usize, to: usize) -> Vec<usize> {
+    let (c1, n1) = hhc::split(from);
+    let (c2, n2) = hhc::split(to);
+    let mut path: Vec<usize> = hypercube::ecube_route(c1, c2)
+        .into_iter()
+        .map(|c| hhc::join(c, n1))
+        .collect();
+    for &n in cell_route(n1, n2).iter().skip(1) {
+        path.push(hhc::join(c2, n));
+    }
+    path
+}
+
+/// Full OHHC route between two processors, as flat node ids.
+///
+/// Same-group routes stay electrical.  Inter-group routes pick the shorter
+/// of the two classic OTIS strategies (cf. OTIS-Mesh routing):
+///
+/// * **window** — electrical to the transpose window (processor
+///   `dst.group`), one optical hop, electrical to the destination:
+///   `d(p₁, g₂) + 1 + d(g₁, p₂)` links;
+/// * **double-transpose** — optical immediately (`(g₁,p₁) → (p₁,g₁)`),
+///   electrical across that group, optical again into the target group:
+///   `1 + d(g₁, g₂) + 1 + d(p₁, p₂)` links (only when both optical links
+///   exist — they always do in `G = P`; the half construction's high-half
+///   processors fall back to the window route).
+///
+/// The paper's algorithm itself only uses window routes (Fig 3.3); the
+/// double-transpose matters for the generic message-delay model and the
+/// routing benchmarks.
+pub fn route(net: &Ohhc, src: Addr, dst: Addr) -> Vec<usize> {
+    let p = net.procs_per_group;
+    if src.group == dst.group {
+        return group_route(src.local(), dst.local())
+            .into_iter()
+            .map(|l| src.group * p + l)
+            .collect();
+    }
+
+    // Strategy 1: window route (always available).
+    let mut window: Vec<usize> = group_route(src.local(), dst.group)
+        .into_iter()
+        .map(|l| src.group * p + l)
+        .collect();
+    // Optical hop (src.group, dst.group) -> (dst.group, src.group).
+    window.push(dst.group * p + src.group);
+    for &l in group_route(src.group, dst.local()).iter().skip(1) {
+        window.push(dst.group * p + l);
+    }
+
+    // Strategy 2: double transpose, when the optical links line up.
+    let double = double_transpose_route(net, src, dst);
+    match double {
+        Some(d) if d.len() < window.len() => d,
+        _ => window,
+    }
+}
+
+/// The early-transpose route `src -opt-> (p₁,g₁) -elec-> (p₁,g₂) -opt->
+/// (g₂,p₁) -elec-> dst`, if every optical hop exists.
+fn double_transpose_route(net: &Ohhc, src: Addr, dst: Addr) -> Option<Vec<usize>> {
+    let p = net.procs_per_group;
+    let first = net.optical_partner(src)?;
+    // The early transpose must land us in group `src.local()` holding
+    // processor index `src.group` — true for the low-half transpose rule,
+    // not for high-half pairs, which we simply skip.
+    if first.group != src.local() || first.local() != src.group {
+        return None;
+    }
+    let mut path: Vec<usize> = vec![net.id(src)];
+    // Electrical within group p1: g1 -> g2.
+    for &l in group_route(src.group, dst.group).iter() {
+        let id = first.group * p + l;
+        if *path.last().unwrap() != id {
+            path.push(id);
+        }
+    }
+    // Second optical hop: (p1, g2) -> (g2, p1).
+    let mid = net.addr(first.group * p + dst.group);
+    let second = net.optical_partner(mid)?;
+    if second.group != dst.group || second.local() != src.local() {
+        return None;
+    }
+    path.push(net.id(second));
+    // Electrical within the destination group: p1 -> p2.
+    for &l in group_route(src.local(), dst.local()).iter().skip(1) {
+        path.push(dst.group * p + l);
+    }
+    Some(path)
+}
+
+/// Check a path is walkable on a graph (every hop is an edge).
+pub fn path_is_valid(g: &Graph, path: &[usize]) -> bool {
+    path.windows(2).all(|w| g.has_edge(w[0], w[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Construction;
+
+    #[test]
+    fn cell_routes_are_shortest() {
+        let g = hhc::hhc_graph(1);
+        for a in 0..CELL_SIZE {
+            for b in 0..CELL_SIZE {
+                let r = cell_route(a, b);
+                assert_eq!(r[0], a);
+                assert_eq!(*r.last().unwrap(), b);
+                assert!(path_is_valid(&g, &r), "{a}->{b}");
+                assert_eq!(r.len() as u32 - 1, g.bfs_distances(a)[b], "{a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_routes_are_shortest() {
+        for d in 1..=3u32 {
+            let g = hhc::hhc_graph(d);
+            let n = g.len();
+            for a in 0..n {
+                let dist = g.bfs_distances(a);
+                for b in 0..n {
+                    let r = group_route(a, b);
+                    assert!(path_is_valid(&g, &r), "d={d} {a}->{b}");
+                    assert_eq!(r.len() as u32 - 1, dist[b], "d={d} {a}->{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ohhc_routes_are_valid_and_tight() {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            for d in 1..=2u32 {
+                let net = Ohhc::new(d, c).unwrap();
+                let g = net.graph();
+                let n = net.total_processors();
+                // Sample src nodes to keep the test fast.
+                for src_id in (0..n).step_by(7) {
+                    let dist = g.bfs_distances(src_id);
+                    for dst_id in (0..n).step_by(5) {
+                        let r = route(&net, net.addr(src_id), net.addr(dst_id));
+                        assert!(path_is_valid(g, &r), "{c:?} d={d} {src_id}->{dst_id}");
+                        assert_eq!(r[0], src_id);
+                        assert_eq!(*r.last().unwrap(), dst_id);
+                        let hops = (r.len() - 1) as u32;
+                        // G = P: the min(window, double-transpose) router
+                        // is near-optimal (≤ shortest + 2).  The half
+                        // construction's high-half optical links create
+                        // shortcuts the deterministic router deliberately
+                        // ignores (the algorithm never uses them), so only
+                        // the analytic worst case is asserted there.
+                        if c == Construction::FullGroup {
+                            assert!(
+                                hops <= dist[dst_id] + 2,
+                                "{c:?} d={d} {src_id}->{dst_id}: {hops} vs {}",
+                                dist[dst_id]
+                            );
+                        }
+                        // Never beyond the analytic worst case
+                        // 2·diam(group) + 1 = 2(d+1) + 1 (Theorem 6).
+                        assert!(hops <= 2 * (d + 1) + 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_group_routes_have_no_optical_hop() {
+        let net = Ohhc::new(2, Construction::FullGroup).unwrap();
+        // Both addresses inside group 1 (locals 1 and 10).
+        let src = net.addr(13);
+        let dst = net.addr(22);
+        let r = route(&net, src, dst);
+        for w in r.windows(2) {
+            assert_eq!(
+                net.graph().edge_kind(w[0], w[1]),
+                Some(crate::topology::LinkKind::Electrical)
+            );
+        }
+    }
+
+    #[test]
+    fn cross_group_routes_have_exactly_one_optical_hop() {
+        let net = Ohhc::new(2, Construction::HalfGroup).unwrap();
+        for (s, t) in [(0usize, 70usize), (15, 40), (60, 3)] {
+            let (src, dst) = (net.addr(s), net.addr(t));
+            if src.group == dst.group {
+                continue;
+            }
+            let r = route(&net, src, dst);
+            let optical = r
+                .windows(2)
+                .filter(|w| {
+                    net.graph().edge_kind(w[0], w[1])
+                        == Some(crate::topology::LinkKind::Optical)
+                })
+                .count();
+            assert_eq!(optical, 1, "{s}->{t}");
+        }
+    }
+}

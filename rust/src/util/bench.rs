@@ -1,0 +1,111 @@
+//! Tiny benchmark harness (the crate's criterion substitute).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): warmup,
+//! fixed repetition count, median / MAD / min / max reporting, and a
+//! CSV-friendly one-line format so EXPERIMENTS.md tables can be pasted
+//! straight from bench output.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Repetitions measured (after warmup).
+    pub reps: usize,
+    /// Median duration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Fastest observation.
+    pub min: Duration,
+    /// Slowest observation.
+    pub max: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<52} median {:>12?}  mad {:>10?}  min {:>12?}  max {:>12?}  ({} reps)",
+            self.name, self.median, self.mad, self.min, self.max, self.reps
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure counts.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub reps: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, reps: 7 }
+    }
+}
+
+impl Bench {
+    /// Quick-run configuration honouring `OHHC_BENCH_FAST=1` (CI smoke).
+    pub fn from_env() -> Self {
+        if std::env::var("OHHC_BENCH_FAST").as_deref() == Ok("1") {
+            Bench { warmup: 1, reps: 3 }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, which must return something observable (guards against
+    /// dead-code elimination via `std::hint::black_box`).
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let median = samples[(samples.len() - 1) / 2];
+        let mut devs: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        devs.sort();
+        let result = BenchResult {
+            name: name.to_string(),
+            reps: samples.len(),
+            median,
+            mad: devs[(devs.len() - 1) / 2],
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!("{result}");
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders() {
+        let b = Bench { warmup: 1, reps: 5 };
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.reps, 5);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+}

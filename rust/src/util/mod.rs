@@ -1,0 +1,18 @@
+//! In-repo substrate utilities.
+//!
+//! The build is fully offline with a deliberately tiny dependency surface,
+//! so the usual ecosystem helpers are implemented here instead:
+//!
+//! * [`rng`] — deterministic SplitMix64/xoshiro-style PRNG (replaces
+//!   `rand` for workload generation and property tests);
+//! * [`json`] — a minimal recursive-descent JSON parser (replaces
+//!   `serde_json` for the artifact manifest);
+//! * [`par`] — scoped-thread parallel map / index-chunk helpers (replaces
+//!   `rayon` for the waves backend and all-pairs BFS);
+//! * [`mod@bench`] — a small timing harness with warmup, repetitions and
+//!   median/MAD reporting (replaces `criterion` for `rust/benches/`).
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;

@@ -1,0 +1,120 @@
+//! Scoped-thread parallelism helpers (the crate's rayon substitute).
+
+/// Host parallelism (≥ 1).
+pub fn available_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map over owned items: applies `f` to every element using up to
+/// `workers` scoped threads, preserving order.
+pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = workers.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Work-steal over a shared index counter; results land in slots.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().expect("item taken twice");
+                let r = f(item);
+                *outputs[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Parallel fold over an index range: each worker reduces a chunk with
+/// `(map, merge)`; chunk results are merged in order.
+pub fn par_reduce_indices<R, M, G>(n: usize, workers: usize, map: M, merge: G, identity: R) -> R
+where
+    R: Send,
+    M: Fn(std::ops::Range<usize>) -> R + Sync,
+    G: Fn(R, R) -> R,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if n == 0 {
+        return identity;
+    }
+    if workers == 1 {
+        return merge(identity, map(0..n));
+    }
+    let chunk = n.div_ceil(workers);
+    let mut parts = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let map = &map;
+            handles.push(scope.spawn(move || map(lo..hi)));
+        }
+        for h in handles {
+            parts.push(h.join().expect("worker panicked"));
+        }
+    });
+    parts.into_iter().fold(identity, |acc, p| merge(acc, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v: Vec<usize> = (0..1000).collect();
+        let out = par_map(v, 8, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_worker_and_empty() {
+        assert_eq!(par_map(vec![1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
+        assert_eq!(par_map(Vec::<i32>::new(), 8, |x| x), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let total = par_reduce_indices(10_000, 8, |r| r.sum::<usize>(), |a, b| a + b, 0);
+        assert_eq!(total, 10_000 * 9_999 / 2);
+    }
+
+    #[test]
+    fn par_reduce_max_with_identity() {
+        let m = par_reduce_indices(
+            1000,
+            3,
+            |r| r.map(|i| (i * 7) % 101).max().unwrap_or(0),
+            |a, b| a.max(b),
+            0,
+        );
+        assert_eq!(m, 100);
+    }
+}

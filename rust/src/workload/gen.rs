@@ -1,0 +1,131 @@
+//! Distribution generators.
+//!
+//! The paper (§5) sweeps four integer-array types: random, sorted, reverse
+//! sorted, and "local distribution".  All generators are deterministic in
+//! the seed and produce non-negative keys (the paper's division procedure
+//! divides raw values by the step point, which presumes non-negative data;
+//! our kernels shift by `min` so signed inputs also work — see ref.py).
+
+use crate::config::Distribution;
+use crate::util::rng::Rng;
+
+/// Upper bound on generated keys.  The paper reports key values "in the
+/// millions"; `2^24` keeps `max - min` comfortably inside `i32` for the
+/// SubDivider arithmetic while still exceeding any array length we sweep.
+pub const KEY_RANGE: i32 = 1 << 24;
+
+/// Dispatch on the paper's distribution menu.
+pub fn generate(dist: Distribution, n: usize, seed: u64) -> Vec<i32> {
+    match dist {
+        Distribution::Random => random(n, seed),
+        Distribution::Sorted => sorted(n, seed),
+        Distribution::ReverseSorted => reverse_sorted(n, seed),
+        Distribution::Local => local_distribution(n, seed),
+    }
+}
+
+/// Uniform random keys in `[0, KEY_RANGE)`.
+pub fn random(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(KEY_RANGE as u64) as i32).collect()
+}
+
+/// Ascending sorted keys (random multiset, then sorted).
+pub fn sorted(n: usize, seed: u64) -> Vec<i32> {
+    let mut v = random(n, seed);
+    v.sort_unstable();
+    v
+}
+
+/// Descending sorted keys — the paper's "reversed sorted".
+pub fn reverse_sorted(n: usize, seed: u64) -> Vec<i32> {
+    let mut v = sorted(n, seed);
+    v.reverse();
+    v
+}
+
+/// The paper's "local distribution": each position draws from a narrow
+/// band centred on a ramp over the key range, so nearby positions hold
+/// nearby values (locally clustered, globally unsorted).  This mimics
+/// partially-ordered real-world inputs; like the random case it defeats
+/// the step-point divider less than fully sorted data, which is why the
+/// paper groups its results with `random` (Figs 6.7 / 6.11 / 6.15 / 6.19).
+pub fn local_distribution(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let band = (KEY_RANGE as i64 / 16).max(1);
+    (0..n)
+        .map(|i| {
+            let centre = (i as i64 * KEY_RANGE as i64) / n.max(1) as i64;
+            let jitter = rng.range_i64(-band, band);
+            (centre + jitter).clamp(0, (KEY_RANGE - 1) as i64) as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        for dist in Distribution::ALL {
+            assert_eq!(generate(dist, 1000, 7), generate(dist, 1000, 7));
+            assert_ne!(
+                generate(dist, 1000, 7),
+                generate(dist, 1000, 8),
+                "{dist:?} ignores the seed"
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_is_sorted() {
+        let v = sorted(10_000, 1);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn reverse_sorted_is_descending() {
+        let v = reverse_sorted(10_000, 1);
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn reverse_is_reverse_of_sorted() {
+        let mut r = reverse_sorted(5_000, 42);
+        r.reverse();
+        assert_eq!(r, sorted(5_000, 42));
+    }
+
+    #[test]
+    fn local_is_locally_clustered_but_not_sorted() {
+        let v = local_distribution(100_000, 3);
+        // Not globally sorted...
+        assert!(v.windows(2).any(|w| w[0] > w[1]));
+        // ...but a window's spread is far below the global range.
+        let window = &v[50_000..50_100];
+        let (mn, mx) = (
+            *window.iter().min().unwrap(),
+            *window.iter().max().unwrap(),
+        );
+        assert!(((mx - mn) as i64) < KEY_RANGE as i64 / 4);
+    }
+
+    #[test]
+    fn keys_non_negative_and_bounded() {
+        for dist in Distribution::ALL {
+            let v = generate(dist, 10_000, 99);
+            assert_eq!(v.len(), 10_000);
+            assert!(v.iter().all(|&x| (0..KEY_RANGE).contains(&x)), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn random_spans_most_of_the_range() {
+        let v = random(100_000, 5);
+        let mx = *v.iter().max().unwrap();
+        let mn = *v.iter().min().unwrap();
+        assert!(mx > KEY_RANGE - KEY_RANGE / 50);
+        assert!(mn < KEY_RANGE / 50);
+    }
+}

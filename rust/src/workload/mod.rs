@@ -1,0 +1,35 @@
+//! Input workload generation — the paper's four distributions (§5) at the
+//! paper's sizes (10–60 MB of `i32`), seeded for reproducibility.
+
+mod gen;
+
+pub use gen::{generate, local_distribution, random, reverse_sorted, sorted};
+
+use crate::config::Distribution;
+
+/// A generated workload plus its provenance, so figures can label series.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// The keys to sort.
+    pub data: Vec<i32>,
+    /// Which distribution produced it.
+    pub distribution: Distribution,
+    /// RNG seed used.
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Generate `n` keys from `dist` with `seed`.
+    pub fn new(dist: Distribution, n: usize, seed: u64) -> Self {
+        Workload {
+            data: generate(dist, n, seed),
+            distribution: dist,
+            seed,
+        }
+    }
+
+    /// Size in (fractional) megabytes, as the paper's x-axes report.
+    pub fn size_mb(&self) -> f64 {
+        (self.data.len() * 4) as f64 / (1 << 20) as f64
+    }
+}

@@ -1,0 +1,114 @@
+//! Failure injection: malformed configs, corrupted artifacts, and invalid
+//! simulator inputs must fail loudly with actionable errors — never
+//! silently produce wrong output.
+
+use ohhc_qsort::config::{Construction, ExperimentConfig};
+use ohhc_qsort::coordinator::{divide_native, OhhcSorter};
+use ohhc_qsort::runtime::ArtifactRegistry;
+use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::sim::threaded::ThreadedSimulator;
+use ohhc_qsort::topology::ohhc::Ohhc;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ohhc_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn registry_missing_dir() {
+    let msg = match ArtifactRegistry::open(&PathBuf::from("/nonexistent/nope")) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("opened a registry on a nonexistent directory"),
+    };
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn registry_corrupt_manifest() {
+    let dir = tmpdir("corrupt_manifest");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(ArtifactRegistry::open(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"chunk": 64}"#).unwrap();
+    assert!(ArtifactRegistry::open(&dir).is_err());
+}
+
+#[test]
+fn registry_stale_artifact_size() {
+    // Manifest promises a different byte count than the file on disk →
+    // must be reported as stale, not compiled.
+    let dir = tmpdir("stale");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"chunk": 64, "artifacts": {"m": {
+            "inputs": [["s32", [64]]], "outputs": [["s32", [1]]],
+            "sha256": "x", "bytes": 999}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+    let reg = ArtifactRegistry::open(&dir).unwrap();
+    let err = match reg.executable("m") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("compiled a stale artifact"),
+    };
+    assert!(err.contains("stale"), "{err}");
+}
+
+#[test]
+fn config_errors_are_specific() {
+    let cfg = ExperimentConfig {
+        dimension: 9,
+        ..Default::default()
+    };
+    assert!(cfg.validate().unwrap_err().to_string().contains("dimension"));
+
+    let cfg = ExperimentConfig {
+        dimension: 4,
+        elements: 10,
+        ..Default::default()
+    };
+    assert!(cfg.validate().unwrap_err().to_string().contains("processors"));
+
+    assert!(OhhcSorter::new(&cfg).is_err());
+}
+
+#[test]
+fn simulator_rejects_malformed_bucket_sets() {
+    let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+    let plans = gather_plan(&net);
+    let sim = ThreadedSimulator::new(&net, &plans);
+    // Too few buckets.
+    assert!(sim.run(vec![vec![1]; 4], 4).is_err());
+    // Too many buckets.
+    assert!(sim.run(vec![vec![1]; 40], 40).is_err());
+}
+
+#[test]
+fn divide_rejects_degenerate_inputs() {
+    assert!(divide_native(&[], 4).is_err());
+    assert!(divide_native(&[1, 2, 3], 0).is_err());
+}
+
+#[test]
+fn assemble_detects_payload_loss() {
+    // Feed the simulator buckets whose total is *smaller* than claimed —
+    // the invariant check must fire rather than return a short array.
+    let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+    let plans = gather_plan(&net);
+    let buckets = vec![vec![1i32]; net.total_processors()];
+    let err = ThreadedSimulator::new(&net, &plans)
+        .run(buckets, 9999)
+        .unwrap_err();
+    assert!(err.to_string().contains("payload loss"), "{err}");
+}
+
+#[test]
+fn config_file_bad_lines_are_located() {
+    let dir = tmpdir("cfgline");
+    let path = dir.join("x.conf");
+    std::fs::write(&path, "dimension = 2\nbogus line without equals\n").unwrap();
+    let err = ExperimentConfig::from_file(&path).unwrap_err().to_string();
+    assert!(err.contains("line 2"), "{err}");
+}

@@ -1,0 +1,220 @@
+//! Property-based tests (seeded random search, shrink-free) over the
+//! system's core invariants.  Each property samples many random
+//! configurations from a deterministic PRNG so failures are reproducible
+//! by seed.
+
+use ohhc_qsort::config::{Construction, Distribution};
+use ohhc_qsort::coordinator::divide_native;
+use ohhc_qsort::schedule::{gather_plan, scatter_order};
+use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
+use ohhc_qsort::sort::{is_sorted, quicksort, quicksort_with, PivotStrategy};
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::topology::routing;
+use ohhc_qsort::util::rng::Rng;
+use ohhc_qsort::workload;
+
+const CASES: usize = 40;
+
+fn arbitrary_array(rng: &mut Rng, max_len: usize) -> Vec<i32> {
+    let n = 1 + rng.below(max_len as u64) as usize;
+    let style = rng.below(5);
+    match style {
+        0 => (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect(),
+        1 => (0..n)
+            .map(|_| rng.range_i64(i32::MIN as i64 / 2, i32::MAX as i64 / 2) as i32)
+            .collect(),
+        2 => vec![rng.range_i64(-5, 5) as i32; n], // constant
+        3 => {
+            let mut v: Vec<i32> = (0..n as i32).collect();
+            rng.shuffle(&mut v);
+            v
+        }
+        _ => (0..n).map(|_| rng.below(4) as i32).collect(), // heavy dups
+    }
+}
+
+#[test]
+fn prop_quicksort_sorts_any_array_any_pivot() {
+    let mut rng = Rng::new(0xABCD);
+    for case in 0..CASES * 4 {
+        let v = arbitrary_array(&mut rng, 3000);
+        let pivot = match rng.below(4) {
+            0 => PivotStrategy::Middle,
+            1 => PivotStrategy::Last,
+            2 => PivotStrategy::MedianOfThree,
+            _ => PivotStrategy::Random,
+        };
+        let mut got = v.clone();
+        let c = quicksort_with(&mut got, pivot);
+        let mut expect = v;
+        expect.sort_unstable();
+        assert_eq!(got, expect, "case {case} pivot {pivot:?}");
+        // Comparisons lower bound: must at least touch the array once.
+        if got.len() > 1 {
+            assert!(c.comparisons as usize >= got.len() - 1, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_divide_conserves_and_orders() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let v = arbitrary_array(&mut rng, 20_000);
+        let p = 1 + rng.below(300) as usize;
+        let d = divide_native(&v, p).unwrap();
+        let total: usize = d.buckets.iter().map(Vec::len).sum();
+        assert_eq!(total, v.len(), "case {case}: conservation");
+        // Monotone cross-bucket ordering.
+        let mut last_max = i64::MIN;
+        for b in &d.buckets {
+            if let (Some(&mn), Some(&mx)) = (b.iter().min(), b.iter().max()) {
+                assert!(mn as i64 >= last_max, "case {case}: bucket order");
+                last_max = mx as i64;
+            }
+        }
+        // Sorting buckets then concatenating equals the sorted input.
+        let mut out: Vec<i32> = Vec::with_capacity(v.len());
+        for mut b in d.buckets {
+            b.sort_unstable();
+            out.extend_from_slice(&b);
+        }
+        let mut expect = v;
+        expect.sort_unstable();
+        assert_eq!(out, expect, "case {case}: no-merge property");
+    }
+}
+
+#[test]
+fn prop_schedule_satisfiable_beyond_paper_dimensions() {
+    // The schedule generalizes past d=4 (the paper stops there); replay
+    // the counting argument for d up to 6 in both constructions.
+    for d in 1..=6 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let net = Ohhc::new(d, c).unwrap();
+            let plans = gather_plan(&net);
+            let total = net.total_processors();
+            let mut held = vec![1usize; total];
+            let mut done = vec![false; total];
+            loop {
+                let mut progressed = false;
+                for id in 0..total {
+                    if done[id] {
+                        continue;
+                    }
+                    let act = plans[id].last();
+                    if held[id] >= act.wait_for {
+                        assert_eq!(held[id], act.wait_for, "d={d} {c:?} node {id}");
+                        if let Some(dst) = act.send_to {
+                            held[net.id(dst)] += held[id];
+                            held[id] = 0;
+                        }
+                        done[id] = true;
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            assert!(done.iter().all(|&x| x), "d={d} {c:?} deadlock");
+            assert_eq!(held[0], total);
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_sort_equals_sequential_random_configs() {
+    let mut rng = Rng::new(0xC0DE);
+    for case in 0..12 {
+        let d = 1 + rng.below(3) as u32;
+        let c = if rng.below(2) == 0 {
+            Construction::FullGroup
+        } else {
+            Construction::HalfGroup
+        };
+        let dist = Distribution::ALL[rng.below(4) as usize];
+        let net = Ohhc::new(d, c).unwrap();
+        let n = net.total_processors() * (2 + rng.below(40) as usize);
+        let data = workload::generate(dist, n, rng.next_u64());
+        let plans = gather_plan(&net);
+        let divided = divide_native(&data, net.total_processors()).unwrap();
+        let mode = if rng.below(2) == 0 {
+            ThreadMode::Direct
+        } else {
+            ThreadMode::Waves
+        };
+        let out = ThreadedSimulator::new(&net, &plans)
+            .with_mode(mode)
+            .run(divided.buckets, data.len())
+            .unwrap();
+        let mut expect = data;
+        expect.sort_unstable();
+        assert_eq!(out.sorted, expect, "case {case} d={d} {c:?} {dist:?} {mode:?}");
+    }
+}
+
+#[test]
+fn prop_routes_always_walkable_and_bounded() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..CASES {
+        let d = 1 + rng.below(3) as u32;
+        let c = if rng.below(2) == 0 {
+            Construction::FullGroup
+        } else {
+            Construction::HalfGroup
+        };
+        let net = Ohhc::new(d, c).unwrap();
+        let n = net.total_processors();
+        for _ in 0..50 {
+            let s = rng.below(n as u64) as usize;
+            let t = rng.below(n as u64) as usize;
+            let path = routing::route(&net, net.addr(s), net.addr(t));
+            assert_eq!(path[0], s);
+            assert_eq!(*path.last().unwrap(), t);
+            assert!(routing::path_is_valid(net.graph(), &path), "{s}->{t}");
+            assert!(path.len() as u32 - 1 <= 2 * (d + 1) + 1, "{s}->{t}");
+            // No node repeats (loop-free).
+            let mut seen = std::collections::HashSet::new();
+            assert!(path.iter().all(|&x| seen.insert(x)), "{s}->{t} loops");
+        }
+    }
+}
+
+#[test]
+fn prop_scatter_order_is_a_tree_over_all_dims() {
+    for d in 1..=5 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let net = Ohhc::new(d, c).unwrap();
+            let plans = gather_plan(&net);
+            let parents = scatter_order(&plans);
+            assert_eq!(parents.iter().filter(|p| p.is_none()).count(), 1);
+            // Every chain terminates at the master within n hops.
+            for start in 0..net.total_processors() {
+                let mut cur = start;
+                for _ in 0..=net.total_processors() {
+                    match parents[cur] {
+                        None => break,
+                        Some(a) => cur = net.id(a),
+                    }
+                }
+                assert_eq!(cur, 0, "d={d} {c:?} node {start}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_instrumented_sort_does_not_modify_multiset() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..CASES {
+        let v = arbitrary_array(&mut rng, 5000);
+        let mut sorted = v.clone();
+        quicksort(&mut sorted);
+        assert!(is_sorted(&sorted));
+        // Same multiset: compare value histograms.
+        let mut a = v;
+        a.sort_unstable();
+        assert_eq!(a, sorted);
+    }
+}
