@@ -1,0 +1,48 @@
+# ohhc-qsort build entry points.
+#
+#   make build      release build of the rust crate
+#   make test       tier-1 gate: cargo build --release && cargo test -q
+#   make fmt        rustfmt across the tree (check with make fmt-check)
+#   make lint       clippy, warnings denied
+#   make campaign   the acceptance-criteria campaign grid
+#   make artifacts  lower the L1/L2 JAX graphs to artifacts/*.hlo.txt
+#   make pytest     python kernel/model tests
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test fmt fmt-check lint bench campaign artifacts pytest clean
+
+build:
+	cd rust && $(CARGO) build --release
+
+test: build
+	cd rust && $(CARGO) test -q
+
+fmt:
+	cd rust && $(CARGO) fmt
+
+fmt-check:
+	cd rust && $(CARGO) fmt --check
+
+lint:
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+bench:
+	cd rust && OHHC_BENCH_FAST=1 $(CARGO) bench
+
+campaign: build
+	cd rust && $(CARGO) run --release -- campaign \
+		--dims 1,2 --dists random,sorted,reverse \
+		--sizes 1048576,4194304 --backends threaded,des \
+		--out ../results/campaign.json --csv ../results/campaign.csv
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+clean:
+	cd rust && $(CARGO) clean
+	rm -rf results artifacts python/**/__pycache__

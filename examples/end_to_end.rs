@@ -17,16 +17,15 @@
 //! ```
 
 use ohhc_qsort::analysis::theorems;
-use ohhc_qsort::config::{
-    Backend, Construction, Distribution, DivideEngine, ExperimentConfig,
-};
+use ohhc_qsort::config::{Backend, Construction, Distribution, DivideEngine, ExperimentConfig};
 use ohhc_qsort::coordinator::{divide_native, divide_with_engine, OhhcSorter};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::util::par;
 use ohhc_qsort::workload::Workload;
+use ohhc_qsort::{ensure, CliResult};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let n = 1 << 20; // 4 MB of i32 — "real small workload"
     let seed = 0xE2E;
 
@@ -38,8 +37,8 @@ fn main() -> anyhow::Result<()> {
     for p in [36usize, 144] {
         let native = divide_native(&data, p)?;
         let xla = divide_with_engine(&data, p, DivideEngine::Xla, Some(&registry))?;
-        anyhow::ensure!(native.lo == xla.lo && native.sub == xla.sub, "step point");
-        anyhow::ensure!(native.sizes() == xla.sizes(), "bucket sizes P={p}");
+        ensure!(native.lo == xla.lo && native.sub == xla.sub, "step point");
+        ensure!(native.sizes() == xla.sizes(), "bucket sizes P={p}");
         println!("  P={p:>4}: XLA divide == native divide ✓ (sub={})", native.sub);
     }
 
@@ -96,7 +95,7 @@ fn main() -> anyhow::Result<()> {
         let net = sorter.network();
         let exact = theorems::exact_tree_steps(net.groups, net.procs_per_group);
         let paper = theorems::theorem3_comm_steps(net.groups, d);
-        anyhow::ensure!(e + o == exact, "step count mismatch");
+        ensure!(e + o == exact, "step count mismatch");
         println!(
             "  d={d}: measured {} (optical {o}) — exact form {} ✓, paper form {} {}",
             e + o,

@@ -14,8 +14,9 @@ use ohhc_qsort::schedule::gather_plan;
 use ohhc_qsort::sim::engine::DesSimulator;
 use ohhc_qsort::topology::ohhc::Ohhc;
 use ohhc_qsort::workload;
+use ohhc_qsort::CliResult;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let net = Ohhc::new(2, Construction::FullGroup)?;
     let plans = gather_plan(&net);
     let data = workload::random(1 << 20, 7);

@@ -7,8 +7,9 @@
 
 use ohhc_qsort::config::{Backend, Construction, Distribution, ExperimentConfig};
 use ohhc_qsort::coordinator::OhhcSorter;
+use ohhc_qsort::CliResult;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     // One cell of the paper's sweep: 2-D OHHC, G = P (144 processors),
     // 4 MB of random i32 keys, the paper's threaded-simulation backend.
     let cfg = ExperimentConfig {

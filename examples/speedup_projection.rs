@@ -23,8 +23,9 @@ use ohhc_qsort::sim::engine::DesSimulator;
 use ohhc_qsort::sort::quicksort;
 use ohhc_qsort::topology::ohhc::Ohhc;
 use ohhc_qsort::workload;
+use ohhc_qsort::CliResult;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let n = 1 << 21; // 8 MB of i32
     let link = LinkModel::default();
 

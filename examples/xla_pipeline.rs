@@ -10,10 +10,11 @@ use ohhc_qsort::config::DivideEngine;
 use ohhc_qsort::coordinator::{divide_native, divide_with_engine};
 use ohhc_qsort::runtime::{ArtifactRegistry, XlaSortBlocks};
 use ohhc_qsort::workload;
+use ohhc_qsort::{ensure, CliResult};
 use std::path::Path;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let reg = ArtifactRegistry::open(Path::new("artifacts"))?;
     println!(
         "PJRT platform: {} ({} devices), chunk = {}",
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let xla = divide_with_engine(&data, 144, DivideEngine::Xla, Some(&reg))?;
     let t_xla = t0.elapsed();
-    anyhow::ensure!(native.sizes() == xla.sizes(), "engines disagree");
+    ensure!(native.sizes() == xla.sizes(), "engines disagree");
     println!("  native: {t_native:?}");
     println!("  xla:    {t_xla:?}  (interpret-mode Pallas through PJRT CPU;");
     println!("          real-TPU projection in DESIGN.md §Perf-estimates)");
@@ -57,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         let dt = t0.elapsed();
         let mut expect = payload;
         expect.sort_unstable();
-        anyhow::ensure!(sorted == expect, "bitonic mismatch at {len}");
+        ensure!(sorted == expect, "bitonic mismatch at {len}");
         println!("  payload {len:>6} keys → sorted ✓ in {dt:?}");
     }
 

@@ -1,0 +1,48 @@
+//! Bench: the campaign engine — grid expansion, topology-cache hit vs
+//! cold-build cost (the win the per-(dimension, construction) cache
+//! buys), and a small end-to-end grid on both backends.
+
+use ohhc_qsort::campaign::{Campaign, PlanCache, SweepSpec};
+use ohhc_qsort::config::{Backend, Construction, Distribution};
+use ohhc_qsort::schedule::TopologyBundle;
+use ohhc_qsort::util::bench::Bench;
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("== campaign: grid expansion (paper-shaped spec, 216 cells)");
+    let spec = SweepSpec {
+        backends: vec![Backend::Threaded],
+        ..Default::default()
+    };
+    b.run("expand/4x2x4x6x1", || spec.expand().unwrap());
+
+    println!("\n== campaign: topology build vs cache hit");
+    for d in 1..=4 {
+        b.run(&format!("bundle/cold-build/d={d}"), || {
+            TopologyBundle::build(d, Construction::FullGroup).unwrap()
+        });
+    }
+    let cache = PlanCache::new();
+    cache.get_or_build(3, Construction::FullGroup).unwrap();
+    b.run("bundle/cache-hit/d=3", || {
+        cache.get_or_build(3, Construction::FullGroup).unwrap()
+    });
+
+    println!("\n== campaign: end-to-end tiny grid (2 dims × 2 dists × 2 backends)");
+    for jobs in [1usize, 4] {
+        let spec = SweepSpec {
+            dimensions: vec![1, 2],
+            constructions: vec![Construction::FullGroup],
+            distributions: vec![Distribution::Random, Distribution::Sorted],
+            sizes: vec![50_000],
+            backends: vec![Backend::Threaded, Backend::DiscreteEvent],
+            workers: 4,
+            jobs,
+            ..Default::default()
+        };
+        b.run(&format!("grid/8-cells/jobs={jobs}"), || {
+            Campaign::new(spec.clone()).run().unwrap()
+        });
+    }
+}

@@ -61,9 +61,7 @@ pub fn psrs_sort(data: &[i32], p: usize) -> PsrsOutcome {
         }
     }
     samples.sort_unstable();
-    let splitters: Vec<i32> = (1..p)
-        .map(|k| samples[k * samples.len() / p])
-        .collect();
+    let splitters: Vec<i32> = (1..p).map(|k| samples[k * samples.len() / p]).collect();
 
     // Phase 3: partition every slice by the splitters (binary search on
     // the sorted slice), route partitions to their buckets.

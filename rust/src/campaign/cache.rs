@@ -1,0 +1,148 @@
+//! Shared topology/plan cache keyed by `(dimension, construction)`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::Construction;
+use crate::error::Result;
+use crate::schedule::TopologyBundle;
+
+/// Cache key: the only inputs a [`TopologyBundle`] depends on.
+pub type TopologyKey = (u32, Construction);
+
+/// Thread-safe cache of [`TopologyBundle`]s with build/hit accounting.
+///
+/// `get_or_build` holds the map lock across the build, so concurrent
+/// requests for the same key serialize on one construction — a campaign
+/// touching a `(dimension, construction)` pair any number of times builds
+/// its topology and gather plans **exactly once** (asserted by the
+/// campaign tests).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: Mutex<HashMap<TopologyKey, Arc<TopologyBundle>>>,
+    build_counts: Mutex<HashMap<TopologyKey, usize>>,
+    hits: AtomicUsize,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the bundle for a key, building it on first use.
+    pub fn get_or_build(
+        &self,
+        dimension: u32,
+        construction: Construction,
+    ) -> Result<Arc<TopologyBundle>> {
+        let key = (dimension, construction);
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(bundle) = entries.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(bundle.clone());
+        }
+        let bundle = Arc::new(TopologyBundle::build(dimension, construction)?);
+        *self.build_counts.lock().unwrap().entry(key).or_insert(0) += 1;
+        entries.insert(key, bundle.clone());
+        Ok(bundle)
+    }
+
+    /// Total topology builds performed.
+    pub fn builds(&self) -> usize {
+        self.build_counts.lock().unwrap().values().sum()
+    }
+
+    /// Build count per key, sorted (for at-most-once assertions).
+    pub fn build_counts(&self) -> Vec<(TopologyKey, usize)> {
+        let mut counts: Vec<_> = self
+            .build_counts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, &c)| (k, c))
+            .collect();
+        counts.sort_by_key(|&((d, c), _)| (d, c != Construction::FullGroup));
+        counts
+    }
+
+    /// Cache hits served without building.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct keys currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_fetch_hits_and_shares() {
+        let cache = PlanCache::new();
+        assert!(cache.is_empty());
+        let a = cache.get_or_build(1, Construction::FullGroup).unwrap();
+        let b = cache.get_or_build(1, Construction::FullGroup).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "cache must share one bundle");
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_build_independently() {
+        let cache = PlanCache::new();
+        cache.get_or_build(1, Construction::FullGroup).unwrap();
+        cache.get_or_build(1, Construction::HalfGroup).unwrap();
+        cache.get_or_build(2, Construction::FullGroup).unwrap();
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(
+            cache.build_counts(),
+            vec![
+                ((1, Construction::FullGroup), 1),
+                ((1, Construction::HalfGroup), 1),
+                ((2, Construction::FullGroup), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn concurrent_hammering_builds_each_key_once() {
+        let cache = PlanCache::new();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..16 {
+                        for c in Construction::ALL {
+                            cache.get_or_build(1, c).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.builds(), 2, "per-key builds must not race");
+        for (_, count) in cache.build_counts() {
+            assert_eq!(count, 1);
+        }
+        assert_eq!(cache.hits(), 8 * 16 * 2 - 2);
+    }
+
+    #[test]
+    fn invalid_key_errors_and_caches_nothing() {
+        let cache = PlanCache::new();
+        assert!(cache.get_or_build(0, Construction::FullGroup).is_err());
+        assert_eq!(cache.builds(), 0);
+        assert!(cache.is_empty());
+    }
+}

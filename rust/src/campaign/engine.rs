@@ -1,0 +1,192 @@
+//! The campaign executor: a worker pool over the expanded grid.
+
+use std::time::Instant;
+
+use crate::campaign::cache::PlanCache;
+use crate::campaign::report::{CampaignReport, CellReport};
+use crate::campaign::spec::{GridCell, SweepSpec};
+use crate::coordinator::{OhhcSorter, SortReport};
+use crate::error::Result;
+use crate::util::par;
+use crate::workload::Workload;
+
+/// Executes a [`SweepSpec`] across a pool of `spec.jobs` workers.
+///
+/// Jobs pull cells work-steal style; every job resolves its topology and
+/// gather plans through the shared [`PlanCache`], so each
+/// `(dimension, construction)` pair is built at most once per campaign no
+/// matter how many cells, repetitions, or concurrent jobs touch it.
+/// Per-cell errors are captured in the report instead of aborting the
+/// sweep — one infeasible cell must not cost hours of completed grid.
+pub struct Campaign {
+    spec: SweepSpec,
+    cache: PlanCache,
+}
+
+impl Campaign {
+    /// New campaign over a spec.
+    pub fn new(spec: SweepSpec) -> Self {
+        Campaign {
+            spec,
+            cache: PlanCache::new(),
+        }
+    }
+
+    /// The spec this campaign runs.
+    pub fn spec(&self) -> &SweepSpec {
+        &self.spec
+    }
+
+    /// The shared topology/plan cache (build/hit accounting for tests and
+    /// report aggregation).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Run the whole grid; cells report silently.
+    pub fn run(&self) -> Result<CampaignReport> {
+        self.run_with(|_| {})
+    }
+
+    /// Run the whole grid, invoking `progress` as each cell finishes
+    /// (from worker threads — keep it cheap and thread-safe).
+    pub fn run_with(&self, progress: impl Fn(&CellReport) + Sync) -> Result<CampaignReport> {
+        let t0 = Instant::now();
+        let cells = self.spec.expand()?;
+        let jobs = self.spec.jobs.max(1);
+        let reports = par::par_map(cells, jobs, |cell| {
+            let report = self.run_cell(&cell);
+            progress(&report);
+            report
+        });
+        Ok(CampaignReport {
+            spec: self.spec.clone(),
+            cells: reports,
+            topology_builds: self.cache.builds(),
+            cache_hits: self.cache.hits(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run one cell, mapping infeasibility to `Skipped` and runtime
+    /// errors to `Failed`.
+    fn run_cell(&self, cell: &GridCell) -> CellReport {
+        let cfg = cell.config(&self.spec);
+        if let Err(e) = cfg.validate() {
+            return CellReport::skipped(cell, e.to_string());
+        }
+        match self.execute(cell) {
+            Ok(runs) => CellReport::from_runs(cell, &runs),
+            Err(e) => CellReport::failed(cell, e.to_string()),
+        }
+    }
+
+    fn execute(&self, cell: &GridCell) -> Result<Vec<SortReport>> {
+        let cfg = cell.config(&self.spec);
+        let bundle = self.cache.get_or_build(cell.dimension, cell.construction)?;
+        let sorter = OhhcSorter::with_bundle(&cfg, bundle)?;
+        let workload = Workload::new(cell.distribution, cell.elements, self.spec.seed);
+        (0..self.spec.repetitions.max(1))
+            .map(|_| sorter.run_on(&workload))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, Construction, Distribution};
+
+    /// A grid small enough for unit tests but wide enough to exercise the
+    /// cache, both backends, and skip handling.
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            dimensions: vec![1],
+            constructions: Construction::ALL.to_vec(),
+            distributions: vec![Distribution::Random, Distribution::Sorted],
+            sizes: vec![12_000],
+            backends: vec![Backend::Threaded, Backend::DiscreteEvent],
+            workers: 4,
+            jobs: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn campaign_covers_every_cell() {
+        let campaign = Campaign::new(tiny_spec());
+        let report = campaign.run().unwrap();
+        assert_eq!(report.cells.len(), 8);
+        assert_eq!(report.completed(), 8);
+        assert_eq!(report.failed(), 0);
+        for cell in &report.cells {
+            assert!(cell.counters.comparisons > 0, "{}", cell.key());
+            assert!(cell.seq_secs > 0.0 && cell.par_secs > 0.0);
+        }
+        // DES cells carry virtual-time outcomes, threaded cells do not.
+        for cell in &report.cells {
+            match cell.backend {
+                Backend::DiscreteEvent => assert!(cell.des_completion_ns.is_some()),
+                Backend::Threaded => assert!(cell.des_completion_ns.is_none()),
+            }
+        }
+    }
+
+    #[test]
+    fn topologies_build_at_most_once_under_concurrency() {
+        let campaign = Campaign::new(tiny_spec());
+        let report = campaign.run().unwrap();
+        // 8 cells share 2 (dimension, construction) pairs.
+        assert_eq!(report.topology_builds, 2);
+        for (key, count) in campaign.cache().build_counts() {
+            assert_eq!(count, 1, "{key:?} rebuilt");
+        }
+        assert_eq!(report.cache_hits, 8 - 2);
+    }
+
+    #[test]
+    fn infeasible_cells_are_skipped_not_fatal() {
+        let mut spec = tiny_spec();
+        spec.dimensions = vec![1, 4]; // d=4 G=P needs 2304 keys minimum
+        spec.constructions = vec![Construction::FullGroup];
+        spec.sizes = vec![2_000];
+        spec.distributions = vec![Distribution::Random];
+        spec.backends = vec![Backend::Threaded];
+        let report = Campaign::new(spec).run().unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.completed(), 1);
+        assert_eq!(report.skipped(), 1);
+        for cell in report.cells.iter().filter(|c| !c.status.is_completed()) {
+            assert_eq!(cell.dimension, 4);
+            assert!(cell.status.detail().unwrap().contains("processors"));
+        }
+        // Skipped cells never build topologies.
+        assert_eq!(report.topology_builds, 1);
+    }
+
+    #[test]
+    fn progress_fires_once_per_cell() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let campaign = Campaign::new(tiny_spec());
+        let report = campaign
+            .run_with(|_| {
+                calls.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), report.cells.len());
+    }
+
+    #[test]
+    fn repetitions_fold_to_medians() {
+        let mut spec = tiny_spec();
+        spec.repetitions = 3;
+        spec.distributions = vec![Distribution::Random];
+        spec.backends = vec![Backend::Threaded];
+        spec.constructions = vec![Construction::FullGroup];
+        let report = Campaign::new(spec).run().unwrap();
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.cells[0].repetitions, 3);
+        assert!(report.cells[0].speedup > 0.0);
+    }
+}

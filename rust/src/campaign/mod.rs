@@ -1,0 +1,34 @@
+//! Experiment-campaign engine: the paper's whole §6 grid in one call.
+//!
+//! The evaluation section of the paper is a grid — OHHC dimensions ×
+//! constructions × input distributions × array sizes — that the original
+//! work ran cell by cell.  This module makes the grid a first-class
+//! object:
+//!
+//! * [`SweepSpec`] — a declarative sweep specification (every axis plus
+//!   seed / repetitions / worker knobs), parseable from CLI lists or a
+//!   `key = value` file;
+//! * [`SweepSpec::expand`] — deterministic, deduplicated expansion into
+//!   [`GridCell`]s;
+//! * [`PlanCache`] — per-`(dimension, construction)` cache of
+//!   [`TopologyBundle`]s so repeated cells never rebuild a topology or its
+//!   gather plans (the paper's 216-cell sweep needs only 8 builds);
+//! * [`Campaign`] — executes the grid across a worker pool, tolerating
+//!   per-cell failures, and aggregates everything into a
+//!   [`CampaignReport`] with JSON / CSV emitters.
+//!
+//! The multi-mode grid methodology follows Fasha's comparative Quick Sort
+//! study (arXiv:2109.01719); sweeping the topology dimension as a
+//! first-class axis follows the OTIS-cube tradition (arXiv:1310.7376).
+//!
+//! [`TopologyBundle`]: crate::schedule::TopologyBundle
+
+mod cache;
+mod engine;
+mod report;
+mod spec;
+
+pub use cache::PlanCache;
+pub use engine::Campaign;
+pub use report::{CampaignReport, CellReport, CellStatus};
+pub use spec::{GridCell, SweepSpec};

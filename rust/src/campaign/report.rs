@@ -1,0 +1,517 @@
+//! Per-cell and aggregated campaign reports.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::campaign::spec::{GridCell, SweepSpec};
+use crate::config::{Backend, Construction, Distribution};
+use crate::coordinator::SortReport;
+use crate::error::Result;
+use crate::metrics::{write_csv_rows, Summary};
+use crate::sort::SortCounters;
+use crate::util::json::Json;
+
+/// How one grid cell ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CellStatus {
+    /// Ran and verified.
+    Completed,
+    /// Infeasible for this spec (e.g. fewer keys than processors).
+    Skipped(String),
+    /// Ran and errored.
+    Failed(String),
+}
+
+impl CellStatus {
+    /// Short status label for tables and CSV.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellStatus::Completed => "completed",
+            CellStatus::Skipped(_) => "skipped",
+            CellStatus::Failed(_) => "failed",
+        }
+    }
+
+    /// Reason text for skipped/failed cells.
+    pub fn detail(&self) -> Option<&str> {
+        match self {
+            CellStatus::Completed => None,
+            CellStatus::Skipped(r) | CellStatus::Failed(r) => Some(r),
+        }
+    }
+
+    /// Did the cell produce measurements?
+    pub fn is_completed(&self) -> bool {
+        *self == CellStatus::Completed
+    }
+}
+
+/// Everything one grid cell contributes to the aggregated report.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    /// OHHC dimension.
+    pub dimension: u32,
+    /// Construction rule.
+    pub construction: Construction,
+    /// Input distribution.
+    pub distribution: Distribution,
+    /// Simulation backend.
+    pub backend: Backend,
+    /// Keys sorted.
+    pub elements: usize,
+    /// Outcome.
+    pub status: CellStatus,
+    /// Total processors simulated (0 when never built).
+    pub processors: usize,
+    /// Timing repetitions behind the medians.
+    pub repetitions: usize,
+    /// Median sequential wall time (s).
+    pub seq_secs: f64,
+    /// Median parallel wall time (s).
+    pub par_secs: f64,
+    /// Median divide-phase wall time (s).
+    pub divide_secs: f64,
+    /// Relative speedup `T_s / T_p` from the medians.
+    pub speedup: f64,
+    /// The paper's percentage speedup presentation.
+    pub speedup_pct: f64,
+    /// Efficiency from the medians.
+    pub efficiency: f64,
+    /// Division load-imbalance factor.
+    pub imbalance: f64,
+    /// Summed local-sort counters.
+    pub counters: SortCounters,
+    /// DES virtual completion (ns), DES backend only.
+    pub des_completion_ns: Option<f64>,
+    /// DES communication steps `(electrical, optical)`.
+    pub des_steps: Option<(usize, usize)>,
+}
+
+impl CellReport {
+    fn empty(cell: &GridCell, status: CellStatus) -> Self {
+        CellReport {
+            dimension: cell.dimension,
+            construction: cell.construction,
+            distribution: cell.distribution,
+            backend: cell.backend,
+            elements: cell.elements,
+            status,
+            processors: 0,
+            repetitions: 0,
+            seq_secs: 0.0,
+            par_secs: 0.0,
+            divide_secs: 0.0,
+            speedup: 0.0,
+            speedup_pct: 0.0,
+            efficiency: 0.0,
+            imbalance: 0.0,
+            counters: SortCounters::default(),
+            des_completion_ns: None,
+            des_steps: None,
+        }
+    }
+
+    /// A cell the spec ruled out before running.
+    pub fn skipped(cell: &GridCell, reason: String) -> Self {
+        Self::empty(cell, CellStatus::Skipped(reason))
+    }
+
+    /// A cell that errored mid-run.
+    pub fn failed(cell: &GridCell, reason: String) -> Self {
+        Self::empty(cell, CellStatus::Failed(reason))
+    }
+
+    /// Fold one or more repeated runs of a cell into its report (medians
+    /// over wall-clock quantities; counters and DES outcomes are
+    /// deterministic per seed, so the first run speaks for all).
+    pub fn from_runs(cell: &GridCell, runs: &[SortReport]) -> Self {
+        assert!(!runs.is_empty(), "a completed cell has at least one run");
+        let med = |f: &dyn Fn(&SortReport) -> f64| {
+            Summary::of(&runs.iter().map(f).collect::<Vec<f64>>()).median
+        };
+        let seq_secs = med(&|r| r.sequential_time.as_secs_f64());
+        let par_secs = med(&|r| r.parallel_time.as_secs_f64());
+        let divide_secs = med(&|r| r.divide_time.as_secs_f64());
+        let first = &runs[0];
+        CellReport {
+            dimension: cell.dimension,
+            construction: cell.construction,
+            distribution: cell.distribution,
+            backend: cell.backend,
+            elements: cell.elements,
+            status: CellStatus::Completed,
+            processors: first.processors,
+            repetitions: runs.len(),
+            seq_secs,
+            par_secs,
+            divide_secs,
+            speedup: seq_secs / par_secs,
+            speedup_pct: (seq_secs - par_secs) / seq_secs * 100.0,
+            efficiency: seq_secs / (first.processors as f64 * par_secs),
+            imbalance: first.imbalance,
+            counters: first.counters,
+            des_completion_ns: first.des_completion_ns,
+            des_steps: first.des_steps,
+        }
+    }
+
+    /// Grid coordinates as a stable string key.
+    pub fn key(&self) -> String {
+        format!(
+            "d={}/{}/{}/{}/{}",
+            self.dimension,
+            self.construction.label(),
+            self.distribution.label(),
+            self.elements,
+            self.backend.label()
+        )
+    }
+
+    /// The deterministic fields shared by [`CellReport::fingerprint`] and
+    /// [`CellReport::to_json`] — wall-clock quantities excluded.
+    fn deterministic_fields(&self) -> BTreeMap<String, Json> {
+        let counters = Json::obj([
+            ("comparisons", Json::int(self.counters.comparisons as usize)),
+            ("iterations", Json::int(self.counters.iterations as usize)),
+            ("max_depth", Json::int(self.counters.max_depth as usize)),
+            ("recursions", Json::int(self.counters.recursion_calls as usize)),
+            ("swaps", Json::int(self.counters.swaps as usize)),
+        ]);
+        let obj = Json::obj([
+            ("backend", Json::str(self.backend.label())),
+            ("construction", Json::str(self.construction.label())),
+            ("counters", counters),
+            (
+                "des_completion_ns",
+                self.des_completion_ns.map_or(Json::Null, Json::num),
+            ),
+            (
+                "des_steps",
+                self.des_steps.map_or(Json::Null, |(e, o)| {
+                    Json::arr([Json::int(e), Json::int(o)])
+                }),
+            ),
+            ("dimension", Json::int(self.dimension as usize)),
+            ("distribution", Json::str(self.distribution.label())),
+            ("elements", Json::int(self.elements)),
+            ("imbalance", Json::num(self.imbalance)),
+            ("processors", Json::int(self.processors)),
+            ("status", Json::str(self.status.label())),
+        ]);
+        match obj {
+            Json::Obj(m) => m,
+            _ => unreachable!("Json::obj builds an object"),
+        }
+    }
+
+    /// The deterministic subset of the report as canonical JSON text:
+    /// everything that must be byte-identical between a cold-built and a
+    /// cache-served run of the same `(spec, seed)` cell.
+    pub fn fingerprint(&self) -> String {
+        Json::Obj(self.deterministic_fields()).dump()
+    }
+
+    /// The cell as a JSON object (fingerprint fields plus timings).
+    pub fn to_json(&self) -> Json {
+        let mut obj = self.deterministic_fields();
+        obj.insert("seq_secs".into(), Json::num(self.seq_secs));
+        obj.insert("par_secs".into(), Json::num(self.par_secs));
+        obj.insert("divide_secs".into(), Json::num(self.divide_secs));
+        obj.insert("speedup".into(), Json::num(self.speedup));
+        obj.insert("speedup_pct".into(), Json::num(self.speedup_pct));
+        obj.insert("efficiency".into(), Json::num(self.efficiency));
+        obj.insert("repetitions".into(), Json::int(self.repetitions));
+        if let Some(reason) = self.status.detail() {
+            obj.insert("reason".into(), Json::str(reason));
+        }
+        Json::Obj(obj)
+    }
+
+    /// CSV header matching [`CellReport::csv_row`].
+    pub const CSV_HEADER: &str = "dimension,construction,distribution,backend,elements,\
+         processors,status,seq_secs,par_secs,divide_secs,speedup,speedup_pct,efficiency,\
+         imbalance,recursions,iterations,swaps,comparisons,des_completion_ns,des_elec_steps,\
+         des_opt_steps";
+
+    /// One CSV row per cell.
+    pub fn csv_row(&self) -> String {
+        let (des_ns, des_e, des_o) = match (self.des_completion_ns, self.des_steps) {
+            (Some(ns), Some((e, o))) => (format!("{ns:.1}"), e.to_string(), o.to_string()),
+            _ => (String::new(), String::new(), String::new()),
+        };
+        format!(
+            "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{}",
+            self.dimension,
+            self.construction.label(),
+            self.distribution.label(),
+            self.backend.label(),
+            self.elements,
+            self.processors,
+            self.status.label(),
+            self.seq_secs,
+            self.par_secs,
+            self.divide_secs,
+            self.speedup,
+            self.speedup_pct,
+            self.efficiency,
+            self.imbalance,
+            self.counters.recursion_calls,
+            self.counters.iterations,
+            self.counters.swaps,
+            self.counters.comparisons,
+            des_ns,
+            des_e,
+            des_o
+        )
+    }
+}
+
+/// The aggregated outcome of one campaign invocation.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// Spec echo (axes + knobs).
+    pub spec: SweepSpec,
+    /// Every grid cell, in expansion order.
+    pub cells: Vec<CellReport>,
+    /// Topology/plan builds the cache performed.
+    pub topology_builds: usize,
+    /// Cache hits served without building.
+    pub cache_hits: usize,
+    /// Wall time of the whole campaign (s).
+    pub wall_secs: f64,
+}
+
+impl CampaignReport {
+    /// Cells that completed.
+    pub fn completed(&self) -> usize {
+        self.cells.iter().filter(|c| c.status.is_completed()).count()
+    }
+
+    /// Cells skipped as infeasible.
+    pub fn skipped(&self) -> usize {
+        self.count(|s| matches!(s, CellStatus::Skipped(_)))
+    }
+
+    /// Cells that failed.
+    pub fn failed(&self) -> usize {
+        self.count(|s| matches!(s, CellStatus::Failed(_)))
+    }
+
+    fn count(&self, pred: impl Fn(&CellStatus) -> bool) -> usize {
+        self.cells.iter().filter(|c| pred(&c.status)).count()
+    }
+
+    /// Speedup statistics of completed cells per dimension, sorted.
+    pub fn per_dimension(&self) -> Vec<(u32, Summary)> {
+        let mut dims: Vec<u32> = self.cells.iter().map(|c| c.dimension).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims.into_iter()
+            .filter_map(|d| {
+                let speedups: Vec<f64> = self
+                    .cells
+                    .iter()
+                    .filter(|c| c.dimension == d && c.status.is_completed())
+                    .map(|c| c.speedup)
+                    .collect();
+                if speedups.is_empty() {
+                    None
+                } else {
+                    Some((d, Summary::of(&speedups)))
+                }
+            })
+            .collect()
+    }
+
+    /// The whole campaign as one JSON document.
+    pub fn to_json(&self) -> Json {
+        let per_dim = self.per_dimension().into_iter().map(|(d, s)| {
+            Json::obj([
+                ("dimension", Json::int(d as usize)),
+                ("max_speedup", Json::num(s.max)),
+                ("mean_speedup", Json::num(s.mean)),
+                ("median_speedup", Json::num(s.median)),
+                ("min_speedup", Json::num(s.min)),
+            ])
+        });
+        Json::obj([
+            ("cells", Json::arr(self.cells.iter().map(CellReport::to_json))),
+            ("spec", self.spec.to_json()),
+            (
+                "summary",
+                Json::obj([
+                    ("cache_hits", Json::int(self.cache_hits)),
+                    ("completed", Json::int(self.completed())),
+                    ("failed", Json::int(self.failed())),
+                    ("per_dimension", Json::arr(per_dim)),
+                    ("planned", Json::int(self.cells.len())),
+                    ("skipped", Json::int(self.skipped())),
+                    ("topology_builds", Json::int(self.topology_builds)),
+                    ("wall_secs", Json::num(self.wall_secs)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the aggregated JSON report (pretty-printed).
+    pub fn write_json(&self, path: &Path) -> Result<PathBuf> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(path.to_path_buf())
+    }
+
+    /// Write the per-cell CSV table.
+    pub fn write_csv(&self, path: &Path) -> Result<PathBuf> {
+        let rows: Vec<String> = self.cells.iter().map(CellReport::csv_row).collect();
+        write_csv_rows(path, CellReport::CSV_HEADER, &rows)?;
+        Ok(path.to_path_buf())
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary_text(&self) -> String {
+        let mut out = format!(
+            "campaign: {} cells ({} completed, {} skipped, {} failed) in {:.2}s\n\
+             topology cache: {} builds, {} hits\n",
+            self.cells.len(),
+            self.completed(),
+            self.skipped(),
+            self.failed(),
+            self.wall_secs,
+            self.topology_builds,
+            self.cache_hits
+        );
+        for (d, s) in self.per_dimension() {
+            out.push_str(&format!(
+                "  d={d}: speedup median {:.3}x (min {:.3}, max {:.3}) over {} cells\n",
+                s.median, s.min, s.max, s.n
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> GridCell {
+        GridCell {
+            dimension: 1,
+            construction: Construction::FullGroup,
+            distribution: Distribution::Random,
+            elements: 36_000,
+            backend: Backend::DiscreteEvent,
+        }
+    }
+
+    fn completed_report() -> CellReport {
+        let mut r = CellReport::empty(&cell(), CellStatus::Completed);
+        r.processors = 36;
+        r.repetitions = 1;
+        r.seq_secs = 0.2;
+        r.par_secs = 0.1;
+        r.speedup = 2.0;
+        r.speedup_pct = 50.0;
+        r.efficiency = 2.0 / 36.0;
+        r.imbalance = 1.1;
+        r.counters.comparisons = 123;
+        r.des_completion_ns = Some(5000.0);
+        r.des_steps = Some((60, 10));
+        r
+    }
+
+    #[test]
+    fn fingerprint_excludes_wall_clock() {
+        let a = completed_report();
+        let mut b = completed_report();
+        b.seq_secs = 9.9;
+        b.par_secs = 4.4;
+        b.speedup = 99.0;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = completed_report();
+        c.counters.comparisons += 1;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn cell_json_has_coordinates_and_timings() {
+        let j = completed_report().to_json();
+        assert_eq!(j.get("dimension").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("des"));
+        assert_eq!(j.get("status").unwrap().as_str(), Some("completed"));
+        assert!(j.get("seq_secs").unwrap().as_f64().unwrap() > 0.0);
+        let steps = j.get("des_steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps[0].as_usize(), Some(60));
+    }
+
+    #[test]
+    fn skipped_cells_carry_reasons() {
+        let r = CellReport::skipped(&cell(), "too small".into());
+        assert_eq!(r.status.label(), "skipped");
+        assert_eq!(r.status.detail(), Some("too small"));
+        let j = r.to_json();
+        assert_eq!(j.get("reason").unwrap().as_str(), Some("too small"));
+    }
+
+    #[test]
+    fn csv_row_matches_header_arity() {
+        let header_cols = CellReport::CSV_HEADER.split(',').count();
+        let completed = completed_report().csv_row();
+        assert_eq!(completed.split(',').count(), header_cols);
+        let skipped = CellReport::skipped(&cell(), "n/a".into()).csv_row();
+        assert_eq!(skipped.split(',').count(), header_cols);
+    }
+
+    #[test]
+    fn campaign_json_aggregates() {
+        let report = CampaignReport {
+            spec: SweepSpec::default(),
+            cells: vec![
+                completed_report(),
+                CellReport::skipped(&cell(), "x".into()),
+                CellReport::failed(&cell(), "y".into()),
+            ],
+            topology_builds: 1,
+            cache_hits: 2,
+            wall_secs: 1.5,
+        };
+        assert_eq!(report.completed(), 1);
+        assert_eq!(report.skipped(), 1);
+        assert_eq!(report.failed(), 1);
+        let j = report.to_json();
+        let summary = j.get("summary").unwrap();
+        assert_eq!(summary.get("planned").unwrap().as_usize(), Some(3));
+        assert_eq!(summary.get("topology_builds").unwrap().as_usize(), Some(1));
+        let per_dim = summary.get("per_dimension").unwrap().as_arr().unwrap();
+        assert_eq!(per_dim.len(), 1);
+        assert_eq!(per_dim[0].get("dimension").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 3);
+        assert!(report.summary_text().contains("1 completed"));
+    }
+
+    #[test]
+    fn report_files_round_trip() {
+        let dir = std::env::temp_dir().join("ohhc_campaign_report");
+        let report = CampaignReport {
+            spec: SweepSpec::default(),
+            cells: vec![completed_report()],
+            topology_builds: 1,
+            cache_hits: 0,
+            wall_secs: 0.1,
+        };
+        let json_path = report.write_json(&dir.join("campaign.json")).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(json_path).unwrap()).unwrap();
+        assert_eq!(
+            parsed.get("summary").unwrap().get("completed").unwrap().as_usize(),
+            Some(1)
+        );
+        let csv_path = report.write_csv(&dir.join("campaign.csv")).unwrap();
+        let text = std::fs::read_to_string(csv_path).unwrap();
+        assert!(text.starts_with("dimension,construction"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,417 @@
+//! Declarative sweep specifications and their grid expansion.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::config::{Backend, Construction, Distribution, ExperimentConfig, LinkModel};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::par;
+
+/// One cell of the campaign grid — the cross product of every spec axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GridCell {
+    /// OHHC dimension.
+    pub dimension: u32,
+    /// Construction rule.
+    pub construction: Construction,
+    /// Input distribution.
+    pub distribution: Distribution,
+    /// Keys to sort.
+    pub elements: usize,
+    /// Simulation backend.
+    pub backend: Backend,
+}
+
+impl GridCell {
+    /// Short identifier used in progress lines and error messages.
+    pub fn label(&self) -> String {
+        format!(
+            "d={}/{}/{}/{}k/{}",
+            self.dimension,
+            self.construction.label(),
+            self.distribution.label(),
+            self.elements / 1000,
+            self.backend.label()
+        )
+    }
+
+    /// The experiment configuration this cell runs with.
+    pub fn config(&self, spec: &SweepSpec) -> ExperimentConfig {
+        ExperimentConfig {
+            dimension: self.dimension,
+            construction: self.construction,
+            distribution: self.distribution,
+            elements: self.elements,
+            seed: spec.seed,
+            backend: self.backend,
+            link_model: spec.link_model,
+            workers: spec.workers,
+            repetitions: spec.repetitions,
+            ..Default::default()
+        }
+    }
+}
+
+/// A declarative experiment sweep: the §6 grid axes plus run knobs.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// OHHC dimensions to sweep (paper: 1..=4).
+    pub dimensions: Vec<u32>,
+    /// Construction rules to sweep.
+    pub constructions: Vec<Construction>,
+    /// Input distributions to sweep.
+    pub distributions: Vec<Distribution>,
+    /// Array sizes in keys.
+    pub sizes: Vec<usize>,
+    /// Simulation backends to sweep.
+    pub backends: Vec<Backend>,
+    /// Workload seed (same seed ⇒ byte-identical DES outcomes).
+    pub seed: u64,
+    /// Timing repetitions per cell (median reported).
+    pub repetitions: usize,
+    /// Worker threads per run; `0` = one OS thread per processor.
+    pub workers: usize,
+    /// Concurrent campaign jobs (cells in flight at once).
+    pub jobs: usize,
+    /// DES link model.
+    pub link_model: LinkModel,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            dimensions: vec![1, 2, 3, 4],
+            constructions: Construction::ALL.to_vec(),
+            distributions: Distribution::ALL.to_vec(),
+            sizes: ExperimentConfig::paper_sizes(0.1),
+            backends: vec![Backend::Threaded],
+            seed: 0x0511_C0DE,
+            repetitions: 1,
+            workers: par::available_workers(),
+            jobs: 1,
+            link_model: LinkModel::default(),
+        }
+    }
+}
+
+/// Split a comma list and parse every entry with `f`.
+fn parse_list<T>(s: &str, what: &str, f: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    let items: Vec<T> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|e| !e.is_empty())
+        .map(f)
+        .collect::<Result<_>>()?;
+    if items.is_empty() {
+        return Err(Error::Config(format!("empty {what} list `{s}`")));
+    }
+    Ok(items)
+}
+
+impl SweepSpec {
+    /// Parse a `--dims` style list (`1,2,4`).
+    pub fn parse_dimensions(s: &str) -> Result<Vec<u32>> {
+        parse_list(s, "dimension", |e| {
+            e.parse()
+                .map_err(|err| Error::Config(format!("bad dimension `{e}`: {err}")))
+        })
+    }
+
+    /// Parse a `--constructions` style list (`full,half`).
+    pub fn parse_constructions(s: &str) -> Result<Vec<Construction>> {
+        parse_list(s, "construction", Construction::parse)
+    }
+
+    /// Parse a `--dists` style list (`random,sorted,reverse,local`).
+    pub fn parse_distributions(s: &str) -> Result<Vec<Distribution>> {
+        parse_list(s, "distribution", Distribution::parse)
+    }
+
+    /// Parse a `--sizes` style list of key counts (`1048576,4194304`).
+    pub fn parse_sizes(s: &str) -> Result<Vec<usize>> {
+        parse_list(s, "size", |e| {
+            e.parse()
+                .map_err(|err| Error::Config(format!("bad size `{e}`: {err}")))
+        })
+    }
+
+    /// Parse a `--backends` style list (`threaded,des`).
+    pub fn parse_backends(s: &str) -> Result<Vec<Backend>> {
+        parse_list(s, "backend", Backend::parse)
+    }
+
+    /// Load a spec from a `key = value` file.  List keys take comma lists;
+    /// unknown keys are rejected (same contract as the experiment files).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut spec = SweepSpec::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad = |e: Error| Error::Config(format!("line {}: {e}", lineno + 1));
+            match key {
+                "dimensions" => spec.dimensions = Self::parse_dimensions(value).map_err(bad)?,
+                "constructions" => {
+                    spec.constructions = Self::parse_constructions(value).map_err(bad)?
+                }
+                "distributions" => {
+                    spec.distributions = Self::parse_distributions(value).map_err(bad)?
+                }
+                "sizes" => spec.sizes = Self::parse_sizes(value).map_err(bad)?,
+                "backends" => spec.backends = Self::parse_backends(value).map_err(bad)?,
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|e| bad(Error::Config(format!("bad seed: {e}"))))?
+                }
+                "repetitions" => {
+                    spec.repetitions = value
+                        .parse()
+                        .map_err(|e| bad(Error::Config(format!("bad repetitions: {e}"))))?
+                }
+                "workers" => {
+                    spec.workers = value
+                        .parse()
+                        .map_err(|e| bad(Error::Config(format!("bad workers: {e}"))))?
+                }
+                "jobs" => {
+                    spec.jobs = value
+                        .parse()
+                        .map_err(|e| bad(Error::Config(format!("bad jobs: {e}"))))?
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "line {}: unknown key `{other}`",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject empty axes before expansion.
+    pub fn validate(&self) -> Result<()> {
+        for (name, empty) in [
+            ("dimensions", self.dimensions.is_empty()),
+            ("constructions", self.constructions.is_empty()),
+            ("distributions", self.distributions.is_empty()),
+            ("sizes", self.sizes.is_empty()),
+            ("backends", self.backends.is_empty()),
+        ] {
+            if empty {
+                return Err(Error::Config(format!("sweep spec has no {name}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand into the full grid: the cross product of every axis, in
+    /// deterministic axis order, with duplicate cells (from repeated list
+    /// entries) dropped on first occurrence.
+    pub fn expand(&self) -> Result<Vec<GridCell>> {
+        self.validate()?;
+        let mut seen = HashSet::new();
+        let mut cells = Vec::new();
+        for &dimension in &self.dimensions {
+            for &construction in &self.constructions {
+                for &distribution in &self.distributions {
+                    for &elements in &self.sizes {
+                        for &backend in &self.backends {
+                            let cell = GridCell {
+                                dimension,
+                                construction,
+                                distribution,
+                                elements,
+                                backend,
+                            };
+                            if seen.insert(cell) {
+                                cells.push(cell);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    /// Echo of the spec for the aggregated report.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "backends",
+                Json::arr(self.backends.iter().map(|b| Json::str(b.label()))),
+            ),
+            (
+                "constructions",
+                Json::arr(self.constructions.iter().map(|c| Json::str(c.label()))),
+            ),
+            (
+                "dimensions",
+                Json::arr(self.dimensions.iter().map(|&d| Json::int(d as usize))),
+            ),
+            (
+                "distributions",
+                Json::arr(self.distributions.iter().map(|d| Json::str(d.label()))),
+            ),
+            ("jobs", Json::int(self.jobs)),
+            ("repetitions", Json::int(self.repetitions)),
+            // String, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json numbers.
+            ("seed", Json::str(self.seed.to_string())),
+            ("sizes", Json::arr(self.sizes.iter().map(|&n| Json::int(n)))),
+            ("workers", Json::int(self.workers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepSpec {
+        SweepSpec {
+            dimensions: vec![1, 2],
+            constructions: vec![Construction::FullGroup],
+            distributions: vec![Distribution::Random, Distribution::Sorted],
+            sizes: vec![10_000, 20_000],
+            backends: vec![Backend::Threaded, Backend::DiscreteEvent],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn expansion_is_exhaustive_cross_product() {
+        let cells = tiny().expand().unwrap();
+        assert_eq!(cells.len(), 16); // 2 dims × 1 construction × 2 dists × 2 sizes × 2 backends
+        // Every combination appears exactly once.
+        let set: HashSet<GridCell> = cells.iter().copied().collect();
+        assert_eq!(set.len(), cells.len());
+        for d in [1, 2] {
+            for dist in [Distribution::Random, Distribution::Sorted] {
+                for n in [10_000, 20_000] {
+                    for b in [Backend::Threaded, Backend::DiscreteEvent] {
+                        let cell = GridCell {
+                            dimension: d,
+                            construction: Construction::FullGroup,
+                            distribution: dist,
+                            elements: n,
+                            backend: b,
+                        };
+                        assert!(set.contains(&cell), "{}", cell.label());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_deduplicates_repeated_entries() {
+        let mut spec = tiny();
+        spec.dimensions = vec![1, 2, 1, 2, 1];
+        spec.sizes = vec![10_000, 10_000, 20_000];
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), tiny().expand().unwrap().len());
+    }
+
+    #[test]
+    fn expansion_order_is_deterministic() {
+        let a = tiny().expand().unwrap();
+        let b = tiny().expand().unwrap();
+        assert_eq!(a, b);
+        // Axis order: dimension outermost, backend innermost.
+        assert_eq!(a[0].backend, Backend::Threaded);
+        assert_eq!(a[1].backend, Backend::DiscreteEvent);
+        assert_eq!(a[0].dimension, 1);
+        assert_eq!(a.last().unwrap().dimension, 2);
+    }
+
+    #[test]
+    fn empty_axis_rejected() {
+        let mut spec = tiny();
+        spec.backends.clear();
+        assert!(spec.expand().is_err());
+        assert!(SweepSpec::parse_backends("").is_err());
+    }
+
+    #[test]
+    fn list_parsers_accept_cli_grammar() {
+        assert_eq!(SweepSpec::parse_dimensions("1, 2,4").unwrap(), [1, 2, 4]);
+        assert_eq!(
+            SweepSpec::parse_constructions("full,half").unwrap(),
+            Construction::ALL.to_vec()
+        );
+        let dists = SweepSpec::parse_distributions("random,sorted,reverse").unwrap();
+        assert_eq!(dists[2], Distribution::ReverseSorted);
+        assert_eq!(
+            SweepSpec::parse_backends("threaded,des").unwrap(),
+            Backend::ALL.to_vec()
+        );
+        assert!(SweepSpec::parse_sizes("12x").is_err());
+        assert!(SweepSpec::parse_dimensions("1,x").is_err());
+    }
+
+    #[test]
+    fn spec_file_round_trip() {
+        let dir = std::env::temp_dir().join("ohhc_sweep_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep.conf");
+        std::fs::write(
+            &path,
+            "# the acceptance grid\n\
+             dimensions = 1,2\n\
+             constructions = full\n\
+             distributions = random, reverse\n\
+             sizes = 1048576, 4194304\n\
+             backends = threaded, des\n\
+             seed = 42\n\
+             jobs = 2\n",
+        )
+        .unwrap();
+        let spec = SweepSpec::from_file(&path).unwrap();
+        assert_eq!(spec.dimensions, vec![1, 2]);
+        assert_eq!(spec.constructions, vec![Construction::FullGroup]);
+        assert_eq!(spec.sizes, vec![1_048_576, 4_194_304]);
+        assert_eq!(spec.backends, Backend::ALL.to_vec());
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.jobs, 2);
+        assert_eq!(spec.expand().unwrap().len(), 2 * 2 * 2 * 2);
+
+        std::fs::write(&path, "nope = 1\n").unwrap();
+        assert!(SweepSpec::from_file(&path).is_err());
+    }
+
+    #[test]
+    fn cell_config_inherits_spec_knobs() {
+        let mut spec = tiny();
+        spec.seed = 7;
+        spec.workers = 3;
+        spec.repetitions = 2;
+        let cell = spec.expand().unwrap()[0];
+        let cfg = cell.config(&spec);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.repetitions, 2);
+        assert_eq!(cfg.dimension, cell.dimension);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn spec_json_echo_lists_axes() {
+        let j = tiny().to_json();
+        assert_eq!(j.get("dimensions").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("backends").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("des")
+        );
+    }
+}

@@ -17,6 +17,9 @@ pub enum Construction {
 }
 
 impl Construction {
+    /// Both construction rules, in the paper's presentation order.
+    pub const ALL: [Construction; 2] = [Construction::FullGroup, Construction::HalfGroup];
+
     /// Number of groups for a given per-group processor count.
     pub fn groups(self, procs_per_group: usize) -> usize {
         match self {
@@ -81,7 +84,7 @@ impl Distribution {
         match s {
             "random" => Ok(Distribution::Random),
             "sorted" => Ok(Distribution::Sorted),
-            "reverse_sorted" | "reversed" => Ok(Distribution::ReverseSorted),
+            "reverse_sorted" | "reversed" | "reverse" => Ok(Distribution::ReverseSorted),
             "local" => Ok(Distribution::Local),
             other => Err(Error::Config(format!("unknown distribution `{other}`"))),
         }
@@ -89,7 +92,7 @@ impl Distribution {
 }
 
 /// Which simulation backend executes the parallel algorithm.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// OS threads + channels — the paper's own methodology (§5).
     Threaded,
@@ -98,6 +101,17 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Both backends, threaded (the paper's method) first.
+    pub const ALL: [Backend; 2] = [Backend::Threaded, Backend::DiscreteEvent];
+
+    /// Label used in campaign reports / CSV.
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Threaded => "threaded",
+            Backend::DiscreteEvent => "des",
+        }
+    }
+
     /// Parse from config text.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
@@ -261,49 +275,46 @@ impl ExperimentConfig {
             let bad = |e: String| Error::Config(format!("line {}: {e}", lineno + 1));
             match key {
                 "dimension" => {
-                    cfg.dimension = value.parse().map_err(|e| bad(format!("{e}")))?
+                    cfg.dimension = value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "construction" => {
-                    cfg.construction =
-                        Construction::parse(value).map_err(|e| bad(e.to_string()))?
+                    cfg.construction = Construction::parse(value).map_err(|e| bad(e.to_string()))?
                 }
                 "distribution" => {
-                    cfg.distribution =
-                        Distribution::parse(value).map_err(|e| bad(e.to_string()))?
+                    cfg.distribution = Distribution::parse(value).map_err(|e| bad(e.to_string()))?
                 }
-                "elements" => cfg.elements = value.parse().map_err(|e| bad(format!("{e}")))?,
-                "seed" => cfg.seed = value.parse().map_err(|e| bad(format!("{e}")))?,
+                "elements" => cfg.elements = value.parse().map_err(|e| bad(e.to_string()))?,
+                "seed" => cfg.seed = value.parse().map_err(|e| bad(e.to_string()))?,
                 "backend" => {
                     cfg.backend = Backend::parse(value).map_err(|e| bad(e.to_string()))?
                 }
                 "divide_engine" => {
-                    cfg.divide_engine =
-                        DivideEngine::parse(value).map_err(|e| bad(e.to_string()))?
+                    cfg.divide_engine = DivideEngine::parse(value).map_err(|e| bad(e.to_string()))?
                 }
-                "workers" => cfg.workers = value.parse().map_err(|e| bad(format!("{e}")))?,
+                "workers" => cfg.workers = value.parse().map_err(|e| bad(e.to_string()))?,
                 "artifact_dir" => cfg.artifact_dir = PathBuf::from(value),
                 "repetitions" => {
-                    cfg.repetitions = value.parse().map_err(|e| bad(format!("{e}")))?
+                    cfg.repetitions = value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "electrical_latency_ns" => {
                     cfg.link_model.electrical_latency_ns =
-                        value.parse().map_err(|e| bad(format!("{e}")))?
+                        value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "electrical_bandwidth" => {
                     cfg.link_model.electrical_bandwidth =
-                        value.parse().map_err(|e| bad(format!("{e}")))?
+                        value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "optical_latency_ns" => {
                     cfg.link_model.optical_latency_ns =
-                        value.parse().map_err(|e| bad(format!("{e}")))?
+                        value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "optical_bandwidth" => {
                     cfg.link_model.optical_bandwidth =
-                        value.parse().map_err(|e| bad(format!("{e}")))?
+                        value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 "compute_ns_per_cmp" => {
                     cfg.link_model.compute_ns_per_cmp =
-                        value.parse().map_err(|e| bad(format!("{e}")))?
+                        value.parse().map_err(|e| bad(e.to_string()))?
                 }
                 other => return Err(bad(format!("unknown key `{other}`"))),
             }
@@ -432,7 +443,12 @@ mod tests {
         assert!(Construction::parse("full").is_ok());
         assert!(Construction::parse("xxx").is_err());
         assert!(Distribution::parse("reversed").is_ok());
+        assert_eq!(
+            Distribution::parse("reverse").unwrap(),
+            Distribution::ReverseSorted
+        );
         assert!(Backend::parse("threaded").is_ok());
+        assert_eq!(Backend::parse("des").unwrap().label(), "des");
         assert!(DivideEngine::parse("xla").is_ok());
     }
 }

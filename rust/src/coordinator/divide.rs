@@ -59,7 +59,7 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     if num_buckets == 0 {
         return Err(Error::Config("need at least one bucket".into()));
     }
-    let workers = par::available_workers().min(data.len().div_ceil(CHUNK_MIN)).max(1);
+    let workers = par::available_workers().clamp(1, data.len().div_ceil(CHUNK_MIN).max(1));
 
     // Pass 1: parallel min/max.
     let (lo, hi) = par::par_reduce_indices(

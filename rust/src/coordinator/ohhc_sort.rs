@@ -1,13 +1,14 @@
 //! End-to-end OHHC parallel Quick Sort driver.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{Backend, ExperimentConfig};
 use crate::coordinator::divide::{divide_with_engine, Divided};
 use crate::error::{Error, Result};
 use crate::runtime::ArtifactRegistry;
-use crate::schedule::{gather_plan, NodePlan};
-use crate::sim::engine::DesSimulator;
+use crate::schedule::TopologyBundle;
+use crate::sim::engine::{DesOutcome, DesSimulator};
 use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
 use crate::sort::{is_sorted, quicksort, SortCounters};
 use crate::topology::ohhc::Ohhc;
@@ -47,37 +48,64 @@ pub struct SortReport {
     pub efficiency: f64,
 }
 
-/// Reusable experiment driver: topology + plans built once.
+/// What one backend run contributes to the report.
+struct BackendOutcome {
+    parallel_time: Duration,
+    counters: SortCounters,
+    des: Option<DesOutcome>,
+}
+
+/// Reusable experiment driver over a shared topology bundle.
+///
+/// `new` builds a private bundle (the historical one-shot behaviour);
+/// `with_bundle` injects a shared `Arc<TopologyBundle>` so sweeps reuse
+/// one topology + plan construction across many runs — the contract the
+/// [`crate::campaign`] engine builds on.
 pub struct OhhcSorter {
     cfg: ExperimentConfig,
-    net: Ohhc,
-    plans: Vec<NodePlan>,
+    bundle: Arc<TopologyBundle>,
     registry: Option<ArtifactRegistry>,
 }
 
 impl OhhcSorter {
-    /// Construct for a validated configuration.
+    /// Construct for a validated configuration, building a fresh topology.
     pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let net = Ohhc::new(cfg.dimension, cfg.construction)?;
-        let plans = gather_plan(&net);
+        let bundle = Arc::new(TopologyBundle::build(cfg.dimension, cfg.construction)?);
+        Self::with_bundle(cfg, bundle)
+    }
+
+    /// Construct over a pre-built (typically cached and shared) bundle.
+    pub fn with_bundle(cfg: &ExperimentConfig, bundle: Arc<TopologyBundle>) -> Result<Self> {
+        cfg.validate()?;
+        if bundle.key() != (cfg.dimension, cfg.construction) {
+            return Err(Error::Config(format!(
+                "bundle is for (d={}, {}), config wants (d={}, {})",
+                bundle.net.dimension,
+                bundle.net.construction.label(),
+                cfg.dimension,
+                cfg.construction.label()
+            )));
+        }
         let registry = match cfg.divide_engine {
-            crate::config::DivideEngine::Xla => {
-                Some(ArtifactRegistry::open(&cfg.artifact_dir)?)
-            }
+            crate::config::DivideEngine::Xla => Some(ArtifactRegistry::open(&cfg.artifact_dir)?),
             crate::config::DivideEngine::Native => None,
         };
         Ok(OhhcSorter {
             cfg: cfg.clone(),
-            net,
-            plans,
+            bundle,
             registry,
         })
     }
 
     /// The topology in use.
     pub fn network(&self) -> &Ohhc {
-        &self.net
+        &self.bundle.net
+    }
+
+    /// The bundle this sorter runs on (shareable with further sorters).
+    pub fn bundle(&self) -> &Arc<TopologyBundle> {
+        &self.bundle
     }
 
     /// Run the paper's full experiment cell: sequential baseline plus the
@@ -90,6 +118,7 @@ impl OhhcSorter {
     /// Run on an externally supplied workload.
     pub fn run_on(&self, workload: &Workload) -> Result<SortReport> {
         let data = &workload.data;
+        let net = &self.bundle.net;
 
         // Sequential baseline (paper Fig 6.1).
         let mut seq = data.clone();
@@ -102,35 +131,33 @@ impl OhhcSorter {
         let t0 = Instant::now();
         let divided = divide_with_engine(
             data,
-            self.net.total_processors(),
+            net.total_processors(),
             self.cfg.divide_engine,
             self.registry.as_ref(),
         )?;
         let divide_time = t0.elapsed();
         let imbalance = divided.imbalance();
 
-        let (parallel_time, counters, des) = match self.cfg.backend {
+        let out = match self.cfg.backend {
             Backend::Threaded => self.run_threaded(divided, data.len(), &seq, divide_time)?,
-            Backend::DiscreteEvent => {
-                self.run_des(divided, data.len(), &seq, divide_time)?
-            }
+            Backend::DiscreteEvent => self.run_des(divided, data.len(), &seq, divide_time)?,
         };
 
         let ts = sequential_time.as_secs_f64();
-        let tp = parallel_time.as_secs_f64();
-        let p = self.net.total_processors() as f64;
+        let tp = out.parallel_time.as_secs_f64();
+        let p = net.total_processors() as f64;
         Ok(SortReport {
             elements: data.len(),
-            processors: self.net.total_processors(),
+            processors: net.total_processors(),
             sequential_time,
-            parallel_time,
+            parallel_time: out.parallel_time,
             divide_time,
-            counters,
+            counters: out.counters,
             sequential_counters,
             imbalance,
-            des_completion_ns: des.as_ref().map(|d| d.0),
-            des_steps: des.as_ref().map(|d| d.1.trace.steps()),
-            des_trace: des.map(|d| d.1.trace),
+            des_completion_ns: out.des.as_ref().map(|d| d.completion_ns),
+            des_steps: out.des.as_ref().map(|d| d.trace.steps()),
+            des_trace: out.des.map(|d| d.trace),
             speedup: ts / tp,
             speedup_pct: (ts - tp) / ts * 100.0,
             efficiency: ts / (p * tp),
@@ -143,13 +170,13 @@ impl OhhcSorter {
         total_len: usize,
         expect: &[i32],
         divide_time: Duration,
-    ) -> Result<(Duration, SortCounters, Option<(f64, crate::sim::engine::DesOutcome)>)> {
+    ) -> Result<BackendOutcome> {
         let mode = if self.cfg.workers == 0 {
             ThreadMode::Direct
         } else {
             ThreadMode::Waves
         };
-        let out = ThreadedSimulator::new(&self.net, &self.plans)
+        let out = ThreadedSimulator::new(&self.bundle.net, &self.bundle.plans)
             .with_mode(mode)
             .run(divided.buckets, total_len)?;
         if out.sorted != expect {
@@ -157,7 +184,11 @@ impl OhhcSorter {
                 "parallel output differs from sequential baseline".into(),
             ));
         }
-        Ok((divide_time + out.parallel_time, out.counters, None))
+        Ok(BackendOutcome {
+            parallel_time: divide_time + out.parallel_time,
+            counters: out.counters,
+            des: None,
+        })
     }
 
     fn run_des(
@@ -166,13 +197,12 @@ impl OhhcSorter {
         total_len: usize,
         expect: &[i32],
         divide_time: Duration,
-    ) -> Result<(Duration, SortCounters, Option<(f64, crate::sim::engine::DesOutcome)>)> {
+    ) -> Result<BackendOutcome> {
         // Real local sorts (for counters + verified output) feed exact
         // work into the DES clock.
         let sizes = divided.sizes();
         let mut counters_vec = Vec::with_capacity(sizes.len());
         let mut subarrays = Vec::with_capacity(sizes.len());
-        let t0 = Instant::now();
         let mut counters = SortCounters::default();
         for (i, mut b) in divided.buckets.into_iter().enumerate() {
             let c = quicksort(&mut b);
@@ -180,7 +210,6 @@ impl OhhcSorter {
             counters += c;
             subarrays.push((i, b));
         }
-        let _host_sort = t0.elapsed();
 
         let mut out = Vec::with_capacity(total_len);
         for (_, b) in &subarrays {
@@ -192,21 +221,21 @@ impl OhhcSorter {
             ));
         }
 
-        let des = DesSimulator::new(&self.net, &self.plans, self.cfg.link_model)
+        let des = DesSimulator::new(&self.bundle.net, &self.bundle.plans, self.cfg.link_model)
             .run(&sizes, Some(&counters_vec))?;
         let virtual_time = Duration::from_nanos(des.completion_ns as u64);
-        Ok((
-            divide_time + virtual_time,
+        Ok(BackendOutcome {
+            parallel_time: divide_time + virtual_time,
             counters,
-            Some((des.completion_ns, des)),
-        ))
+            des: Some(des),
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Construction, Distribution, DivideEngine};
+    use crate::config::{Construction, Distribution};
 
     fn cfg(d: u32, c: Construction, backend: Backend) -> ExperimentConfig {
         ExperimentConfig {
@@ -266,10 +295,44 @@ mod tests {
     }
 
     #[test]
+    fn shared_bundle_runs_many_sorters() {
+        let base = cfg(1, Construction::FullGroup, Backend::Threaded);
+        let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+        for dist in [Distribution::Sorted, Distribution::Local] {
+            let mut c = base.clone();
+            c.distribution = dist;
+            c.workers = 4;
+            let r = OhhcSorter::with_bundle(&c, bundle.clone()).unwrap().run().unwrap();
+            assert_eq!(r.processors, 36, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn mismatched_bundle_rejected() {
+        let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap();
+        let c = cfg(2, Construction::FullGroup, Backend::Threaded);
+        assert!(OhhcSorter::with_bundle(&c, Arc::new(bundle)).is_err());
+    }
+}
+
+// Needs `make artifacts` and the real PJRT runtime.
+#[cfg(all(test, feature = "xla"))]
+mod xla_tests {
+    use super::*;
+    use crate::config::{Construction, Distribution, DivideEngine};
+
+    #[test]
     fn xla_divide_engine_end_to_end() {
-        let mut c = cfg(1, Construction::FullGroup, Backend::Threaded);
-        c.divide_engine = DivideEngine::Xla;
-        c.workers = 4;
+        let c = ExperimentConfig {
+            dimension: 1,
+            construction: Construction::FullGroup,
+            distribution: Distribution::Random,
+            elements: 40_000,
+            backend: Backend::Threaded,
+            divide_engine: DivideEngine::Xla,
+            workers: 4,
+            ..Default::default()
+        };
         let report = OhhcSorter::new(&c).unwrap().run().unwrap();
         assert_eq!(report.processors, 36);
     }

@@ -1,40 +1,96 @@
 //! Crate-wide error type.
+//!
+//! `Display`/`Error` are implemented by hand (no `thiserror`) so the
+//! default build stays dependency-free and works fully offline.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the OHHC sort library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid experiment / topology configuration.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// An AOT artifact is missing or its signature does not match.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Failure inside the XLA/PJRT runtime.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// A simulated processor panicked or a channel closed unexpectedly.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Payload conservation / sortedness invariant violated.
-    #[error("invariant violated: {0}")]
     Invariant(String),
 
     /// I/O error (config files, CSV output, artifacts).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+            // Transparent, as thiserror's #[error(transparent)] renders it.
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::xla::Error> for Error {
+    fn from(e: crate::xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(
+            Error::Config("bad".into()).to_string(),
+            "invalid configuration: bad"
+        );
+        assert_eq!(Error::Artifact("x".into()).to_string(), "artifact error: x");
+        assert_eq!(Error::Sim("y".into()).to_string(), "simulation error: y");
+        assert_eq!(
+            Error::Invariant("z".into()).to_string(),
+            "invariant violated: z"
+        );
+    }
+
+    #[test]
+    fn io_errors_are_transparent_with_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let text = io.to_string();
+        let e = Error::from(io);
+        assert_eq!(e.to_string(), text);
+        assert!(e.source().is_some());
+        assert!(Error::Config("c".into()).source().is_none());
+    }
+}

@@ -74,13 +74,7 @@ impl FigureHarness {
     }
 
     /// Run (or fetch) one sweep cell.
-    fn cell(
-        &mut self,
-        d: u32,
-        c: Construction,
-        dist: Distribution,
-        n: usize,
-    ) -> Result<Cell> {
+    fn cell(&mut self, d: u32, c: Construction, dist: Distribution, n: usize) -> Result<Cell> {
         let key = (d, c, dist, n);
         if let Some(cell) = self.cache.get(&key) {
             return Ok(cell.clone());
@@ -142,23 +136,51 @@ impl FigureHarness {
                 Construction::HalfGroup,
                 Distribution::ReverseSorted,
             ),
-            "fig_6_11" => self.speedup_fig("fig_6_11", Construction::HalfGroup, Distribution::Local),
-            "fig_6_12" => self.efficiency_fig("fig_6_12", Construction::FullGroup, Distribution::Random),
-            "fig_6_13" => self.efficiency_fig("fig_6_13", Construction::FullGroup, Distribution::Sorted),
+            "fig_6_11" => self.speedup_fig(
+                "fig_6_11",
+                Construction::HalfGroup,
+                Distribution::Local,
+            ),
+            "fig_6_12" => self.efficiency_fig(
+                "fig_6_12",
+                Construction::FullGroup,
+                Distribution::Random,
+            ),
+            "fig_6_13" => self.efficiency_fig(
+                "fig_6_13",
+                Construction::FullGroup,
+                Distribution::Sorted,
+            ),
             "fig_6_14" => self.efficiency_fig(
                 "fig_6_14",
                 Construction::FullGroup,
                 Distribution::ReverseSorted,
             ),
-            "fig_6_15" => self.efficiency_fig("fig_6_15", Construction::FullGroup, Distribution::Local),
-            "fig_6_16" => self.efficiency_fig("fig_6_16", Construction::HalfGroup, Distribution::Random),
-            "fig_6_17" => self.efficiency_fig("fig_6_17", Construction::HalfGroup, Distribution::Sorted),
+            "fig_6_15" => self.efficiency_fig(
+                "fig_6_15",
+                Construction::FullGroup,
+                Distribution::Local,
+            ),
+            "fig_6_16" => self.efficiency_fig(
+                "fig_6_16",
+                Construction::HalfGroup,
+                Distribution::Random,
+            ),
+            "fig_6_17" => self.efficiency_fig(
+                "fig_6_17",
+                Construction::HalfGroup,
+                Distribution::Sorted,
+            ),
             "fig_6_18" => self.efficiency_fig(
                 "fig_6_18",
                 Construction::HalfGroup,
                 Distribution::ReverseSorted,
             ),
-            "fig_6_19" => self.efficiency_fig("fig_6_19", Construction::HalfGroup, Distribution::Local),
+            "fig_6_19" => self.efficiency_fig(
+                "fig_6_19",
+                Construction::HalfGroup,
+                Distribution::Local,
+            ),
             "fig_6_20" => self.counter_fig("fig_6_20", Distribution::Random),
             "fig_6_21" => self.counter_fig("fig_6_21", Distribution::Sorted),
             "fig_6_22" => self.fig_6_22(),
@@ -189,10 +211,22 @@ impl FigureHarness {
             x_label: "dimension".into(),
             y_label: "count".into(),
             series: vec![
-                Series { label: "groups(G=P)".into(), points: g_full },
-                Series { label: "procs(G=P)".into(), points: p_full },
-                Series { label: "groups(G=P/2)".into(), points: g_half },
-                Series { label: "procs(G=P/2)".into(), points: p_half },
+                Series {
+                    label: "groups(G=P)".into(),
+                    points: g_full,
+                },
+                Series {
+                    label: "procs(G=P)".into(),
+                    points: p_full,
+                },
+                Series {
+                    label: "groups(G=P/2)".into(),
+                    points: g_half,
+                },
+                Series {
+                    label: "procs(G=P/2)".into(),
+                    points: p_half,
+                },
             ],
         })
     }
@@ -216,10 +250,22 @@ impl FigureHarness {
             x_label: "dimension".into(),
             y_label: "steps".into(),
             series: vec![
-                Series { label: "paper(12Gd-2)".into(), points: paper },
-                Series { label: "exact(2(GP-1))".into(), points: exact },
-                Series { label: "DES-measured".into(), points: measured },
-                Series { label: "DES-optical".into(), points: optical },
+                Series {
+                    label: "paper(12Gd-2)".into(),
+                    points: paper,
+                },
+                Series {
+                    label: "exact(2(GP-1))".into(),
+                    points: exact,
+                },
+                Series {
+                    label: "DES-measured".into(),
+                    points: measured,
+                },
+                Series {
+                    label: "DES-optical".into(),
+                    points: optical,
+                },
             ],
         })
     }
@@ -237,7 +283,10 @@ impl FigureHarness {
                 let cell = self.cell(1, Construction::FullGroup, dist, n)?;
                 pts.push((Self::mb_labels()[i], cell.seq_secs));
             }
-            series.push(Series { label: dist.label().into(), points: pts });
+            series.push(Series {
+                label: dist.label().into(),
+                points: pts,
+            });
         }
         Ok(Figure {
             id: "fig_6_1".into(),
@@ -257,7 +306,10 @@ impl FigureHarness {
                 let cell = self.cell(d, Construction::FullGroup, Distribution::Random, n)?;
                 pts.push((Self::mb_labels()[i], cell.par_secs));
             }
-            series.push(Series { label: format!("d={d}"), points: pts });
+            series.push(Series {
+                label: format!("d={d}"),
+                points: pts,
+            });
         }
         Ok(Figure {
             id: "fig_6_2".into(),
@@ -277,7 +329,10 @@ impl FigureHarness {
                 let cell = self.cell(4, Construction::FullGroup, dist, n)?;
                 pts.push((Self::mb_labels()[i], cell.par_secs));
             }
-            series.push(Series { label: dist.label().into(), points: pts });
+            series.push(Series {
+                label: dist.label().into(),
+                points: pts,
+            });
         }
         Ok(Figure {
             id: "fig_6_3".into(),
@@ -290,12 +345,7 @@ impl FigureHarness {
 
     // ---- Speedup / efficiency families -----------------------------------
 
-    fn speedup_fig(
-        &mut self,
-        id: &str,
-        c: Construction,
-        dist: Distribution,
-    ) -> Result<Figure> {
+    fn speedup_fig(&mut self, id: &str, c: Construction, dist: Distribution) -> Result<Figure> {
         let sizes = self.sizes();
         let mut series = Vec::new();
         for d in DIMS {
@@ -305,7 +355,10 @@ impl FigureHarness {
                 let pct = (cell.seq_secs - cell.par_secs) / cell.seq_secs * 100.0;
                 pts.push((Self::mb_labels()[i], pct));
             }
-            series.push(Series { label: format!("d={d}"), points: pts });
+            series.push(Series {
+                label: format!("d={d}"),
+                points: pts,
+            });
         }
         Ok(Figure {
             id: id.into(),
@@ -320,12 +373,7 @@ impl FigureHarness {
         })
     }
 
-    fn efficiency_fig(
-        &mut self,
-        id: &str,
-        c: Construction,
-        dist: Distribution,
-    ) -> Result<Figure> {
+    fn efficiency_fig(&mut self, id: &str, c: Construction, dist: Distribution) -> Result<Figure> {
         let sizes = self.sizes();
         let mut series = Vec::new();
         for d in DIMS {
@@ -335,7 +383,10 @@ impl FigureHarness {
                 let e = cell.seq_secs / (cell.processors as f64 * cell.par_secs) * 100.0;
                 pts.push((Self::mb_labels()[i], e));
             }
-            series.push(Series { label: format!("d={d}"), points: pts });
+            series.push(Series {
+                label: format!("d={d}"),
+                points: pts,
+            });
         }
         Ok(Figure {
             id: id.into(),
@@ -383,9 +434,18 @@ impl FigureHarness {
             x_label: "dimension".into(),
             y_label: "count".into(),
             series: vec![
-                Series { label: "recursion_calls".into(), points: rec },
-                Series { label: "iterations".into(), points: iters },
-                Series { label: "swaps".into(), points: swaps },
+                Series {
+                    label: "recursion_calls".into(),
+                    points: rec,
+                },
+                Series {
+                    label: "iterations".into(),
+                    points: iters,
+                },
+                Series {
+                    label: "swaps".into(),
+                    points: swaps,
+                },
             ],
         })
     }
@@ -406,8 +466,14 @@ impl FigureHarness {
             x_label: "dimension".into(),
             y_label: "swaps".into(),
             series: vec![
-                Series { label: "sorted".into(), points: srt },
-                Series { label: "random".into(), points: rnd },
+                Series {
+                    label: "sorted".into(),
+                    points: srt,
+                },
+                Series {
+                    label: "random".into(),
+                    points: rnd,
+                },
             ],
         })
     }
@@ -424,7 +490,10 @@ impl FigureHarness {
             title: "Comparison steps vs dimension (sorted input)".into(),
             x_label: "dimension".into(),
             y_label: "comparisons".into(),
-            series: vec![Series { label: "comparisons".into(), points: pts }],
+            series: vec![Series {
+                label: "comparisons".into(),
+                points: pts,
+            }],
         })
     }
 
@@ -440,7 +509,10 @@ impl FigureHarness {
             title: "Swaps vs dimension (sorted input)".into(),
             x_label: "dimension".into(),
             y_label: "swaps".into(),
-            series: vec![Series { label: "swaps".into(), points: pts }],
+            series: vec![Series {
+                label: "swaps".into(),
+                points: pts,
+            }],
         })
     }
 }

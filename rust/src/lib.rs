@@ -8,8 +8,10 @@
 //!   optoelectronic network simulator, a paper-faithful multithreaded
 //!   simulation backend, the instrumented sequential Quick Sort, the
 //!   scatter / local-sort / three-phase-gather coordinator, workload
-//!   generators, metrics, the analytical model (Theorems 1–6) and the
-//!   figure-regeneration harness.
+//!   generators, metrics, the analytical model (Theorems 1–6), the
+//!   figure-regeneration harness, and the [`campaign`] engine that runs
+//!   the paper's whole §6 experiment grid concurrently with shared
+//!   topology/plan caches.
 //! * **Layer 2 (python/compile/model.py)** — the array-division compute
 //!   graph (min/max → SubDivider → bucket-id + histogram) and a bitonic
 //!   block sorter, written in JAX.
@@ -18,7 +20,8 @@
 //!   network, lowered with `interpret=True`.
 //!
 //! Python runs only at `make artifacts`; [`runtime`] loads the AOT HLO via
-//! PJRT so the request path is pure rust.
+//! PJRT so the request path is pure rust (behind the `xla` feature — the
+//! default build uses the offline stub in [`xla`]).
 //!
 //! ## Quick start
 //!
@@ -36,9 +39,22 @@
 //! let report = OhhcSorter::new(&cfg).unwrap().run().unwrap();
 //! println!("sorted {} keys in {:?}", report.elements, report.parallel_time);
 //! ```
+//!
+//! ## Campaign runs
+//!
+//! ```no_run
+//! use ohhc_qsort::campaign::{Campaign, SweepSpec};
+//!
+//! let mut spec = SweepSpec::default();
+//! spec.dimensions = vec![1, 2];
+//! spec.sizes = vec![1 << 20];
+//! let report = Campaign::new(spec).run().unwrap();
+//! println!("{}", report.to_json().dump());
+//! ```
 
 pub mod analysis;
 pub mod baselines;
+pub mod campaign;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
@@ -52,5 +68,54 @@ pub mod sort;
 pub mod topology;
 pub mod util;
 pub mod workload;
+pub mod xla;
 
 pub use error::{Error, Result};
+
+/// Boxed-error result for binaries and examples — the crate's `anyhow`
+/// substitute (the default build is dependency-free).
+pub type CliResult<T = ()> = std::result::Result<T, Box<dyn std::error::Error + Send + Sync>>;
+
+/// Return early from a [`CliResult`] function with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(::std::convert::From::from(format!($($arg)*)))
+    };
+}
+
+/// Bail with a formatted error unless `cond` holds ([`CliResult`] contexts).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs(flag: bool) -> CliResult<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn cli_macros_format_and_propagate() {
+        assert_eq!(needs(true).unwrap(), 7);
+        let err = needs(false).unwrap_err();
+        assert_eq!(err.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn cli_result_accepts_crate_errors() {
+        fn run() -> CliResult {
+            Err(Error::Config("boom".into()))?;
+            Ok(())
+        }
+        assert!(run().unwrap_err().to_string().contains("boom"));
+    }
+}

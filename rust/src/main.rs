@@ -4,6 +4,9 @@
 //!
 //! * `run`      — one experiment cell (dimension × construction ×
 //!   distribution × size), printed as a full report.
+//! * `campaign` — the paper's §6 experiment grid in one invocation:
+//!   declarative sweep, concurrent jobs, cached topologies, one
+//!   aggregated JSON/CSV report.
 //! * `figures`  — regenerate paper tables/figures into CSV + stdout.
 //! * `sweep`    — the paper's full 216-run sweep, CSV per cell.
 //! * `topo`     — topology properties (OHHC and baselines).
@@ -16,14 +19,16 @@
 use std::path::PathBuf;
 
 use ohhc_qsort::analysis::validate;
-use ohhc_qsort::config::{
-    Backend, Construction, Distribution, DivideEngine, ExperimentConfig,
-};
+use ohhc_qsort::bail;
+use ohhc_qsort::campaign::{Campaign, SweepSpec};
+use ohhc_qsort::config::{Backend, Construction, Distribution, DivideEngine, ExperimentConfig};
 use ohhc_qsort::coordinator::OhhcSorter;
-use ohhc_qsort::figures::{FigureHarness, ALL_IDS};
+use ohhc_qsort::ensure;
+use ohhc_qsort::figures::{ALL_IDS, FigureHarness};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::topology::{hhc, hypercube, mesh, ring, NetworkProperties, Ohhc};
 use ohhc_qsort::util::par;
+use ohhc_qsort::CliResult;
 
 const USAGE: &str = "\
 ohhc-qsort — parallel Quick Sort on the OTIS Hyper Hexa-Cell network
@@ -42,6 +47,21 @@ COMMANDS
              --workers N          0 = one OS thread per processor (default)
              --config FILE        load a key=value experiment file
              --trace-out FILE     dump the DES comm trace as JSON (des only)
+  campaign   run the paper's §6 grid as one concurrent campaign
+             --dims LIST          dimensions (default 1,2,3,4)
+             --constructions LIST full,half (default both)
+             --dists LIST         random,sorted,reverse,local (default all)
+             --sizes LIST         key counts (default paper sizes × --scale)
+             --scale F            scale for the default sizes (default 0.1)
+             --backends LIST      threaded,des (default threaded)
+             --workers N          per-run workers; 0 = direct (default pool)
+             --jobs N             concurrent cells (default 1)
+             --reps N             timing repetitions per cell (default 1)
+             --seed N             workload seed
+             --spec FILE          key=value sweep spec (axis flags override it)
+             --out FILE           aggregated JSON (default results/campaign.json)
+             --csv FILE           also write a per-cell CSV table
+             --quiet              no per-cell progress lines
   figures    regenerate paper tables/figures
              --out DIR            CSV output directory (default results)
              --only ID[,ID...]    subset (default: all 26 ids)
@@ -76,10 +96,10 @@ impl Args {
     }
 
     /// Consume `--name value`; error if the flag appears without a value.
-    fn opt(&mut self, name: &str) -> anyhow::Result<Option<String>> {
+    fn opt(&mut self, name: &str) -> CliResult<Option<String>> {
         if let Some(i) = self.args.iter().position(|a| a == name) {
             if i + 1 >= self.args.len() {
-                anyhow::bail!("{name} requires a value");
+                bail!("{name} requires a value");
             }
             let v = self.args.remove(i + 1);
             self.args.remove(i);
@@ -100,29 +120,27 @@ impl Args {
     }
 
     /// Parse a typed option with a default.
-    fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> anyhow::Result<T>
+    fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> CliResult<T>
     where
         T::Err: std::fmt::Display,
     {
         match self.opt(name)? {
-            Some(v) => v
-                .parse::<T>()
-                .map_err(|e| anyhow::anyhow!("bad value for {name}: {e}")),
+            Some(v) => v.parse::<T>().map_err(|e| format!("bad value for {name}: {e}").into()),
             None => Ok(default),
         }
     }
 
     /// Everything consumed?
-    fn finish(self) -> anyhow::Result<()> {
+    fn finish(self) -> CliResult {
         if self.args.is_empty() {
             Ok(())
         } else {
-            anyhow::bail!("unrecognized arguments: {:?}", self.args)
+            bail!("unrecognized arguments: {:?}", self.args)
         }
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         print!("{USAGE}");
@@ -132,6 +150,7 @@ fn main() -> anyhow::Result<()> {
     let mut args = Args::new(argv);
     match cmd.as_str() {
         "run" => cmd_run(&mut args)?,
+        "campaign" => cmd_campaign(&mut args)?,
         "figures" => cmd_figures(&mut args)?,
         "baselines" => cmd_baselines(&mut args)?,
         "sweep" => cmd_sweep(&mut args)?,
@@ -142,12 +161,12 @@ fn main() -> anyhow::Result<()> {
             print!("{USAGE}");
             return Ok(());
         }
-        other => anyhow::bail!("unknown command `{other}` (try `help`)"),
+        other => bail!("unknown command `{other}` (try `help`)"),
     }
     args.finish()
 }
 
-fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
+fn cmd_run(args: &mut Args) -> CliResult {
     let trace_out = args.opt("--trace-out")?;
     let cfg = if let Some(path) = args.opt("--config")? {
         ExperimentConfig::from_file(&PathBuf::from(path))?
@@ -155,13 +174,15 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         ExperimentConfig {
             dimension: args.parse_or("--dimension", 1u32)?,
             construction: Construction::parse(
-                &args.opt("--construction")?.unwrap_or("full".into()),
+                &args.opt("--construction")?.unwrap_or_else(|| "full".into()),
             )?,
             distribution: Distribution::parse(
-                &args.opt("--distribution")?.unwrap_or("random".into()),
+                &args.opt("--distribution")?.unwrap_or_else(|| "random".into()),
             )?,
             elements: args.parse_or("--elements", 1usize << 20)?,
-            backend: Backend::parse(&args.opt("--backend")?.unwrap_or("threaded".into()))?,
+            backend: Backend::parse(
+                &args.opt("--backend")?.unwrap_or_else(|| "threaded".into()),
+            )?,
             divide_engine: if args.flag("--xla-divide") {
                 DivideEngine::Xla
             } else {
@@ -208,13 +229,91 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
                 std::fs::write(&path, trace.to_json().dump())?;
                 println!("DES trace           → {path}");
             }
-            None => anyhow::bail!("--trace-out requires --backend des"),
+            None => bail!("--trace-out requires --backend des"),
         }
     }
     Ok(())
 }
 
-fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
+fn cmd_campaign(args: &mut Args) -> CliResult {
+    let out = PathBuf::from(args.opt("--out")?.unwrap_or_else(|| "results/campaign.json".into()));
+    let csv = args.opt("--csv")?;
+    let quiet = args.flag("--quiet");
+
+    let mut spec = if let Some(path) = args.opt("--spec")? {
+        // A spec file carries its own sizes; --scale would be silently
+        // ignored here, so leave it unconsumed for finish() to reject.
+        SweepSpec::from_file(&PathBuf::from(path))?
+    } else {
+        let scale: f64 = args.parse_or("--scale", 0.1)?;
+        SweepSpec {
+            sizes: ExperimentConfig::paper_sizes(scale),
+            ..Default::default()
+        }
+    };
+    if let Some(v) = args.opt("--dims")? {
+        spec.dimensions = SweepSpec::parse_dimensions(&v)?;
+    }
+    if let Some(v) = args.opt("--constructions")? {
+        spec.constructions = SweepSpec::parse_constructions(&v)?;
+    }
+    if let Some(v) = args.opt("--dists")? {
+        spec.distributions = SweepSpec::parse_distributions(&v)?;
+    }
+    if let Some(v) = args.opt("--sizes")? {
+        spec.sizes = SweepSpec::parse_sizes(&v)?;
+    }
+    if let Some(v) = args.opt("--backends")? {
+        spec.backends = SweepSpec::parse_backends(&v)?;
+    }
+    spec.workers = args.parse_or("--workers", spec.workers)?;
+    spec.jobs = args.parse_or("--jobs", spec.jobs)?;
+    spec.repetitions = args.parse_or("--reps", spec.repetitions)?;
+    spec.seed = args.parse_or("--seed", spec.seed)?;
+
+    let planned = spec.expand()?.len();
+    eprintln!(
+        "campaign: {planned} cells ({} dims × {} constructions × {} dists × {} sizes × {} \
+         backends, deduplicated), {} job(s)",
+        spec.dimensions.len(),
+        spec.constructions.len(),
+        spec.distributions.len(),
+        spec.sizes.len(),
+        spec.backends.len(),
+        spec.jobs.max(1)
+    );
+
+    let campaign = Campaign::new(spec);
+    let report = campaign.run_with(|cell| {
+        if !quiet {
+            eprintln!(
+                "  [{}] {} speedup {:.3}x eff {:.4}",
+                cell.status.label(),
+                cell.key(),
+                cell.speedup,
+                cell.efficiency
+            );
+        }
+    })?;
+
+    print!("{}", report.summary_text());
+    let json_path = report.write_json(&out)?;
+    println!("aggregated JSON     → {}", json_path.display());
+    if let Some(csv) = csv {
+        let csv_path = report.write_csv(&PathBuf::from(csv))?;
+        println!("per-cell CSV        → {}", csv_path.display());
+    }
+    ensure!(
+        report.failed() == 0,
+        "{} of {} cells failed (see {})",
+        report.failed(),
+        report.cells.len(),
+        json_path.display()
+    );
+    Ok(())
+}
+
+fn cmd_baselines(args: &mut Args) -> CliResult {
     use ohhc_qsort::baselines::{hypercube_bitonic_sort, psrs_sort, shared_fork_sort};
     use ohhc_qsort::coordinator::divide_native;
     use ohhc_qsort::sort::quicksort;
@@ -271,7 +370,7 @@ fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
 
     let t0 = Instant::now();
     let psrs = psrs_sort(&data, p);
-    anyhow::ensure!(psrs.sorted == seq, "psrs mismatch");
+    ensure!(psrs.sorted == seq, "psrs mismatch");
     println!(
         "{:<34} {:>12.3?}  imbalance {:.2}",
         "PSRS (sample splitters)",
@@ -281,7 +380,7 @@ fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
 
     let t0 = Instant::now();
     let bit = hypercube_bitonic_sort(&data, 7); // 128 processors
-    anyhow::ensure!(bit.sorted == seq, "bitonic mismatch");
+    ensure!(bit.sorted == seq, "bitonic mismatch");
     println!(
         "{:<34} {:>12.3?}  {} link traversals / {} stages",
         "hypercube bitonic (128 procs)",
@@ -293,7 +392,7 @@ fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
     let mut forked = data.clone();
     let t0 = Instant::now();
     shared_fork_sort(&mut forked, 3);
-    anyhow::ensure!(forked == seq, "fork/join mismatch");
+    ensure!(forked == seq, "fork/join mismatch");
     println!(
         "{:<34} {:>12.3?}",
         "fork/join quicksort (depth 3)",
@@ -314,8 +413,8 @@ fn cmd_baselines(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_figures(args: &mut Args) -> anyhow::Result<()> {
-    let out = PathBuf::from(args.opt("--out")?.unwrap_or("results".into()));
+fn cmd_figures(args: &mut Args) -> CliResult {
+    let out = PathBuf::from(args.opt("--out")?.unwrap_or_else(|| "results".into()));
     let only = args.opt("--only")?;
     let scale: f64 = args.parse_or("--scale", 0.1)?;
     let repetitions: usize = args.parse_or("--repetitions", 1)?;
@@ -343,9 +442,9 @@ fn cmd_figures(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
+fn cmd_sweep(args: &mut Args) -> CliResult {
     use std::io::Write;
-    let out = PathBuf::from(args.opt("--out")?.unwrap_or("results/sweep.csv".into()));
+    let out = PathBuf::from(args.opt("--out")?.unwrap_or_else(|| "results/sweep.csv".into()));
     let scale: f64 = args.parse_or("--scale", 0.1)?;
     let max_dimension: u32 = args.parse_or("--max-dimension", 4)?;
 
@@ -401,7 +500,7 @@ fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_topo(args: &mut Args) -> anyhow::Result<()> {
+fn cmd_topo(args: &mut Args) -> CliResult {
     let dimension: u32 = args.parse_or("--dimension", 1)?;
     let baselines = args.flag("--baselines");
     for c in [Construction::FullGroup, Construction::HalfGroup] {
@@ -434,7 +533,7 @@ fn cmd_topo(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_validate() -> anyhow::Result<()> {
+fn cmd_validate() -> CliResult {
     println!("Theorem 3 (communication steps) — DES vs closed forms:");
     println!(
         "{:>3} {:>8} {:>14} {:>14} {:>12} {:>12}",
@@ -457,8 +556,8 @@ fn cmd_validate() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &mut Args) -> anyhow::Result<()> {
-    let dir = PathBuf::from(args.opt("--dir")?.unwrap_or("artifacts".into()));
+fn cmd_artifacts(args: &mut Args) -> CliResult {
+    let dir = PathBuf::from(args.opt("--dir")?.unwrap_or_else(|| "artifacts".into()));
     let reg = ArtifactRegistry::open(&dir)?;
     println!(
         "platform: {} ({} devices), chunk={}",

@@ -27,6 +27,21 @@ pub fn efficiency(ts_secs: f64, tp_secs: f64, processors: usize) -> f64 {
     ts_secs / (processors as f64 * tp_secs)
 }
 
+/// Write a CSV file: one header line plus pre-formatted rows.  Shared by
+/// the campaign reports and any future tabular emitters; parent
+/// directories are created as needed.
+pub fn write_csv_rows(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
 /// A labeled data series destined for one figure.
 #[derive(Debug, Clone)]
 pub struct Series {
@@ -127,6 +142,14 @@ mod tests {
         // Slower parallel run → negative percentage, as in the paper's
         // low-dimension cells.
         assert!(speedup_pct(10.0, 12.0) < 0.0);
+    }
+
+    #[test]
+    fn csv_rows_helper_writes_header_and_rows() {
+        let path = std::env::temp_dir().join("ohhc_csv_rows").join("t.csv");
+        write_csv_rows(&path, "a,b", &["1,2".to_string(), "3,4".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
     }
 
     #[test]

@@ -1,0 +1,56 @@
+//! A topology plus its gather plans, bundled for reuse.
+//!
+//! Building an [`Ohhc`] and computing every processor's [`NodePlan`] is
+//! pure function of `(dimension, construction)` — yet the pre-campaign
+//! coordinator rebuilt both on every `OhhcSorter::new`.  The bundle makes
+//! that construction explicit and shareable: sorters borrow an
+//! `Arc<TopologyBundle>`, so a sweep touching the same topology hundreds
+//! of times builds it exactly once (see [`crate::campaign::PlanCache`]).
+
+use crate::config::Construction;
+use crate::error::Result;
+use crate::schedule::{gather_plan, NodePlan};
+use crate::topology::ohhc::Ohhc;
+
+/// An OHHC topology and the static gather plans derived from it.
+#[derive(Debug, Clone)]
+pub struct TopologyBundle {
+    /// The network.
+    pub net: Ohhc,
+    /// Per-processor gather plans, indexed by flat node id.
+    pub plans: Vec<NodePlan>,
+}
+
+impl TopologyBundle {
+    /// Build the topology and its plans for one `(dimension, construction)`.
+    pub fn build(dimension: u32, construction: Construction) -> Result<Self> {
+        let net = Ohhc::new(dimension, construction)?;
+        let plans = gather_plan(&net);
+        Ok(TopologyBundle { net, plans })
+    }
+
+    /// Cache key this bundle was built for.
+    pub fn key(&self) -> (u32, Construction) {
+        (self.net.dimension, self.net.construction)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_matches_direct_construction() {
+        let bundle = TopologyBundle::build(2, Construction::HalfGroup).unwrap();
+        let net = Ohhc::new(2, Construction::HalfGroup).unwrap();
+        assert_eq!(bundle.net.total_processors(), net.total_processors());
+        assert_eq!(bundle.plans, gather_plan(&net));
+        assert_eq!(bundle.key(), (2, Construction::HalfGroup));
+    }
+
+    #[test]
+    fn bundle_rejects_bad_dimension() {
+        assert!(TopologyBundle::build(0, Construction::FullGroup).is_err());
+        assert!(TopologyBundle::build(9, Construction::FullGroup).is_err());
+    }
+}

@@ -15,8 +15,10 @@
 //! barrier exists between them: the cumulative wait counts alone enforce
 //! the ordering, exactly as in the paper.
 
+mod bundle;
 mod plan;
 
+pub use bundle::TopologyBundle;
 pub use plan::{gather_plan, gather_subtree, scatter_order, GatherAction, NodePlan, Phase};
 
 #[cfg(test)]

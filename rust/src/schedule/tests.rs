@@ -179,10 +179,7 @@ fn conservation_both_constructions() {
             let master = &plans[0];
             assert_eq!(master.last().wait_for, total, "d={d} {c:?}");
             assert_eq!(master.last().send_to, None);
-            let senders = plans
-                .iter()
-                .filter(|p| p.last().send_to.is_some())
-                .count();
+            let senders = plans.iter().filter(|p| p.last().send_to.is_some()).count();
             assert_eq!(senders, total - 1, "d={d} {c:?}");
         }
     }
@@ -201,10 +198,7 @@ fn forwarding_tree_is_acyclic_and_rooted_at_master() {
                 while let Some(parent) = parents[cur] {
                     cur = n.id(parent);
                     hops += 1;
-                    assert!(
-                        hops <= n.total_processors(),
-                        "cycle at {id} (d={d} {c:?})"
-                    );
+                    assert!(hops <= n.total_processors(), "cycle at {id} (d={d} {c:?})");
                 }
                 assert_eq!(cur, 0, "node {id} does not drain to the master");
             }
@@ -259,10 +253,7 @@ fn gather_subtrees_partition_the_machine() {
     let n = net(2, Construction::HalfGroup);
     let plans = gather_plan(&n);
     // The master's subtree is everything.
-    assert_eq!(
-        gather_subtree(&n, &plans, 0).len(),
-        n.total_processors()
-    );
+    assert_eq!(gather_subtree(&n, &plans, 0).len(), n.total_processors());
     // A worker-group head's subtree is its whole group.
     let head = n.id(Addr {
         group: 1,

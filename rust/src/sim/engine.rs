@@ -24,8 +24,8 @@
 use crate::config::LinkModel;
 use crate::error::{Error, Result};
 use crate::schedule::NodePlan;
-use crate::sim::threaded::gather_wave_order;
 use crate::sim::event::{ns_to_ticks, ticks_to_ns, EventQueue, Time};
+use crate::sim::threaded::gather_wave_order;
 use crate::sim::trace::{CommTrace, MsgRecord};
 use crate::sort::SortCounters;
 use crate::topology::graph::LinkKind;
@@ -166,8 +166,7 @@ impl<'a> DesSimulator<'a> {
             .collect();
         // O(n) subtree payload sizes: walk the gather tree leaves-first
         // (children precede parents in wave order) accumulating bytes.
-        let mut subtree_bytes: Vec<u64> =
-            bucket_sizes.iter().map(|&s| s as u64 * 4).collect();
+        let mut subtree_bytes: Vec<u64> = bucket_sizes.iter().map(|&s| s as u64 * 4).collect();
         let mut subtree_children: Vec<Vec<usize>> = vec![Vec::new(); n];
         for id in 0..n {
             if let Some(par) = parents[id] {
@@ -248,8 +247,7 @@ impl<'a> DesSimulator<'a> {
                     debug_assert_eq!(state[node], NodeState::AwaitingPayload);
                     state[node] = NodeState::Sorting;
                     scatter_done_ns = scatter_done_ns.max(ticks_to_ns(now));
-                    let cost =
-                        self.sort_ticks(bucket_sizes[node], counters.map(|c| &c[node]));
+                    let cost = self.sort_ticks(bucket_sizes[node], counters.map(|c| &c[node]));
                     q.push(now + cost, Ev::SortDone { node });
                 }
                 Ev::SortDone { node } => {

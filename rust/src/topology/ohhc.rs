@@ -151,12 +151,7 @@ impl Ohhc {
 }
 
 /// The optical pairing rule; returns the partner `(group, processor)`.
-fn optical_partner(
-    g: usize,
-    p: usize,
-    groups: usize,
-    procs: usize,
-) -> Option<(usize, usize)> {
+fn optical_partner(g: usize, p: usize, groups: usize, procs: usize) -> Option<(usize, usize)> {
     if groups == procs {
         // Full OTIS transpose: (g, p) <-> (p, g), fixed points excluded.
         if g == p {
@@ -219,8 +214,7 @@ mod tests {
                     Construction::FullGroup => net.groups,
                     Construction::HalfGroup => 2 * net.groups,
                 };
-                let expected_opt =
-                    (net.total_processors() - expected_unpaired) / 2;
+                let expected_opt = (net.total_processors() - expected_unpaired) / 2;
                 assert_eq!(opt, expected_opt, "d={d} {c:?} optical");
             }
         }

@@ -2,8 +2,8 @@
 //! architecture table, the topology ablation bench, and the DESIGN.md
 //! cost/performance comparison of OHHC vs classic networks.
 
-use crate::util::par;
 use super::graph::Graph;
+use crate::util::par;
 
 /// Summary of a network's static structure.
 #[derive(Debug, Clone, PartialEq)]

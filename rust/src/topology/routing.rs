@@ -27,8 +27,7 @@ pub fn cell_route(from: usize, to: usize) -> Vec<usize> {
     }
     // Hexa-cell diameter is 2: find the (unique smallest) common neighbor.
     for mid in 0..CELL_SIZE {
-        if mid != from && mid != to && cell_adjacent(from, mid) && cell_adjacent(mid, to)
-        {
+        if mid != from && mid != to && cell_adjacent(from, mid) && cell_adjacent(mid, to) {
             return vec![from, mid, to];
         }
     }

@@ -1,8 +1,10 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal JSON parser and builder — enough for `artifacts/manifest.json`
+//! and the campaign reports.
 //!
 //! Recursive descent over the full JSON grammar (objects, arrays, strings
 //! with escapes, numbers, booleans, null).  No serialization framework;
-//! callers pattern-match on [`Json`].
+//! callers pattern-match on [`Json`] or assemble documents with the
+//! [`Json::obj`] / [`Json::arr`] / [`Json::str`] / [`Json::num`] builders.
 
 use std::collections::BTreeMap;
 
@@ -39,6 +41,31 @@ impl Json {
             return Err(err(&p, "trailing characters"));
         }
         Ok(v)
+    }
+
+    /// Build an object from `(key, value)` pairs (keys sort, as always).
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build an array.
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Build a number value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Build a number value from an integer count (lossless below 2^53).
+    pub fn int(n: usize) -> Json {
+        Json::Num(n as f64)
     }
 
     /// Object field access.
@@ -93,15 +120,56 @@ impl Json {
         s
     }
 
+    /// Serialize with two-space indentation (campaign report files).
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(depth + 1));
+                    e.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(depth + 1));
+                    Json::Str(k.clone()).write_into(out);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push('}');
+            }
+            other => other.write_into(out),
+        }
+    }
+
     fn write_into(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    out.push_str(&(*n as i64).to_string());
                 } else {
-                    out.push_str(&format!("{n}"));
+                    out.push_str(&n.to_string());
                 }
             }
             Json::Str(s) => {
@@ -274,9 +342,8 @@ impl<'a> Parser<'a> {
                             if self.i + 4 >= self.b.len() {
                                 return Err(err(self, "truncated \\u escape"));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| err(self, "bad \\u escape"))?;
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| err(self, "bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| err(self, "bad \\u escape"))?;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
@@ -402,5 +469,26 @@ mod tests {
     fn dump_integers_without_point() {
         assert_eq!(Json::Num(65536.0).dump(), "65536");
         assert_eq!(Json::Num(1.5).dump(), "1.5");
+    }
+
+    #[test]
+    fn builders_compose_documents() {
+        let doc = Json::obj([
+            ("cells", Json::arr([Json::int(3), Json::num(0.5)])),
+            ("name", Json::str("campaign")),
+        ]);
+        assert_eq!(doc.dump(), r#"{"cells":[3,0.5],"name":"campaign"}"#);
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let doc = Json::obj([
+            ("a", Json::arr([Json::int(1), Json::str("x")])),
+            ("b", Json::obj(Vec::<(&str, Json)>::new())),
+            ("c", Json::arr([])),
+        ]);
+        let pretty = doc.pretty();
+        assert!(pretty.contains("\n  \"a\": [\n"));
+        assert_eq!(Json::parse(&pretty).unwrap(), doc);
     }
 }

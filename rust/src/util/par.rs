@@ -56,7 +56,7 @@ where
     M: Fn(std::ops::Range<usize>) -> R + Sync,
     G: Fn(R, R) -> R,
 {
-    let workers = workers.max(1).min(n.max(1));
+    let workers = workers.clamp(1, n.max(1));
     if n == 0 {
         return identity;
     }

@@ -1,0 +1,160 @@
+//! Pluggable XLA/PJRT facade.
+//!
+//! The real PJRT runtime (the `xla` crate plus its `xla_extension` C++
+//! libraries) is a heavyweight dependency that offline build environments
+//! cannot fetch.  This facade keeps [`crate::runtime`] compiling — and the
+//! rest of the crate fully functional — everywhere:
+//!
+//! * **default build** — the stub below.  [`ArtifactRegistry`] opens and
+//!   validates manifests as usual, but compiling or executing an artifact
+//!   returns an [`Error`] explaining that the `xla` feature is off.  The
+//!   native divide engine (the default hot path) is unaffected.
+//! * **`--features xla`** — re-exports the real `xla` crate.  Enabling the
+//!   feature requires adding `xla` to `[dependencies]` on a toolchain
+//!   image that ships `xla_extension`.
+//!
+//! [`ArtifactRegistry`]: crate::runtime::ArtifactRegistry
+
+#[cfg(feature = "xla")]
+pub use ::xla::*;
+
+#[cfg(not(feature = "xla"))]
+pub use stub::*;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Error surfaced by the stub runtime.
+    #[derive(Debug, Clone)]
+    pub struct Error(String);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            self.0.fmt(f)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    fn disabled<T>(what: &str) -> Result<T, Error> {
+        Err(Error(format!(
+            "{what}: built without the `xla` feature (PJRT runtime unavailable); \
+             use the native divide engine or rebuild with --features xla"
+        )))
+    }
+
+    /// PJRT client handle (stub: constructible so registries can open and
+    /// validate manifests; any compile/execute call fails loudly).
+    #[derive(Debug)]
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        /// "Create" the CPU client.
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            Ok(PjRtClient)
+        }
+
+        /// Platform label shown by diagnostics.
+        pub fn platform_name(&self) -> String {
+            "stub (xla feature disabled)".to_string()
+        }
+
+        /// Devices available (none on the stub).
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        /// Compile a computation — always fails on the stub.
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            disabled("compile")
+        }
+    }
+
+    /// Parsed HLO module (never constructible on the stub).
+    #[derive(Debug)]
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        /// Parse HLO text — always fails on the stub.
+        pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+            disabled(&format!("load {}", path.as_ref().display()))
+        }
+    }
+
+    /// XLA computation wrapper.
+    #[derive(Debug)]
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        /// Wrap a parsed module.
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    /// Compiled executable (never constructible on the stub).
+    #[derive(Debug)]
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        /// Execute — always fails on the stub.
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            disabled("execute")
+        }
+    }
+
+    /// Device buffer handle.
+    #[derive(Debug)]
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        /// Copy back to the host — always fails on the stub.
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            disabled("to_literal_sync")
+        }
+    }
+
+    /// Host literal.
+    #[derive(Debug)]
+    pub struct Literal;
+
+    impl Literal {
+        /// Build a rank-1 literal (accepted and discarded by the stub).
+        pub fn vec1<T>(_values: &[T]) -> Literal {
+            Literal
+        }
+
+        /// Destructure a tuple literal — always fails on the stub.
+        pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+            disabled("to_tuple")
+        }
+
+        /// Destructure a 1-tuple literal — always fails on the stub.
+        pub fn to_tuple1(&self) -> Result<Literal, Error> {
+            disabled("to_tuple1")
+        }
+
+        /// Copy out as a typed vector — always fails on the stub.
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            disabled("to_vec")
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn client_opens_but_execution_is_disabled() {
+            let client = PjRtClient::cpu().unwrap();
+            assert_eq!(client.device_count(), 0);
+            assert!(client.platform_name().contains("stub"));
+            let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+            assert!(err.to_string().contains("xla"), "{err}");
+            let exe = PjRtLoadedExecutable;
+            assert!(exe.execute(&[Literal::vec1(&[1i32])]).is_err());
+        }
+    }
+}

@@ -2,9 +2,7 @@
 //! dimensions, constructions and distributions, plus config-file driving
 //! and the XLA artifact path — everything a downstream user touches.
 
-use ohhc_qsort::config::{
-    Backend, Construction, Distribution, DivideEngine, ExperimentConfig,
-};
+use ohhc_qsort::config::{Backend, Construction, Distribution, ExperimentConfig};
 use ohhc_qsort::coordinator::OhhcSorter;
 use ohhc_qsort::sort::is_sorted;
 use ohhc_qsort::workload::Workload;
@@ -92,12 +90,14 @@ fn run_on_external_workload() {
     assert_eq!(r.elements, 60_000);
 }
 
+// Needs `make artifacts` plus the real PJRT runtime (the `xla` feature).
+#[cfg(feature = "xla")]
 #[test]
 fn xla_divide_engine_matches_native_end_to_end() {
     let mut native_cfg = base(1, Construction::FullGroup);
     native_cfg.elements = 70_000;
     let mut xla_cfg = native_cfg.clone();
-    xla_cfg.divide_engine = DivideEngine::Xla;
+    xla_cfg.divide_engine = ohhc_qsort::config::DivideEngine::Xla;
     let a = OhhcSorter::new(&native_cfg).unwrap().run().unwrap();
     let b = OhhcSorter::new(&xla_cfg).unwrap().run().unwrap();
     // Same input, same division rule → identical local-sort work.
@@ -161,8 +161,7 @@ fn output_really_is_sorted_spot_check() {
     let net = Ohhc::new(1, Construction::FullGroup).unwrap();
     let plans = gather_plan(&net);
     let data = ohhc_qsort::workload::generate(Distribution::Local, 30_000, 5);
-    let divided =
-        ohhc_qsort::coordinator::divide_native(&data, net.total_processors()).unwrap();
+    let divided = ohhc_qsort::coordinator::divide_native(&data, net.total_processors()).unwrap();
     let out = ThreadedSimulator::new(&net, &plans)
         .with_mode(ThreadMode::Direct)
         .run(divided.buckets, data.len())
