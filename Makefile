@@ -4,6 +4,7 @@
 #   make test       tier-1 gate: cargo build --release && cargo test -q
 #   make fmt        rustfmt across the tree (check with make fmt-check)
 #   make lint       clippy, warnings denied
+#   make bench-json data-plane phase bench → BENCH_dataplane.json
 #   make campaign   the acceptance-criteria campaign grid
 #   make artifacts  lower the L1/L2 JAX graphs to artifacts/*.hlo.txt
 #   make pytest     python kernel/model tests
@@ -11,7 +12,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test fmt fmt-check lint bench campaign artifacts pytest clean
+.PHONY: build test fmt fmt-check lint bench bench-json campaign artifacts pytest clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -30,6 +31,12 @@ lint:
 
 bench:
 	cd rust && OHHC_BENCH_FAST=1 $(CARGO) bench
+
+# Non-criterion data-plane bench: median ns per phase (divide, local
+# sort, gather, assemble) for the flat arena vs the legacy nested
+# representation, written as one JSON document (see EXPERIMENTS.md §Perf).
+bench-json:
+	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 
 campaign: build
 	cd rust && $(CARGO) run --release -- campaign \

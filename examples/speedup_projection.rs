@@ -49,13 +49,14 @@ fn main() -> CliResult {
         for d in 1..=4u32 {
             let net = Ohhc::new(d, Construction::FullGroup)?;
             let plans = gather_plan(&net);
-            let divided = divide_native(&data, net.total_processors())?;
+            let mut divided = divide_native(&data, net.total_processors())?;
             let sizes = divided.sizes();
 
-            // Exact per-processor work feeds the DES clock.
+            // Exact per-processor work feeds the DES clock; the local
+            // sorts run in place on the arena's disjoint segments.
             let mut counters = Vec::with_capacity(sizes.len());
-            for mut b in divided.buckets {
-                counters.push(quicksort(&mut b));
+            for seg in divided.buckets.segments_mut() {
+                counters.push(quicksort(seg));
             }
             // Divide cost: one classify pass over every key at the master.
             let divide_ns = n as f64 * link.compute_ns_per_cmp;

@@ -4,6 +4,7 @@
 //! §Perf pass (event-queue overhead).
 
 use ohhc_qsort::config::{Construction, LinkModel};
+use ohhc_qsort::dataplane::FlatBuckets;
 use ohhc_qsort::schedule::gather_plan;
 use ohhc_qsort::sim::engine::DesSimulator;
 use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
@@ -28,13 +29,14 @@ fn main() {
         let plans = gather_plan(&net);
         let n = net.total_processors();
         let per = 4096usize;
-        let buckets: Vec<Vec<i32>> = (0..n)
+        let nested: Vec<Vec<i32>> = (0..n)
             .map(|i| {
                 let mut v = workload::random(per, i as u64);
                 v.sort_unstable();
                 v
             })
             .collect();
+        let buckets = FlatBuckets::from_nested(nested);
         let total = n * per;
         let sim = ThreadedSimulator::new(&net, &plans).with_mode(ThreadMode::Waves);
         b.run(&format!("gather/waves/d={d}"), || {

@@ -1,0 +1,272 @@
+//! Bench: the zero-copy flat data plane vs the legacy nested-`Vec`
+//! bucket representation, phase by phase (divide, local-sort, gather,
+//! assemble).
+//!
+//! `make bench-json` runs this and writes `BENCH_dataplane.json` (median
+//! ns per phase for both representations) — the perf-trajectory artifact
+//! EXPERIMENTS.md §Perf tracks and CI uploads on every push.  The nested
+//! side reimplements the pre-refactor data plane **with the same
+//! parallel pass structure** (parallel min/max, parallel classify,
+//! parallel pass-3 scatter — only the scatter target differs: one `Vec`
+//! per bucket instead of the arena; then batch merges of owned vectors
+//! and a final assemble memcpy), so the delta isolates the
+//! representation rather than parallelism.
+
+use std::cell::RefCell;
+
+use ohhc_qsort::config::Construction;
+use ohhc_qsort::coordinator::{divide_native, BucketFn};
+use ohhc_qsort::dataplane::FlatBuckets;
+use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::sim::threaded::gather_wave_order;
+use ohhc_qsort::sort::quicksort;
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::util::bench::{Bench, BenchResult};
+use ohhc_qsort::util::json::Json;
+use ohhc_qsort::util::par;
+use ohhc_qsort::workload;
+
+/// One owned sub-array in flight (the pre-refactor message payload).
+type OwnedSub = (u32, Vec<i32>);
+
+/// The pre-refactor parallel divide, pass for pass (parallel min/max →
+/// parallel classify + histograms → prefix scan → parallel raw-pointer
+/// scatter), with the original per-bucket `Vec` targets.
+fn divide_nested(data: &[i32], num_buckets: usize) -> Vec<Vec<i32>> {
+    const CHUNK_MIN: usize = 64 * 1024;
+    let workers = par::available_workers().clamp(1, data.len().div_ceil(CHUNK_MIN).max(1));
+
+    let (lo, hi) = par::par_reduce_indices(
+        data.len(),
+        workers,
+        |r| {
+            let mut lo = data[r.start];
+            let mut hi = lo;
+            for &v in &data[r] {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            (lo, hi)
+        },
+        |a, b| (a.0.min(b.0), a.1.max(b.1)),
+        (i32::MAX, i32::MIN),
+    );
+    let sub = (((hi as i64 - lo as i64) / num_buckets as i64).max(1)) as i32;
+
+    let chunk_len = data.len().div_ceil(workers);
+    let chunk_ranges: Vec<(usize, usize)> = (0..workers)
+        .map(|w| (w * chunk_len, ((w + 1) * chunk_len).min(data.len())))
+        .filter(|(s, e)| s < e)
+        .collect();
+    let classify = BucketFn::new(lo, sub, num_buckets);
+    let per_chunk: Vec<(Vec<u16>, Vec<u32>)> =
+        par::par_map(chunk_ranges.clone(), workers, |(s, e)| {
+            let mut ids = Vec::with_capacity(e - s);
+            let mut h = vec![0u32; num_buckets];
+            for &v in &data[s..e] {
+                let b = classify.of(v);
+                ids.push(b as u16);
+                h[b] += 1;
+            }
+            (ids, h)
+        });
+
+    let mut hist = vec![0usize; num_buckets];
+    for (_, ch) in &per_chunk {
+        for (b, &c) in ch.iter().enumerate() {
+            hist[b] += c as usize;
+        }
+    }
+    let mut offsets: Vec<Vec<usize>> = Vec::with_capacity(per_chunk.len());
+    let mut running = vec![0usize; num_buckets];
+    for (_, ch) in &per_chunk {
+        offsets.push(running.clone());
+        for (b, &c) in ch.iter().enumerate() {
+            running[b] += c as usize;
+        }
+    }
+
+    let mut buckets: Vec<Vec<i32>> = hist.iter().map(|&h| Vec::with_capacity(h)).collect();
+    {
+        struct BucketPtrs(Vec<*mut i32>);
+        // SAFETY (Send/Sync): the pointers refer to distinct Vec buffers
+        // that outlive the scoped threads; write disjointness comes from
+        // the per-chunk offset ranges.
+        unsafe impl Send for BucketPtrs {}
+        unsafe impl Sync for BucketPtrs {}
+        let ptrs = BucketPtrs(buckets.iter_mut().map(|b| b.as_mut_ptr()).collect());
+        let work: Vec<((usize, usize), (Vec<u16>, Vec<u32>), Vec<usize>)> = chunk_ranges
+            .into_iter()
+            .zip(per_chunk)
+            .zip(offsets)
+            .map(|((r, pc), o)| (r, pc, o))
+            .collect();
+        let ptrs_ref = &ptrs;
+        par::par_map(work, workers, move |((s, e), (ids, _), mut offs)| {
+            for (&v, &b) in data[s..e].iter().zip(&ids) {
+                let b = b as usize;
+                // SAFETY: offs[b] stays inside bucket b's chunk-private
+                // range (prefix-scan construction above).
+                unsafe { ptrs_ref.0[b].add(offs[b]).write(v) };
+                offs[b] += 1;
+            }
+        });
+    }
+    for (b, &h) in buckets.iter_mut().zip(&hist) {
+        // SAFETY: capacity is exactly `h` and all `h` slots were written.
+        unsafe { b.set_len(h) };
+    }
+    buckets
+}
+
+/// Pre-clone `count` copies so the timed closure pops a fresh input
+/// without paying (or measuring) a clone inside the timed region.
+fn stash<T: Clone>(item: &T, count: usize) -> RefCell<Vec<T>> {
+    RefCell::new((0..count).map(|_| item.clone()).collect())
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let copies = b.warmup + b.reps.max(1);
+    let n = 1usize << 20;
+    let net = Ohhc::new(2, Construction::FullGroup).unwrap(); // P = 144
+    let p = net.total_processors();
+    let plans = gather_plan(&net);
+    let order = gather_wave_order(&net, &plans);
+    let data = workload::random(n, 3);
+
+    println!("== dataplane: flat arena vs nested Vec<Vec>, n={n}, P={p}");
+
+    // ---- Phase 1: divide (scatter into the representation). ----------
+    let divide_flat = b.run("divide/flat", || divide_native(&data, p).unwrap());
+    let divide_nested_r = b.run("divide/nested", || divide_nested(&data, p));
+
+    // ---- Phase 2: local sort. ----------------------------------------
+    let flat_unsorted = divide_native(&data, p).unwrap().buckets;
+    let nested_unsorted = divide_nested(&data, p);
+
+    let pool = stash(&flat_unsorted, copies);
+    let sort_flat = b.run("local-sort/flat", || {
+        let mut f = pool.borrow_mut().pop().expect("stash");
+        for seg in f.segments_mut() {
+            quicksort(seg);
+        }
+        f
+    });
+    let pool = stash(&nested_unsorted, copies);
+    let sort_nested = b.run("local-sort/nested", || {
+        let mut nested = pool.borrow_mut().pop().expect("stash");
+        for bucket in &mut nested {
+            quicksort(bucket);
+        }
+        nested
+    });
+
+    // ---- Phase 3: gather (drain the tree in wave order). -------------
+    let mut flat_sorted = flat_unsorted.clone();
+    for seg in flat_sorted.segments_mut() {
+        quicksort(seg);
+    }
+    let mut nested_sorted = nested_unsorted.clone();
+    for bucket in &mut nested_sorted {
+        quicksort(bucket);
+    }
+
+    let pool = stash(&flat_sorted, copies);
+    let gather_flat = b.run("gather/flat", || {
+        // Pure bookkeeping: descriptor counts ride the tree; keys stay put.
+        let f = pool.borrow_mut().pop().expect("stash");
+        let mut held: Vec<usize> = vec![1; p];
+        for &id in &order {
+            if let Some(dst) = plans[id].last().send_to {
+                let moved = std::mem::take(&mut held[id]);
+                held[net.id(dst)] += moved;
+            }
+        }
+        assert_eq!(held[0], p);
+        f
+    });
+    let pool = stash(&nested_sorted, copies);
+    let gather_nested = b.run("gather/nested", || {
+        // Owned sub-array vectors merge batch by batch up the tree.
+        let nested = pool.borrow_mut().pop().expect("stash");
+        let mut held: Vec<Vec<OwnedSub>> = nested
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| vec![(i as u32, v)])
+            .collect();
+        for &id in &order {
+            if let Some(dst) = plans[id].last().send_to {
+                let batch = std::mem::take(&mut held[id]);
+                held[net.id(dst)].extend(batch);
+            }
+        }
+        assert_eq!(held[0].len(), p);
+        std::mem::take(&mut held[0])
+    });
+
+    // ---- Phase 4: assemble (produce the sorted output vector). -------
+    let pool = stash(&flat_sorted, copies);
+    let assemble_flat = b.run("assemble/flat", || {
+        // The arena already is the sorted array — zero memcpy.
+        pool.borrow_mut().pop().expect("stash").into_arena().0
+    });
+    let mut master: Vec<OwnedSub> = nested_sorted
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, v)| (i as u32, v))
+        .collect();
+    master.sort_by_key(|s| s.0);
+    let pool = stash(&master, copies);
+    let assemble_nested = b.run("assemble/nested", || {
+        let subs = pool.borrow_mut().pop().expect("stash");
+        let mut out = Vec::with_capacity(n);
+        for (_, v) in &subs {
+            out.extend_from_slice(v);
+        }
+        assert_eq!(out.len(), n);
+        out
+    });
+
+    // ---- JSON artifact. ----------------------------------------------
+    let phase = |flat: &BenchResult, nested: &BenchResult| {
+        Json::obj([
+            ("flat_ns", Json::num(flat.median.as_nanos() as f64)),
+            ("nested_ns", Json::num(nested.median.as_nanos() as f64)),
+        ])
+    };
+    let total = |a: &BenchResult, b: &BenchResult, c: &BenchResult, d: &BenchResult| {
+        Json::num((a.median + b.median + c.median + d.median).as_nanos() as f64)
+    };
+    let flat_total = total(&divide_flat, &sort_flat, &gather_flat, &assemble_flat);
+    let nested_total = total(&divide_nested_r, &sort_nested, &gather_nested, &assemble_nested);
+    let doc = Json::obj([
+        ("elements", Json::int(n)),
+        ("processors", Json::int(p)),
+        (
+            "phases",
+            Json::obj([
+                ("divide", phase(&divide_flat, &divide_nested_r)),
+                ("local_sort", phase(&sort_flat, &sort_nested)),
+                ("gather", phase(&gather_flat, &gather_nested)),
+                ("assemble", phase(&assemble_flat, &assemble_nested)),
+            ]),
+        ),
+        (
+            "total",
+            Json::obj([("flat_ns", flat_total), ("nested_ns", nested_total)]),
+        ),
+    ]);
+
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_dataplane.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_dataplane.json");
+    println!("\nphase medians → {out}");
+    println!(
+        "divide+gather: flat {:.0} ns vs nested {:.0} ns",
+        (divide_flat.median + gather_flat.median).as_nanos() as f64,
+        (divide_nested_r.median + gather_nested.median).as_nanos() as f64
+    );
+}

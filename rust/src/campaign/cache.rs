@@ -1,12 +1,16 @@
-//! Shared topology/plan cache keyed by `(dimension, construction)`.
+//! Shared campaign caches: topology/plan bundles keyed by
+//! `(dimension, construction)` and sequential baselines keyed by the
+//! workload fingerprint `(distribution, elements, seed)`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::config::Construction;
+use crate::config::{Construction, Distribution};
+use crate::coordinator::SeqBaseline;
 use crate::error::Result;
 use crate::schedule::TopologyBundle;
+use crate::workload::Workload;
 
 /// Cache key: the only inputs a [`TopologyBundle`] depends on.
 pub type TopologyKey = (u32, Construction);
@@ -83,6 +87,92 @@ impl PlanCache {
     }
 }
 
+/// Cache key for one workload: `(distribution, elements, seed)` — the
+/// only inputs workload generation and the sequential baseline depend on.
+pub type WorkloadKey = (Distribution, usize, u64);
+
+/// A generated workload together with its measured sequential baseline,
+/// shared by every grid cell with the same [`WorkloadKey`].
+#[derive(Debug)]
+pub struct WorkloadBaseline {
+    /// The generated keys.
+    pub workload: Workload,
+    /// Sequential quicksort time/counters/reference output on those keys.
+    pub baseline: SeqBaseline,
+}
+
+/// Thread-safe memo of sequential baselines with [`PlanCache`]'s
+/// at-most-once contract, but **without** cross-key serialization: the
+/// map lock is held only long enough to fetch a per-key slot; the
+/// expensive generate + quicksort runs under that slot's own once-lock,
+/// so distinct workloads measure concurrently while same-key callers
+/// block on exactly one measurement.
+///
+/// Entries live for the campaign's lifetime (each holds the workload
+/// plus its sorted baseline); at paper scale that trades bounded memory
+/// — the unique workloads of the grid — for skipping every redundant
+/// clone + quicksort.  Drop the `Campaign` to release them.
+#[derive(Debug, Default)]
+pub struct BaselineCache {
+    entries: Mutex<HashMap<WorkloadKey, Arc<OnceLock<Arc<WorkloadBaseline>>>>>,
+    measures: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl BaselineCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the workload + baseline for a key, generating and measuring
+    /// on first use.
+    pub fn get_or_measure(
+        &self,
+        distribution: Distribution,
+        elements: usize,
+        seed: u64,
+    ) -> Arc<WorkloadBaseline> {
+        let key = (distribution, elements, seed);
+        let slot = {
+            let mut entries = self.entries.lock().unwrap();
+            entries.entry(key).or_default().clone()
+        };
+        let mut measured = false;
+        let wb = slot.get_or_init(|| {
+            measured = true;
+            self.measures.fetch_add(1, Ordering::Relaxed);
+            let workload = Workload::new(distribution, elements, seed);
+            let baseline = SeqBaseline::measure(&workload.data);
+            Arc::new(WorkloadBaseline { workload, baseline })
+        });
+        if !measured {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        wb.clone()
+    }
+
+    /// Baseline measurements performed (unique workloads touched).
+    pub fn measures(&self) -> usize {
+        self.measures.load(Ordering::Relaxed)
+    }
+
+    /// Cache hits served without re-measuring.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct workloads currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing has been measured yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +234,41 @@ mod tests {
         assert!(cache.get_or_build(0, Construction::FullGroup).is_err());
         assert_eq!(cache.builds(), 0);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn baseline_measured_once_and_shared() {
+        let cache = BaselineCache::new();
+        assert!(cache.is_empty());
+        let a = cache.get_or_measure(Distribution::Random, 5_000, 9);
+        let b = cache.get_or_measure(Distribution::Random, 5_000, 9);
+        assert!(Arc::ptr_eq(&a, &b), "cache must share one baseline");
+        assert_eq!(cache.measures(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(a.workload.data.len(), 5_000);
+        assert_eq!(a.baseline.sorted.len(), 5_000);
+        assert!(crate::sort::is_sorted(&a.baseline.sorted));
+        // A different fingerprint measures independently.
+        cache.get_or_measure(Distribution::Sorted, 5_000, 9);
+        cache.get_or_measure(Distribution::Random, 5_000, 10);
+        assert_eq!(cache.measures(), 3);
+    }
+
+    #[test]
+    fn concurrent_baseline_requests_measure_each_key_once() {
+        let cache = BaselineCache::new();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..4 {
+                        cache.get_or_measure(Distribution::ReverseSorted, 2_000, 3);
+                        cache.get_or_measure(Distribution::Local, 2_000, 3);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.measures(), 2, "per-key measures must not race");
+        assert_eq!(cache.hits(), 8 * 4 * 2 - 2);
     }
 }

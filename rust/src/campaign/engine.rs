@@ -2,13 +2,12 @@
 
 use std::time::Instant;
 
-use crate::campaign::cache::PlanCache;
+use crate::campaign::cache::{BaselineCache, PlanCache};
 use crate::campaign::report::{CampaignReport, CellReport};
 use crate::campaign::spec::{GridCell, SweepSpec};
 use crate::coordinator::{OhhcSorter, SortReport};
 use crate::error::Result;
 use crate::util::par;
-use crate::workload::Workload;
 
 /// Executes a [`SweepSpec`] across a pool of `spec.jobs` workers.
 ///
@@ -16,11 +15,16 @@ use crate::workload::Workload;
 /// gather plans through the shared [`PlanCache`], so each
 /// `(dimension, construction)` pair is built at most once per campaign no
 /// matter how many cells, repetitions, or concurrent jobs touch it.
-/// Per-cell errors are captured in the report instead of aborting the
-/// sweep — one infeasible cell must not cost hours of completed grid.
+/// Likewise every job resolves its workload and sequential baseline
+/// through the shared [`BaselineCache`] — cells sharing a
+/// `(distribution, elements, seed)` fingerprint never re-generate,
+/// re-clone, or re-quicksort the identical input.  Per-cell errors are
+/// captured in the report instead of aborting the sweep — one infeasible
+/// cell must not cost hours of completed grid.
 pub struct Campaign {
     spec: SweepSpec,
     cache: PlanCache,
+    baselines: BaselineCache,
 }
 
 impl Campaign {
@@ -29,6 +33,7 @@ impl Campaign {
         Campaign {
             spec,
             cache: PlanCache::new(),
+            baselines: BaselineCache::new(),
         }
     }
 
@@ -41,6 +46,11 @@ impl Campaign {
     /// report aggregation).
     pub fn cache(&self) -> &PlanCache {
         &self.cache
+    }
+
+    /// The shared workload/baseline cache (measure/hit accounting).
+    pub fn baselines(&self) -> &BaselineCache {
+        &self.baselines
     }
 
     /// Run the whole grid; cells report silently.
@@ -64,6 +74,8 @@ impl Campaign {
             cells: reports,
             topology_builds: self.cache.builds(),
             cache_hits: self.cache.hits(),
+            baseline_measures: self.baselines.measures(),
+            baseline_hits: self.baselines.hits(),
             wall_secs: t0.elapsed().as_secs_f64(),
         })
     }
@@ -85,9 +97,11 @@ impl Campaign {
         let cfg = cell.config(&self.spec);
         let bundle = self.cache.get_or_build(cell.dimension, cell.construction)?;
         let sorter = OhhcSorter::with_bundle(&cfg, bundle)?;
-        let workload = Workload::new(cell.distribution, cell.elements, self.spec.seed);
+        let wb = self
+            .baselines
+            .get_or_measure(cell.distribution, cell.elements, self.spec.seed);
         (0..self.spec.repetitions.max(1))
-            .map(|_| sorter.run_on(&workload))
+            .map(|_| sorter.run_on_with_baseline(&wb.workload, &wb.baseline))
             .collect()
     }
 }
@@ -162,6 +176,22 @@ mod tests {
         }
         // Skipped cells never build topologies.
         assert_eq!(report.topology_builds, 1);
+    }
+
+    #[test]
+    fn sequential_baseline_measured_once_per_workload() {
+        // tiny_spec: 8 cells over 2 distributions × 1 size × 1 seed →
+        // exactly 2 unique workloads, each measured once.
+        let campaign = Campaign::new(tiny_spec());
+        let report = campaign.run().unwrap();
+        assert_eq!(campaign.baselines().measures(), 2);
+        assert_eq!(campaign.baselines().hits(), 8 - 2);
+        assert_eq!(report.baseline_measures, 2);
+        assert_eq!(report.baseline_hits, 6);
+        // The memoized baseline feeds every cell a real sequential time.
+        for cell in &report.cells {
+            assert!(cell.seq_secs > 0.0, "{}", cell.key());
+        }
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * [`PlanCache`] — per-`(dimension, construction)` cache of
 //!   [`TopologyBundle`]s so repeated cells never rebuild a topology or its
 //!   gather plans (the paper's 216-cell sweep needs only 8 builds);
+//! * [`BaselineCache`] — per-workload memo of the generated input and its
+//!   sequential baseline, so cells sharing a
+//!   `(distribution, elements, seed)` fingerprint never re-clone or
+//!   re-quicksort an identical workload;
 //! * [`Campaign`] — executes the grid across a worker pool, tolerating
 //!   per-cell failures, and aggregates everything into a
 //!   [`CampaignReport`] with JSON / CSV emitters.
@@ -28,7 +32,7 @@ mod engine;
 mod report;
 mod spec;
 
-pub use cache::PlanCache;
+pub use cache::{BaselineCache, PlanCache, WorkloadBaseline};
 pub use engine::Campaign;
 pub use report::{CampaignReport, CellReport, CellStatus};
 pub use spec::{GridCell, SweepSpec};

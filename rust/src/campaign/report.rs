@@ -277,6 +277,10 @@ pub struct CampaignReport {
     pub topology_builds: usize,
     /// Cache hits served without building.
     pub cache_hits: usize,
+    /// Sequential-baseline measurements performed (unique workloads).
+    pub baseline_measures: usize,
+    /// Baseline cache hits served without re-measuring.
+    pub baseline_hits: usize,
     /// Wall time of the whole campaign (s).
     pub wall_secs: f64,
 }
@@ -340,6 +344,8 @@ impl CampaignReport {
             (
                 "summary",
                 Json::obj([
+                    ("baseline_hits", Json::int(self.baseline_hits)),
+                    ("baseline_measures", Json::int(self.baseline_measures)),
                     ("cache_hits", Json::int(self.cache_hits)),
                     ("completed", Json::int(self.completed())),
                     ("failed", Json::int(self.failed())),
@@ -375,14 +381,17 @@ impl CampaignReport {
     pub fn summary_text(&self) -> String {
         let mut out = format!(
             "campaign: {} cells ({} completed, {} skipped, {} failed) in {:.2}s\n\
-             topology cache: {} builds, {} hits\n",
+             topology cache: {} builds, {} hits\n\
+             baseline cache: {} measures, {} hits\n",
             self.cells.len(),
             self.completed(),
             self.skipped(),
             self.failed(),
             self.wall_secs,
             self.topology_builds,
-            self.cache_hits
+            self.cache_hits,
+            self.baseline_measures,
+            self.baseline_hits
         );
         for (d, s) in self.per_dimension() {
             out.push_str(&format!(
@@ -477,6 +486,8 @@ mod tests {
             ],
             topology_builds: 1,
             cache_hits: 2,
+            baseline_measures: 1,
+            baseline_hits: 2,
             wall_secs: 1.5,
         };
         assert_eq!(report.completed(), 1);
@@ -486,6 +497,9 @@ mod tests {
         let summary = j.get("summary").unwrap();
         assert_eq!(summary.get("planned").unwrap().as_usize(), Some(3));
         assert_eq!(summary.get("topology_builds").unwrap().as_usize(), Some(1));
+        assert_eq!(summary.get("baseline_measures").unwrap().as_usize(), Some(1));
+        assert_eq!(summary.get("baseline_hits").unwrap().as_usize(), Some(2));
+        assert!(report.summary_text().contains("baseline cache: 1 measures"));
         let per_dim = summary.get("per_dimension").unwrap().as_arr().unwrap();
         assert_eq!(per_dim.len(), 1);
         assert_eq!(per_dim[0].get("dimension").unwrap().as_usize(), Some(1));
@@ -501,6 +515,8 @@ mod tests {
             cells: vec![completed_report()],
             topology_builds: 1,
             cache_hits: 0,
+            baseline_measures: 1,
+            baseline_hits: 0,
             wall_secs: 0.1,
         };
         let json_path = report.write_json(&dir.join("campaign.json")).unwrap();

@@ -6,15 +6,17 @@
 //! sorted array — the property that lets the paper skip the merge phase.
 
 use crate::config::DivideEngine;
+use crate::dataplane::FlatBuckets;
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, XlaDivide};
 use crate::util::par;
 
-/// Result of the division: per-processor buckets ready to scatter.
+/// Result of the division: arena-backed per-processor buckets, scattered
+/// into their final bucket-rank positions (see [`FlatBuckets`]).
 #[derive(Debug, Clone)]
 pub struct Divided {
-    /// One bucket per processor, rank order.
-    pub buckets: Vec<Vec<i32>>,
+    /// The flat bucket arena, rank order.
+    pub buckets: FlatBuckets,
     /// Global minimum key.
     pub lo: i32,
     /// The step point (≥ 1).
@@ -22,21 +24,15 @@ pub struct Divided {
 }
 
 impl Divided {
-    /// Bucket sizes in keys (what the DES needs).
+    /// Bucket sizes in keys (what the DES needs) — O(P) off the offset
+    /// table, no bucket walk.
     pub fn sizes(&self) -> Vec<usize> {
-        self.buckets.iter().map(Vec::len).collect()
+        self.buckets.sizes()
     }
 
-    /// Largest bucket / ideal bucket — load-imbalance factor.
+    /// Largest bucket / ideal bucket — load-imbalance factor, O(P).
     pub fn imbalance(&self) -> f64 {
-        let total: usize = self.buckets.iter().map(Vec::len).sum();
-        let ideal = total as f64 / self.buckets.len() as f64;
-        let max = self.buckets.iter().map(Vec::len).max().unwrap_or(0);
-        if ideal > 0.0 {
-            max as f64 / ideal
-        } else {
-            0.0
-        }
+        self.buckets.imbalance()
     }
 }
 
@@ -47,11 +43,14 @@ impl Divided {
 /// 2. parallel per-chunk histograms, merged into per-(chunk, bucket)
 ///    write offsets by a small serial prefix scan;
 /// 3. parallel scatter — every chunk writes its keys into *disjoint*
-///    slices of the preallocated buckets, so no synchronization is needed
-///    on the write path.
+///    ranges of one preallocated arena ([`FlatBuckets`]), so no
+///    synchronization is needed on the write path and no per-bucket
+///    allocations exist at all.
 ///
 /// See EXPERIMENTS.md §Perf for the before/after (the serial version made
-/// the divide phase ~40% of the sorted-input parallel runtime).
+/// the divide phase ~40% of the sorted-input parallel runtime; the arena
+/// scatter then removed the per-bucket allocations and the gather-side
+/// assemble memcpy).
 pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     if data.is_empty() {
         return Err(Error::Config("cannot divide an empty array".into()));
@@ -117,41 +116,54 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
         }
     }
 
+    // Bucket offset table: exclusive prefix sum of the histogram.  This
+    // is the whole gather-side bookkeeping — bucket b's final resting
+    // place in the sorted output is arena[table[b]..table[b + 1]].
+    let mut table = Vec::with_capacity(num_buckets + 1);
+    let mut acc = 0usize;
+    table.push(0);
+    for &h in &hist {
+        acc += h;
+        table.push(acc);
+    }
+    debug_assert_eq!(acc, data.len());
+
     // Pass 3: parallel scatter through the cached ids (no re-division, no
-    // zero-initialization).  Each chunk owns a disjoint
-    // [offset, offset+count) range of every bucket, so the raw writes
-    // never alias; every slot is written exactly once, justifying the
-    // deferred `set_len`.
-    let mut buckets: Vec<Vec<i32>> = hist.iter().map(|&h| Vec::with_capacity(h)).collect();
+    // zero-initialization) straight into one contiguous arena.  Each
+    // chunk owns a disjoint [table[b] + offset, table[b] + offset + count)
+    // range of every bucket's segment, so the raw writes never alias;
+    // every slot is written exactly once, justifying the deferred
+    // `set_len`.
+    let mut arena: Vec<i32> = Vec::with_capacity(data.len());
     {
-        struct BucketPtrs(Vec<*mut i32>);
-        // SAFETY (Send/Sync): the pointers refer to distinct Vec buffers
-        // that outlive the scoped threads; write disjointness comes from
-        // the per-chunk offset ranges.
-        unsafe impl Send for BucketPtrs {}
-        unsafe impl Sync for BucketPtrs {}
-        let ptrs = BucketPtrs(buckets.iter_mut().map(|b| b.as_mut_ptr()).collect());
+        struct ArenaPtr(*mut i32);
+        // SAFETY (Send/Sync): one buffer that outlives the scoped
+        // threads; write disjointness comes from the per-chunk offset
+        // ranges within each bucket's private arena segment.
+        unsafe impl Send for ArenaPtr {}
+        unsafe impl Sync for ArenaPtr {}
+        let ptr = ArenaPtr(arena.as_mut_ptr());
         let work: Vec<((usize, usize), (Vec<u16>, Vec<u32>), Vec<usize>)> = chunk_ranges
             .into_iter()
             .zip(per_chunk)
             .zip(offsets)
             .map(|((r, pc), o)| (r, pc, o))
             .collect();
-        let ptrs_ref = &ptrs;
+        let ptr_ref = &ptr;
+        let table_ref = &table;
         par::par_map(work, workers, move |((s, e), (ids, _), mut offs)| {
             for (&v, &b) in data[s..e].iter().zip(&ids) {
                 let b = b as usize;
-                // SAFETY: offs[b] stays inside bucket b's chunk-private
-                // range (prefix-scan construction above).
-                unsafe { ptrs_ref.0[b].add(offs[b]).write(v) };
+                // SAFETY: table[b] + offs[b] stays inside bucket b's
+                // chunk-private range (prefix-scan construction above).
+                unsafe { ptr_ref.0.add(table_ref[b] + offs[b]).write(v) };
                 offs[b] += 1;
             }
         });
     }
-    for (b, &h) in buckets.iter_mut().zip(&hist) {
-        // SAFETY: capacity is exactly `h` and all `h` slots were written.
-        unsafe { b.set_len(h) };
-    }
+    // SAFETY: capacity is exactly `data.len()` and every slot was written.
+    unsafe { arena.set_len(data.len()) };
+    let buckets = FlatBuckets::from_parts(arena, table);
     Ok(Divided { buckets, lo, sub })
 }
 
@@ -218,13 +230,31 @@ pub fn divide_with_engine(
             })?;
             let xd = XlaDivide::new(reg, num_buckets)?;
             let out = xd.divide(data)?;
-            let mut buckets: Vec<Vec<i32>> =
-                out.hist.iter().map(|&h| Vec::with_capacity(h)).collect();
+            // Scatter on the artifact's bucket ids straight into the flat
+            // arena: cursor[b] walks bucket b's segment.
+            let mut table = Vec::with_capacity(num_buckets + 1);
+            let mut acc = 0usize;
+            table.push(0);
+            for &h in &out.hist {
+                acc += h;
+                table.push(acc);
+            }
+            if acc != data.len() || out.ids.len() != data.len() {
+                return Err(Error::Invariant(format!(
+                    "XLA divide shape mismatch: {} ids, histogram covers {acc} of {} keys",
+                    out.ids.len(),
+                    data.len()
+                )));
+            }
+            let mut arena = vec![0i32; data.len()];
+            let mut cursor: Vec<usize> = table[..num_buckets].to_vec();
             for (&v, &b) in data.iter().zip(&out.ids) {
-                buckets[b as usize].push(v);
+                let b = b as usize;
+                arena[cursor[b]] = v;
+                cursor[b] += 1;
             }
             Ok(Divided {
-                buckets,
+                buckets: FlatBuckets::from_parts(arena, table),
                 lo: out.lo,
                 sub: out.sub,
             })
@@ -243,11 +273,11 @@ mod tests {
         for dist in Distribution::ALL {
             let data = workload::generate(dist, 50_000, 3);
             let d = divide_native(&data, 36).unwrap();
-            let total: usize = d.buckets.iter().map(Vec::len).sum();
-            assert_eq!(total, data.len(), "{dist:?}");
+            assert_eq!(d.buckets.total_keys(), data.len(), "{dist:?}");
+            assert_eq!(d.sizes().iter().sum::<usize>(), data.len(), "{dist:?}");
             // Cross-bucket order: max(bucket b) <= min(bucket b+1).
             let mut last_max = i64::MIN;
-            for b in &d.buckets {
+            for b in d.buckets.iter() {
                 if b.is_empty() {
                     continue;
                 }
@@ -260,17 +290,15 @@ mod tests {
     }
 
     #[test]
-    fn concatenated_sorted_buckets_are_globally_sorted() {
+    fn in_place_sorted_arena_is_globally_sorted() {
         let data = workload::random(20_000, 9);
-        let d = divide_native(&data, 144).unwrap();
-        let mut out = Vec::with_capacity(data.len());
-        for mut b in d.buckets {
-            b.sort_unstable();
-            out.extend_from_slice(&b);
+        let mut d = divide_native(&data, 144).unwrap();
+        for seg in d.buckets.segments_mut() {
+            seg.sort_unstable();
         }
         let mut expect = data;
         expect.sort_unstable();
-        assert_eq!(out, expect);
+        assert_eq!(d.buckets.arena(), expect.as_slice());
     }
 
     #[test]
@@ -278,8 +306,8 @@ mod tests {
         let data = vec![42i32; 1000];
         let d = divide_native(&data, 36).unwrap();
         assert_eq!(d.sub, 1);
-        assert_eq!(d.buckets[0].len(), 1000);
-        assert!(d.buckets[1..].iter().all(Vec::is_empty));
+        assert_eq!(d.buckets.size(0), 1000);
+        assert!((1..36).all(|b| d.buckets.size(b) == 0));
     }
 
     #[test]
@@ -296,9 +324,8 @@ mod tests {
     fn sorted_input_gives_contiguous_buckets() {
         let data = workload::sorted(10_000, 5);
         let d = divide_native(&data, 18).unwrap();
-        // Rebuild by concatenation — equals the input directly.
-        let rebuilt: Vec<i32> = d.buckets.concat();
-        assert_eq!(rebuilt, data);
+        // The arena in rank order equals the input directly.
+        assert_eq!(d.buckets.arena(), data.as_slice());
     }
 
     #[test]

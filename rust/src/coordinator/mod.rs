@@ -13,5 +13,6 @@
 mod divide;
 mod ohhc_sort;
 
+pub use crate::dataplane::FlatBuckets;
 pub use divide::{bucket_of, divide_native, divide_with_engine, BucketFn, Divided};
-pub use ohhc_sort::{OhhcSorter, SortReport};
+pub use ohhc_sort::{OhhcSorter, SeqBaseline, SortReport};

@@ -1,0 +1,210 @@
+//! The flat data plane: arena-backed buckets shared by the coordinator
+//! and both simulation backends.
+//!
+//! The paper's step-point division is order-preserving across buckets
+//! (§3.1): concatenating the buckets in rank order and sorting each one
+//! in place yields the globally sorted array, no merge required.  That
+//! property means the buckets never need to be separate allocations —
+//! [`FlatBuckets`] stores every key in **one contiguous arena** in
+//! bucket-rank order plus a `P + 1` offset table, so
+//!
+//! * the divide scatters keys straight into their final resting place,
+//! * local sorts run in place on disjoint `&mut [i32]` segments,
+//! * the gather is pure bookkeeping (the arena *is* the sorted array),
+//!   and message payloads become `(bucket, range)` descriptors.
+//!
+//! Compared with the previous `Vec<Vec<i32>>` representation this removes
+//! `P` heap allocations per divide (up to 2304 at d = 4) and the full
+//! `n`-key memcpy the final assemble used to pay.
+
+use std::ops::Range;
+
+/// Arena-backed buckets: one contiguous key buffer in bucket-rank order
+/// plus its offset table.
+///
+/// Bucket `b` occupies `keys[offsets[b]..offsets[b + 1]]`; the offset
+/// table is monotone, starts at 0, and ends at the total key count, so
+/// bucket sizes and the load-imbalance factor are O(P) reads — no bucket
+/// walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlatBuckets {
+    keys: Vec<i32>,
+    offsets: Vec<usize>,
+}
+
+impl FlatBuckets {
+    /// Assemble from a pre-scattered arena and its offset table
+    /// (`offsets.len() == num_buckets + 1`).
+    pub fn from_parts(keys: Vec<i32>, offsets: Vec<usize>) -> Self {
+        debug_assert!(!offsets.is_empty(), "offset table needs a terminator");
+        debug_assert_eq!(offsets[0], 0);
+        debug_assert_eq!(*offsets.last().unwrap(), keys.len());
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+        FlatBuckets { keys, offsets }
+    }
+
+    /// Flatten a nested bucket set (compatibility constructor for tests,
+    /// benches, and callers still producing `Vec<Vec<i32>>`).
+    pub fn from_nested(nested: Vec<Vec<i32>>) -> Self {
+        let total = nested.iter().map(Vec::len).sum();
+        let mut keys = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(nested.len() + 1);
+        offsets.push(0);
+        for bucket in &nested {
+            keys.extend_from_slice(bucket);
+            offsets.push(keys.len());
+        }
+        FlatBuckets { keys, offsets }
+    }
+
+    /// Number of buckets.
+    pub fn num_buckets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total keys across all buckets.
+    pub fn total_keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Bucket `b` as a slice.
+    pub fn bucket(&self, b: usize) -> &[i32] {
+        &self.keys[self.range(b)]
+    }
+
+    /// Arena range of bucket `b` — what a gather descriptor ships.
+    pub fn range(&self, b: usize) -> Range<usize> {
+        self.offsets[b]..self.offsets[b + 1]
+    }
+
+    /// Keys in bucket `b` (one subtraction — no bucket walk).
+    pub fn size(&self, b: usize) -> usize {
+        self.offsets[b + 1] - self.offsets[b]
+    }
+
+    /// All bucket sizes in keys (what the DES needs), O(P) off the
+    /// offset table.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.offsets.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// The offset table (`num_buckets + 1` entries, last == total keys).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// The whole arena in bucket-rank order.
+    pub fn arena(&self) -> &[i32] {
+        &self.keys
+    }
+
+    /// Allocated capacity of the arena buffer (zero-copy witnesses
+    /// compare this against the output vector's capacity).
+    pub fn arena_capacity(&self) -> usize {
+        self.keys.capacity()
+    }
+
+    /// Iterate the buckets as slices, rank order.
+    pub fn iter(&self) -> impl Iterator<Item = &[i32]> {
+        self.offsets.windows(2).map(|w| &self.keys[w[0]..w[1]])
+    }
+
+    /// Split the arena into disjoint mutable per-bucket segments — the
+    /// in-place local-sort surface.  Segment `b` aliases exactly
+    /// `arena[offsets[b]..offsets[b + 1]]`.
+    pub fn segments_mut(&mut self) -> Vec<&mut [i32]> {
+        let mut out = Vec::with_capacity(self.offsets.len() - 1);
+        let mut rest: &mut [i32] = &mut self.keys;
+        for w in self.offsets.windows(2) {
+            let (seg, tail) = std::mem::take(&mut rest).split_at_mut(w[1] - w[0]);
+            out.push(seg);
+            rest = tail;
+        }
+        out
+    }
+
+    /// Largest bucket / ideal bucket — the load-imbalance factor, O(P).
+    pub fn imbalance(&self) -> f64 {
+        let total = self.total_keys();
+        let ideal = total as f64 / self.num_buckets() as f64;
+        let max = self.sizes().into_iter().max().unwrap_or(0);
+        if ideal > 0.0 {
+            max as f64 / ideal
+        } else {
+            0.0
+        }
+    }
+
+    /// Surrender the arena (and offset table).  After in-place local
+    /// sorts the arena in bucket-rank order **is** the globally sorted
+    /// array — this is the zero-copy gather terminal.
+    pub fn into_arena(self) -> (Vec<i32>, Vec<usize>) {
+        (self.keys, self.offsets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FlatBuckets {
+        FlatBuckets::from_nested(vec![vec![3, 1], vec![], vec![7, 5, 6], vec![9]])
+    }
+
+    #[test]
+    fn from_nested_round_trips_layout() {
+        let f = sample();
+        assert_eq!(f.num_buckets(), 4);
+        assert_eq!(f.total_keys(), 6);
+        assert_eq!(f.offsets(), &[0, 2, 2, 5, 6]);
+        assert_eq!(f.sizes(), vec![2, 0, 3, 1]);
+        assert_eq!(f.bucket(0), &[3, 1]);
+        assert_eq!(f.bucket(1), &[] as &[i32]);
+        assert_eq!(f.bucket(2), &[7, 5, 6]);
+        assert_eq!(f.range(2), 2..5);
+        assert_eq!(f.arena(), &[3, 1, 7, 5, 6, 9]);
+        let collected: Vec<&[i32]> = f.iter().collect();
+        assert_eq!(collected.len(), 4);
+        assert_eq!(collected[3], &[9]);
+    }
+
+    #[test]
+    fn segments_are_disjoint_and_writable() {
+        let mut f = sample();
+        {
+            let segs = f.segments_mut();
+            assert_eq!(segs.len(), 4);
+            assert_eq!(segs.iter().map(|s| s.len()).sum::<usize>(), 6);
+            for seg in segs {
+                seg.sort_unstable();
+            }
+        }
+        assert_eq!(f.arena(), &[1, 3, 7, 5, 6, 9]);
+        assert_eq!(f.bucket(2), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn into_arena_is_the_same_allocation() {
+        let f = sample();
+        let ptr = f.arena().as_ptr();
+        let (arena, offsets) = f.into_arena();
+        assert_eq!(arena.as_ptr(), ptr, "into_arena must not copy");
+        assert_eq!(*offsets.last().unwrap(), arena.len());
+    }
+
+    #[test]
+    fn imbalance_from_offsets() {
+        let f = sample();
+        // max 3 vs ideal 6/4 = 1.5 → 2.0.
+        assert!((f.imbalance() - 2.0).abs() < 1e-12);
+        let empty = FlatBuckets::from_nested(vec![Vec::new(); 3]);
+        assert_eq!(empty.imbalance(), 0.0);
+    }
+
+    #[test]
+    fn from_parts_matches_from_nested() {
+        let a = sample();
+        let b = FlatBuckets::from_parts(vec![3, 1, 7, 5, 6, 9], vec![0, 2, 2, 5, 6]);
+        assert_eq!(a, b);
+    }
+}

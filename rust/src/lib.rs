@@ -58,6 +58,7 @@ pub mod campaign;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
+pub mod dataplane;
 pub mod error;
 pub mod figures;
 pub mod metrics;

@@ -125,6 +125,16 @@ impl<'a> DesSimulator<'a> {
         ns_to_ticks(work * self.link.compute_ns_per_cmp)
     }
 
+    /// Run the DES straight off an arena-backed bucket set — sizes come
+    /// from the offset table (O(P), no bucket walk).
+    pub fn run_buckets(
+        &self,
+        buckets: &crate::dataplane::FlatBuckets,
+        counters: Option<&[SortCounters]>,
+    ) -> Result<DesOutcome> {
+        self.run(&buckets.sizes(), counters)
+    }
+
     /// Run the DES on per-processor bucket sizes (in keys).  `counters`,
     /// when given, supplies exact per-processor sort work.
     pub fn run(
@@ -454,6 +464,20 @@ mod tests {
         let out = run_des(1, Construction::FullGroup, &sizes);
         assert!(out.completion_ns > 0.0);
         assert_eq!(out.trace.total_steps(), 2 * (n - 1));
+    }
+
+    #[test]
+    fn run_buckets_matches_run_on_sizes() {
+        use crate::dataplane::FlatBuckets;
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let plans = gather_plan(&net);
+        let nested: Vec<Vec<i32>> = (0..net.total_processors()).map(|i| vec![0; 10 + i]).collect();
+        let buckets = FlatBuckets::from_nested(nested);
+        let des = DesSimulator::new(&net, &plans, LinkModel::default());
+        let a = des.run_buckets(&buckets, None).unwrap();
+        let b = des.run(&buckets.sizes(), None).unwrap();
+        assert_eq!(a.completion_ns, b.completion_ns);
+        assert_eq!(a.trace.total_steps(), b.trace.total_steps());
     }
 
     #[test]

@@ -1,22 +1,37 @@
 //! Message payloads exchanged by simulated processors.
 
-/// One sorted sub-array tagged with its bucket rank.  Because the step-
-/// point division is order-preserving across buckets (paper §3.1), the
-/// master reassembles the sorted output by writing each sub-array at its
-/// bucket's prefix offset — no merge required.
+use std::ops::Range;
+
+/// One sorted sub-array descriptor tagged with its bucket rank.  Because
+/// the step-point division is order-preserving across buckets (paper
+/// §3.1) and the keys already live at their final arena positions
+/// ([`crate::dataplane::FlatBuckets`]), messages carry `(bucket, range)`
+/// descriptors instead of owned key vectors — the master terminates the
+/// gather by checking coverage, not by copying keys.  The DES link model
+/// still charges for the full payload via [`SubArray::bytes`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SubArray {
     /// Bucket rank (equal to the owning processor's flat id).
     pub bucket: u32,
-    /// Sorted keys.
-    pub data: Vec<i32>,
+    /// The bucket's arena range (sorted keys live there in place).
+    pub range: Range<usize>,
 }
 
 impl SubArray {
+    /// Number of keys described.
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    /// True when the bucket is empty.
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
     /// Payload size in bytes (4 bytes per key) — what the DES link model
     /// charges for.
     pub fn bytes(&self) -> usize {
-        self.data.len() * 4
+        self.range.len() * 4
     }
 }
 
@@ -60,13 +75,29 @@ mod tests {
     fn batch_accounting() {
         let mut b = Batch::single(SubArray {
             bucket: 0,
-            data: vec![1, 2, 3],
+            range: 0..3,
         });
         b.merge(Batch::single(SubArray {
             bucket: 1,
-            data: vec![4],
+            range: 3..4,
         }));
         assert_eq!(b.count(), 2);
         assert_eq!(b.bytes(), 16);
+    }
+
+    #[test]
+    fn subarray_descriptor_accounting() {
+        let s = SubArray {
+            bucket: 7,
+            range: 10..14,
+        };
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.bytes(), 16);
+        assert!(!s.is_empty());
+        assert!(SubArray {
+            bucket: 0,
+            range: 5..5
+        }
+        .is_empty());
     }
 }

@@ -1,11 +1,14 @@
 //! The paper's simulation methodology: one OS thread per simulated OHHC
 //! processor, channel message passing, wall-clock timing (§5).
 //!
-//! Every thread executes its static [`NodePlan`]: sort the local payload
-//! with the instrumented sequential Quick Sort, accumulate incoming
-//! sub-arrays until the wait-for count is met, then forward everything in
-//! one send.  The master thread terminates the gather and reassembles the
-//! globally sorted array by bucket rank.
+//! Every thread executes its static [`NodePlan`]: sort its disjoint
+//! arena segment in place with the instrumented sequential Quick Sort,
+//! accumulate incoming sub-array descriptors until the wait-for count is
+//! met, then forward everything in one send.  The master thread
+//! terminates the gather by validating descriptor coverage — because the
+//! [`FlatBuckets`] arena is laid out in bucket-rank order, the arena
+//! itself **is** the globally sorted array; no keys move after the
+//! divide scatter.
 //!
 //! A `Waves` mode executes the same schedule on a bounded worker pool in
 //! gather-tree depth order — semantically identical, cheaper than 2304 OS
@@ -16,6 +19,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::dataplane::FlatBuckets;
 use crate::error::{Error, Result};
 use crate::schedule::NodePlan;
 use crate::sim::message::{Batch, SubArray};
@@ -34,10 +38,11 @@ pub enum ThreadMode {
 /// Result of one threaded simulation run.
 #[derive(Debug)]
 pub struct ThreadedOutcome {
-    /// The sorted keys (master's reassembled output).
+    /// The sorted keys — the divide arena handed back untouched (the
+    /// gather moves descriptors, never keys).
     pub sorted: Vec<i32>,
     /// Wall-clock duration of the parallel region (threads spawned →
-    /// master finished), the quantity behind Figs 6.2–6.11.
+    /// master finished its gather), the quantity behind Figs 6.2–6.11.
     pub parallel_time: Duration,
     /// Per-processor local-sort counters, summed (Figs 6.20–6.24).
     pub counters: SortCounters,
@@ -78,14 +83,20 @@ impl<'a> ThreadedSimulator<'a> {
         self
     }
 
-    /// Run the gather on per-processor payloads (`buckets[i]` = processor
-    /// `i`'s sub-array, already scattered by the coordinator).
-    pub fn run(&self, buckets: Vec<Vec<i32>>, total_len: usize) -> Result<ThreadedOutcome> {
+    /// Run the gather on the scattered arena (`buckets.bucket(i)` =
+    /// processor `i`'s sub-array, already placed by the coordinator).
+    pub fn run(&self, buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
         let n = self.net.total_processors();
-        if buckets.len() != n {
+        if buckets.num_buckets() != n {
             return Err(Error::Sim(format!(
                 "expected {n} buckets, got {}",
-                buckets.len()
+                buckets.num_buckets()
+            )));
+        }
+        if buckets.total_keys() != total_len {
+            return Err(Error::Invariant(format!(
+                "payload loss: buckets hold {} of {total_len} keys",
+                buckets.total_keys()
             )));
         }
         match self.mode {
@@ -94,68 +105,80 @@ impl<'a> ThreadedSimulator<'a> {
         }
     }
 
-    /// Paper-faithful mode: one thread per processor.
-    fn run_direct(&self, buckets: Vec<Vec<i32>>, total_len: usize) -> Result<ThreadedOutcome> {
+    /// Paper-faithful mode: one thread per processor.  Each thread owns
+    /// its disjoint `&mut [i32]` arena segment; channel messages carry
+    /// `(bucket, range)` descriptors only.
+    fn run_direct(&self, mut buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
         let n = self.net.total_processors();
+        let offsets: Vec<usize> = buckets.offsets().to_vec();
         let (txs, rxs): (Vec<Sender<Batch>>, Vec<Receiver<Batch>>) =
             (0..n).map(|_| channel()).unzip();
         // std receivers are not clonable; each thread takes its own.
         let rxs: Vec<Mutex<Option<Receiver<Batch>>>> =
             rxs.into_iter().map(|rx| Mutex::new(Some(rx))).collect();
         let (done_tx, done_rx) = channel::<(usize, SortCounters, Duration, usize)>();
-        let (out_tx, out_rx) = channel::<Vec<SubArray>>();
+        let (out_tx, out_rx) = channel::<(Vec<SubArray>, Instant)>();
 
         let start = Instant::now();
-        std::thread::scope(|scope| {
-            for (id, bucket) in buckets.into_iter().enumerate() {
-                let rx = rxs[id].lock().unwrap().take().expect("receiver taken twice");
-                let txs = &txs;
-                let net = self.net;
-                let plan = &self.plans[id];
-                let sorter = self.sorter;
-                let done_tx = done_tx.clone();
-                let out_tx = out_tx.clone();
-                std::thread::Builder::new()
-                    .name(format!("ohhc-p{id}"))
-                    // Iterative quicksort → small stacks are safe even for
-                    // thousands of simulated processors.
-                    .stack_size(256 * 1024)
-                    .spawn_scoped(scope, move || {
-                        let t0 = Instant::now();
-                        let mut data = bucket;
-                        let counters = sorter.sort(&mut data);
-                        let sort_time = t0.elapsed();
+        {
+            let segments = buckets.segments_mut();
+            std::thread::scope(|scope| {
+                for (id, seg) in segments.into_iter().enumerate() {
+                    let range = offsets[id]..offsets[id + 1];
+                    let rx = rxs[id].lock().unwrap().take().expect("receiver taken twice");
+                    let txs = &txs;
+                    let net = self.net;
+                    let plan = &self.plans[id];
+                    let sorter = self.sorter;
+                    let done_tx = done_tx.clone();
+                    let out_tx = out_tx.clone();
+                    std::thread::Builder::new()
+                        .name(format!("ohhc-p{id}"))
+                        // Iterative quicksort → small stacks are safe even for
+                        // thousands of simulated processors.
+                        .stack_size(256 * 1024)
+                        .spawn_scoped(scope, move || {
+                            let t0 = Instant::now();
+                            let counters = sorter.sort(seg);
+                            let sort_time = t0.elapsed();
 
-                        let mut held = Batch::single(SubArray {
-                            bucket: id as u32,
-                            data,
-                        });
-                        let mut sent = 0usize;
-                        let action = plan.last();
-                        while held.count() < action.wait_for {
-                            let batch = rx.recv().expect("gather channel closed early");
-                            held.merge(batch);
-                        }
-                        debug_assert_eq!(held.count(), action.wait_for);
-                        match action.send_to {
-                            Some(dst) => {
-                                txs[net.id(dst)].send(held).expect("send failed");
-                                sent = 1;
+                            let own = SubArray { bucket: id as u32, range };
+                            let mut held = Batch::single(own);
+                            let mut sent = 0usize;
+                            let action = plan.last();
+                            while held.count() < action.wait_for {
+                                let batch = rx.recv().expect("gather channel closed early");
+                                held.merge(batch);
                             }
-                            None => out_tx.send(held.subarrays).expect("master output"),
-                        }
-                        done_tx.send((id, counters, sort_time, sent)).ok();
-                    })
-                    .expect("thread spawn");
-            }
-            drop(done_tx);
-            drop(out_tx);
-        });
+                            debug_assert_eq!(held.count(), action.wait_for);
+                            match action.send_to {
+                                Some(dst) => {
+                                    txs[net.id(dst)].send(held).expect("send failed");
+                                    sent = 1;
+                                }
+                                None => {
+                                    // The master's gather ends *here* —
+                                    // before the remaining worker threads
+                                    // are joined — so the reported
+                                    // parallel time excludes teardown of
+                                    // up to 2304 OS threads.
+                                    let output = (held.subarrays, Instant::now());
+                                    out_tx.send(output).expect("master output");
+                                }
+                            }
+                            done_tx.send((id, counters, sort_time, sent)).ok();
+                        })
+                        .expect("thread spawn");
+                }
+                drop(done_tx);
+                drop(out_tx);
+            });
+        }
 
-        let subarrays = out_rx
+        let (subarrays, master_finished) = out_rx
             .recv()
             .map_err(|_| Error::Sim("master produced no output".into()))?;
-        let parallel_time = start.elapsed();
+        let parallel_time = master_finished.duration_since(start);
 
         let mut counters = SortCounters::default();
         let mut max_local_sort = Duration::ZERO;
@@ -166,7 +189,7 @@ impl<'a> ThreadedSimulator<'a> {
             messages += sent;
         }
 
-        let sorted = assemble(subarrays, total_len)?;
+        let sorted = finish_gather(subarrays, buckets, total_len)?;
         Ok(ThreadedOutcome {
             sorted,
             parallel_time,
@@ -177,53 +200,53 @@ impl<'a> ThreadedSimulator<'a> {
     }
 
     /// Wave mode: execute the schedule level-by-level on a worker pool.
-    fn run_waves(&self, buckets: Vec<Vec<i32>>, total_len: usize) -> Result<ThreadedOutcome> {
+    fn run_waves(&self, mut buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
         use crate::util::par;
         let n = self.net.total_processors();
         let start = Instant::now();
 
-        // Wave 1: all local sorts in parallel.
+        // Wave 1: all local sorts in parallel, in place on the disjoint
+        // arena segments.
         let workers = par::available_workers();
-        let mut results: Vec<(Vec<i32>, SortCounters, Duration)> =
-            par::par_map(buckets, workers, |mut b| {
+        let sorter = self.sorter;
+        let results: Vec<(SortCounters, Duration)> = {
+            let segments = buckets.segments_mut();
+            par::par_map(segments, workers, move |seg| {
                 let t0 = Instant::now();
-                let c = self.sorter.sort(&mut b);
-                (b, c, t0.elapsed())
-            });
-
-        let counters: SortCounters = results.iter().map(|r| r.1).sum();
-        let max_local_sort = results.iter().map(|r| r.2).max().unwrap_or_default();
-
-        // Waves 2..: drain the gather tree in depth order.  Sequential
-        // tree-walk (the data movement is pure memcpy at this point);
-        // message counting mirrors the Direct mode.
-        let mut held: Vec<Batch> = results
-            .drain(..)
-            .enumerate()
-            .map(|(id, (data, _, _))| {
-                Batch::single(SubArray {
-                    bucket: id as u32,
-                    data,
-                })
+                let c = sorter.sort(seg);
+                (c, t0.elapsed())
             })
-            .collect();
+        };
 
+        let counters: SortCounters = results.iter().map(|r| r.0).sum();
+        let max_local_sort = results.iter().map(|r| r.1).max().unwrap_or_default();
+
+        // Waves 2..: drain the gather tree in depth order.  Pure
+        // bookkeeping — each node forwards descriptor *counts*; no key
+        // ever moves because the arena already is the sorted array.
+        // Message counting mirrors the Direct mode.
+        let mut held: Vec<usize> = vec![1; n];
         let order = gather_wave_order(self.net, self.plans);
         let mut messages = 0usize;
         for id in order {
             let action = self.plans[id].last();
-            debug_assert_eq!(held[id].count(), action.wait_for, "node {id}");
+            debug_assert_eq!(held[id], action.wait_for, "node {id}");
             if let Some(dst) = action.send_to {
-                let batch = std::mem::take(&mut held[id]);
-                held[self.net.id(dst)].merge(batch);
+                let moved = std::mem::take(&mut held[id]);
+                held[self.net.id(dst)] += moved;
                 messages += 1;
             }
         }
-        let subarrays = std::mem::take(&mut held[0]).subarrays;
+        if held[0] != n {
+            return Err(Error::Invariant(format!(
+                "gather terminated with {} of {n} sub-arrays at the master",
+                held[0]
+            )));
+        }
         let parallel_time = start.elapsed();
-        debug_assert_eq!(subarrays.len(), n);
 
-        let sorted = assemble(subarrays, total_len)?;
+        debug_assert_eq!(buckets.total_keys(), total_len);
+        let (sorted, _) = buckets.into_arena();
         Ok(ThreadedOutcome {
             sorted,
             parallel_time,
@@ -255,21 +278,38 @@ pub fn gather_wave_order(net: &Ohhc, plans: &[NodePlan]) -> Vec<usize> {
     order
 }
 
-/// Reassemble the globally sorted array from bucket-ranked sub-arrays.
-fn assemble(mut subarrays: Vec<SubArray>, total_len: usize) -> Result<Vec<i32>> {
-    subarrays.sort_by_key(|s| s.bucket);
-    let mut out = Vec::with_capacity(total_len);
-    for s in &subarrays {
-        out.extend_from_slice(&s.data);
-    }
-    if out.len() != total_len {
+/// Terminate the gather: validate that the master's descriptors cover
+/// every bucket segment exactly, then hand back the arena — which, in
+/// bucket-rank order, is the globally sorted array (zero key copies).
+fn finish_gather(
+    mut subarrays: Vec<SubArray>,
+    buckets: FlatBuckets,
+    total_len: usize,
+) -> Result<Vec<i32>> {
+    if subarrays.len() != buckets.num_buckets() {
         return Err(Error::Invariant(format!(
-            "payload loss: assembled {} of {} keys",
-            out.len(),
-            total_len
+            "payload loss: master holds {} of {} sub-arrays",
+            subarrays.len(),
+            buckets.num_buckets()
         )));
     }
-    Ok(out)
+    subarrays.sort_by_key(|s| s.bucket);
+    let mut covered = 0usize;
+    for (b, s) in subarrays.iter().enumerate() {
+        if s.bucket as usize != b || s.range != buckets.range(b) {
+            return Err(Error::Invariant(format!(
+                "gather descriptor mismatch at bucket {b}: got bucket {} range {:?}",
+                s.bucket, s.range
+            )));
+        }
+        covered += s.range.len();
+    }
+    if covered != total_len {
+        return Err(Error::Invariant(format!(
+            "payload loss: descriptors cover {covered} of {total_len} keys"
+        )));
+    }
+    Ok(buckets.into_arena().0)
 }
 
 #[cfg(test)]
@@ -283,7 +323,7 @@ mod tests {
     /// Scatter `data` into per-processor buckets with the step-point rule
     /// (duplicated minimal divide logic; the real one lives in the
     /// coordinator and is tested there).
-    fn bucketize(data: &[i32], n: usize) -> Vec<Vec<i32>> {
+    fn bucketize(data: &[i32], n: usize) -> FlatBuckets {
         let lo = *data.iter().min().unwrap() as i64;
         let hi = *data.iter().max().unwrap() as i64;
         let sub = (((hi - lo) / n as i64).max(1)) as i64;
@@ -292,7 +332,7 @@ mod tests {
             let b = (((v as i64 - lo) / sub) as usize).min(n - 1);
             buckets[b].push(v);
         }
-        buckets
+        FlatBuckets::from_nested(buckets)
     }
 
     fn run_mode(d: u32, c: Construction, mode: ThreadMode) {
@@ -354,6 +394,26 @@ mod tests {
     }
 
     #[test]
+    fn both_modes_return_the_arena_allocation() {
+        // The zero-copy contract: `sorted` is the divide arena itself,
+        // not a reassembled copy — in both execution modes.
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let plans = gather_plan(&net);
+        let data = workload::random(15_000, 21);
+        for mode in [ThreadMode::Direct, ThreadMode::Waves] {
+            let buckets = bucketize(&data, net.total_processors());
+            let ptr = buckets.arena().as_ptr();
+            let cap = buckets.arena_capacity();
+            let out = ThreadedSimulator::new(&net, &plans)
+                .with_mode(mode)
+                .run(buckets, data.len())
+                .unwrap();
+            assert_eq!(out.sorted.as_ptr(), ptr, "{mode:?} copied keys");
+            assert_eq!(out.sorted.capacity(), cap, "{mode:?} reallocated");
+        }
+    }
+
+    #[test]
     fn wave_order_parents_after_children() {
         let net = Ohhc::new(2, Construction::FullGroup).unwrap();
         let plans = gather_plan(&net);
@@ -372,7 +432,8 @@ mod tests {
     fn rejects_wrong_bucket_count() {
         let net = Ohhc::new(1, Construction::FullGroup).unwrap();
         let plans = gather_plan(&net);
-        let err = ThreadedSimulator::new(&net, &plans).run(vec![vec![]; 7], 0);
+        let buckets = FlatBuckets::from_nested(vec![Vec::new(); 7]);
+        let err = ThreadedSimulator::new(&net, &plans).run(buckets, 0);
         assert!(err.is_err());
     }
 }

@@ -68,6 +68,12 @@ fn acceptance_grid_covers_every_cell_with_at_most_one_build_per_topology() {
     assert_eq!(report.topology_builds, 4);
     assert_eq!(report.cache_hits, report.cells.len() - 4);
 
+    // Each (distribution, elements, seed) workload was generated and
+    // baseline-measured at most once: 3 dists × 2 sizes = 6 workloads.
+    assert_eq!(report.baseline_measures, 6);
+    assert_eq!(report.baseline_hits, report.cells.len() - 6);
+    assert_eq!(campaign.baselines().measures(), 6);
+
     // One aggregated JSON document covers the whole grid.
     let json = report.to_json();
     let cells = json.get("cells").unwrap().as_arr().unwrap();

@@ -1,0 +1,140 @@
+//! Data-plane equivalence tests: the arena-backed [`FlatBuckets`]
+//! representation must reproduce the legacy nested-`Vec` divide
+//! semantics exactly (conservation, cross-bucket order, per-bucket
+//! content, imbalance), both threaded execution modes must agree on
+//! every observable, and the Waves gather must be provably zero-copy —
+//! the sorted output *is* the divide arena.
+
+use ohhc_qsort::config::{Construction, Distribution};
+use ohhc_qsort::coordinator::divide_native;
+use ohhc_qsort::dataplane::FlatBuckets;
+use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::workload;
+
+/// Reference nested-bucket division — the pre-arena data plane, kept
+/// here as the semantic oracle.
+fn nested_reference(data: &[i32], p: usize) -> (Vec<Vec<i32>>, i32, i32) {
+    let lo = *data.iter().min().unwrap();
+    let hi = *data.iter().max().unwrap();
+    let sub = (((hi as i64 - lo as i64) / p as i64).max(1)) as i32;
+    let mut buckets = vec![Vec::new(); p];
+    for &v in data {
+        let b = (((v as i64 - lo as i64) / sub as i64) as usize).min(p - 1);
+        buckets[b].push(v);
+    }
+    (buckets, lo, sub)
+}
+
+#[test]
+fn flat_divide_matches_nested_reference_on_all_distributions() {
+    for dist in Distribution::ALL {
+        for p in [18usize, 36, 144, 2304] {
+            // 150k keys spans multiple scatter chunks on multi-core
+            // hosts, so chunk-order stability is exercised too.
+            let data = workload::generate(dist, 150_000, 11);
+            let d = divide_native(&data, p).unwrap();
+            let (nested, lo, sub) = nested_reference(&data, p);
+
+            // Same step point.
+            assert_eq!(d.lo, lo, "{dist:?} p={p}");
+            assert_eq!(d.sub, sub, "{dist:?} p={p}");
+
+            // Conservation.
+            assert_eq!(d.buckets.num_buckets(), p, "{dist:?} p={p}");
+            assert_eq!(d.buckets.total_keys(), data.len(), "{dist:?} p={p}");
+
+            // Exact per-bucket content: the parallel arena scatter is
+            // stable (chunks write in input order), so it must equal the
+            // sequential nested reference bucket for bucket.
+            assert_eq!(
+                d.buckets,
+                FlatBuckets::from_nested(nested.clone()),
+                "{dist:?} p={p}: bucket layout diverged"
+            );
+
+            // Imbalance off the offset table equals the nested walk.
+            let sizes: Vec<usize> = nested.iter().map(Vec::len).collect();
+            let ideal = data.len() as f64 / p as f64;
+            let nested_imb = *sizes.iter().max().unwrap() as f64 / ideal;
+            assert!(
+                (d.imbalance() - nested_imb).abs() < 1e-12,
+                "{dist:?} p={p}: imbalance {} vs {}",
+                d.imbalance(),
+                nested_imb
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_divide_preserves_cross_bucket_order() {
+    for dist in Distribution::ALL {
+        let data = workload::generate(dist, 60_000, 5);
+        let d = divide_native(&data, 288).unwrap();
+        let mut last_max = i64::MIN;
+        for b in d.buckets.iter() {
+            if let (Some(&mn), Some(&mx)) = (b.iter().min(), b.iter().max()) {
+                assert!(mn as i64 >= last_max, "{dist:?}: bucket order violated");
+                last_max = mx as i64;
+            }
+        }
+    }
+}
+
+#[test]
+fn direct_and_waves_agree_on_all_observables_d1_to_d3() {
+    for d in 1..=3u32 {
+        for c in [Construction::FullGroup, Construction::HalfGroup] {
+            let net = Ohhc::new(d, c).unwrap();
+            let plans = gather_plan(&net);
+            let n = net.total_processors() * 25;
+            let data = workload::generate(Distribution::Local, n, 7 + d as u64);
+            let divided = divide_native(&data, net.total_processors()).unwrap();
+            let direct = ThreadedSimulator::new(&net, &plans)
+                .with_mode(ThreadMode::Direct)
+                .run(divided.buckets.clone(), data.len())
+                .unwrap();
+            let waves = ThreadedSimulator::new(&net, &plans)
+                .with_mode(ThreadMode::Waves)
+                .run(divided.buckets, data.len())
+                .unwrap();
+            assert_eq!(direct.sorted, waves.sorted, "d={d} {c:?}");
+            assert_eq!(direct.counters, waves.counters, "d={d} {c:?}");
+            assert_eq!(direct.messages, waves.messages, "d={d} {c:?}");
+            assert_eq!(
+                direct.messages,
+                net.total_processors() - 1,
+                "d={d} {c:?}: every non-master sends exactly once"
+            );
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(direct.sorted, expect, "d={d} {c:?}");
+        }
+    }
+}
+
+#[test]
+fn waves_gather_performs_zero_key_copies() {
+    // The acceptance criterion: after the divide scatter, no key is
+    // copied again — the sorted output vector is the *same allocation*
+    // as the divide arena (pointer and capacity identical).
+    let net = Ohhc::new(2, Construction::FullGroup).unwrap();
+    let plans = gather_plan(&net);
+    let data = workload::random(200_000, 3);
+    let divided = divide_native(&data, net.total_processors()).unwrap();
+    let arena_ptr = divided.buckets.arena().as_ptr();
+    let arena_cap = divided.buckets.arena_capacity();
+
+    let out = ThreadedSimulator::new(&net, &plans)
+        .with_mode(ThreadMode::Waves)
+        .run(divided.buckets, data.len())
+        .unwrap();
+
+    assert_eq!(out.sorted.as_ptr(), arena_ptr, "gather copied keys");
+    assert_eq!(out.sorted.capacity(), arena_cap, "gather reallocated");
+    let mut expect = data;
+    expect.sort_unstable();
+    assert_eq!(out.sorted, expect);
+}

@@ -4,6 +4,7 @@
 
 use ohhc_qsort::config::{Construction, ExperimentConfig};
 use ohhc_qsort::coordinator::{divide_native, OhhcSorter};
+use ohhc_qsort::dataplane::FlatBuckets;
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::schedule::gather_plan;
 use ohhc_qsort::sim::threaded::ThreadedSimulator;
@@ -80,9 +81,9 @@ fn simulator_rejects_malformed_bucket_sets() {
     let plans = gather_plan(&net);
     let sim = ThreadedSimulator::new(&net, &plans);
     // Too few buckets.
-    assert!(sim.run(vec![vec![1]; 4], 4).is_err());
+    assert!(sim.run(FlatBuckets::from_nested(vec![vec![1]; 4]), 4).is_err());
     // Too many buckets.
-    assert!(sim.run(vec![vec![1]; 40], 40).is_err());
+    assert!(sim.run(FlatBuckets::from_nested(vec![vec![1]; 40]), 40).is_err());
 }
 
 #[test]
@@ -97,7 +98,7 @@ fn assemble_detects_payload_loss() {
     // the invariant check must fire rather than return a short array.
     let net = Ohhc::new(1, Construction::FullGroup).unwrap();
     let plans = gather_plan(&net);
-    let buckets = vec![vec![1i32]; net.total_processors()];
+    let buckets = FlatBuckets::from_nested(vec![vec![1i32]; net.total_processors()]);
     let err = ThreadedSimulator::new(&net, &plans)
         .run(buckets, 9999)
         .unwrap_err();

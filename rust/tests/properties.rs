@@ -62,26 +62,33 @@ fn prop_divide_conserves_and_orders() {
     for case in 0..CASES {
         let v = arbitrary_array(&mut rng, 20_000);
         let p = 1 + rng.below(300) as usize;
-        let d = divide_native(&v, p).unwrap();
-        let total: usize = d.buckets.iter().map(Vec::len).sum();
-        assert_eq!(total, v.len(), "case {case}: conservation");
+        let mut d = divide_native(&v, p).unwrap();
+        assert_eq!(d.buckets.total_keys(), v.len(), "case {case}: conservation");
+        assert_eq!(
+            d.buckets.sizes().iter().sum::<usize>(),
+            v.len(),
+            "case {case}: offset table conservation"
+        );
         // Monotone cross-bucket ordering.
         let mut last_max = i64::MIN;
-        for b in &d.buckets {
+        for b in d.buckets.iter() {
             if let (Some(&mn), Some(&mx)) = (b.iter().min(), b.iter().max()) {
                 assert!(mn as i64 >= last_max, "case {case}: bucket order");
                 last_max = mx as i64;
             }
         }
-        // Sorting buckets then concatenating equals the sorted input.
-        let mut out: Vec<i32> = Vec::with_capacity(v.len());
-        for mut b in d.buckets {
-            b.sort_unstable();
-            out.extend_from_slice(&b);
+        // Sorting every arena segment in place equals the sorted input —
+        // the no-merge property, now with zero concatenation.
+        for seg in d.buckets.segments_mut() {
+            seg.sort_unstable();
         }
         let mut expect = v;
         expect.sort_unstable();
-        assert_eq!(out, expect, "case {case}: no-merge property");
+        assert_eq!(
+            d.buckets.arena(),
+            expect.as_slice(),
+            "case {case}: no-merge property"
+        );
     }
 }
 
