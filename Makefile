@@ -32,11 +32,12 @@ lint:
 bench:
 	cd rust && OHHC_BENCH_FAST=1 $(CARGO) bench
 
-# Non-criterion data-plane bench: median ns per phase (divide, local
-# sort, gather, assemble) for the flat arena vs the legacy nested
-# representation, written as one JSON document (see EXPERIMENTS.md §Perf).
+# Non-criterion JSON benches: the data-plane phase medians (flat arena
+# vs legacy nested, EXPERIMENTS.md §Perf) and the service offered-load
+# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
+	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
 
 campaign: build
 	cd rust && $(CARGO) run --release -- campaign \

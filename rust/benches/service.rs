@@ -1,0 +1,62 @@
+//! Bench: service throughput and tail latency at three offered-load
+//! levels (closed-loop concurrency 1 / 4 / 16).
+//!
+//! `make bench-json` runs this and writes `BENCH_service.json` — jobs
+//! per second plus p50/p99 total latency per level — joining
+//! `BENCH_dataplane.json` as a CI perf-trajectory artifact (see
+//! EXPERIMENTS.md §Service).
+
+use ohhc_qsort::config::Distribution;
+use ohhc_qsort::service::{loadgen, LoadGenConfig, LoadMode, ServiceConfig, SortService};
+use ohhc_qsort::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("OHHC_BENCH_FAST").as_deref() == Ok("1");
+    let jobs = if fast { 120 } else { 400 };
+    let levels = [1usize, 4, 16];
+
+    println!("== service: closed-loop offered load, {jobs} jobs per level");
+    let mut level_docs = Vec::new();
+    for &concurrency in &levels {
+        let gen_cfg = LoadGenConfig {
+            jobs,
+            seed: 7,
+            dimensions: vec![1, 2],
+            distributions: Distribution::ALL.to_vec(),
+            min_elements: 1_000,
+            max_elements: 16_000,
+            deadline: None,
+            mode: LoadMode::Closed { concurrency },
+            ..Default::default()
+        };
+        let service = SortService::start(ServiceConfig::default());
+        let report = loadgen::run(&service, &gen_cfg);
+        service.shutdown();
+        assert_eq!(report.failures, 0, "bench jobs must verify");
+        assert_eq!(report.completed, jobs, "bench jobs must all complete");
+
+        let total = &report.snapshot.total;
+        println!(
+            "concurrency {concurrency:>2}: {:>8.1} jobs/s  p50 {:>10.3?}  p99 {:>10.3?}",
+            report.throughput_jps, total.p50, total.p99
+        );
+        level_docs.push(Json::obj([
+            ("concurrency", Json::int(concurrency)),
+            ("jobs", Json::int(jobs)),
+            ("jobs_per_sec", Json::num(report.throughput_jps)),
+            ("p50_total_ns", Json::num(total.p50.as_nanos() as f64)),
+            ("p99_total_ns", Json::num(total.p99.as_nanos() as f64)),
+            ("wall_secs", Json::num(report.wall.as_secs_f64())),
+        ]));
+    }
+
+    let doc = Json::obj([
+        ("levels", Json::arr(level_docs)),
+        ("mode", Json::str("closed_loop")),
+    ]);
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_service.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_service.json");
+    println!("\nlevel medians → {out}");
+}

@@ -27,6 +27,39 @@ pub struct PlanCache {
     entries: Mutex<HashMap<TopologyKey, Arc<TopologyBundle>>>,
     build_counts: Mutex<HashMap<TopologyKey, usize>>,
     hits: AtomicUsize,
+    leases: Arc<AtomicUsize>,
+}
+
+/// A leased [`TopologyBundle`]: shares the cached bundle and counts as
+/// one outstanding lease until dropped.  Service-pool workers hold one
+/// lease per `(dimension, construction)` they are actively sorting on,
+/// so [`PlanCache::active_leases`] is a live view of how many workers
+/// depend on cached topology state.
+#[derive(Debug)]
+pub struct BundleLease {
+    bundle: Arc<TopologyBundle>,
+    leases: Arc<AtomicUsize>,
+}
+
+impl BundleLease {
+    /// The leased bundle.
+    pub fn bundle(&self) -> &Arc<TopologyBundle> {
+        &self.bundle
+    }
+}
+
+impl std::ops::Deref for BundleLease {
+    type Target = TopologyBundle;
+
+    fn deref(&self) -> &TopologyBundle {
+        &self.bundle
+    }
+}
+
+impl Drop for BundleLease {
+    fn drop(&mut self) {
+        self.leases.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl PlanCache {
@@ -51,6 +84,22 @@ impl PlanCache {
         *self.build_counts.lock().unwrap().entry(key).or_insert(0) += 1;
         entries.insert(key, bundle.clone());
         Ok(bundle)
+    }
+
+    /// Lease the bundle for a key (building it on first use).  The lease
+    /// is counted until dropped — see [`PlanCache::active_leases`].
+    pub fn lease(&self, dimension: u32, construction: Construction) -> Result<BundleLease> {
+        let bundle = self.get_or_build(dimension, construction)?;
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        Ok(BundleLease {
+            bundle,
+            leases: self.leases.clone(),
+        })
+    }
+
+    /// Outstanding [`BundleLease`]s (not yet dropped).
+    pub fn active_leases(&self) -> usize {
+        self.leases.load(Ordering::Relaxed)
     }
 
     /// Total topology builds performed.
@@ -226,6 +275,22 @@ mod tests {
             assert_eq!(count, 1);
         }
         assert_eq!(cache.hits(), 8 * 16 * 2 - 2);
+    }
+
+    #[test]
+    fn leases_share_the_cached_bundle_and_count_until_drop() {
+        let cache = PlanCache::new();
+        assert_eq!(cache.active_leases(), 0);
+        let a = cache.lease(1, Construction::FullGroup).unwrap();
+        let b = cache.lease(1, Construction::FullGroup).unwrap();
+        assert!(Arc::ptr_eq(a.bundle(), b.bundle()), "leases must share");
+        assert_eq!(cache.builds(), 1, "leasing must not rebuild");
+        assert_eq!(cache.active_leases(), 2);
+        assert_eq!(a.net.total_processors(), 36); // Deref surface
+        drop(a);
+        assert_eq!(cache.active_leases(), 1);
+        drop(b);
+        assert_eq!(cache.active_leases(), 0);
     }
 
     #[test]

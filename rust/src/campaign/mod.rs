@@ -32,7 +32,7 @@ mod engine;
 mod report;
 mod spec;
 
-pub use cache::{BaselineCache, PlanCache, WorkloadBaseline};
+pub use cache::{BaselineCache, BundleLease, PlanCache, WorkloadBaseline};
 pub use engine::Campaign;
 pub use report::{CampaignReport, CellReport, CellStatus};
 pub use spec::{GridCell, SweepSpec};

@@ -7,7 +7,7 @@ use crate::campaign::spec::{GridCell, SweepSpec};
 use crate::config::{Backend, Construction, Distribution};
 use crate::coordinator::SortReport;
 use crate::error::Result;
-use crate::metrics::{write_csv_rows, Summary};
+use crate::metrics::{write_csv_rows, Histogram, Summary};
 use crate::sort::SortCounters;
 use crate::util::json::Json;
 
@@ -327,6 +327,17 @@ impl CampaignReport {
             .collect()
     }
 
+    /// Parallel wall times of completed cells as a latency histogram
+    /// (ns) — the same [`Histogram`] the service layer reports SLOs
+    /// from, so campaign and service latencies compare directly.
+    pub fn parallel_latency(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for cell in self.cells.iter().filter(|c| c.status.is_completed()) {
+            h.record((cell.par_secs * 1e9) as u64);
+        }
+        h
+    }
+
     /// The whole campaign as one JSON document.
     pub fn to_json(&self) -> Json {
         let per_dim = self.per_dimension().into_iter().map(|(d, s)| {
@@ -338,6 +349,13 @@ impl CampaignReport {
                 ("min_speedup", Json::num(s.min)),
             ])
         });
+        let lat = self.parallel_latency();
+        let latency = Json::obj([
+            ("count", Json::int(lat.count() as usize)),
+            ("p50_ns", Json::num(lat.percentile(0.50) as f64)),
+            ("p95_ns", Json::num(lat.percentile(0.95) as f64)),
+            ("p99_ns", Json::num(lat.percentile(0.99) as f64)),
+        ]);
         Json::obj([
             ("cells", Json::arr(self.cells.iter().map(CellReport::to_json))),
             ("spec", self.spec.to_json()),
@@ -349,6 +367,7 @@ impl CampaignReport {
                     ("cache_hits", Json::int(self.cache_hits)),
                     ("completed", Json::int(self.completed())),
                     ("failed", Json::int(self.failed())),
+                    ("parallel_latency", latency),
                     ("per_dimension", Json::arr(per_dim)),
                     ("planned", Json::int(self.cells.len())),
                     ("skipped", Json::int(self.skipped())),
@@ -393,6 +412,16 @@ impl CampaignReport {
             self.baseline_measures,
             self.baseline_hits
         );
+        let lat = self.parallel_latency();
+        if !lat.is_empty() {
+            out.push_str(&format!(
+                "parallel latency: p50 {:.3?} p95 {:.3?} p99 {:.3?} over {} cells\n",
+                lat.percentile_duration(0.50),
+                lat.percentile_duration(0.95),
+                lat.percentile_duration(0.99),
+                lat.count()
+            ));
+        }
         for (d, s) in self.per_dimension() {
             out.push_str(&format!(
                 "  d={d}: speedup median {:.3}x (min {:.3}, max {:.3}) over {} cells\n",
@@ -500,6 +529,10 @@ mod tests {
         assert_eq!(summary.get("baseline_measures").unwrap().as_usize(), Some(1));
         assert_eq!(summary.get("baseline_hits").unwrap().as_usize(), Some(2));
         assert!(report.summary_text().contains("baseline cache: 1 measures"));
+        let lat = summary.get("parallel_latency").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(1));
+        assert!(lat.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(report.summary_text().contains("parallel latency: p50"));
         let per_dim = summary.get("per_dimension").unwrap().as_arr().unwrap();
         assert_eq!(per_dim.len(), 1);
         assert_eq!(per_dim[0].get("dimension").unwrap().as_usize(), Some(1));

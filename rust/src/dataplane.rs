@@ -141,6 +141,55 @@ impl FlatBuckets {
     pub fn into_arena(self) -> (Vec<i32>, Vec<usize>) {
         (self.keys, self.offsets)
     }
+
+    /// Borrow a contiguous bucket span as its own bucket view — how a
+    /// batched (multi-tenant) arena exposes one job's sub-range without
+    /// copying.  The span's bucket `b` is this arena's bucket
+    /// `buckets.start + b`.
+    pub fn span(&self, buckets: Range<usize>) -> FlatSpan<'_> {
+        FlatSpan {
+            keys: &self.keys[self.offsets[buckets.start]..self.offsets[buckets.end]],
+            offsets: &self.offsets[buckets.start..=buckets.end],
+        }
+    }
+}
+
+/// Borrowed view of a contiguous bucket span of a [`FlatBuckets`] arena
+/// (see [`FlatBuckets::span`]).  Offsets are the parent arena's —
+/// rebased lazily in the accessors — so constructing a span is two slice
+/// borrows, no allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlatSpan<'a> {
+    keys: &'a [i32],
+    offsets: &'a [usize],
+}
+
+impl<'a> FlatSpan<'a> {
+    /// Buckets in the span.
+    pub fn num_buckets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Keys across the span.
+    pub fn total_keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// The span's slice of the arena, bucket-rank order.
+    pub fn keys(&self) -> &'a [i32] {
+        self.keys
+    }
+
+    /// Bucket `b` of the span (`0`-based within the span).
+    pub fn bucket(&self, b: usize) -> &'a [i32] {
+        let base = self.offsets[0];
+        &self.keys[self.offsets[b] - base..self.offsets[b + 1] - base]
+    }
+
+    /// Span bucket sizes, O(span) off the parent offset table.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.offsets.windows(2).map(|w| w[1] - w[0]).collect()
+    }
 }
 
 #[cfg(test)]
@@ -206,5 +255,23 @@ mod tests {
         let a = sample();
         let b = FlatBuckets::from_parts(vec![3, 1, 7, 5, 6, 9], vec![0, 2, 2, 5, 6]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spans_view_bucket_ranges_without_copying() {
+        let f = sample(); // buckets [3,1] [] [7,5,6] [9]
+        let s = f.span(1..3);
+        assert_eq!(s.num_buckets(), 2);
+        assert_eq!(s.total_keys(), 3);
+        assert_eq!(s.keys(), &[7, 5, 6]);
+        assert_eq!(s.bucket(0), &[] as &[i32]);
+        assert_eq!(s.bucket(1), &[7, 5, 6]);
+        assert_eq!(s.sizes(), vec![0, 3]);
+        // A span's keys alias the arena — same addresses, no copy.
+        assert_eq!(s.keys().as_ptr(), f.bucket(2).as_ptr());
+        // Whole-arena span round-trips.
+        let whole = f.span(0..f.num_buckets());
+        assert_eq!(whole.keys(), f.arena());
+        assert_eq!(whole.num_buckets(), f.num_buckets());
     }
 }

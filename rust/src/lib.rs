@@ -9,9 +9,11 @@
 //!   simulation backend, the instrumented sequential Quick Sort, the
 //!   scatter / local-sort / three-phase-gather coordinator, workload
 //!   generators, metrics, the analytical model (Theorems 1–6), the
-//!   figure-regeneration harness, and the [`campaign`] engine that runs
+//!   figure-regeneration harness, the [`campaign`] engine that runs
 //!   the paper's whole §6 experiment grid concurrently with shared
-//!   topology/plan caches.
+//!   topology/plan caches, and the [`service`] layer — a multi-tenant
+//!   sort service (bounded job queue, sorter pool, small-job batching,
+//!   admission control, latency SLOs) for online serving.
 //! * **Layer 2 (python/compile/model.py)** — the array-division compute
 //!   graph (min/max → SubDivider → bucket-id + histogram) and a bitonic
 //!   block sorter, written in JAX.
@@ -64,6 +66,7 @@ pub mod figures;
 pub mod metrics;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod sim;
 pub mod sort;
 pub mod topology;

@@ -7,6 +7,10 @@
 //! * `campaign` — the paper's §6 experiment grid in one invocation:
 //!   declarative sweep, concurrent jobs, cached topologies, one
 //!   aggregated JSON/CSV report.
+//! * `serve`    — the in-process multi-tenant sort service over a
+//!   jobfile / stdin job stream.
+//! * `loadgen`  — deterministic open-/closed-loop load generation
+//!   against an in-process service, with a JSON latency report.
 //! * `figures`  — regenerate paper tables/figures into CSV + stdout.
 //! * `sweep`    — the paper's full 216-run sweep, CSV per cell.
 //! * `topo`     — topology properties (OHHC and baselines).
@@ -26,7 +30,12 @@ use ohhc_qsort::coordinator::OhhcSorter;
 use ohhc_qsort::ensure;
 use ohhc_qsort::figures::{ALL_IDS, FigureHarness};
 use ohhc_qsort::runtime::ArtifactRegistry;
+use ohhc_qsort::service::{
+    loadgen, JobResult, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig,
+    SortService, Submit,
+};
 use ohhc_qsort::topology::{hhc, hypercube, mesh, ring, NetworkProperties, Ohhc};
+use ohhc_qsort::util::json::Json;
 use ohhc_qsort::util::par;
 use ohhc_qsort::CliResult;
 
@@ -62,6 +71,33 @@ COMMANDS
              --out FILE           aggregated JSON (default results/campaign.json)
              --csv FILE           also write a per-cell CSV table
              --quiet              no per-cell progress lines
+  serve      run the in-process multi-tenant sort service on a job stream
+             --jobs-file FILE     one `dist,elements,seed[,dim[,deadline_ms]]`
+                                  per line (default: read the same from stdin)
+             --workers N          sorter-pool threads (default: host-sized)
+             --queue N            bounded queue capacity (default 256)
+             --rate R             token-bucket admit rate, jobs/s (default: off)
+             --burst N            token-bucket burst (default 16)
+             --shed-depth N       shed at queue depth N (default: off)
+             --batch N            coalesce up to N small jobs (default 8)
+             --small N            batchable-job key threshold (default 4096)
+             --retain             keep sorted outputs in results (memory!)
+             --out FILE           write the service report JSON
+  loadgen    drive an in-process service with a seeded synthetic stream
+             --jobs N             schedule length (default 1000)
+             --seed N             schedule seed (default 7)
+             --rate R             OPEN loop: offered jobs/s
+             --concurrency N      CLOSED loop: jobs in flight (default 8)
+             --dims LIST          dimensions to mix (default 1,2,3)
+             --dists LIST         distributions to mix (default all four)
+             --min-keys N         smallest job (default 2000)
+             --max-keys N         largest job, log-uniform (default 32000)
+             --deadline-ms N      per-job latency SLO
+             --workers/--queue/--burst/--shed-depth/--batch/--small
+                                  service knobs as in `serve`
+             --admit-rate R       service token-bucket admit rate, jobs/s
+             --assert-no-rejects  exit nonzero if anything was rejected
+             --out FILE           write the throughput/latency report JSON
   figures    regenerate paper tables/figures
              --out DIR            CSV output directory (default results)
              --only ID[,ID...]    subset (default: all 26 ids)
@@ -86,20 +122,26 @@ COMMANDS
 ";
 
 /// Tiny argument cursor over `--key value` / `--flag` style options.
+/// Carries the subcommand name so every parse error says **which**
+/// subcommand rejected **which** flag.
 struct Args {
+    cmd: String,
     args: Vec<String>,
 }
 
 impl Args {
-    fn new(args: Vec<String>) -> Self {
-        Args { args }
+    fn new(cmd: &str, args: Vec<String>) -> Self {
+        Args {
+            cmd: cmd.to_string(),
+            args,
+        }
     }
 
     /// Consume `--name value`; error if the flag appears without a value.
     fn opt(&mut self, name: &str) -> CliResult<Option<String>> {
         if let Some(i) = self.args.iter().position(|a| a == name) {
             if i + 1 >= self.args.len() {
-                bail!("{name} requires a value");
+                bail!("{}: {name} requires a value", self.cmd);
             }
             let v = self.args.remove(i + 1);
             self.args.remove(i);
@@ -124,9 +166,23 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.opt(name)? {
-            Some(v) => v.parse::<T>().map_err(|e| format!("bad value for {name}: {e}").into()),
+        match self.opt_parse(name)? {
+            Some(t) => Ok(t),
             None => Ok(default),
+        }
+    }
+
+    /// Parse a typed option with no default (`None` when absent).
+    fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> CliResult<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name)? {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("{}: bad value for {name}: {e}", self.cmd),
+            },
         }
     }
 
@@ -135,7 +191,12 @@ impl Args {
         if self.args.is_empty() {
             Ok(())
         } else {
-            bail!("unrecognized arguments: {:?}", self.args)
+            bail!(
+                "{}: unrecognized arguments: {:?} (run `help` for the {} flag list)",
+                self.cmd,
+                self.args,
+                self.cmd
+            )
         }
     }
 }
@@ -147,10 +208,12 @@ fn main() -> CliResult {
         return Ok(());
     }
     let cmd = argv.remove(0);
-    let mut args = Args::new(argv);
+    let mut args = Args::new(&cmd, argv);
     match cmd.as_str() {
         "run" => cmd_run(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
+        "serve" => cmd_serve(&mut args)?,
+        "loadgen" => cmd_loadgen(&mut args)?,
         "figures" => cmd_figures(&mut args)?,
         "baselines" => cmd_baselines(&mut args)?,
         "sweep" => cmd_sweep(&mut args)?,
@@ -310,6 +373,205 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
         report.cells.len(),
         json_path.display()
     );
+    Ok(())
+}
+
+/// Consume the service knobs shared by `serve` and `loadgen`.
+fn service_config(args: &mut Args) -> CliResult<ServiceConfig> {
+    let defaults = ServiceConfig::default();
+    Ok(ServiceConfig {
+        workers: args.parse_or("--workers", defaults.workers)?,
+        queue_capacity: args.parse_or("--queue", defaults.queue_capacity)?,
+        burst: args.parse_or("--burst", defaults.burst)?,
+        shed_depth: args.parse_or("--shed-depth", defaults.shed_depth)?,
+        batch_max_jobs: args.parse_or("--batch", defaults.batch_max_jobs)?,
+        small_job_threshold: args.parse_or("--small", defaults.small_job_threshold)?,
+        ..defaults
+    })
+}
+
+fn cmd_serve(args: &mut Args) -> CliResult {
+    use std::io::BufRead;
+
+    let jobs_file = args.opt("--jobs-file")?;
+    let out = args.opt("--out")?;
+    let retain = args.flag("--retain");
+    let rate = args.opt_parse::<f64>("--rate")?;
+    let mut cfg = service_config(args)?;
+    cfg.rate = rate;
+    cfg.retain_output = retain;
+
+    // Read the whole job stream up front: jobfile or stdin.
+    let text = match &jobs_file {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            let mut buf = String::new();
+            for line in std::io::stdin().lock().lines() {
+                buf.push_str(&line?);
+                buf.push('\n');
+            }
+            buf
+        }
+    };
+    let mut specs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        specs.push(JobSpec::parse_line(line, lineno as u64)?);
+    }
+    ensure!(!specs.is_empty(), "serve: no jobs in the input stream");
+
+    eprintln!(
+        "serve: {} jobs over {} workers, queue capacity {}",
+        specs.len(),
+        cfg.workers,
+        cfg.queue_capacity
+    );
+    let service = SortService::start(cfg);
+    let mut accepted = 0usize;
+    let mut retries = 0usize;
+    let mut results = Vec::with_capacity(specs.len());
+    for spec in specs {
+        // serve owns a finite stream: on backpressure (queue full, rate,
+        // shed) wait for capacity — draining results meanwhile — instead
+        // of dropping input.  Only invalid jobs and shutdown are fatal.
+        // NOTE: every retry is a fresh submission attempt, so the service
+        // snapshot's submitted/rejected count attempts, not jobs — the
+        // `stream` numbers below are the per-job truth.
+        loop {
+            match service.submit(spec.clone()) {
+                Submit::Accepted { .. } => {
+                    accepted += 1;
+                    break;
+                }
+                Submit::Rejected {
+                    reason: reason @ (RejectReason::Closed | RejectReason::Invalid { .. }),
+                } => bail!("serve: job {} rejected: {reason}", spec.id),
+                Submit::Rejected { .. } => {
+                    retries += 1;
+                    if let Some(r) = service.recv_timeout(std::time::Duration::from_millis(5)) {
+                        results.push(r);
+                    }
+                }
+            }
+        }
+    }
+    while results.len() < accepted {
+        match service.recv_timeout(std::time::Duration::from_secs(300)) {
+            Some(r) => results.push(r),
+            None => bail!("serve: service stalled waiting for results"),
+        }
+    }
+    let (snapshot, rest) = service.shutdown();
+    results.extend(rest);
+    results.sort_by_key(|r| r.id);
+
+    let failures = results.iter().filter(|r| !r.sorted_ok).count();
+    println!(
+        "stream: {accepted} jobs accepted ({retries} backpressure retries), {failures} failures"
+    );
+    print!("{}", snapshot.summary_text());
+    if let Some(path) = out {
+        let stream = Json::obj([
+            ("accepted", Json::int(accepted)),
+            ("backpressure_retries", Json::int(retries)),
+            ("failures", Json::int(failures)),
+        ]);
+        let doc = Json::obj([
+            ("jobs", Json::arr(results.iter().map(JobResult::to_json))),
+            ("service", snapshot.to_json()),
+            ("stream", stream),
+        ]);
+        let mut text = doc.pretty();
+        text.push('\n');
+        if let Some(parent) = PathBuf::from(&path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, text)?;
+        println!("service report      → {path}");
+    }
+    ensure!(failures == 0, "serve: {failures} job(s) failed verification");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &mut Args) -> CliResult {
+    let out = args.opt("--out")?;
+    let assert_no_rejects = args.flag("--assert-no-rejects");
+    let jobs: usize = args.parse_or("--jobs", 1000)?;
+    let seed: u64 = args.parse_or("--seed", 7)?;
+    let rate = args.opt_parse::<f64>("--rate")?;
+    let concurrency: usize = args.parse_or("--concurrency", 8)?;
+    let dims = match args.opt("--dims")? {
+        Some(v) => SweepSpec::parse_dimensions(&v)?,
+        None => vec![1, 2, 3],
+    };
+    let dists = match args.opt("--dists")? {
+        Some(v) => SweepSpec::parse_distributions(&v)?,
+        None => Distribution::ALL.to_vec(),
+    };
+    let min_keys: usize = args.parse_or("--min-keys", 2_000)?;
+    let max_keys: usize = args.parse_or("--max-keys", 32_000)?;
+    let deadline_ms = args.opt_parse::<u64>("--deadline-ms")?;
+    let admit_rate = args.opt_parse::<f64>("--admit-rate")?;
+    let mut cfg = service_config(args)?;
+    cfg.rate = admit_rate;
+
+    let gen_cfg = LoadGenConfig {
+        jobs,
+        seed,
+        dimensions: dims,
+        distributions: dists,
+        min_elements: min_keys,
+        max_elements: max_keys,
+        deadline: deadline_ms.map(std::time::Duration::from_millis),
+        mode: match rate {
+            Some(r) => LoadMode::Open { rate: r },
+            None => LoadMode::Closed { concurrency },
+        },
+        ..Default::default()
+    };
+    eprintln!(
+        "loadgen: {jobs} jobs seed {seed}, {} over {} workers",
+        match gen_cfg.mode {
+            LoadMode::Open { rate } => format!("open loop at {rate} jobs/s"),
+            LoadMode::Closed { concurrency } => format!("closed loop, {concurrency} in flight"),
+        },
+        cfg.workers
+    );
+
+    let service = SortService::start(cfg);
+    let report = loadgen::run(&service, &gen_cfg);
+    service.shutdown();
+
+    print!("{}", report.summary_text());
+    if let Some(path) = out {
+        let mut text = report.to_json().pretty();
+        text.push('\n');
+        if let Some(parent) = PathBuf::from(&path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, text)?;
+        println!("loadgen report      → {path}");
+    }
+    ensure!(
+        report.failures == 0,
+        "loadgen: {} job(s) failed verification",
+        report.failures
+    );
+    ensure!(
+        report.completed == report.accepted,
+        "loadgen: {} accepted jobs never produced results",
+        report.accepted - report.completed
+    );
+    if assert_no_rejects {
+        ensure!(
+            report.rejected == 0,
+            "loadgen: {} job(s) rejected under --assert-no-rejects",
+            report.rejected
+        );
+    }
     Ok(())
 }
 

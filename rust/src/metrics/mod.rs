@@ -4,7 +4,7 @@
 pub mod plot;
 mod stats;
 
-pub use stats::Summary;
+pub use stats::{Histogram, Summary};
 
 use std::io::Write;
 use std::path::Path;

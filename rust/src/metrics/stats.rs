@@ -1,4 +1,8 @@
-//! Small summary statistics for repeated timing runs.
+//! Small summary statistics for repeated timing runs, plus the
+//! fixed-bucket latency [`Histogram`] the service layer and campaign
+//! reports share.
+
+use std::time::Duration;
 
 /// Summary of a sample of observations.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +41,163 @@ impl Summary {
     }
 }
 
+/// Sub-bucket resolution: 2³ = 8 linear sub-buckets per power of two.
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// 8 exact buckets for values 0..8, then 8 sub-buckets for each of the
+/// 61 remaining octaves of the `u64` range.
+const NUM_BUCKETS: usize = SUB + 61 * SUB;
+
+/// Fixed-bucket log-linear histogram for non-negative integer samples
+/// (latencies in ns, sizes in keys, ...).
+///
+/// Values below 8 land in exact buckets; above that, each power-of-two
+/// octave splits into 8 linear sub-buckets, so a bucket's width is at
+/// most 1/8 of its lower bound and [`Histogram::percentile`] (which
+/// reports bucket midpoints, clamped to the observed min/max) is within
+/// ~6.25% of the exact order statistic.  The bucket count is fixed
+/// (`496`), so merging histograms from many workers is a cheap
+/// element-wise add and memory never depends on the sample count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; NUM_BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index of a value.
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            v as usize
+        } else {
+            let p = 63 - v.leading_zeros(); // floor(log2 v), ≥ 3
+            let group = (p - SUB_BITS + 1) as usize;
+            let sub = ((v >> (p - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+            group * SUB + sub
+        }
+    }
+
+    /// Midpoint of bucket `i` (inverse of [`Histogram::index`]).
+    fn midpoint(i: usize) -> u64 {
+        if i < SUB {
+            i as u64
+        } else {
+            let group = (i / SUB) as u32;
+            let sub = (i % SUB) as u64;
+            let width = 1u64 << (group - 1);
+            (SUB as u64 + sub) * width + width / 2
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration as nanoseconds.
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.is_empty() {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Arithmetic mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`), reported as the midpoint of
+    /// the bucket holding the order statistic, clamped to the observed
+    /// `[min, max]`.  Returns 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.is_empty() {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        // The extreme order statistics are tracked exactly.
+        if rank == 1 {
+            return self.min;
+        }
+        if rank == self.total {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::midpoint(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// [`Histogram::percentile`] as a [`Duration`] (samples in ns).
+    pub fn percentile_duration(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.percentile(q))
+    }
+
+    /// Absorb another histogram (element-wise bucket add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +224,99 @@ mod tests {
     #[should_panic(expected = "empty sample")]
     fn empty_sample_panics() {
         Summary::of(&[]);
+    }
+
+    /// Exact quantile from a sorted sample — the oracle the histogram is
+    /// checked against.
+    fn oracle(sorted: &[u64], q: f64) -> u64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn histogram_bucket_index_is_monotone_and_invertible() {
+        // Indices never decrease with the value, and every bucket's
+        // midpoint maps back into that bucket.
+        let mut last = 0usize;
+        for v in (0..4096u64).chain((12..60).map(|p| (1u64 << p) - 1)) {
+            let i = Histogram::index(v);
+            assert!(i >= last, "index regressed at {v}");
+            last = i;
+        }
+        for i in 0..NUM_BUCKETS {
+            assert_eq!(Histogram::index(Histogram::midpoint(i)), i, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_track_sorted_vector_oracle() {
+        let mut rng = crate::util::rng::Rng::new(0x1157);
+        for scale in [100u64, 10_000, 50_000_000] {
+            let mut h = Histogram::new();
+            let mut values: Vec<u64> = (0..5_000).map(|_| rng.below(scale) + 1).collect();
+            for &v in &values {
+                h.record(v);
+            }
+            values.sort_unstable();
+            for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let exact = oracle(&values, q);
+                let approx = h.percentile(q);
+                let tol = exact / 8 + 1;
+                assert!(
+                    approx.abs_diff(exact) <= tol,
+                    "scale {scale} q {q}: approx {approx} vs exact {exact}"
+                );
+            }
+            assert_eq!(h.percentile(1.0), *values.last().unwrap());
+            assert_eq!(h.count(), 5_000);
+            let mean = values.iter().sum::<u64>() as f64 / values.len() as f64;
+            assert!((h.mean() - mean).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_recording() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let values: Vec<u64> = (0..2_000).map(|_| rng.below(1 << 30)).collect();
+        let mut whole = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in values.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert_eq!(a.percentile(0.95), whole.percentile(0.95));
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4, 5, 6, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 7);
+        assert_eq!(h.percentile(0.5), 3);
+        assert_eq!(h.percentile(1.0), 7);
+    }
+
+    #[test]
+    fn histogram_empty_and_durations() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = Histogram::new();
+        h.record_duration(Duration::from_micros(250));
+        assert_eq!(h.count(), 1);
+        let p = h.percentile_duration(0.5);
+        assert_eq!(p, Duration::from_nanos(250_000));
     }
 }

@@ -1,0 +1,263 @@
+//! Job coalescing: many small jobs, one arena, one pipeline pass.
+//!
+//! A topology with `P` processors sorting a 2,000-key job wastes almost
+//! the whole machine.  The batcher instead packs `K` small jobs into
+//! **one** [`FlatBuckets`] arena: each job receives a contiguous span of
+//! the `P` buckets (proportional to its size, at least one), and its
+//! keys are divided by its **own** step point into that span.  Bucket
+//! ranks then read `job 0's buckets … job K−1's buckets`, so after the
+//! standard local-sort + gather pass the arena holds every job's output
+//! sorted and contiguous — splitting results back per job is offset-table
+//! arithmetic ([`CoalescedBatch::job_range`]), the same machinery the
+//! flat data plane already uses for buckets.
+//!
+//! Because each job has a private step point and private buckets, jobs
+//! never mix keys: correctness per job is exactly the single-job
+//! pipeline's (the property test in `tests/service.rs` checks split-back
+//! equals a per-job sequential sort for every distribution).
+
+use std::ops::Range;
+
+use crate::coordinator::BucketFn;
+use crate::dataplane::{FlatBuckets, FlatSpan};
+use crate::error::{Error, Result};
+
+/// The coalesced arena plus the per-job bookkeeping to split it back.
+#[derive(Debug, Clone)]
+pub struct CoalescedBatch {
+    /// One arena with exactly the topology's bucket count.
+    pub buckets: FlatBuckets,
+    /// Per-job arena key ranges, in batch order.
+    job_ranges: Vec<Range<usize>>,
+    /// Per-job bucket spans, in batch order.
+    job_buckets: Vec<Range<usize>>,
+}
+
+impl CoalescedBatch {
+    /// Jobs in the batch.
+    pub fn num_jobs(&self) -> usize {
+        self.job_ranges.len()
+    }
+
+    /// Arena key range of job `j` — where its (sorted) output lives.
+    pub fn job_range(&self, j: usize) -> Range<usize> {
+        self.job_ranges[j].clone()
+    }
+
+    /// Bucket span of job `j`.
+    pub fn job_buckets(&self, j: usize) -> Range<usize> {
+        self.job_buckets[j].clone()
+    }
+
+    /// Job `j` as a borrowed bucket view of the arena.
+    pub fn job_span(&self, j: usize) -> FlatSpan<'_> {
+        self.buckets.span(self.job_buckets[j].clone())
+    }
+
+    /// Split a sorted arena (the pipeline's output, same layout) back
+    /// into per-job slices, batch order.
+    pub fn split_back<'a>(&self, sorted: &'a [i32]) -> Vec<&'a [i32]> {
+        self.job_ranges.iter().map(|r| &sorted[r.clone()]).collect()
+    }
+}
+
+/// Distribute `total_buckets` over jobs proportionally to their sizes,
+/// at least one bucket each, largest-remainder rounding (deterministic,
+/// ties to the earlier job).  Requires `sizes.len() <= total_buckets`.
+pub fn allot_buckets(sizes: &[usize], total_buckets: usize) -> Result<Vec<usize>> {
+    let jobs = sizes.len();
+    if jobs == 0 {
+        return Err(Error::Config("cannot allot buckets to zero jobs".into()));
+    }
+    if jobs > total_buckets {
+        return Err(Error::Config(format!(
+            "{jobs} jobs exceed the topology's {total_buckets} buckets"
+        )));
+    }
+    let total_keys: usize = sizes.iter().sum();
+    let spare = total_buckets - jobs; // beyond the 1-per-job floor
+    if spare == 0 || total_keys == 0 {
+        let mut allot = vec![1usize; jobs];
+        // Park any spare buckets on the first job (total must be exact).
+        allot[0] += spare;
+        return Ok(allot);
+    }
+    // Floor shares plus largest fractional remainders.
+    let mut allot = Vec::with_capacity(jobs);
+    let mut remainders: Vec<(usize, usize)> = Vec::with_capacity(jobs); // (rem, job)
+    let mut assigned = 0usize;
+    for (j, &size) in sizes.iter().enumerate() {
+        let exact_num = size * spare; // share = exact_num / total_keys
+        let floor = exact_num / total_keys;
+        allot.push(1 + floor);
+        assigned += floor;
+        remainders.push((exact_num % total_keys, j));
+    }
+    // Hand the leftover buckets to the largest remainders; ties resolve
+    // to the earlier job for determinism.
+    remainders.sort_by_key(|&(rem, j)| (std::cmp::Reverse(rem), j));
+    for &(_, j) in remainders.iter().take(total_buckets - jobs - assigned) {
+        allot[j] += 1;
+    }
+    debug_assert_eq!(allot.iter().sum::<usize>(), total_buckets);
+    Ok(allot)
+}
+
+/// Coalesce `jobs` (each a key slice) into one arena of exactly
+/// `total_buckets` buckets.  Each job is divided by its own step point
+/// into its allotted bucket span; keys land directly at their final
+/// arena positions (one write per key, no intermediate buckets).
+pub fn coalesce(jobs: &[&[i32]], total_buckets: usize) -> Result<CoalescedBatch> {
+    for (j, data) in jobs.iter().enumerate() {
+        if data.is_empty() {
+            return Err(Error::Config(format!("batch job {j} is empty")));
+        }
+    }
+    let sizes: Vec<usize> = jobs.iter().map(|d| d.len()).collect();
+    let allot = allot_buckets(&sizes, total_buckets)?;
+    let total_keys: usize = sizes.iter().sum();
+
+    let mut arena = vec![0i32; total_keys];
+    let mut offsets = Vec::with_capacity(total_buckets + 1);
+    offsets.push(0usize);
+    let mut job_ranges = Vec::with_capacity(jobs.len());
+    let mut job_buckets = Vec::with_capacity(jobs.len());
+    let mut arena_base = 0usize;
+    let mut bucket_base = 0usize;
+
+    for (&data, &buckets_j) in jobs.iter().zip(&allot) {
+        // Per-job step point (paper §3.1, scoped to the job's keys).
+        let mut lo = data[0];
+        let mut hi = data[0];
+        for &v in data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let sub = (((hi as i64 - lo as i64) / buckets_j as i64).max(1)) as i32;
+        let classify = BucketFn::new(lo, sub, buckets_j);
+
+        // Pass 1: cache ids + histogram (jobs are small by admission —
+        // the batcher only sees sub-threshold jobs — so this is serial).
+        let mut ids: Vec<u16> = Vec::with_capacity(data.len());
+        let mut hist = vec![0usize; buckets_j];
+        for &v in data {
+            let b = classify.of(v);
+            ids.push(b as u16);
+            hist[b] += 1;
+        }
+
+        // Absolute offset table entries + per-bucket write cursors.
+        let mut cursors = Vec::with_capacity(buckets_j);
+        let mut acc = arena_base;
+        for &h in &hist {
+            cursors.push(acc);
+            acc += h;
+            offsets.push(acc);
+        }
+        debug_assert_eq!(acc, arena_base + data.len());
+
+        // Pass 2: scatter through the cached ids.
+        for (&v, &b) in data.iter().zip(&ids) {
+            let cursor = &mut cursors[b as usize];
+            arena[*cursor] = v;
+            *cursor += 1;
+        }
+
+        job_ranges.push(arena_base..arena_base + data.len());
+        job_buckets.push(bucket_base..bucket_base + buckets_j);
+        arena_base += data.len();
+        bucket_base += buckets_j;
+    }
+    debug_assert_eq!(bucket_base, total_buckets);
+    debug_assert_eq!(offsets.len(), total_buckets + 1);
+
+    Ok(CoalescedBatch {
+        buckets: FlatBuckets::from_parts(arena, offsets),
+        job_ranges,
+        job_buckets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn allotment_is_proportional_exact_and_floored() {
+        assert_eq!(allot_buckets(&[100], 36).unwrap(), vec![36]);
+        let a = allot_buckets(&[3000, 1000], 36).unwrap();
+        assert_eq!(a.iter().sum::<usize>(), 36);
+        assert!(a[0] > a[1], "{a:?}");
+        assert!(a[1] >= 1);
+        // One bucket per job even for extreme skew.
+        let a = allot_buckets(&[1_000_000, 1, 1, 1], 36).unwrap();
+        assert_eq!(a.iter().sum::<usize>(), 36);
+        assert!(a[1..].iter().all(|&b| b >= 1), "{a:?}");
+        // Exactly as many buckets as jobs: 1 each.
+        assert_eq!(allot_buckets(&[5, 5, 5], 3).unwrap(), vec![1, 1, 1]);
+        // More jobs than buckets is a config error.
+        assert!(allot_buckets(&[1, 1, 1], 2).is_err());
+        assert!(allot_buckets(&[], 2).is_err());
+    }
+
+    #[test]
+    fn coalesce_lays_jobs_out_contiguously_in_order() {
+        let a = workload::random(2_000, 1);
+        let b = workload::sorted(1_000, 2);
+        let c = workload::reverse_sorted(500, 3);
+        let batch = coalesce(&[&a, &b, &c], 36).unwrap();
+        assert_eq!(batch.num_jobs(), 3);
+        assert_eq!(batch.buckets.num_buckets(), 36);
+        assert_eq!(batch.buckets.total_keys(), 3_500);
+        assert_eq!(batch.job_range(0), 0..2_000);
+        assert_eq!(batch.job_range(1), 2_000..3_000);
+        assert_eq!(batch.job_range(2), 3_000..3_500);
+        // Bucket spans tile 0..36.
+        assert_eq!(batch.job_buckets(0).start, 0);
+        assert_eq!(batch.job_buckets(2).end, 36);
+        // Each job's span holds exactly its multiset of keys.
+        for (j, data) in [&a, &b, &c].into_iter().enumerate() {
+            let span = batch.job_span(j);
+            let mut got = span.keys().to_vec();
+            let mut expect = data.clone();
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect, "job {j}");
+        }
+    }
+
+    #[test]
+    fn sorted_segments_make_each_job_sorted() {
+        let a = workload::random(3_000, 7);
+        let b = workload::local_distribution(1_500, 8);
+        let mut batch = coalesce(&[&a, &b], 144).unwrap();
+        for seg in batch.buckets.segments_mut() {
+            seg.sort_unstable();
+        }
+        let (arena, _) = batch.buckets.clone().into_arena();
+        let outs = batch.split_back(&arena);
+        for (out, input) in outs.iter().zip([&a, &b]) {
+            let mut expect = input.clone();
+            expect.sort_unstable();
+            assert_eq!(*out, expect.as_slice());
+        }
+    }
+
+    #[test]
+    fn single_job_batch_matches_divide_native() {
+        // One job spanning every bucket is exactly the coordinator's
+        // divide: same arena layout, same offsets.
+        let data = workload::random(5_000, 11);
+        let batch = coalesce(&[&data], 36).unwrap();
+        let divided = crate::coordinator::divide_native(&data, 36).unwrap();
+        assert_eq!(batch.buckets, divided.buckets);
+    }
+
+    #[test]
+    fn rejects_empty_jobs() {
+        let a: Vec<i32> = vec![1, 2];
+        let b: Vec<i32> = Vec::new();
+        assert!(coalesce(&[&a, &b], 36).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Job specifications and results — the service's tenant-facing types.
+
+use std::time::Duration;
+
+use crate::config::{Construction, Distribution};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::workload;
+
+/// One sort job: what to sort (a seeded synthetic workload) and on which
+/// topology, plus an optional per-job latency SLO.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Caller-assigned id, echoed in the result.
+    pub id: u64,
+    /// Input distribution.
+    pub distribution: Distribution,
+    /// Keys to sort.
+    pub elements: usize,
+    /// Workload seed — `(distribution, elements, seed)` fully determines
+    /// the input, so results are reproducible job by job.
+    pub seed: u64,
+    /// OHHC dimension of the topology the job runs on.
+    pub dimension: u32,
+    /// Construction rule.
+    pub construction: Construction,
+    /// Latency SLO: total (queue + sort) time budget, if any.
+    pub deadline: Option<Duration>,
+}
+
+impl JobSpec {
+    /// Sanity-check the spec before it enters the queue.
+    pub fn validate(&self) -> Result<()> {
+        if self.elements == 0 {
+            return Err(Error::Config(format!("job {}: elements must be > 0", self.id)));
+        }
+        if !(1..=6).contains(&self.dimension) {
+            return Err(Error::Config(format!(
+                "job {}: dimension must be 1..=6, got {}",
+                self.id, self.dimension
+            )));
+        }
+        Ok(())
+    }
+
+    /// Generate the job's input keys (deterministic in the spec).
+    pub fn generate(&self) -> Vec<i32> {
+        workload::generate(self.distribution, self.elements, self.seed)
+    }
+
+    /// Parse a jobfile line: `distribution,elements,seed[,dimension[,deadline_ms]]`
+    /// (whitespace around fields ignored).  `id` is assigned by the
+    /// caller, typically the line number.
+    pub fn parse_line(line: &str, id: u64) -> Result<JobSpec> {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if !(3..=5).contains(&fields.len()) {
+            return Err(Error::Config(format!(
+                "job line needs `dist,elements,seed[,dimension[,deadline_ms]]`, got `{line}`"
+            )));
+        }
+        let bad = |what: &str, v: &str| Error::Config(format!("job {id}: bad {what} `{v}`"));
+        let spec = JobSpec {
+            id,
+            distribution: Distribution::parse(fields[0])?,
+            elements: fields[1].parse().map_err(|_| bad("elements", fields[1]))?,
+            seed: fields[2].parse().map_err(|_| bad("seed", fields[2]))?,
+            dimension: match fields.get(3) {
+                Some(v) => v.parse().map_err(|_| bad("dimension", v))?,
+                None => 1,
+            },
+            construction: Construction::FullGroup,
+            deadline: match fields.get(4) {
+                Some(v) => Some(Duration::from_millis(
+                    v.parse().map_err(|_| bad("deadline_ms", v))?,
+                )),
+                None => None,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// What the service hands back for one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// The spec's id.
+    pub id: u64,
+    /// Keys sorted.
+    pub elements: usize,
+    /// Topology dimension the job ran on.
+    pub dimension: u32,
+    /// Did the job execute as part of a coalesced batch?
+    pub batched: bool,
+    /// Time from accept to execution start.
+    pub queue_latency: Duration,
+    /// Time in the divide → sort → gather pipeline (a batched job
+    /// reports its batch's pipeline time).
+    pub sort_latency: Duration,
+    /// Queue + sort.
+    pub total_latency: Duration,
+    /// The SLO the spec carried, if any.
+    pub deadline: Option<Duration>,
+    /// `total_latency <= deadline`, when a deadline was set.
+    pub deadline_met: Option<bool>,
+    /// Output verified sorted **and** a multiset-permutation of the
+    /// input (checked on every job, never assumed).
+    pub sorted_ok: bool,
+    /// Order-sensitive FNV-1a checksum of the sorted output — the
+    /// determinism witness loadgen compares across runs.
+    pub checksum: u64,
+    /// Execution error, if the pipeline failed.
+    pub error: Option<String>,
+    /// The sorted keys (only when the service retains outputs).
+    pub output: Option<Vec<i32>>,
+}
+
+impl JobResult {
+    /// The result as a JSON object (output keys omitted).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("batched", Json::Bool(self.batched)),
+            ("checksum", Json::str(format!("{:016x}", self.checksum))),
+            ("deadline_met", self.deadline_met.map_or(Json::Null, Json::Bool)),
+            ("dimension", Json::int(self.dimension as usize)),
+            ("elements", Json::int(self.elements)),
+            ("error", self.error.as_deref().map_or(Json::Null, Json::str)),
+            ("id", Json::int(self.id as usize)),
+            ("queue_ns", Json::num(self.queue_latency.as_nanos() as f64)),
+            ("sort_ns", Json::num(self.sort_latency.as_nanos() as f64)),
+            ("sorted_ok", Json::Bool(self.sorted_ok)),
+            ("total_ns", Json::num(self.total_latency.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Order-sensitive FNV-1a over a byte stream.
+pub fn fnv1a_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Order-sensitive FNV-1a over the key bytes — equal exactly when two
+/// runs produced byte-identical outputs in the same order.
+pub fn fnv1a(keys: &[i32]) -> u64 {
+    fnv1a_bytes(keys.iter().flat_map(|&k| (k as u32).to_le_bytes()))
+}
+
+/// Order-insensitive multiset fingerprint: sum of per-key SplitMix64
+/// hashes.  Two arrays agree iff (up to astronomically unlikely
+/// collisions) they hold the same keys with the same multiplicities —
+/// the conservation half of the per-job verification, checkable without
+/// a reference sort.
+pub fn multiset_fingerprint(keys: &[i32]) -> u64 {
+    let mut acc: u64 = keys.len() as u64;
+    for &k in keys {
+        let mut z = (k as u32 as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        acc = acc.wrapping_add(z ^ (z >> 31));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_full_and_minimal() {
+        let j = JobSpec::parse_line("random, 10000, 42, 2, 250", 7).unwrap();
+        assert_eq!(j.id, 7);
+        assert_eq!(j.distribution, Distribution::Random);
+        assert_eq!(j.elements, 10_000);
+        assert_eq!(j.seed, 42);
+        assert_eq!(j.dimension, 2);
+        assert_eq!(j.deadline, Some(Duration::from_millis(250)));
+
+        let j = JobSpec::parse_line("sorted,500,1", 0).unwrap();
+        assert_eq!(j.dimension, 1);
+        assert_eq!(j.deadline, None);
+    }
+
+    #[test]
+    fn parse_line_rejects_malformed_input() {
+        for bad in [
+            "random,10000",          // too few fields
+            "random,10000,1,2,5,9",  // too many
+            "nosuch,10000,1",        // unknown distribution
+            "random,zero,1",         // non-numeric elements
+            "random,0,1",            // empty job
+            "random,100,1,9",        // dimension out of range
+        ] {
+            assert!(JobSpec::parse_line(bad, 0).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_in_the_spec() {
+        let spec = JobSpec::parse_line("reverse,2000,99", 1).unwrap();
+        assert_eq!(spec.generate(), spec.generate());
+        let other = JobSpec {
+            seed: 100,
+            ..spec.clone()
+        };
+        assert_ne!(spec.generate(), other.generate());
+    }
+
+    #[test]
+    fn checksums_distinguish_order_and_content() {
+        let a = [3, 1, 2];
+        let b = [1, 2, 3];
+        let c = [1, 2, 4];
+        assert_ne!(fnv1a(&a), fnv1a(&b), "fnv is order-sensitive");
+        assert_eq!(
+            multiset_fingerprint(&a),
+            multiset_fingerprint(&b),
+            "multiset fingerprint is order-insensitive"
+        );
+        assert_ne!(multiset_fingerprint(&b), multiset_fingerprint(&c));
+        assert_ne!(
+            multiset_fingerprint(&[1, 1, 2]),
+            multiset_fingerprint(&[1, 2, 2]),
+            "multiplicities count"
+        );
+    }
+
+    #[test]
+    fn result_json_carries_the_slo_fields() {
+        let r = JobResult {
+            id: 3,
+            elements: 100,
+            dimension: 1,
+            batched: true,
+            queue_latency: Duration::from_micros(50),
+            sort_latency: Duration::from_micros(450),
+            total_latency: Duration::from_micros(500),
+            deadline: Some(Duration::from_millis(1)),
+            deadline_met: Some(true),
+            sorted_ok: true,
+            checksum: 0xabcd,
+            error: None,
+            output: None,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("deadline_met").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("sorted_ok").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("total_ns").unwrap().as_f64(), Some(500_000.0));
+    }
+}

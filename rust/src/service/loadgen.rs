@@ -1,0 +1,335 @@
+//! Deterministic load generation: seeded open- and closed-loop job
+//! streams with mixed distributions, sizes, and topology dimensions.
+//!
+//! The schedule is a pure function of [`LoadGenConfig`] — same seed,
+//! same jobs, same per-job workloads — so a loadgen run is a
+//! reproducible experiment: the determinism test replays a seed and
+//! asserts byte-identical sorted outputs (per-job FNV checksums).
+//!
+//! * **Closed loop** keeps a fixed number of jobs in flight: submit the
+//!   next job when one completes.  Offered load adapts to service
+//!   capacity; latency reflects service time (queueing is bounded by
+//!   the concurrency).
+//! * **Open loop** submits on a fixed arrival clock regardless of
+//!   completions — the regime where queues grow and admission control
+//!   earns its keep.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{Construction, Distribution};
+use crate::service::job::{fnv1a_bytes, JobResult, JobSpec};
+use crate::service::pool::SortService;
+use crate::service::stats::ServiceSnapshot;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How jobs are offered to the service.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Fixed arrival rate in jobs/second, completions ignored.
+    Open {
+        /// Arrival rate.
+        rate: f64,
+    },
+    /// Fixed number of jobs in flight.
+    Closed {
+        /// In-flight ceiling.
+        concurrency: usize,
+    },
+}
+
+/// Generator knobs.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Jobs to generate.
+    pub jobs: usize,
+    /// Schedule seed (drives every per-job choice).
+    pub seed: u64,
+    /// Topology dimensions to mix over.
+    pub dimensions: Vec<u32>,
+    /// Construction rule for every job.
+    pub construction: Construction,
+    /// Distributions to mix over.
+    pub distributions: Vec<Distribution>,
+    /// Smallest job, keys.
+    pub min_elements: usize,
+    /// Largest job, keys (sizes are log-uniform in between).
+    pub max_elements: usize,
+    /// Per-job latency SLO, if any.
+    pub deadline: Option<Duration>,
+    /// Open or closed loop.
+    pub mode: LoadMode,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            jobs: 1_000,
+            seed: 7,
+            dimensions: vec![1, 2, 3],
+            construction: Construction::FullGroup,
+            distributions: Distribution::ALL.to_vec(),
+            min_elements: 2_000,
+            max_elements: 32_000,
+            deadline: None,
+            mode: LoadMode::Closed { concurrency: 8 },
+        }
+    }
+}
+
+/// Expand the config into its deterministic job schedule.
+pub fn schedule(cfg: &LoadGenConfig) -> Vec<JobSpec> {
+    assert!(!cfg.dimensions.is_empty(), "loadgen needs at least one dimension");
+    assert!(!cfg.distributions.is_empty(), "loadgen needs at least one distribution");
+    let mut rng = Rng::new(cfg.seed);
+    let lo = cfg.min_elements.max(1) as f64;
+    let hi = cfg.max_elements.max(cfg.min_elements).max(1) as f64;
+    (0..cfg.jobs)
+        .map(|i| {
+            let distribution =
+                cfg.distributions[rng.below(cfg.distributions.len() as u64) as usize];
+            let dimension = cfg.dimensions[rng.below(cfg.dimensions.len() as u64) as usize];
+            let elements = (lo * (hi / lo).powf(rng.f64())).round() as usize;
+            JobSpec {
+                id: i as u64,
+                distribution,
+                elements,
+                seed: rng.next_u64(),
+                dimension,
+                construction: cfg.construction,
+                deadline: cfg.deadline,
+            }
+        })
+        .collect()
+}
+
+/// What one loadgen run produced.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Jobs in the schedule.
+    pub jobs: usize,
+    /// Accepted by the service.
+    pub accepted: usize,
+    /// Rejected at the front door.
+    pub rejected: usize,
+    /// Results received with verified output.
+    pub completed: usize,
+    /// Results received that failed verification or errored.
+    pub failures: usize,
+    /// Deadline misses among received results.
+    pub deadline_missed: usize,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Verified completions per wall second.
+    pub throughput_jps: f64,
+    /// Service stats frozen at drain time.
+    pub snapshot: ServiceSnapshot,
+    /// `(job id, output checksum)` sorted by id — the determinism
+    /// witness compared across runs.
+    pub checksums: Vec<(u64, u64)>,
+}
+
+impl LoadReport {
+    /// One digest over every `(id, checksum)` pair — equal between two
+    /// runs iff every job produced identical output.
+    pub fn checksum_digest(&self) -> u64 {
+        fnv1a_bytes(self.checksums.iter().flat_map(|&(id, sum)| {
+            id.to_le_bytes().into_iter().chain(sum.to_le_bytes())
+        }))
+    }
+
+    /// The report as one JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("accepted", Json::int(self.accepted)),
+            ("checksum_digest", Json::str(format!("{:016x}", self.checksum_digest()))),
+            ("completed", Json::int(self.completed)),
+            ("deadline_missed", Json::int(self.deadline_missed)),
+            ("failures", Json::int(self.failures)),
+            ("jobs", Json::int(self.jobs)),
+            ("rejected", Json::int(self.rejected)),
+            ("service", self.snapshot.to_json()),
+            ("throughput_jps", Json::num(self.throughput_jps)),
+            ("wall_secs", Json::num(self.wall.as_secs_f64())),
+        ])
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary_text(&self) -> String {
+        format!(
+            "loadgen: {} jobs → {} accepted, {} rejected, {} completed, {} failures\n\
+             wall {:.3?}, throughput {:.1} jobs/s, deadline misses {}\n{}",
+            self.jobs,
+            self.accepted,
+            self.rejected,
+            self.completed,
+            self.failures,
+            self.wall,
+            self.throughput_jps,
+            self.deadline_missed,
+            self.snapshot.summary_text()
+        )
+    }
+}
+
+/// Drive a running service with the config's schedule and collect the
+/// report.  Waits (bounded) for every accepted job's result — the
+/// service contract is one result per accepted job, so a stall here is
+/// a service bug, surfaced by the timeout rather than a hang.
+pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
+    const STALL: Duration = Duration::from_secs(120);
+    let specs = schedule(cfg);
+    let t0 = Instant::now();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut results: Vec<JobResult> = Vec::with_capacity(specs.len());
+
+    match cfg.mode {
+        LoadMode::Closed { concurrency } => {
+            let target = concurrency.max(1);
+            let mut next = 0usize;
+            let mut inflight = 0usize;
+            loop {
+                while next < specs.len() && inflight < target {
+                    if service.submit(specs[next].clone()).is_accepted() {
+                        accepted += 1;
+                        inflight += 1;
+                    } else {
+                        rejected += 1;
+                    }
+                    next += 1;
+                }
+                if inflight == 0 {
+                    break;
+                }
+                match service.recv_timeout(STALL) {
+                    Some(r) => {
+                        results.push(r);
+                        inflight -= 1;
+                    }
+                    None => break, // stalled service — report what we have
+                }
+            }
+        }
+        LoadMode::Open { rate } => {
+            let gap = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+            for (i, spec) in specs.iter().enumerate() {
+                let due = t0 + gap.mul_f64(i as f64);
+                // Drain completions while holding to the arrival clock.
+                loop {
+                    let now = Instant::now();
+                    if now >= due {
+                        break;
+                    }
+                    let wait = (due - now).min(Duration::from_millis(2));
+                    if let Some(r) = service.recv_timeout(wait) {
+                        results.push(r);
+                    }
+                }
+                if service.submit(spec.clone()).is_accepted() {
+                    accepted += 1;
+                } else {
+                    rejected += 1;
+                }
+            }
+            while results.len() < accepted {
+                match service.recv_timeout(STALL) {
+                    Some(r) => results.push(r),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    let wall = t0.elapsed();
+    let completed = results.iter().filter(|r| r.sorted_ok && r.error.is_none()).count();
+    let failures = results.len() - completed;
+    let deadline_missed = results.iter().filter(|r| r.deadline_met == Some(false)).count();
+    let mut checksums: Vec<(u64, u64)> = results.iter().map(|r| (r.id, r.checksum)).collect();
+    checksums.sort_unstable();
+    LoadReport {
+        jobs: specs.len(),
+        accepted,
+        rejected,
+        completed,
+        failures,
+        deadline_missed,
+        wall,
+        throughput_jps: completed as f64 / wall.as_secs_f64().max(1e-9),
+        snapshot: service.stats().snapshot(),
+        checksums,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let cfg = LoadGenConfig {
+            jobs: 64,
+            ..Default::default()
+        };
+        let a = schedule(&cfg);
+        let b = schedule(&cfg);
+        assert_eq!(a, b);
+        let c = schedule(&LoadGenConfig { seed: 8, ..cfg });
+        assert_ne!(a, c, "schedule must depend on the seed");
+        assert_eq!(a.len(), 64);
+        // Ids are the schedule order.
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn schedule_mixes_axes_within_bounds() {
+        let cfg = LoadGenConfig {
+            jobs: 400,
+            min_elements: 1_000,
+            max_elements: 16_000,
+            ..Default::default()
+        };
+        let specs = schedule(&cfg);
+        let mut dims: Vec<u32> = specs.iter().map(|s| s.dimension).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        assert_eq!(dims, vec![1, 2, 3], "400 draws must hit every dimension");
+        let mut dists: Vec<&str> = specs.iter().map(|s| s.distribution.label()).collect();
+        dists.sort_unstable();
+        dists.dedup();
+        assert_eq!(dists.len(), 4, "400 draws must hit every distribution");
+        assert!(specs.iter().all(|s| (1_000..=16_000).contains(&s.elements)));
+        // Log-uniform sizing: both halves of the range are populated.
+        assert!(specs.iter().any(|s| s.elements < 4_000));
+        assert!(specs.iter().any(|s| s.elements > 8_000));
+    }
+
+    #[test]
+    fn report_json_and_digest_reflect_checksums() {
+        let snapshot = crate::service::stats::ServiceStats::new().snapshot();
+        let mut report = LoadReport {
+            jobs: 2,
+            accepted: 2,
+            rejected: 0,
+            completed: 2,
+            failures: 0,
+            deadline_missed: 0,
+            wall: Duration::from_millis(10),
+            throughput_jps: 200.0,
+            snapshot,
+            checksums: vec![(0, 111), (1, 222)],
+        };
+        let d1 = report.checksum_digest();
+        let j = report.to_json();
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("checksum_digest").unwrap().as_str(),
+            Some(format!("{d1:016x}").as_str())
+        );
+        report.checksums[1].1 = 333;
+        assert_ne!(report.checksum_digest(), d1);
+        assert!(report.summary_text().contains("2 accepted"));
+    }
+}

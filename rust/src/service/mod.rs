@@ -1,0 +1,49 @@
+//! The multi-tenant OHHC sort service: online serving on top of the
+//! offline pipeline.
+//!
+//! The paper evaluates one sort at a time; the campaign engine runs an
+//! offline grid.  This module opens the **online** workload — many
+//! concurrent, heterogeneous sort jobs multiplexed over a pool of
+//! prebuilt OHHC topologies — following the observation of Fasha's
+//! comparative Quick Sort study (arXiv:2109.01719) that the interesting
+//! behavior emerges under mixed execution modes and workloads:
+//!
+//! * [`job`] — [`JobSpec`] (per-job distribution / size / seed /
+//!   topology / deadline) and the verified [`JobResult`];
+//! * [`queue`] — bounded MPMC submission queue with explicit
+//!   backpressure ([`Submit::Accepted`] / [`Submit::Rejected`], never
+//!   unbounded buffering);
+//! * [`admission`] — token-bucket rate limiting plus queue-depth
+//!   shedding, decided before a job touches the queue;
+//! * [`pool`] — the [`SortService`] worker pool; each worker leases
+//!   [`TopologyBundle`]s from a shared campaign
+//!   [`PlanCache`](crate::campaign::PlanCache) and drives
+//!   `divide_native` → `FlatBuckets` → `ThreadedSimulator` end to end;
+//! * [`batcher`] — coalesces small jobs into one arena-backed divide
+//!   and splits results back per job on the offset table;
+//! * [`stats`] — per-job queue/sort/total latency into shared
+//!   fixed-bucket histograms with p50/p95/p99;
+//! * [`loadgen`] — deterministic seeded open-/closed-loop generators
+//!   and the throughput/latency [`LoadReport`].
+//!
+//! Served by the `serve` and `loadgen` CLI subcommands; every future
+//! scaling layer (sharding, async backends, multi-cell placement) plugs
+//! into this seam.
+//!
+//! [`TopologyBundle`]: crate::schedule::TopologyBundle
+
+pub mod admission;
+pub mod batcher;
+pub mod job;
+pub mod loadgen;
+pub mod pool;
+pub mod queue;
+pub mod stats;
+
+pub use admission::{AdmissionControl, TokenBucket};
+pub use batcher::{allot_buckets, coalesce, CoalescedBatch};
+pub use job::{fnv1a, fnv1a_bytes, multiset_fingerprint, JobResult, JobSpec};
+pub use loadgen::{schedule, LoadGenConfig, LoadMode, LoadReport};
+pub use pool::{ServiceConfig, SortService};
+pub use queue::{JobQueue, RejectReason, Submit};
+pub use stats::{LatencySummary, ServiceSnapshot, ServiceStats};

@@ -1,0 +1,459 @@
+//! The sorter pool: the in-process, multi-tenant OHHC sort service.
+//!
+//! [`SortService::start`] spawns a fixed pool of worker threads.  Each
+//! worker pops jobs from the shared bounded [`JobQueue`], leases the
+//! job's `(dimension, construction)` [`TopologyBundle`] from a shared
+//! campaign [`PlanCache`] (built once, shared by every worker that
+//! needs it), and drives the existing pipeline end to end:
+//! `divide_native` → [`FlatBuckets`] arena → [`ThreadedSimulator`]
+//! local-sort + gather.  Small jobs coalesce through the
+//! [`crate::service::batcher`] so one pipeline pass serves many
+//! tenants.  Every job's output is verified (sorted + multiset
+//! conservation) before the result ships; per-job queue/sort/total
+//! latencies land in the shared [`ServiceStats`] histograms.
+//!
+//! [`TopologyBundle`]: crate::schedule::TopologyBundle
+//! [`FlatBuckets`]: crate::dataplane::FlatBuckets
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::campaign::{BundleLease, PlanCache};
+use crate::config::Construction;
+use crate::coordinator::divide_native;
+use crate::error::Result;
+use crate::service::admission::AdmissionControl;
+use crate::service::batcher::coalesce;
+use crate::service::job::{fnv1a, multiset_fingerprint, JobResult, JobSpec};
+use crate::service::queue::{JobQueue, RejectReason, Submit};
+use crate::service::stats::{ServiceSnapshot, ServiceStats};
+use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
+use crate::sort::is_sorted;
+use crate::util::par;
+
+/// Service knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Sorter-pool worker threads.
+    pub workers: usize,
+    /// Bounded submission-queue capacity.
+    pub queue_capacity: usize,
+    /// Token-bucket admit rate in jobs/second (`None` = unlimited).
+    pub rate: Option<f64>,
+    /// Token-bucket burst.
+    pub burst: f64,
+    /// Shed submissions once the queue depth reaches this
+    /// (`usize::MAX` disables shedding).
+    pub shed_depth: usize,
+    /// Coalesce up to this many small jobs into one pipeline pass
+    /// (`<= 1` disables batching).
+    pub batch_max_jobs: usize,
+    /// A batch never exceeds this many keys in total.
+    pub batch_max_keys: usize,
+    /// Jobs at or below this many keys are batchable.
+    pub small_job_threshold: usize,
+    /// Run the paper-faithful one-thread-per-processor simulator mode
+    /// instead of the pooled waves mode.
+    pub paper_threads: bool,
+    /// Attach the sorted keys to every [`JobResult`] (tests; costly for
+    /// large jobs).
+    pub retain_output: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: par::available_workers().clamp(1, 8),
+            queue_capacity: 256,
+            rate: None,
+            burst: 16.0,
+            shed_depth: usize::MAX,
+            batch_max_jobs: 8,
+            batch_max_keys: 1 << 20,
+            small_job_threshold: 4096,
+            paper_threads: false,
+            retain_output: false,
+        }
+    }
+}
+
+/// A job that made it past admission, stamped for queue-latency
+/// accounting.
+#[derive(Debug)]
+struct QueuedJob {
+    spec: JobSpec,
+    accepted_at: Instant,
+}
+
+#[derive(Debug)]
+struct Shared {
+    cfg: ServiceConfig,
+    queue: JobQueue<QueuedJob>,
+    admission: AdmissionControl,
+    stats: ServiceStats,
+    cache: PlanCache,
+}
+
+/// The running service: submit jobs, receive results, shut down.
+pub struct SortService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    results: Receiver<JobResult>,
+}
+
+impl SortService {
+    /// Spawn the worker pool and start serving.
+    pub fn start(cfg: ServiceConfig) -> SortService {
+        let shared = Arc::new(Shared {
+            queue: JobQueue::bounded(cfg.queue_capacity),
+            admission: AdmissionControl::new(cfg.rate, cfg.burst, cfg.shed_depth),
+            stats: ServiceStats::new(),
+            cache: PlanCache::new(),
+            cfg,
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let workers = (0..shared.cfg.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("ohhc-svc-{i}"))
+                    .spawn(move || worker_loop(&shared, &tx))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        SortService {
+            shared,
+            workers,
+            results: rx,
+        }
+    }
+
+    /// Submit one job: validated, admission-checked, then offered to the
+    /// bounded queue.  Never blocks; every path reports an explicit
+    /// [`Submit`] outcome.
+    pub fn submit(&self, spec: JobSpec) -> Submit {
+        let outcome = if let Err(e) = spec.validate() {
+            Submit::Rejected {
+                reason: RejectReason::Invalid {
+                    detail: e.to_string(),
+                },
+            }
+        } else if let Err(reason) = self.shared.admission.admit(self.shared.queue.depth()) {
+            Submit::Rejected { reason }
+        } else {
+            self.shared.queue.offer(QueuedJob {
+                spec,
+                accepted_at: Instant::now(),
+            })
+        };
+        self.shared.stats.on_submit(outcome.is_accepted());
+        outcome
+    }
+
+    /// A finished job, if one is ready.
+    pub fn try_recv(&self) -> Option<JobResult> {
+        self.results.try_recv().ok()
+    }
+
+    /// Wait up to `timeout` for a finished job.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        self.results.recv_timeout(timeout).ok()
+    }
+
+    /// Live queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// Live stats (counters + histograms).
+    pub fn stats(&self) -> &ServiceStats {
+        &self.shared.stats
+    }
+
+    /// The shared topology cache (builds / hits / active leases).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.shared.cache
+    }
+
+    /// Graceful shutdown: close the queue (backlog still executes),
+    /// join the pool, and return the final snapshot plus any results
+    /// the caller had not yet received.
+    pub fn shutdown(self) -> (ServiceSnapshot, Vec<JobResult>) {
+        self.shared.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        let rest: Vec<JobResult> = self.results.try_iter().collect();
+        (self.shared.stats.snapshot(), rest)
+    }
+}
+
+fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
+    // One lease per (dimension, construction) this worker has served —
+    // held for the worker's lifetime, shared through the PlanCache.
+    let mut leases: HashMap<(u32, Construction), BundleLease> = HashMap::new();
+    while let Some(first) = shared.queue.pop() {
+        let cfg = &shared.cfg;
+        let key = (first.spec.dimension, first.spec.construction);
+        let lease = match leases.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => match shared.cache.lease(key.0, key.1) {
+                Ok(l) => v.insert(l),
+                Err(e) => {
+                    fail_batch(shared, &[first], Instant::now(), &e.to_string(), tx);
+                    continue;
+                }
+            },
+        };
+        let mut batch = vec![first];
+        // A coalesced pass cannot hold more jobs than the topology has
+        // buckets (each job needs ≥ 1), so cap the claim at the leased
+        // bundle's processor count.
+        let max_batch = cfg.batch_max_jobs.min(lease.net.total_processors());
+        if max_batch > 1 && batch[0].spec.elements <= cfg.small_job_threshold {
+            let mut keys = batch[0].spec.elements;
+            let more = shared.queue.drain_matching(max_batch - 1, |j| {
+                let fits = j.spec.elements <= cfg.small_job_threshold
+                    && (j.spec.dimension, j.spec.construction) == key
+                    && keys + j.spec.elements <= cfg.batch_max_keys;
+                if fits {
+                    keys += j.spec.elements;
+                }
+                fits
+            });
+            batch.extend(more);
+        }
+        execute(shared, lease, batch, tx);
+    }
+}
+
+fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>, tx: &Sender<JobResult>) {
+    let started = Instant::now();
+    shared.stats.on_batch(batch.len());
+    let p = lease.net.total_processors();
+
+    // Inputs are deterministic in the specs; the multiset fingerprints
+    // are the conservation half of the per-job verification.
+    let inputs: Vec<Vec<i32>> = batch.iter().map(|j| j.spec.generate()).collect();
+    let fingerprints: Vec<u64> = inputs.iter().map(|d| multiset_fingerprint(d)).collect();
+    let total: usize = inputs.iter().map(Vec::len).sum();
+
+    let mode = if shared.cfg.paper_threads {
+        ThreadMode::Direct
+    } else {
+        ThreadMode::Waves
+    };
+    let sim = ThreadedSimulator::new(&lease.net, &lease.plans).with_mode(mode);
+
+    let run = || -> Result<(Vec<i32>, Vec<Range<usize>>)> {
+        if inputs.len() == 1 {
+            let divided = divide_native(&inputs[0], p)?;
+            let out = sim.run(divided.buckets, total)?;
+            Ok((out.sorted, vec![0..total]))
+        } else {
+            let refs: Vec<&[i32]> = inputs.iter().map(Vec::as_slice).collect();
+            let coalesced = coalesce(&refs, p)?;
+            let ranges: Vec<Range<usize>> =
+                (0..coalesced.num_jobs()).map(|j| coalesced.job_range(j)).collect();
+            let out = sim.run(coalesced.buckets, total)?;
+            Ok((out.sorted, ranges))
+        }
+    };
+
+    match run() {
+        Ok((sorted, ranges)) => {
+            let sort_latency = started.elapsed();
+            let batched = batch.len() > 1;
+            for ((job, range), fp) in batch.iter().zip(&ranges).zip(&fingerprints) {
+                let out = &sorted[range.clone()];
+                let sorted_ok = is_sorted(out) && multiset_fingerprint(out) == *fp;
+                let queue_latency = started.duration_since(job.accepted_at);
+                let total_latency = queue_latency + sort_latency;
+                let result = JobResult {
+                    id: job.spec.id,
+                    elements: job.spec.elements,
+                    dimension: job.spec.dimension,
+                    batched,
+                    queue_latency,
+                    sort_latency,
+                    total_latency,
+                    deadline: job.spec.deadline,
+                    deadline_met: job.spec.deadline.map(|d| total_latency <= d),
+                    sorted_ok,
+                    checksum: fnv1a(out),
+                    error: None,
+                    output: shared.cfg.retain_output.then(|| out.to_vec()),
+                };
+                shared.stats.on_result(&result);
+                tx.send(result).ok();
+            }
+        }
+        Err(e) => fail_batch(shared, &batch, started, &e.to_string(), tx),
+    }
+}
+
+/// Ship an explicit failure result for every job of a batch — jobs are
+/// never dropped silently, even when the pipeline errors.
+fn fail_batch(
+    shared: &Shared,
+    batch: &[QueuedJob],
+    started: Instant,
+    error: &str,
+    tx: &Sender<JobResult>,
+) {
+    let sort_latency = started.elapsed();
+    for job in batch {
+        let queue_latency = started.duration_since(job.accepted_at);
+        let total_latency = queue_latency + sort_latency;
+        let result = JobResult {
+            id: job.spec.id,
+            elements: job.spec.elements,
+            dimension: job.spec.dimension,
+            batched: batch.len() > 1,
+            queue_latency,
+            sort_latency,
+            total_latency,
+            deadline: job.spec.deadline,
+            deadline_met: job.spec.deadline.map(|d| total_latency <= d),
+            sorted_ok: false,
+            checksum: 0,
+            error: Some(error.to_string()),
+            output: None,
+        };
+        shared.stats.on_result(&result);
+        tx.send(result).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::sort::quicksort;
+
+    fn spec(id: u64, dist: Distribution, elements: usize, dimension: u32) -> JobSpec {
+        JobSpec {
+            id,
+            distribution: dist,
+            elements,
+            seed: 1000 + id,
+            dimension,
+            construction: Construction::FullGroup,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn serves_jobs_across_dimensions_and_verifies() {
+        let service = SortService::start(ServiceConfig {
+            workers: 2,
+            retain_output: true,
+            ..Default::default()
+        });
+        for (id, d) in [(0u64, 1u32), (1, 2), (2, 1)] {
+            assert!(service.submit(spec(id, Distribution::Random, 8_000, d)).is_accepted());
+        }
+        let mut results = Vec::new();
+        while results.len() < 3 {
+            results.push(service.recv_timeout(Duration::from_secs(30)).expect("stalled"));
+        }
+        let (snapshot, rest) = service.shutdown();
+        assert!(rest.is_empty());
+        assert_eq!(snapshot.accepted, 3);
+        assert_eq!(snapshot.completed, 3);
+        assert_eq!(snapshot.failed, 0);
+        results.sort_by_key(|r| r.id);
+        for r in &results {
+            assert!(r.sorted_ok, "job {} failed verification", r.id);
+            assert!(r.sort_latency > Duration::ZERO);
+            assert!(r.total_latency >= r.sort_latency);
+            // The retained output equals an independent sequential sort.
+            let job = spec(r.id, Distribution::Random, 8_000, r.dimension);
+            let mut expect = job.generate();
+            quicksort(&mut expect);
+            assert_eq!(r.output.as_deref(), Some(expect.as_slice()));
+            assert_eq!(r.checksum, fnv1a(&expect));
+        }
+        assert!(snapshot.total.p50 > Duration::ZERO);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_not_enqueued() {
+        let service = SortService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let bad = JobSpec {
+            elements: 0,
+            ..spec(9, Distribution::Sorted, 1, 1)
+        };
+        match service.submit(bad) {
+            Submit::Rejected {
+                reason: RejectReason::Invalid { detail },
+            } => assert!(detail.contains("elements")),
+            other => panic!("expected Invalid rejection, got {other:?}"),
+        }
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.rejected, 1);
+        assert_eq!(snapshot.accepted, 0);
+    }
+
+    #[test]
+    fn small_jobs_coalesce_behind_a_large_one() {
+        // One worker, busy for a long while on a 2M-key job; the five
+        // small jobs queued meanwhile must ride a coalesced batch.
+        let service = SortService::start(ServiceConfig {
+            workers: 1,
+            batch_max_jobs: 8,
+            small_job_threshold: 2_000,
+            ..Default::default()
+        });
+        assert!(service.submit(spec(0, Distribution::Random, 2_000_000, 1)).is_accepted());
+        for id in 1..=5 {
+            assert!(service.submit(spec(id, Distribution::Random, 1_000, 1)).is_accepted());
+        }
+        let mut results = Vec::new();
+        while results.len() < 6 {
+            results.push(service.recv_timeout(Duration::from_secs(60)).expect("stalled"));
+        }
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.completed, 6);
+        assert!(
+            snapshot.batched_jobs >= 2,
+            "expected coalescing, got {} batched jobs",
+            snapshot.batched_jobs
+        );
+        for r in results.iter().filter(|r| r.id > 0) {
+            assert!(r.sorted_ok);
+        }
+    }
+
+    #[test]
+    fn pool_leases_topologies_through_the_shared_cache() {
+        let service = SortService::start(ServiceConfig {
+            workers: 3,
+            ..Default::default()
+        });
+        for id in 0..9 {
+            assert!(service.submit(spec(id, Distribution::Local, 6_000, 1)).is_accepted());
+        }
+        let mut seen = 0;
+        while seen < 9 {
+            service.recv_timeout(Duration::from_secs(30)).expect("stalled");
+            seen += 1;
+        }
+        // All workers served d=1: one build, leases outstanding until
+        // shutdown drops the workers.
+        assert_eq!(service.plan_cache().builds(), 1);
+        assert!(service.plan_cache().active_leases() >= 1);
+        let shared = Arc::clone(&service.shared);
+        service.shutdown();
+        assert_eq!(shared.cache.active_leases(), 0, "leases returned on shutdown");
+    }
+}

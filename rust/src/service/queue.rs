@@ -1,0 +1,292 @@
+//! Bounded MPMC submission queue with explicit backpressure.
+//!
+//! The service never buffers unboundedly: a submission either lands in
+//! the queue ([`Submit::Accepted`]) or is turned away with a reason
+//! ([`Submit::Rejected`]) the caller can act on — retry later, shed
+//! load, or surface the error to the tenant.  `offer` never blocks;
+//! `pop` blocks until work arrives or the queue is closed, so worker
+//! shutdown is a `close()` away and cannot deadlock.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+
+/// Why a submission was turned away.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at capacity.
+    QueueFull {
+        /// The queue's fixed capacity.
+        capacity: usize,
+    },
+    /// The token bucket is empty (offered rate above the admit rate).
+    RateLimited,
+    /// Queue-depth shedding tripped before the queue filled.
+    Overloaded {
+        /// Depth observed at submit time.
+        depth: usize,
+        /// The shedding threshold.
+        shed_depth: usize,
+    },
+    /// The service is shutting down.
+    Closed,
+    /// The spec failed validation (never enqueued).
+    Invalid {
+        /// What was wrong.
+        detail: String,
+    },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity})")
+            }
+            RejectReason::RateLimited => write!(f, "rate limited"),
+            RejectReason::Overloaded { depth, shed_depth } => {
+                write!(f, "overloaded (depth {depth} >= shed threshold {shed_depth})")
+            }
+            RejectReason::Closed => write!(f, "service closed"),
+            RejectReason::Invalid { detail } => write!(f, "invalid job: {detail}"),
+        }
+    }
+}
+
+/// Outcome of one submission attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Submit {
+    /// Enqueued; `depth` is the queue depth right after the push.
+    Accepted {
+        /// Queue depth including this job.
+        depth: usize,
+    },
+    /// Turned away — the job was **not** enqueued.
+    Rejected {
+        /// Why.
+        reason: RejectReason,
+    },
+}
+
+impl Submit {
+    /// Did the job make it into the queue?
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Submit::Accepted { .. })
+    }
+}
+
+#[derive(Debug)]
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer / multi-consumer FIFO queue.
+///
+/// Producers call [`JobQueue::offer`] (non-blocking, explicit
+/// [`Submit`] outcome); consumers call [`JobQueue::pop`] (blocking) or
+/// [`JobQueue::drain_matching`] (the batcher's bulk claim).
+#[derive(Debug)]
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    /// Queue with a fixed capacity (≥ 1).
+    pub fn bounded(capacity: usize) -> Self {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The fixed capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Non-blocking submit: enqueue or reject, never wait.
+    pub fn offer(&self, item: T) -> Submit {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Submit::Rejected {
+                reason: RejectReason::Closed,
+            };
+        }
+        if inner.items.len() >= self.capacity {
+            return Submit::Rejected {
+                reason: RejectReason::QueueFull {
+                    capacity: self.capacity,
+                },
+            };
+        }
+        inner.items.push_back(item);
+        let depth = inner.items.len();
+        drop(inner);
+        self.not_empty.notify_one();
+        Submit::Accepted { depth }
+    }
+
+    /// Blocking consume: the next job, or `None` once the queue is
+    /// closed **and** drained (workers exit on `None`).
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking consume.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Remove and return up to `max` queued jobs matching `pred`,
+    /// scanning front to back (FIFO among matches).  Non-matching jobs
+    /// keep their positions — this is how a worker claims a coalescible
+    /// batch without starving large jobs behind it.
+    pub fn drain_matching(&self, max: usize, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < inner.items.len() && out.len() < max {
+            if pred(&inner.items[i]) {
+                out.push(inner.items.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Close the queue: subsequent offers reject with
+    /// [`RejectReason::Closed`]; blocked `pop`s drain the backlog then
+    /// return `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Has `close` been called?
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_accept_then_reject_at_capacity() {
+        let q = JobQueue::bounded(2);
+        assert_eq!(q.offer(1), Submit::Accepted { depth: 1 });
+        assert_eq!(q.offer(2), Submit::Accepted { depth: 2 });
+        assert_eq!(
+            q.offer(3),
+            Submit::Rejected { reason: RejectReason::QueueFull { capacity: 2 } }
+        );
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.offer(3).is_accepted(), "a pop frees a slot");
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_rejects_offers_and_drains_backlog() {
+        let q = JobQueue::bounded(4);
+        q.offer(10);
+        q.offer(20);
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.offer(30), Submit::Rejected { reason: RejectReason::Closed });
+        // The backlog still drains before pop returns None.
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(20));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = JobQueue::<u32>::bounded(1);
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| q.pop());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn drain_matching_claims_fifo_subset() {
+        let q = JobQueue::bounded(8);
+        for v in [5, 100, 7, 200, 9, 11] {
+            q.offer(v);
+        }
+        let small = q.drain_matching(2, |&v| v < 50);
+        assert_eq!(small, vec![5, 7], "at most `max`, FIFO among matches");
+        // Non-matches (and the overflow match) keep their order.
+        assert_eq!(q.try_pop(), Some(100));
+        assert_eq!(q.try_pop(), Some(200));
+        assert_eq!(q.try_pop(), Some(9));
+        assert_eq!(q.try_pop(), Some(11));
+    }
+
+    #[test]
+    fn mpmc_under_contention_conserves_items() {
+        let q = JobQueue::bounded(16);
+        let consumed = AtomicUsize::new(0);
+        const PER_PRODUCER: usize = 500;
+        std::thread::scope(|scope| {
+            let producers: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        for v in 0..PER_PRODUCER as u32 {
+                            // Retry on backpressure: a bounded queue under
+                            // contention must reject, never block or drop.
+                            while !q.offer(v).is_accepted() {
+                                std::thread::yield_now();
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    while q.pop().is_some() {
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            q.close();
+        });
+        assert_eq!(
+            consumed.load(Ordering::Relaxed),
+            4 * PER_PRODUCER,
+            "every accepted item is consumed exactly once"
+        );
+    }
+}

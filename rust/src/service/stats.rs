@@ -1,0 +1,293 @@
+//! Service observability: counters plus shared latency histograms.
+//!
+//! Workers record every finished job into one [`ServiceStats`]; a
+//! [`ServiceSnapshot`] freezes the counters and the p50/p95/p99 of the
+//! queue / sort / total latency distributions for reports and SLO
+//! checks.  Histograms are the fixed-bucket [`Histogram`] from
+//! [`crate::metrics`], so snapshots are cheap and worker merges are
+//! element-wise adds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::Histogram;
+use crate::service::job::JobResult;
+use crate::util::json::Json;
+
+/// Live counters + histograms, shared by every worker and submitter.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    submitted: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    deadline_missed: AtomicU64,
+    batches: AtomicU64,
+    batched_jobs: AtomicU64,
+    queue_ns: Mutex<Histogram>,
+    sort_ns: Mutex<Histogram>,
+    total_ns: Mutex<Histogram>,
+}
+
+impl ServiceStats {
+    /// Fresh stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one submission **attempt** — a caller that retries a
+    /// rejected job counts once per attempt, so `submitted`/`rejected`
+    /// measure offered load at the front door, not distinct jobs.
+    pub fn on_submit(&self, accepted: bool) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        if accepted {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one executed batch of `jobs` coalesced jobs.
+    pub fn on_batch(&self, jobs: usize) {
+        if jobs > 1 {
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one finished job.
+    pub fn on_result(&self, r: &JobResult) {
+        if r.error.is_some() || !r.sorted_ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        if r.deadline_met == Some(false) {
+            self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_ns.lock().unwrap().record_duration(r.queue_latency);
+        self.sort_ns.lock().unwrap().record_duration(r.sort_latency);
+        self.total_ns.lock().unwrap().record_duration(r.total_latency);
+    }
+
+    /// Jobs accepted so far.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Jobs rejected so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Jobs completed (verified) so far.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that coalesced into multi-job batches so far.
+    pub fn batched_jobs(&self) -> u64 {
+        self.batched_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Freeze everything into a snapshot.
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        ServiceSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            queue: LatencySummary::of(&self.queue_ns.lock().unwrap()),
+            sort: LatencySummary::of(&self.sort_ns.lock().unwrap()),
+            total: LatencySummary::of(&self.total_ns.lock().unwrap()),
+        }
+    }
+}
+
+/// p50/p95/p99/max of one latency distribution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Samples.
+    pub count: u64,
+    /// Median.
+    pub p50: Duration,
+    /// 95th percentile.
+    pub p95: Duration,
+    /// 99th percentile.
+    pub p99: Duration,
+    /// Worst observed.
+    pub max: Duration,
+}
+
+impl LatencySummary {
+    /// Summarize a histogram of nanosecond samples.
+    pub fn of(h: &Histogram) -> Self {
+        LatencySummary {
+            count: h.count(),
+            p50: h.percentile_duration(0.50),
+            p95: h.percentile_duration(0.95),
+            p99: h.percentile_duration(0.99),
+            max: Duration::from_nanos(h.max()),
+        }
+    }
+
+    /// As a JSON object (ns).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("count", Json::int(self.count as usize)),
+            ("max_ns", Json::num(self.max.as_nanos() as f64)),
+            ("p50_ns", Json::num(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::num(self.p95.as_nanos() as f64)),
+            ("p99_ns", Json::num(self.p99.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Frozen counters + latency summaries.
+#[derive(Debug, Clone)]
+pub struct ServiceSnapshot {
+    /// Submission attempts.
+    pub submitted: u64,
+    /// Accepted into the queue.
+    pub accepted: u64,
+    /// Rejected at the front door (queue full, rate, shed, closed).
+    pub rejected: u64,
+    /// Finished and verified.
+    pub completed: u64,
+    /// Finished with a pipeline error or failed verification.
+    pub failed: u64,
+    /// Jobs whose deadline was set and missed.
+    pub deadline_missed: u64,
+    /// Multi-job batches executed.
+    pub batches: u64,
+    /// Jobs that rode those batches.
+    pub batched_jobs: u64,
+    /// Queue-latency summary.
+    pub queue: LatencySummary,
+    /// Sort-latency summary.
+    pub sort: LatencySummary,
+    /// Total-latency summary.
+    pub total: LatencySummary,
+}
+
+impl ServiceSnapshot {
+    /// The snapshot as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("accepted", Json::int(self.accepted as usize)),
+            ("batched_jobs", Json::int(self.batched_jobs as usize)),
+            ("batches", Json::int(self.batches as usize)),
+            ("completed", Json::int(self.completed as usize)),
+            ("deadline_missed", Json::int(self.deadline_missed as usize)),
+            ("failed", Json::int(self.failed as usize)),
+            ("queue_latency", self.queue.to_json()),
+            ("rejected", Json::int(self.rejected as usize)),
+            ("sort_latency", self.sort.to_json()),
+            ("submitted", Json::int(self.submitted as usize)),
+            ("total_latency", self.total.to_json()),
+        ])
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn summary_text(&self) -> String {
+        format!(
+            "service: {} submitted, {} accepted, {} rejected, {} completed, {} failed\n\
+             batching: {} batches covering {} jobs; deadlines missed: {}\n\
+             queue latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
+             sort  latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
+             total latency: p50 {:.3?} p95 {:.3?} p99 {:.3?} max {:.3?}\n",
+            self.submitted,
+            self.accepted,
+            self.rejected,
+            self.completed,
+            self.failed,
+            self.batches,
+            self.batched_jobs,
+            self.deadline_missed,
+            self.queue.p50,
+            self.queue.p95,
+            self.queue.p99,
+            self.sort.p50,
+            self.sort.p95,
+            self.sort.p99,
+            self.total.p50,
+            self.total.p95,
+            self.total.p99,
+            self.total.max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(queue_us: u64, sort_us: u64, ok: bool, met: Option<bool>) -> JobResult {
+        JobResult {
+            id: 0,
+            elements: 10,
+            dimension: 1,
+            batched: false,
+            queue_latency: Duration::from_micros(queue_us),
+            sort_latency: Duration::from_micros(sort_us),
+            total_latency: Duration::from_micros(queue_us + sort_us),
+            deadline: None,
+            deadline_met: met,
+            sorted_ok: ok,
+            checksum: 0,
+            error: None,
+            output: None,
+        }
+    }
+
+    #[test]
+    fn counters_and_percentiles_accumulate() {
+        let stats = ServiceStats::new();
+        stats.on_submit(true);
+        stats.on_submit(true);
+        stats.on_submit(false);
+        for i in 1..=100u64 {
+            stats.on_result(&result(i, 10 * i, true, None));
+        }
+        stats.on_result(&result(5, 5, false, Some(false)));
+        stats.on_batch(4);
+        stats.on_batch(1); // singleton "batches" are not batches
+        let s = stats.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_jobs, 4);
+        assert_eq!(s.total.count, 101);
+        // Queue p50 ≈ 50 µs, p99 ≈ 99–100 µs (bucket resolution ≤ 1/8).
+        let p50 = s.queue.p50.as_nanos() as f64;
+        assert!((45_000.0..=55_000.0).contains(&p50), "{p50}");
+        assert!(s.queue.p99 >= s.queue.p50);
+        assert!(s.total.max >= s.total.p99);
+        assert!(s.sort.p95 > s.queue.p95);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_through_the_parser() {
+        let stats = ServiceStats::new();
+        stats.on_submit(true);
+        stats.on_result(&result(10, 100, true, Some(true)));
+        let j = stats.snapshot().to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_usize(), Some(1));
+        let total = parsed.get("total_latency").unwrap();
+        assert!(total.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        let text = stats.snapshot().summary_text();
+        assert!(text.contains("1 submitted"));
+        assert!(text.contains("total latency: p50"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Integration tests for the multi-tenant sort service: saturation
+//! behavior, schedule/output determinism, batcher correctness across
+//! every distribution, and the 1,000-job acceptance run.
+
+use std::time::Duration;
+
+use ohhc_qsort::config::{Construction, Distribution};
+use ohhc_qsort::service::{
+    coalesce, loadgen, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig, SortService,
+    Submit,
+};
+use ohhc_qsort::sort::is_sorted;
+use ohhc_qsort::workload;
+
+fn spec(id: u64, dist: Distribution, elements: usize, dimension: u32) -> JobSpec {
+    JobSpec {
+        id,
+        distribution: dist,
+        elements,
+        seed: 0xBEEF + id,
+        dimension,
+        construction: Construction::FullGroup,
+        deadline: None,
+    }
+}
+
+/// Queue full ⇒ `Rejected { QueueFull }`, never a deadlock and never a
+/// silent drop: every accepted job produces exactly one result, every
+/// rejected job produces none, and shutdown drains cleanly.
+#[test]
+fn saturation_rejects_explicitly_and_never_deadlocks() {
+    let service = SortService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 4,
+        batch_max_jobs: 1, // no coalescing: queue depth stays honest
+        ..Default::default()
+    });
+    // Occupy the single worker with a multi-hundred-ms job...
+    assert!(service.submit(spec(0, Distribution::Random, 4_000_000, 1)).is_accepted());
+    // ...then slam the 4-slot queue with 24 quick jobs.
+    let mut accepted = 1usize;
+    let mut rejected = 0usize;
+    for id in 1..=24 {
+        match service.submit(spec(id, Distribution::Random, 2_000, 1)) {
+            Submit::Accepted { depth } => {
+                accepted += 1;
+                assert!(depth <= 4, "accepted beyond capacity (depth {depth})");
+            }
+            Submit::Rejected { reason } => {
+                rejected += 1;
+                assert_eq!(
+                    reason,
+                    RejectReason::QueueFull { capacity: 4 },
+                    "job {id}: wrong reject reason"
+                );
+            }
+        }
+    }
+    assert!(rejected > 0, "24 jobs into a 4-slot queue must reject some");
+    assert_eq!(accepted + rejected, 25);
+
+    // Exactly one result per accepted job; none for rejected ones.
+    let mut results = Vec::new();
+    while results.len() < accepted {
+        results.push(
+            service
+                .recv_timeout(Duration::from_secs(120))
+                .expect("service deadlocked under saturation"),
+        );
+    }
+    assert!(service.try_recv().is_none(), "more results than accepts");
+    let (snapshot, rest) = service.shutdown();
+    assert!(rest.is_empty());
+    assert_eq!(snapshot.accepted, accepted as u64);
+    assert_eq!(snapshot.rejected, rejected as u64);
+    assert_eq!(snapshot.completed, accepted as u64, "all accepted verified");
+    assert_eq!(snapshot.failed, 0);
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), accepted, "duplicate or missing job results");
+}
+
+/// Same loadgen seed ⇒ identical job schedule and byte-identical sorted
+/// outputs, run to run — even though pool scheduling is nondeterministic.
+#[test]
+fn loadgen_is_deterministic_in_the_seed() {
+    let gen_cfg = LoadGenConfig {
+        jobs: 60,
+        seed: 42,
+        dimensions: vec![1, 2],
+        min_elements: 1_000,
+        max_elements: 8_000,
+        mode: LoadMode::Closed { concurrency: 6 },
+        ..Default::default()
+    };
+    // Identical schedules before any execution.
+    assert_eq!(loadgen::schedule(&gen_cfg), loadgen::schedule(&gen_cfg));
+
+    let run_once = || {
+        let service = SortService::start(ServiceConfig {
+            workers: 4,
+            ..Default::default()
+        });
+        let report = loadgen::run(&service, &gen_cfg);
+        service.shutdown();
+        report
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a.completed, 60);
+    assert_eq!(b.completed, 60);
+    assert_eq!(a.failures + b.failures, 0);
+    assert_eq!(a.checksums, b.checksums, "same seed must give identical sorted outputs");
+    assert_eq!(a.checksum_digest(), b.checksum_digest());
+
+    // A different seed produces a different schedule (and outputs).
+    let reseeded = LoadGenConfig {
+        seed: 43,
+        ..gen_cfg
+    };
+    let original = LoadGenConfig {
+        seed: 42,
+        ..reseeded.clone()
+    };
+    assert_ne!(loadgen::schedule(&reseeded), loadgen::schedule(&original));
+}
+
+/// Batcher property: for every distribution, coalescing K jobs and
+/// running the shared pipeline gives each job exactly its own
+/// sequential sort.
+#[test]
+fn batcher_split_back_equals_per_job_sequential_sort() {
+    use ohhc_qsort::schedule::TopologyBundle;
+    use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
+
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap(); // P = 36
+    let p = bundle.net.total_processors();
+    for dist in Distribution::ALL {
+        // Mixed sizes, including a single-key edge job.
+        let jobs: Vec<Vec<i32>> = [1_500usize, 700, 1, 2_400]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| workload::generate(dist, n, 100 + i as u64))
+            .collect();
+        let refs: Vec<&[i32]> = jobs.iter().map(|v| v.as_slice()).collect();
+        let batch = coalesce(&refs, p).unwrap();
+        let total = batch.buckets.total_keys();
+        let ranges: Vec<_> = (0..batch.num_jobs()).map(|j| batch.job_range(j)).collect();
+        let out = ThreadedSimulator::new(&bundle.net, &bundle.plans)
+            .with_mode(ThreadMode::Waves)
+            .run(batch.buckets.clone(), total)
+            .unwrap();
+        for (input, range) in jobs.iter().zip(&ranges) {
+            let got = &out.sorted[range.clone()];
+            let mut expect = input.clone();
+            expect.sort_unstable();
+            assert_eq!(got, expect.as_slice(), "{dist:?}");
+            assert!(is_sorted(got));
+        }
+    }
+}
+
+/// The acceptance run: 1,000 concurrent mixed-distribution jobs over
+/// d=1..3 topologies through the bounded queue — no deadlocks, all
+/// outputs verified, non-zero latency percentiles in the report.
+#[test]
+fn thousand_concurrent_mixed_jobs_complete_with_slo_report() {
+    let gen_cfg = LoadGenConfig {
+        jobs: 1_000,
+        seed: 7,
+        dimensions: vec![1, 2, 3],
+        distributions: Distribution::ALL.to_vec(),
+        min_elements: 1_000,
+        max_elements: 8_000,
+        deadline: Some(Duration::from_secs(30)),
+        mode: LoadMode::Closed { concurrency: 16 },
+    };
+    let service = SortService::start(ServiceConfig {
+        queue_capacity: 64,
+        ..Default::default()
+    });
+    let report = loadgen::run(&service, &gen_cfg);
+    let (snapshot, _) = service.shutdown();
+
+    assert_eq!(report.jobs, 1_000);
+    assert_eq!(report.rejected, 0, "closed loop within capacity never rejects");
+    assert_eq!(report.completed, 1_000, "every job completes and verifies");
+    assert_eq!(report.failures, 0);
+    assert_eq!(report.checksums.len(), 1_000);
+    assert!(report.throughput_jps > 0.0);
+
+    // Non-zero latency SLO percentiles, ordered sanely.
+    for lat in [&snapshot.queue, &snapshot.sort, &snapshot.total] {
+        assert_eq!(lat.count, 1_000);
+    }
+    assert!(snapshot.total.p50 > Duration::ZERO);
+    assert!(snapshot.total.p95 >= snapshot.total.p50);
+    assert!(snapshot.total.p99 >= snapshot.total.p95);
+    assert!(snapshot.sort.p50 > Duration::ZERO);
+    assert!(snapshot.total.max >= snapshot.total.p99);
+}
+
+/// Queue-depth shedding and rate limiting reject with their own
+/// reasons, before the queue fills.
+#[test]
+fn admission_sheds_with_named_reasons() {
+    let service = SortService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 64,
+        shed_depth: 2,
+        batch_max_jobs: 1,
+        ..Default::default()
+    });
+    // Occupy the worker, then fill to the shed threshold.
+    assert!(service.submit(spec(0, Distribution::Random, 2_000_000, 1)).is_accepted());
+    let mut shed = 0;
+    for id in 1..=8 {
+        let outcome = service.submit(spec(id, Distribution::Sorted, 1_000, 1));
+        if let Submit::Rejected { reason } = outcome {
+            assert!(
+                matches!(reason, RejectReason::Overloaded { shed_depth: 2, .. }),
+                "job {id}: {reason:?}"
+            );
+            shed += 1;
+        }
+    }
+    assert!(shed >= 6, "shedding must trip at depth 2, shed {shed}");
+    let (snapshot, _) = service.shutdown();
+    assert_eq!(snapshot.rejected, shed);
+}
