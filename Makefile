@@ -33,11 +33,14 @@ bench:
 	cd rust && OHHC_BENCH_FAST=1 $(CARGO) bench
 
 # Non-criterion JSON benches: the data-plane phase medians (flat arena
-# vs legacy nested, EXPERIMENTS.md §Perf) and the service offered-load
-# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service).
+# vs legacy nested, EXPERIMENTS.md §Perf), the service offered-load
+# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), and the
+# persistent-executor small-array / fan-out medians (pooled vs scoped
+# spawn, EXPERIMENTS.md §Perf).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
+	cd rust && OHHC_BENCH_JSON=../BENCH_executor.json $(CARGO) bench --bench executor
 
 campaign: build
 	cd rust && $(CARGO) run --release -- campaign \

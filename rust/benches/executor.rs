@@ -1,0 +1,221 @@
+//! Bench: the persistent work-stealing executor vs the pre-PR
+//! scoped-spawn path, on the workloads where spawn overhead bites —
+//! small arrays (4k–64k keys) and raw fan-out latency.
+//!
+//! `make bench-json` runs this and writes `BENCH_executor.json` (median
+//! ns per case) — the perf-trajectory artifact EXPERIMENTS.md §Perf
+//! tracks and CI uploads on every push.  Three sections:
+//!
+//! * `fanout` — dispatch one trivial task per hardware thread through
+//!   the warm executor (via `par::par_for_ranges`, the pipeline's
+//!   fan-out primitive) vs `std::thread::scope` spawning the same team:
+//!   the per-parallel-region fixed cost this PR removes.
+//! * `small_sort` — end-to-end parallel sort (divide → local sorts →
+//!   gather) at 4k/16k/64k keys, d=1 G=P.  At these sizes the divide is
+//!   below its chunking threshold in both eras (serial either way), so
+//!   the delta isolates the local-sort wave: pooled tasks vs a spawned
+//!   thread team with the legacy per-item `Mutex` handoff.
+//! * `throughput_profile` — the tuned `Quicksort::throughput` insertion
+//!   cutoff (24) vs the paper-default cutoff 0 on the same segments,
+//!   recording the delta the Waves/service paths bank.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use ohhc_qsort::config::Construction;
+use ohhc_qsort::coordinator::divide_native;
+use ohhc_qsort::dataplane::FlatBuckets;
+use ohhc_qsort::runtime::Executor;
+use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::sim::threaded::{gather_wave_order, ThreadMode, ThreadedSimulator};
+use ohhc_qsort::sort::{quicksort, Quicksort};
+use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::util::bench::{Bench, BenchResult};
+use ohhc_qsort::util::json::Json;
+use ohhc_qsort::util::par;
+use ohhc_qsort::workload;
+
+/// The pre-PR `par_map`: scoped thread team per call, one
+/// `Mutex<Option<T>>` per item on both the input and output paths.
+fn spawn_par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = workers.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().expect("item taken twice");
+                let r = f(item);
+                *outputs[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Pre-clone `count` copies so the timed closure pops a fresh input
+/// without paying (or measuring) a clone inside the timed region.
+fn stash<T: Clone>(item: &T, count: usize) -> RefCell<Vec<T>> {
+    RefCell::new((0..count).map(|_| item.clone()).collect())
+}
+
+/// Gather bookkeeping shared by both eras (descriptor counts ride the
+/// tree; no key moves).
+fn drain_gather(order: &[usize], net: &Ohhc, plans: &[ohhc_qsort::schedule::NodePlan]) {
+    let p = net.total_processors();
+    let mut held: Vec<usize> = vec![1; p];
+    for &id in order {
+        if let Some(dst) = plans[id].last().send_to {
+            let moved = std::mem::take(&mut held[id]);
+            held[net.id(dst)] += moved;
+        }
+    }
+    assert_eq!(held[0], p);
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let copies = b.warmup + b.reps.max(1);
+    let workers = par::available_workers();
+    let net = Ohhc::new(1, Construction::FullGroup).unwrap(); // P = 36
+    let p = net.total_processors();
+    let plans = gather_plan(&net);
+    let order = gather_wave_order(&net, &plans);
+
+    println!("== executor: persistent pool vs scoped spawn, P={p}, {workers} hw threads");
+
+    // ---- Raw fan-out latency. ----------------------------------------
+    // Warm the pool outside the timed region (global() is lazy).
+    Executor::global().scope(|_| {});
+    let fanout_exec = b.run("fanout/executor", || {
+        let count = AtomicUsize::new(0);
+        // One single-index range per hardware thread — the same fan-out
+        // shape the divide waves and Waves local sorts submit.
+        par::par_for_ranges(workers, workers, |r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        count.load(Ordering::Relaxed)
+    });
+    let fanout_spawn = b.run("fanout/scoped-spawn", || {
+        let count = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let count = &count;
+                scope.spawn(move || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        count.load(Ordering::Relaxed)
+    });
+
+    // ---- Small-array end-to-end parallel sort. -----------------------
+    let mut small_sort = Vec::new();
+    for n in [4096usize, 16384, 65536] {
+        let data = workload::random(n, 7);
+        let sim = ThreadedSimulator::new(&net, &plans).with_mode(ThreadMode::Waves);
+        let pooled = b.run(&format!("small-sort/pooled/n={n}"), || {
+            let d = divide_native(&data, p).unwrap();
+            sim.run(d.buckets, n).unwrap().sorted
+        });
+        let spawn = b.run(&format!("small-sort/spawn/n={n}"), || {
+            let d = divide_native(&data, p).unwrap();
+            let mut buckets = d.buckets;
+            {
+                let segments = buckets.segments_mut();
+                spawn_par_map(segments, workers, |seg| {
+                    quicksort(seg);
+                });
+            }
+            drain_gather(&order, &net, &plans);
+            buckets.into_arena().0
+        });
+        small_sort.push((n, pooled, spawn));
+    }
+
+    // ---- Throughput profile: insertion cutoff 24 vs paper cutoff 0. --
+    let n = 65536usize;
+    let divided: FlatBuckets = divide_native(&workload::random(n, 9), p).unwrap().buckets;
+    let pool = stash(&divided, copies);
+    let cutoff0 = b.run("local-sort/cutoff=0(paper)", || {
+        let mut f = pool.borrow_mut().pop().expect("stash");
+        for seg in f.segments_mut() {
+            Quicksort::default().sort(seg);
+        }
+        f
+    });
+    let pool = stash(&divided, copies);
+    let cutoff24 = b.run("local-sort/cutoff=24(throughput)", || {
+        let mut f = pool.borrow_mut().pop().expect("stash");
+        for seg in f.segments_mut() {
+            Quicksort::throughput().sort(seg);
+        }
+        f
+    });
+
+    // ---- JSON artifact. ----------------------------------------------
+    let ns = |r: &BenchResult| Json::num(r.median.as_nanos() as f64);
+    let doc = Json::obj([
+        ("workers", Json::int(workers)),
+        ("processors", Json::int(p)),
+        (
+            "fanout",
+            Json::obj([
+                ("executor_ns", ns(&fanout_exec)),
+                ("spawn_ns", ns(&fanout_spawn)),
+            ]),
+        ),
+        (
+            "small_sort",
+            Json::obj(small_sort.iter().map(|(n, pooled, spawn)| {
+                (
+                    format!("{n}"),
+                    Json::obj([("pooled_ns", ns(pooled)), ("spawn_ns", ns(spawn))]),
+                )
+            })),
+        ),
+        (
+            "throughput_profile",
+            Json::obj([
+                ("elements", Json::int(n)),
+                ("insertion_cutoff", Json::int(Quicksort::THROUGHPUT_CUTOFF)),
+                ("cutoff0_ns", ns(&cutoff0)),
+                ("cutoff24_ns", ns(&cutoff24)),
+            ]),
+        ),
+    ]);
+
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_executor.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_executor.json");
+    println!("\ncase medians → {out}");
+    for (n, pooled, spawn) in &small_sort {
+        println!(
+            "n={n}: pooled {:.0} ns vs spawn {:.0} ns",
+            pooled.median.as_nanos() as f64,
+            spawn.median.as_nanos() as f64
+        );
+    }
+}

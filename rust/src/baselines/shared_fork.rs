@@ -1,8 +1,11 @@
 //! Shared-memory fork/join Quick Sort — the multithreaded baseline of the
 //! paper's refs [5–7]: no interconnection topology, just recursive
-//! partition with the two halves forked onto OS threads down to a depth
-//! budget, then sequential Quick Sort below it.
+//! partition with the two halves forked down to a depth budget, then
+//! sequential Quick Sort below it.  Forks run as tasks on the persistent
+//! executor pool, so the baseline's measured time (like the OHHC path's)
+//! contains no thread spawn/teardown.
 
+use crate::runtime::Executor;
 use crate::sort::{quicksort, SortCounters};
 
 /// Sort in place with `2^fork_depth` maximum concurrent branches.
@@ -36,12 +39,19 @@ pub fn shared_fork_sort(data: &mut [i32], fork_depth: u32) -> SortCounters {
         let (left, rest) = data.split_at_mut(nl);
         let (_, right) = rest.split_at_mut(equal);
         debug_assert_eq!(right.len(), ng);
-        let (cl, cr) = std::thread::scope(|scope| {
-            let hl = scope.spawn(move || go(left, depth - 1));
-            let cr = go(right, depth - 1);
-            (hl.join().expect("fork panicked"), cr)
-        });
-        cl + cr
+        // Fork the left half onto the pool; recurse into the right half
+        // on this thread (the scope's helping loop keeps a worker that
+        // lands here from idling while it waits).
+        let mut left_counters = SortCounters::default();
+        let mut right_counters = SortCounters::default();
+        {
+            let left_slot = &mut left_counters;
+            Executor::global().scope(|s| {
+                s.submit(move || *left_slot = go(left, depth - 1));
+                right_counters = go(right, depth - 1);
+            });
+        }
+        left_counters + right_counters
     }
     go(data, fork_depth)
 }

@@ -9,9 +9,18 @@ use crate::coordinator::{OhhcSorter, SortReport};
 use crate::error::Result;
 use crate::util::par;
 
-/// Executes a [`SweepSpec`] across a pool of `spec.jobs` workers.
+/// Executes a [`SweepSpec`] at a concurrency of `spec.jobs`.
 ///
-/// Jobs pull cells work-steal style; every job resolves its topology and
+/// Cells run as tasks on the shared persistent executor
+/// ([`crate::runtime::Executor::global`]) — the campaign owns no threads
+/// of its own, so back-to-back sweeps (and sweeps racing service
+/// traffic) share one warm pool instead of re-spawning per run.  As
+/// before the executor (when concurrent cells' thread teams timeshared
+/// the same cores), `jobs > 1` trades per-cell wall-clock fidelity for
+/// sweep throughput: a cell's parallel waves can queue behind another
+/// cell's tasks.  Timing-grade runs for the paper figures should keep
+/// the default `jobs = 1`.  Jobs
+/// pull cells work-steal style; every job resolves its topology and
 /// gather plans through the shared [`PlanCache`], so each
 /// `(dimension, construction)` pair is built at most once per campaign no
 /// matter how many cells, repetitions, or concurrent jobs touch it.

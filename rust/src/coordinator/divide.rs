@@ -37,12 +37,18 @@ impl Divided {
 }
 
 /// Pure-rust division (the default hot path), parallelized like a
-/// single-level radix partition:
+/// single-level radix partition.  Each pass is one wave of tasks
+/// submitted to the persistent executor pool — no thread is spawned
+/// anywhere in here (the pre-executor version stood up three scoped
+/// thread teams per divide, paid inside the timed region):
 ///
-/// 1. parallel min/max reduction over chunks;
-/// 2. parallel per-chunk histograms, merged into per-(chunk, bucket)
-///    write offsets by a small serial prefix scan;
-/// 3. parallel scatter — every chunk writes its keys into *disjoint*
+/// 1. a wave of min/max reduction tasks over chunks;
+/// 2. a wave of per-chunk classify tasks (bucket ids + histograms),
+///    merged into per-(chunk, bucket) write offsets by a small serial
+///    prefix scan;
+/// 3. a wave of scatter tasks, fused per chunk with pass 2's output:
+///    each chunk's scatter task consumes the bucket ids its classify
+///    task cached (no re-division) and writes its keys into *disjoint*
 ///    ranges of one preallocated arena ([`FlatBuckets`]), so no
 ///    synchronization is needed on the write path and no per-bucket
 ///    allocations exist at all.
@@ -50,7 +56,8 @@ impl Divided {
 /// See EXPERIMENTS.md §Perf for the before/after (the serial version made
 /// the divide phase ~40% of the sorted-input parallel runtime; the arena
 /// scatter then removed the per-bucket allocations and the gather-side
-/// assemble memcpy).
+/// assemble memcpy; the executor then removed the three per-divide
+/// thread-team spawns).
 pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     if data.is_empty() {
         return Err(Error::Config("cannot divide an empty array".into()));
@@ -58,7 +65,7 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     if num_buckets == 0 {
         return Err(Error::Config("need at least one bucket".into()));
     }
-    let workers = par::available_workers().clamp(1, data.len().div_ceil(CHUNK_MIN).max(1));
+    let (workers, chunk_ranges) = scatter_chunks(data.len());
 
     // Pass 1: parallel min/max.
     let (lo, hi) = par::par_reduce_indices(
@@ -81,11 +88,6 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     // Pass 2: bucket ids (ONE division per key, cached as u16 — the
     // division is the dominant per-key cost) + per-chunk histograms, in
     // parallel chunks.
-    let chunk_len = data.len().div_ceil(workers);
-    let chunk_ranges: Vec<(usize, usize)> = (0..workers)
-        .map(|w| (w * chunk_len, ((w + 1) * chunk_len).min(data.len())))
-        .filter(|(s, e)| s < e)
-        .collect();
     debug_assert!(num_buckets <= u16::MAX as usize + 1);
     let classify = BucketFn::new(lo, sub, num_buckets);
     let per_chunk: Vec<(Vec<u16>, Vec<u32>)> =
@@ -100,21 +102,8 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
             (ids, h)
         });
 
-    // Serial prefix scan: bucket sizes + per-(chunk, bucket) offsets.
-    let mut hist = vec![0usize; num_buckets];
-    for (_, ch) in &per_chunk {
-        for (b, &c) in ch.iter().enumerate() {
-            hist[b] += c as usize;
-        }
-    }
-    let mut offsets: Vec<Vec<usize>> = Vec::with_capacity(per_chunk.len());
-    let mut running = vec![0usize; num_buckets];
-    for (_, ch) in &per_chunk {
-        offsets.push(running.clone());
-        for (b, &c) in ch.iter().enumerate() {
-            running[b] += c as usize;
-        }
-    }
+    // Serial prefix scan: per-(chunk, bucket) offsets + bucket sizes.
+    let (offsets, hist) = chunk_write_offsets(per_chunk.iter().map(|(_, h)| h), num_buckets);
 
     // Bucket offset table: exclusive prefix sum of the histogram.  This
     // is the whole gather-side bookkeeping — bucket b's final resting
@@ -136,12 +125,6 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     // `set_len`.
     let mut arena: Vec<i32> = Vec::with_capacity(data.len());
     {
-        struct ArenaPtr(*mut i32);
-        // SAFETY (Send/Sync): one buffer that outlives the scoped
-        // threads; write disjointness comes from the per-chunk offset
-        // ranges within each bucket's private arena segment.
-        unsafe impl Send for ArenaPtr {}
-        unsafe impl Sync for ArenaPtr {}
         let ptr = ArenaPtr(arena.as_mut_ptr());
         let work: Vec<((usize, usize), (Vec<u16>, Vec<u32>), Vec<usize>)> = chunk_ranges
             .into_iter()
@@ -169,6 +152,46 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
 
 /// Below this input length the parallel machinery is pure overhead.
 const CHUNK_MIN: usize = 64 * 1024;
+
+/// Shared raw arena pointer for the scatter waves.
+struct ArenaPtr(*mut i32);
+// SAFETY (Send/Sync): one buffer that outlives the pooled scatter tasks;
+// write disjointness comes from the chunk-private offset ranges within
+// each bucket's arena segment (see the callers' prefix-scan setup).
+unsafe impl Send for ArenaPtr {}
+unsafe impl Sync for ArenaPtr {}
+
+/// Chunk `0..len` for the scatter passes: at most `available_workers()`
+/// spans of at least [`CHUNK_MIN`] keys each.  Shared by the native
+/// divide and the XLA id-scatter so the "disjoint chunk-private range"
+/// construction has exactly one definition.
+fn scatter_chunks(len: usize) -> (usize, Vec<(usize, usize)>) {
+    let workers = par::available_workers().clamp(1, len.div_ceil(CHUNK_MIN).max(1));
+    let chunk_len = len.div_ceil(workers);
+    let ranges = (0..workers)
+        .map(|w| (w * chunk_len, ((w + 1) * chunk_len).min(len)))
+        .filter(|(s, e)| s < e)
+        .collect();
+    (workers, ranges)
+}
+
+/// Serial prefix scan over per-chunk bucket histograms: returns each
+/// chunk's private write offset inside every bucket segment, plus the
+/// total occupancy per bucket (the running sum after the last chunk).
+fn chunk_write_offsets(
+    hists: impl Iterator<Item = &Vec<u32>>,
+    num_buckets: usize,
+) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let mut offsets = Vec::new();
+    let mut running = vec![0usize; num_buckets];
+    for ch in hists {
+        offsets.push(running.clone());
+        for (b, &c) in ch.iter().enumerate() {
+            running[b] += c as usize;
+        }
+    }
+    (offsets, running)
+}
 
 /// Bucket index of one key.
 #[inline(always)]
@@ -214,8 +237,84 @@ impl BucketFn {
     }
 }
 
+/// Parallel scatter over precomputed per-key bucket ids — the XLA
+/// branch's counterpart of `divide_native` pass 3.  A wave of per-chunk
+/// counting tasks rebuilds chunk-local histograms from the ids (no
+/// re-division), a serial prefix scan turns them into chunk-private
+/// write offsets, and a scatter wave writes every chunk's keys into
+/// disjoint arena ranges.  This replaces the serial O(n) cursor walk the
+/// XLA path used to pay after the kernel returned.
+///
+/// Malformed ids are an invariant **error**, never a panic or UB: the
+/// id array length, the per-id bucket range, and the id-derived bucket
+/// occupancy are all validated against `table` before any raw write.
+fn scatter_by_ids(data: &[i32], ids: &[u32], table: &[usize]) -> Result<Vec<i32>> {
+    let num_buckets = table.len() - 1;
+    if ids.len() != data.len() {
+        return Err(Error::Invariant(format!(
+            "id/key length mismatch: {} ids for {} keys",
+            ids.len(),
+            data.len()
+        )));
+    }
+    let (workers, chunk_ranges) = scatter_chunks(data.len());
+
+    let per_chunk: Vec<(Vec<u32>, usize)> = par::par_map(chunk_ranges.clone(), workers, |(s, e)| {
+        let mut h = vec![0u32; num_buckets];
+        let mut out_of_range = 0usize;
+        for &b in &ids[s..e] {
+            match h.get_mut(b as usize) {
+                Some(count) => *count += 1,
+                None => out_of_range += 1,
+            }
+        }
+        (h, out_of_range)
+    });
+    let out_of_range: usize = per_chunk.iter().map(|(_, bad)| *bad).sum();
+    if out_of_range > 0 {
+        return Err(Error::Invariant(format!(
+            "{out_of_range} bucket ids out of range (>= {num_buckets})"
+        )));
+    }
+
+    let (offsets, placed) = chunk_write_offsets(per_chunk.iter().map(|(h, _)| h), num_buckets);
+    // The id-derived occupancy must agree with the offset table, or the
+    // "disjoint chunk-private ranges" argument below does not hold.
+    for b in 0..num_buckets {
+        if placed[b] != table[b + 1] - table[b] {
+            return Err(Error::Invariant(format!(
+                "bucket {b}: ids place {} keys, histogram reserved {}",
+                placed[b],
+                table[b + 1] - table[b]
+            )));
+        }
+    }
+
+    let mut arena: Vec<i32> = Vec::with_capacity(data.len());
+    {
+        let ptr = ArenaPtr(arena.as_mut_ptr());
+        let ptr_ref = &ptr;
+        let work: Vec<((usize, usize), Vec<usize>)> =
+            chunk_ranges.into_iter().zip(offsets).collect();
+        par::par_map(work, workers, move |((s, e), mut offs)| {
+            for (&v, &b) in data[s..e].iter().zip(&ids[s..e]) {
+                let b = b as usize;
+                // SAFETY: table[b] + offs[b] stays inside bucket b's
+                // chunk-private range (prefix-scan construction, verified
+                // against `table` above).
+                unsafe { ptr_ref.0.add(table[b] + offs[b]).write(v) };
+                offs[b] += 1;
+            }
+        });
+    }
+    // SAFETY: capacity is exactly `data.len()` and every slot was written.
+    unsafe { arena.set_len(data.len()) };
+    Ok(arena)
+}
+
 /// Division through the configured engine.  The XLA path runs the AOT
-/// Pallas partition kernel via PJRT and scatters on the returned ids.
+/// Pallas partition kernel via PJRT and scatters on the returned ids
+/// with the same chunked prefix-scan scatter as the native path.
 pub fn divide_with_engine(
     data: &[i32],
     num_buckets: usize,
@@ -230,8 +329,6 @@ pub fn divide_with_engine(
             })?;
             let xd = XlaDivide::new(reg, num_buckets)?;
             let out = xd.divide(data)?;
-            // Scatter on the artifact's bucket ids straight into the flat
-            // arena: cursor[b] walks bucket b's segment.
             let mut table = Vec::with_capacity(num_buckets + 1);
             let mut acc = 0usize;
             table.push(0);
@@ -246,13 +343,7 @@ pub fn divide_with_engine(
                     data.len()
                 )));
             }
-            let mut arena = vec![0i32; data.len()];
-            let mut cursor: Vec<usize> = table[..num_buckets].to_vec();
-            for (&v, &b) in data.iter().zip(&out.ids) {
-                let b = b as usize;
-                arena[cursor[b]] = v;
-                cursor[b] += 1;
-            }
+            let arena = scatter_by_ids(data, &out.ids, &table)?;
             Ok(Divided {
                 buckets: FlatBuckets::from_parts(arena, table),
                 lo: out.lo,
@@ -359,6 +450,35 @@ mod tests {
                 assert_eq!(f.of(v), bucket_of(v, lo, sub, p));
             }
         }
+    }
+
+    #[test]
+    fn scatter_by_ids_matches_the_native_arena() {
+        // The XLA branch's parallel scatter must land every key exactly
+        // where the native pass-3 scatter does, given the same ids.
+        for dist in Distribution::ALL {
+            let data = workload::generate(dist, 30_000, 13);
+            let d = divide_native(&data, 36).unwrap();
+            let classify = BucketFn::new(d.lo, d.sub, 36);
+            let ids: Vec<u32> = data.iter().map(|&v| classify.of(v) as u32).collect();
+            let table = d.buckets.offsets().to_vec();
+            let arena = scatter_by_ids(&data, &ids, &table).unwrap();
+            assert_eq!(arena.as_slice(), d.buckets.arena(), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_by_ids_rejects_malformed_ids_without_panicking() {
+        // Ids that disagree with the reserved segment sizes must be an
+        // invariant error before any raw write happens.
+        let data = vec![1, 2, 3, 4];
+        let ids = vec![0u32, 0, 0, 1];
+        let table = vec![0usize, 2, 4]; // reserves 2 + 2, ids place 3 + 1
+        assert!(scatter_by_ids(&data, &ids, &table).is_err());
+        // Out-of-range bucket ids (a corrupt artifact) and a short id
+        // array are errors too, not index panics in a pool task.
+        assert!(scatter_by_ids(&data, &[0, 1, 2, 0], &table).is_err());
+        assert!(scatter_by_ids(&data, &[0, 0], &table).is_err());
     }
 
     #[test]

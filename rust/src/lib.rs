@@ -11,9 +11,12 @@
 //!   generators, metrics, the analytical model (Theorems 1–6), the
 //!   figure-regeneration harness, the [`campaign`] engine that runs
 //!   the paper's whole §6 experiment grid concurrently with shared
-//!   topology/plan caches, and the [`service`] layer — a multi-tenant
+//!   topology/plan caches, the [`service`] layer — a multi-tenant
 //!   sort service (bounded job queue, sorter pool, small-job batching,
-//!   admission control, latency SLOs) for online serving.
+//!   admission control, latency SLOs) for online serving — and the
+//!   persistent work-stealing executor ([`runtime::Executor`]) that
+//!   every one of those layers submits its parallel work to, keeping
+//!   the sort hot path free of thread spawn/teardown after warmup.
 //! * **Layer 2 (python/compile/model.py)** — the array-division compute
 //!   graph (min/max → SubDivider → bucket-id + histogram) and a bitonic
 //!   block sorter, written in JAX.

@@ -1,358 +1,585 @@
-//! High-level executors over the AOT artifacts: the streaming divide
-//! pipeline (min/max → SubDivider → bucket ids + histogram) and the
-//! bitonic block sorter, both with shape-safe padding.
+//! Persistent work-stealing executor — the one thread pool behind every
+//! parallel phase of the sort pipeline.
+//!
+//! Before this module existed the hot path paid OS-thread spawn/teardown
+//! *inside* the timed parallel region: `divide_native` stood up a fresh
+//! scoped-thread team three times per sort (min/max, classify+histogram,
+//! scatter), the Waves simulator spawned a fourth for the local sorts,
+//! and every service job re-paid all of it.  The executor amortizes that
+//! cost to zero after warmup: a lazily-initialized pool of long-lived
+//! workers (per-worker FIFO deques plus a shared injector, work stealing
+//! between them, park/unpark when idle) and a scope-style API that — like
+//! `std::thread::scope` — lets tasks borrow stack data.
+//!
+//! Design notes:
+//!
+//! * **Scopes, not futures.**  [`Executor::scope`] blocks until every
+//!   task submitted inside it has completed, which is what makes the
+//!   borrowed-data lifetime erasure sound (see the `SAFETY` comment on
+//!   [`Scope::submit`]).  All submission happens inside the scope
+//!   closure; a task itself never holds a `&Scope`, so the scope
+//!   wait-for graph is a strict fork/join tree — no wait cycles.
+//! * **Callers help, within their scope.**  A thread waiting for its
+//!   scope does not park while that scope has queued tasks — it digs
+//!   them out of the deques/injector and executes them.  Helping never
+//!   adopts *unrelated* work: a timed wait (a campaign cell's parallel
+//!   region, a service job's sort latency) is never contaminated by
+//!   another tenant's tasks.  Nested scopes opened from inside a pool
+//!   task therefore cannot deadlock, and a scope completes even on a
+//!   pool with zero workers.
+//! * **Panics are contained.**  A panicking task never kills a worker;
+//!   the first payload is stashed and re-thrown from `scope` on the
+//!   submitting thread after the remaining tasks finish.
+//!
+//! The crate-wide singleton is [`Executor::global`]; private pools
+//! (mainly for tests) come from [`Executor::new`].
 
-use std::sync::Arc;
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::mem;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-use super::artifact::ArtifactRegistry;
-use crate::error::{Error, Result};
-use crate::xla;
+/// A lifetime-erased unit of work (see [`Scope::submit`] for why the
+/// erasure is sound).
+type TaskFn = Box<dyn FnOnce() + Send + 'static>;
 
-/// Chunk length every streaming artifact was lowered for.
-pub const CHUNK: usize = 65536;
-
-/// Output of the divide pipeline.
-#[derive(Debug, Clone)]
-pub struct DivideOutput {
-    /// Bucket id per input element.
-    pub ids: Vec<u32>,
-    /// Bucket occupancy histogram (`num_buckets` long).
-    pub hist: Vec<usize>,
-    /// Global minimum.
-    pub lo: i32,
-    /// Step point (`SubDivider`, ≥ 1).
-    pub sub: i32,
+/// One queued task plus the scope it reports completion to.
+struct Task {
+    run: TaskFn,
+    scope: Arc<ScopeState>,
 }
 
-/// XLA-backed array-division pipeline for a fixed bucket count.
-pub struct XlaDivide {
-    minmax: Arc<xla::PjRtLoadedExecutable>,
-    partition: Arc<xla::PjRtLoadedExecutable>,
-    num_buckets: usize,
-    chunk: usize,
+/// Completion accounting for one scope.
+struct ScopeState {
+    sync: Mutex<ScopeSync>,
+    done: Condvar,
 }
 
-impl XlaDivide {
-    /// Build over a registry for `num_buckets` processors (must be one of
-    /// the Table 1.1 counts the artifacts were lowered for).
-    pub fn new(reg: &ArtifactRegistry, num_buckets: usize) -> Result<Self> {
-        let chunk = reg.chunk();
-        let minmax = reg.executable(&format!("minmax_n{chunk}"))?;
-        let partition = reg.executable(&format!("partition_n{chunk}_p{num_buckets}"))?;
-        Ok(XlaDivide {
-            minmax,
-            partition,
-            num_buckets,
-            chunk,
+struct ScopeSync {
+    /// Tasks submitted and not yet finished.
+    pending: usize,
+    /// First panic payload caught in a task, re-thrown by `scope`.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+/// State under the pool's injector lock (the `idle` condvar's mutex).
+struct PoolShared {
+    /// Externally submitted tasks (and the steal target of last resort).
+    injector: VecDeque<Task>,
+    /// Set once by [`Executor::drop`]; workers exit when idle.
+    shutdown: bool,
+}
+
+struct Pool {
+    shared: Mutex<PoolShared>,
+    idle: Condvar,
+    /// Bumped (SeqCst) on every push anywhere — parked workers re-check
+    /// it, which closes the scan-then-park wakeup race without funneling
+    /// worker-local pushes through the shared mutex.
+    epoch: AtomicU64,
+    /// Workers currently parked on `idle` (moved while holding `shared`,
+    /// read lock-free by pushers) — lets a push skip the wakeup syscall
+    /// entirely while every worker is busy.
+    sleepers: AtomicUsize,
+    /// Mirror of `shared.injector.len()`, maintained under the lock and
+    /// read lock-free — dispatch skips the shared mutex when the
+    /// injector is empty (the common state for worker-local waves).
+    injector_len: AtomicUsize,
+    /// Per-worker FIFO deques: owner pops the front, thieves the back.
+    locals: Vec<Mutex<VecDeque<Task>>>,
+}
+
+thread_local! {
+    /// `(pool identity, worker index)` when the current thread is a pool
+    /// worker — routes its submissions to its own deque.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+impl Pool {
+    fn identity(&self) -> usize {
+        self as *const Pool as usize
+    }
+
+    /// Index of the current thread's deque, if it is a worker *of this
+    /// pool* (a worker of pool A submitting to pool B is external to B).
+    fn my_index(&self) -> Option<usize> {
+        match WORKER.with(Cell::get) {
+            Some((pid, idx)) if pid == self.identity() => Some(idx),
+            _ => None,
+        }
+    }
+
+    fn push(&self, task: Task) {
+        if let Some(idx) = self.my_index() {
+            // Worker-local fast path: own deque plus two lock-free
+            // atomics — the shared mutex is untouched unless a worker
+            // is actually parked.
+            self.locals[idx].lock().unwrap().push_back(task);
+        } else {
+            let mut sh = self.shared.lock().unwrap();
+            sh.injector.push_back(task);
+            self.injector_len.store(sh.injector.len(), Ordering::SeqCst);
+        }
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            // Lock-then-notify: a parking worker holds `shared` from its
+            // final epoch re-check until `wait` releases it, so this
+            // notify lands either before that re-check (which then sees
+            // the bumped epoch) or after the park (and wakes it).
+            let _guard = self.shared.lock().unwrap();
+            self.idle.notify_all();
+        }
+    }
+
+    /// Pop one runnable task from anywhere: own deque front, then the
+    /// injector, then steal another worker's deque back.
+    fn find_task(&self) -> Option<Task> {
+        let me = self.my_index();
+        if let Some(idx) = me {
+            if let Some(t) = self.locals[idx].lock().unwrap().pop_front() {
+                return Some(t);
+            }
+        }
+        if self.injector_len.load(Ordering::SeqCst) > 0 {
+            let mut sh = self.shared.lock().unwrap();
+            if let Some(t) = sh.injector.pop_front() {
+                self.injector_len.store(sh.injector.len(), Ordering::SeqCst);
+                return Some(t);
+            }
+        }
+        for (j, deque) in self.locals.iter().enumerate() {
+            if Some(j) == me {
+                continue;
+            }
+            if let Some(t) = deque.lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Dig the first task belonging to `state` out of the queues — the
+    /// scope-filtered variant of [`Pool::find_task`] used while waiting
+    /// out a scope, so a timed wait never adopts unrelated work.
+    fn find_scope_task(&self, state: &ScopeState) -> Option<Task> {
+        let target: *const ScopeState = state;
+        let me = self.my_index();
+        if let Some(idx) = me {
+            let mut deque = self.locals[idx].lock().unwrap();
+            if let Some(t) = take_scope_task(&mut deque, target) {
+                return Some(t);
+            }
+        }
+        if self.injector_len.load(Ordering::SeqCst) > 0 {
+            let mut sh = self.shared.lock().unwrap();
+            if let Some(t) = take_scope_task(&mut sh.injector, target) {
+                self.injector_len.store(sh.injector.len(), Ordering::SeqCst);
+                return Some(t);
+            }
+        }
+        for (j, deque) in self.locals.iter().enumerate() {
+            if Some(j) == me {
+                continue;
+            }
+            let mut deque = deque.lock().unwrap();
+            if let Some(t) = take_scope_task(&mut deque, target) {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Execute one task, containing any panic and reporting completion
+    /// to its scope.
+    fn run_task(&self, task: Task) {
+        let Task { run, scope } = task;
+        let result = catch_unwind(AssertUnwindSafe(run));
+        let mut sync = scope.sync.lock().unwrap();
+        if let Err(payload) = result {
+            if sync.panic.is_none() {
+                sync.panic = Some(payload);
+            }
+        }
+        sync.pending -= 1;
+        let finished = sync.pending == 0;
+        drop(sync);
+        if finished {
+            scope.done.notify_all();
+        }
+    }
+
+    /// Block until `state.pending == 0`, executing this scope's queued
+    /// tasks instead of idling.  Every task of `state` was pushed before
+    /// this is called, so a filtered sweep that finds nothing means the
+    /// stragglers are executing on other threads — then parking on the
+    /// scope condvar is safe (completion notifies it; scopes form a
+    /// fork/join tree, so the threads executing them make progress).
+    fn wait_scope(&self, state: &ScopeState) {
+        loop {
+            if state.sync.lock().unwrap().pending == 0 {
+                return;
+            }
+            if let Some(t) = self.find_scope_task(state) {
+                self.run_task(t);
+                continue;
+            }
+            let sync = state.sync.lock().unwrap();
+            if sync.pending == 0 {
+                return;
+            }
+            let guard = state.done.wait(sync).unwrap();
+            drop(guard);
+        }
+    }
+
+    /// Long-lived worker body: run tasks while any exist, park otherwise.
+    fn worker_loop(&self) {
+        loop {
+            let seen = self.epoch.load(Ordering::SeqCst);
+            if let Some(t) = self.find_task() {
+                self.run_task(t);
+                continue;
+            }
+            let mut sh = self.shared.lock().unwrap();
+            if sh.shutdown {
+                return;
+            }
+            if let Some(t) = sh.injector.pop_front() {
+                self.injector_len.store(sh.injector.len(), Ordering::SeqCst);
+                drop(sh);
+                self.run_task(t);
+                continue;
+            }
+            // Park only if nothing was pushed since the (empty) scan.
+            // SeqCst ordering makes the race two-sided: a pusher either
+            // bumps the epoch before the re-check below (we rescan), or
+            // its later sleeper-count read sees the increment we publish
+            // first (it notifies).
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            if self.epoch.load(Ordering::SeqCst) == seen {
+                sh = self.idle.wait(sh).unwrap();
+            }
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+            if sh.shutdown {
+                return;
+            }
+            drop(sh);
+        }
+    }
+}
+
+/// Handle to a worker pool.  Dropping a (non-global) executor shuts its
+/// workers down once they go idle; the global instance lives for the
+/// process.
+pub struct Executor {
+    pool: Arc<Pool>,
+    workers: usize,
+}
+
+impl Executor {
+    /// Build a private pool with `workers` long-lived threads.  `0` is
+    /// legal: scopes then execute entirely on the submitting thread via
+    /// the helping loop (deterministic mode for tests).
+    pub fn new(workers: usize) -> Executor {
+        let pool = Arc::new(Pool {
+            shared: Mutex::new(PoolShared {
+                injector: VecDeque::new(),
+                shutdown: false,
+            }),
+            idle: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            sleepers: AtomicUsize::new(0),
+            injector_len: AtomicUsize::new(0),
+            locals: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+        });
+        for idx in 0..workers {
+            let pool = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name(format!("ohhc-exec-{idx}"))
+                .spawn(move || {
+                    WORKER.with(|w| w.set(Some((pool.identity(), idx))));
+                    pool.worker_loop();
+                })
+                .expect("spawn executor worker");
+        }
+        Executor { pool, workers }
+    }
+
+    /// The process-wide shared pool, spun up on first use with one worker
+    /// per hardware thread (override with `OHHC_POOL_WORKERS`).  Every
+    /// sort-pipeline layer — divide waves, Waves local sorts, campaign
+    /// sweeps, service jobs — submits here, so a burst of small jobs
+    /// never multiplies thread-spawn cost by job count.
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let workers = std::env::var("OHHC_POOL_WORKERS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(crate::util::par::available_workers);
+            Executor::new(workers)
         })
     }
 
-    /// Run the full pipeline over `data` (any length ≥ 1).
-    pub fn divide(&self, data: &[i32]) -> Result<DivideOutput> {
-        if data.is_empty() {
-            return Err(Error::Config("cannot divide an empty array".into()));
-        }
-        // Pass 1: global (min, max) chunk by chunk.  The tail chunk is
-        // padded with the first element — value-neutral for min/max.
-        let mut lo = i32::MAX;
-        let mut hi = i32::MIN;
-        let mut buf = vec![data[0]; self.chunk];
-        for chunk in data.chunks(self.chunk) {
-            let lit = if chunk.len() == self.chunk {
-                xla::Literal::vec1(chunk)
-            } else {
-                buf[..chunk.len()].copy_from_slice(chunk);
-                buf[chunk.len()..].fill(data[0]);
-                xla::Literal::vec1(&buf)
-            };
-            let out = self.minmax.execute::<xla::Literal>(&[lit])?[0][0]
-                .to_literal_sync()?
-                .to_tuple()?;
-            let mn = out[0].to_vec::<i32>()?[0];
-            let mx = out[1].to_vec::<i32>()?[0];
-            lo = lo.min(mn);
-            hi = hi.max(mx);
-        }
-        let sub = (((hi as i64 - lo as i64) / self.num_buckets as i64).max(1)) as i32;
+    /// Worker threads owned by this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
 
-        // Pass 2: bucket ids + histogram.  Tail padding uses `hi`, which
-        // clamps into the last bucket; the pad count is subtracted.
-        let mut ids = Vec::with_capacity(data.len());
-        let mut hist = vec![0usize; self.num_buckets];
-        for chunk in data.chunks(self.chunk) {
-            let pad = self.chunk - chunk.len();
-            let lit = if pad == 0 {
-                xla::Literal::vec1(chunk)
-            } else {
-                buf[..chunk.len()].copy_from_slice(chunk);
-                buf[chunk.len()..].fill(hi);
-                xla::Literal::vec1(&buf)
-            };
-            let args = [lit, xla::Literal::vec1(&[lo]), xla::Literal::vec1(&[sub])];
-            let out = self
-                .partition
-                .execute::<xla::Literal>(&args)?[0][0]
-                .to_literal_sync()?
-                .to_tuple()?;
-            let chunk_ids = out[0].to_vec::<i32>()?;
-            let chunk_hist = out[1].to_vec::<i32>()?;
-            ids.extend(chunk_ids[..chunk.len()].iter().map(|&v| v as u32));
-            for (b, &count) in chunk_hist.iter().enumerate() {
-                hist[b] += count as usize;
+    /// Run `f` with a [`Scope`] whose tasks may borrow anything that
+    /// outlives the call, then block until every submitted task has
+    /// finished.  The first task panic (or a panic in `f` itself) is
+    /// re-thrown here after the remaining tasks complete, so borrowed
+    /// data is never observable by a live task past this frame.
+    pub fn scope<'scope, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'scope>) -> R,
+    {
+        let state = Arc::new(ScopeState {
+            sync: Mutex::new(ScopeSync {
+                pending: 0,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        });
+        let scope = Scope {
+            pool: Arc::clone(&self.pool),
+            state: Arc::clone(&state),
+            _marker: PhantomData,
+        };
+        // `f` may panic after submitting tasks; the wait below must still
+        // happen before this frame unwinds (tasks borrow from it).
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        self.pool.wait_scope(&state);
+        let task_panic = state.sync.lock().unwrap().panic.take();
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(value) => {
+                if let Some(payload) = task_panic {
+                    resume_unwind(payload);
+                }
+                value
             }
-            hist[self.num_buckets - 1] -= pad;
-        }
-        Ok(DivideOutput { ids, hist, lo, sub })
-    }
-}
-
-/// XLA-backed splitter partition (the PSRS baseline's hot spot): buckets
-/// keys by a sorted splitter list via the AOT splitter kernel.
-pub struct XlaSplitterPartition {
-    exe: Arc<xla::PjRtLoadedExecutable>,
-    num_buckets: usize,
-    chunk: usize,
-}
-
-impl XlaSplitterPartition {
-    /// Build for one of the lowered splitter bucket counts (36, 144).
-    pub fn new(reg: &ArtifactRegistry, num_buckets: usize) -> Result<Self> {
-        let chunk = reg.chunk();
-        let exe = reg.executable(&format!("splitter_n{chunk}_p{num_buckets}"))?;
-        Ok(XlaSplitterPartition {
-            exe,
-            num_buckets,
-            chunk,
-        })
-    }
-
-    /// Bucket `data` by `splitters` (ascending, `num_buckets - 1` long).
-    /// Returns `(ids, hist)`; the tail chunk is padded with `i32::MAX`
-    /// (always the last bucket) and corrected.
-    pub fn partition(&self, data: &[i32], splitters: &[i32]) -> Result<(Vec<u32>, Vec<usize>)> {
-        if splitters.len() != self.num_buckets - 1 {
-            return Err(Error::Config(format!(
-                "need {} splitters, got {}",
-                self.num_buckets - 1,
-                splitters.len()
-            )));
-        }
-        if data.is_empty() {
-            return Ok((Vec::new(), vec![0; self.num_buckets]));
-        }
-        let mut ids = Vec::with_capacity(data.len());
-        let mut hist = vec![0usize; self.num_buckets];
-        let mut buf = vec![i32::MAX; self.chunk];
-        for chunk in data.chunks(self.chunk) {
-            let pad = self.chunk - chunk.len();
-            let lit = if pad == 0 {
-                xla::Literal::vec1(chunk)
-            } else {
-                buf[..chunk.len()].copy_from_slice(chunk);
-                buf[chunk.len()..].fill(i32::MAX);
-                xla::Literal::vec1(&buf)
-            };
-            let out = self
-                .exe
-                .execute::<xla::Literal>(&[lit, xla::Literal::vec1(splitters)])?[0][0]
-                .to_literal_sync()?
-                .to_tuple()?;
-            let chunk_ids = out[0].to_vec::<i32>()?;
-            let chunk_hist = out[1].to_vec::<i32>()?;
-            ids.extend(chunk_ids[..chunk.len()].iter().map(|&v| v as u32));
-            for (b, &c) in chunk_hist.iter().enumerate() {
-                hist[b] += c as usize;
-            }
-            hist[self.num_buckets - 1] -= pad;
-        }
-        Ok((ids, hist))
-    }
-}
-
-/// XLA-backed local sorter: bitonic blocks on-device, k-way merge on host.
-pub struct XlaSortBlocks {
-    exe: Arc<xla::PjRtLoadedExecutable>,
-    chunk: usize,
-    block: usize,
-}
-
-impl XlaSortBlocks {
-    /// Build over a registry for a lowered block size (1024 or 4096).
-    pub fn new(reg: &ArtifactRegistry, block: usize) -> Result<Self> {
-        let chunk = reg.chunk();
-        let exe = reg.executable(&format!("bitonic_n{chunk}_b{block}"))?;
-        Ok(XlaSortBlocks { exe, chunk, block })
-    }
-
-    /// Sort a payload of any length: pad to the chunk shape with
-    /// `i32::MAX`, bitonic-sort every block on the XLA side, then k-way
-    /// merge the sorted blocks on the host.
-    pub fn sort(&self, data: &[i32]) -> Result<Vec<i32>> {
-        if data.is_empty() {
-            return Ok(Vec::new());
-        }
-        let mut out = Vec::with_capacity(data.len());
-        let mut buf = vec![i32::MAX; self.chunk];
-        for chunk in data.chunks(self.chunk) {
-            buf[..chunk.len()].copy_from_slice(chunk);
-            buf[chunk.len()..].fill(i32::MAX);
-            let lit = xla::Literal::vec1(&buf);
-            let sorted = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
-                .to_literal_sync()?
-                .to_tuple1()?
-                .to_vec::<i32>()?;
-            merge_sorted_blocks(&sorted, self.block, chunk.len(), &mut out);
-        }
-        // Multi-chunk payloads: each chunk is internally sorted; merge the
-        // chunk runs pairwise (rare path — payloads usually fit a chunk).
-        if data.len() > self.chunk {
-            let run = self.chunk.min(out.len());
-            out = merge_runs(out, run);
-        }
-        Ok(out)
-    }
-}
-
-/// K-way merge of consecutive sorted `block`-sized runs, keeping the first
-/// `keep` non-sentinel keys.
-fn merge_sorted_blocks(sorted: &[i32], block: usize, keep: usize, out: &mut Vec<i32>) {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut heads: BinaryHeap<Reverse<(i32, usize)>> = sorted
-        .chunks(block)
-        .enumerate()
-        .filter(|(_, c)| !c.is_empty())
-        .map(|(i, c)| Reverse((c[0], i * block)))
-        .collect();
-    let mut taken = 0;
-    while taken < keep {
-        let Reverse((v, idx)) = heads.pop().expect("ran out of keys during merge");
-        out.push(v);
-        taken += 1;
-        let next = idx + 1;
-        if next % block != 0 && next < sorted.len() {
-            heads.push(Reverse((sorted[next], next)));
         }
     }
 }
 
-/// Merge equal-length sorted runs of `run` keys into one sorted vector.
-fn merge_runs(v: Vec<i32>, run: usize) -> Vec<i32> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut heads: BinaryHeap<Reverse<(i32, usize)>> = v
-        .chunks(run)
-        .enumerate()
-        .filter(|(_, c)| !c.is_empty())
-        .map(|(i, c)| Reverse((c[0], i * run)))
-        .collect();
-    let mut out = Vec::with_capacity(v.len());
-    while let Some(Reverse((val, idx))) = heads.pop() {
-        out.push(val);
-        let next = idx + 1;
-        if next % run != 0 && next < v.len() {
-            heads.push(Reverse((v[next], next)));
-        }
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let mut sh = self.pool.shared.lock().unwrap();
+        sh.shutdown = true;
+        self.pool.epoch.fetch_add(1, Ordering::SeqCst);
+        self.pool.idle.notify_all();
+        drop(sh);
     }
-    out
 }
 
-// These tests execute real lowered artifacts: they need `make artifacts`
-// plus the PJRT runtime, neither of which exists in the default build.
-#[cfg(all(test, feature = "xla"))]
+/// Remove the first task belonging to `target` from a queue (not just
+/// the ends — a matching task may sit behind unrelated work).
+fn take_scope_task(queue: &mut VecDeque<Task>, target: *const ScopeState) -> Option<Task> {
+    let idx = queue.iter().position(|t| std::ptr::eq(Arc::as_ptr(&t.scope), target))?;
+    queue.remove(idx)
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("workers", &self.workers).finish()
+    }
+}
+
+/// Submission surface passed to the [`Executor::scope`] closure.
+///
+/// The `'scope` lifetime is invariant (the `PhantomData` below), exactly
+/// as in `std::thread::scope` — it pins the set of borrows tasks may
+/// capture to data that strictly outlives the `scope` call.
+pub struct Scope<'scope> {
+    pool: Arc<Pool>,
+    state: Arc<ScopeState>,
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'scope> {
+    /// Submit one task.  It may run on any pool worker — or on the
+    /// submitting thread itself while it waits out the scope.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.sync.lock().unwrap().pending += 1;
+        let run: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the `'scope` borrow is erased to `'static` only for
+        // storage in the queues.  `Executor::scope` does not return (or
+        // unwind) before `wait_scope` has observed `pending == 0`, i.e.
+        // before this closure has been called and dropped, so it never
+        // outlives the data it borrows.
+        let run = unsafe {
+            mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, TaskFn>(run)
+        };
+        self.pool.push(Task {
+            run,
+            scope: Arc::clone(&self.state),
+        });
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload;
-    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
-    fn registry() -> ArtifactRegistry {
-        ArtifactRegistry::open(&PathBuf::from("artifacts")).expect("make artifacts first")
-    }
-
-    /// Native oracle for the divide pipeline.
-    fn native_divide(data: &[i32], p: usize) -> (Vec<u32>, Vec<usize>, i32, i32) {
-        let lo = *data.iter().min().unwrap();
-        let hi = *data.iter().max().unwrap();
-        let sub = (((hi as i64 - lo as i64) / p as i64).max(1)) as i32;
-        let mut hist = vec![0usize; p];
-        let ids: Vec<u32> = data
-            .iter()
-            .map(|&v| {
-                let b = (((v as i64 - lo as i64) / sub as i64) as usize).min(p - 1);
-                hist[b] += 1;
-                b as u32
-            })
-            .collect();
-        (ids, hist, lo, sub)
+    #[test]
+    fn scope_runs_every_task_and_returns_value() {
+        let exec = Executor::new(3);
+        let total = AtomicUsize::new(0);
+        let out = exec.scope(|s| {
+            for i in 0..100usize {
+                let total = &total;
+                s.submit(move || {
+                    total.fetch_add(i, Ordering::Relaxed);
+                });
+            }
+            "done"
+        });
+        assert_eq!(out, "done");
+        assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
     }
 
     #[test]
-    fn xla_divide_matches_native_exact_chunk() {
-        let reg = registry();
-        let data = workload::random(CHUNK, 42);
-        let xd = XlaDivide::new(&reg, 36).unwrap();
-        let out = xd.divide(&data).unwrap();
-        let (ids, hist, lo, sub) = native_divide(&data, 36);
-        assert_eq!(out.lo, lo);
-        assert_eq!(out.sub, sub);
-        assert_eq!(out.ids, ids);
-        assert_eq!(out.hist, hist);
-    }
-
-    #[test]
-    fn xla_divide_matches_native_with_padding() {
-        let reg = registry();
-        let data = workload::random(CHUNK + 12_345, 43);
-        let xd = XlaDivide::new(&reg, 18).unwrap();
-        let out = xd.divide(&data).unwrap();
-        let (ids, hist, lo, sub) = native_divide(&data, 18);
-        assert_eq!(out.lo, lo);
-        assert_eq!(out.sub, sub);
-        assert_eq!(out.ids, ids);
-        assert_eq!(out.hist, hist);
-        assert_eq!(out.hist.iter().sum::<usize>(), data.len());
-    }
-
-    #[test]
-    fn xla_divide_small_input() {
-        let reg = registry();
-        let data = workload::sorted(1000, 7);
-        let xd = XlaDivide::new(&reg, 36).unwrap();
-        let out = xd.divide(&data).unwrap();
-        assert_eq!(out.hist.iter().sum::<usize>(), 1000);
-        // Monotone ids on sorted input.
-        assert!(out.ids.windows(2).all(|w| w[0] <= w[1]));
-    }
-
-    #[test]
-    fn xla_splitter_partition_matches_searchsorted() {
-        let reg = registry();
-        let sp = XlaSplitterPartition::new(&reg, 36).unwrap();
-        let data = workload::random(CHUNK + 777, 5);
-        let mut splitters: Vec<i32> = (1..36)
-            .map(|k| (k as i64 * (1 << 24) / 36) as i32)
-            .collect();
-        splitters.sort_unstable();
-        let (ids, hist) = sp.partition(&data, &splitters).unwrap();
-        assert_eq!(hist.iter().sum::<usize>(), data.len());
-        for (&v, &b) in data.iter().zip(&ids) {
-            let expect = splitters.partition_point(|&s| s < v);
-            assert_eq!(b as usize, expect, "v={v}");
+    fn tasks_borrow_and_mutate_disjoint_stack_data() {
+        let exec = Executor::new(2);
+        let mut slots = vec![0usize; 64];
+        exec.scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                s.submit(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in slots.iter().enumerate() {
+            assert_eq!(v, i * i);
         }
-        // Wrong splitter count rejected.
-        assert!(sp.partition(&data, &splitters[..10]).is_err());
     }
 
     #[test]
-    fn xla_bitonic_sorts_payloads() {
-        let reg = registry();
-        let sorter = XlaSortBlocks::new(&reg, 1024).unwrap();
-        for n in [1usize, 100, 1024, 5000, CHUNK] {
-            let data = workload::random(n, n as u64);
-            let got = sorter.sort(&data).unwrap();
-            let mut expect = data;
-            expect.sort_unstable();
-            assert_eq!(got, expect, "n={n}");
-        }
+    fn saturation_many_more_tasks_than_workers_no_deadlock() {
+        let exec = Executor::new(2);
+        let count = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..10_000 {
+                let count = &count;
+                s.submit(move || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10_000);
+    }
+
+    #[test]
+    fn zero_worker_pool_completes_scopes_on_the_caller() {
+        // Correctness must never depend on pool workers existing: the
+        // scope caller helps until the count drains.
+        let exec = Executor::new(0);
+        let count = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..500 {
+                let count = &count;
+                s.submit(move || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn nested_scopes_from_pool_tasks_do_not_deadlock() {
+        // Outer tasks occupy every worker, then each opens an inner
+        // scope on the same pool — the workers must help themselves.
+        let exec = Executor::new(2);
+        let count = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..4 {
+                let count = &count;
+                let exec = &exec;
+                s.submit(move || {
+                    exec.scope(|inner| {
+                        for _ in 0..8 {
+                            inner.submit(move || {
+                                count.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn external_thread_submission_like_a_service_worker() {
+        // A long-lived non-pool thread (the service worker pattern)
+        // submits through the injector and helps drain its own scope.
+        let exec = Executor::new(1);
+        let count = AtomicUsize::new(0);
+        std::thread::scope(|ts| {
+            for _ in 0..3 {
+                let exec = &exec;
+                let count = &count;
+                ts.spawn(move || {
+                    exec.scope(|s| {
+                        for _ in 0..50 {
+                            s.submit(move || {
+                                count.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn panic_in_task_is_contained_and_rethrown() {
+        let exec = Executor::new(2);
+        let survivors = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.scope(|s| {
+                for i in 0..16 {
+                    let survivors = &survivors;
+                    s.submit(move || {
+                        if i == 7 {
+                            panic!("task 7 exploded");
+                        }
+                        survivors.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(result.is_err(), "scope must rethrow the task panic");
+        // Every non-panicking task still ran to completion.
+        assert_eq!(survivors.load(Ordering::Relaxed), 15);
+        // ...and the pool survived: workers are intact for the next scope.
+        let after = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..32 {
+                let after = &after;
+                s.submit(move || {
+                    after.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(after.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = Executor::global() as *const Executor;
+        let b = Executor::global() as *const Executor;
+        assert_eq!(a, b);
+        assert!(Executor::global().workers() >= 1);
     }
 }

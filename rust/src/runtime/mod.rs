@@ -1,7 +1,14 @@
-//! XLA/PJRT runtime — loads the AOT-compiled L1/L2 artifacts and runs them
-//! from the rust hot path.  Python never executes at request time.
+//! Runtime substrate shared by every layer of the sort pipeline.
 //!
-//! Flow (see /opt/xla-example/load_hlo/ for the reference wiring):
+//! * [`Executor`] — the persistent work-stealing thread pool behind all
+//!   of `util::par`: divide task waves, Waves-mode local sorts, campaign
+//!   sweep concurrency, and service jobs all submit here, so the hot
+//!   path spawns zero threads after warmup.
+//! * XLA/PJRT loading ([`ArtifactRegistry`], [`XlaDivide`], …) — loads
+//!   the AOT-compiled L1/L2 artifacts and runs them from the rust hot
+//!   path; Python never executes at request time.
+//!
+//! XLA flow (see /opt/xla-example/load_hlo/ for the reference wiring):
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file(artifact)` →
 //! `client.compile(...)` → `executable.execute(...)`.
 //!
@@ -11,6 +18,8 @@
 
 mod artifact;
 mod executor;
+mod xla_exec;
 
 pub use artifact::{ArtifactManifest, ArtifactRegistry, ArtifactSig};
-pub use executor::{DivideOutput, XlaDivide, XlaSortBlocks, XlaSplitterPartition, CHUNK};
+pub use executor::{Executor, Scope};
+pub use xla_exec::{DivideOutput, XlaDivide, XlaSortBlocks, XlaSplitterPartition, CHUNK};

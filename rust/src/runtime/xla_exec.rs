@@ -1,0 +1,358 @@
+//! High-level executors over the AOT artifacts: the streaming divide
+//! pipeline (min/max → SubDivider → bucket ids + histogram) and the
+//! bitonic block sorter, both with shape-safe padding.
+
+use std::sync::Arc;
+
+use super::artifact::ArtifactRegistry;
+use crate::error::{Error, Result};
+use crate::xla;
+
+/// Chunk length every streaming artifact was lowered for.
+pub const CHUNK: usize = 65536;
+
+/// Output of the divide pipeline.
+#[derive(Debug, Clone)]
+pub struct DivideOutput {
+    /// Bucket id per input element.
+    pub ids: Vec<u32>,
+    /// Bucket occupancy histogram (`num_buckets` long).
+    pub hist: Vec<usize>,
+    /// Global minimum.
+    pub lo: i32,
+    /// Step point (`SubDivider`, ≥ 1).
+    pub sub: i32,
+}
+
+/// XLA-backed array-division pipeline for a fixed bucket count.
+pub struct XlaDivide {
+    minmax: Arc<xla::PjRtLoadedExecutable>,
+    partition: Arc<xla::PjRtLoadedExecutable>,
+    num_buckets: usize,
+    chunk: usize,
+}
+
+impl XlaDivide {
+    /// Build over a registry for `num_buckets` processors (must be one of
+    /// the Table 1.1 counts the artifacts were lowered for).
+    pub fn new(reg: &ArtifactRegistry, num_buckets: usize) -> Result<Self> {
+        let chunk = reg.chunk();
+        let minmax = reg.executable(&format!("minmax_n{chunk}"))?;
+        let partition = reg.executable(&format!("partition_n{chunk}_p{num_buckets}"))?;
+        Ok(XlaDivide {
+            minmax,
+            partition,
+            num_buckets,
+            chunk,
+        })
+    }
+
+    /// Run the full pipeline over `data` (any length ≥ 1).
+    pub fn divide(&self, data: &[i32]) -> Result<DivideOutput> {
+        if data.is_empty() {
+            return Err(Error::Config("cannot divide an empty array".into()));
+        }
+        // Pass 1: global (min, max) chunk by chunk.  The tail chunk is
+        // padded with the first element — value-neutral for min/max.
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        let mut buf = vec![data[0]; self.chunk];
+        for chunk in data.chunks(self.chunk) {
+            let lit = if chunk.len() == self.chunk {
+                xla::Literal::vec1(chunk)
+            } else {
+                buf[..chunk.len()].copy_from_slice(chunk);
+                buf[chunk.len()..].fill(data[0]);
+                xla::Literal::vec1(&buf)
+            };
+            let out = self.minmax.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            let mn = out[0].to_vec::<i32>()?[0];
+            let mx = out[1].to_vec::<i32>()?[0];
+            lo = lo.min(mn);
+            hi = hi.max(mx);
+        }
+        let sub = (((hi as i64 - lo as i64) / self.num_buckets as i64).max(1)) as i32;
+
+        // Pass 2: bucket ids + histogram.  Tail padding uses `hi`, which
+        // clamps into the last bucket; the pad count is subtracted.
+        let mut ids = Vec::with_capacity(data.len());
+        let mut hist = vec![0usize; self.num_buckets];
+        for chunk in data.chunks(self.chunk) {
+            let pad = self.chunk - chunk.len();
+            let lit = if pad == 0 {
+                xla::Literal::vec1(chunk)
+            } else {
+                buf[..chunk.len()].copy_from_slice(chunk);
+                buf[chunk.len()..].fill(hi);
+                xla::Literal::vec1(&buf)
+            };
+            let args = [lit, xla::Literal::vec1(&[lo]), xla::Literal::vec1(&[sub])];
+            let out = self
+                .partition
+                .execute::<xla::Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            let chunk_ids = out[0].to_vec::<i32>()?;
+            let chunk_hist = out[1].to_vec::<i32>()?;
+            ids.extend(chunk_ids[..chunk.len()].iter().map(|&v| v as u32));
+            for (b, &count) in chunk_hist.iter().enumerate() {
+                hist[b] += count as usize;
+            }
+            hist[self.num_buckets - 1] -= pad;
+        }
+        Ok(DivideOutput { ids, hist, lo, sub })
+    }
+}
+
+/// XLA-backed splitter partition (the PSRS baseline's hot spot): buckets
+/// keys by a sorted splitter list via the AOT splitter kernel.
+pub struct XlaSplitterPartition {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    num_buckets: usize,
+    chunk: usize,
+}
+
+impl XlaSplitterPartition {
+    /// Build for one of the lowered splitter bucket counts (36, 144).
+    pub fn new(reg: &ArtifactRegistry, num_buckets: usize) -> Result<Self> {
+        let chunk = reg.chunk();
+        let exe = reg.executable(&format!("splitter_n{chunk}_p{num_buckets}"))?;
+        Ok(XlaSplitterPartition {
+            exe,
+            num_buckets,
+            chunk,
+        })
+    }
+
+    /// Bucket `data` by `splitters` (ascending, `num_buckets - 1` long).
+    /// Returns `(ids, hist)`; the tail chunk is padded with `i32::MAX`
+    /// (always the last bucket) and corrected.
+    pub fn partition(&self, data: &[i32], splitters: &[i32]) -> Result<(Vec<u32>, Vec<usize>)> {
+        if splitters.len() != self.num_buckets - 1 {
+            return Err(Error::Config(format!(
+                "need {} splitters, got {}",
+                self.num_buckets - 1,
+                splitters.len()
+            )));
+        }
+        if data.is_empty() {
+            return Ok((Vec::new(), vec![0; self.num_buckets]));
+        }
+        let mut ids = Vec::with_capacity(data.len());
+        let mut hist = vec![0usize; self.num_buckets];
+        let mut buf = vec![i32::MAX; self.chunk];
+        for chunk in data.chunks(self.chunk) {
+            let pad = self.chunk - chunk.len();
+            let lit = if pad == 0 {
+                xla::Literal::vec1(chunk)
+            } else {
+                buf[..chunk.len()].copy_from_slice(chunk);
+                buf[chunk.len()..].fill(i32::MAX);
+                xla::Literal::vec1(&buf)
+            };
+            let out = self
+                .exe
+                .execute::<xla::Literal>(&[lit, xla::Literal::vec1(splitters)])?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            let chunk_ids = out[0].to_vec::<i32>()?;
+            let chunk_hist = out[1].to_vec::<i32>()?;
+            ids.extend(chunk_ids[..chunk.len()].iter().map(|&v| v as u32));
+            for (b, &c) in chunk_hist.iter().enumerate() {
+                hist[b] += c as usize;
+            }
+            hist[self.num_buckets - 1] -= pad;
+        }
+        Ok((ids, hist))
+    }
+}
+
+/// XLA-backed local sorter: bitonic blocks on-device, k-way merge on host.
+pub struct XlaSortBlocks {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    chunk: usize,
+    block: usize,
+}
+
+impl XlaSortBlocks {
+    /// Build over a registry for a lowered block size (1024 or 4096).
+    pub fn new(reg: &ArtifactRegistry, block: usize) -> Result<Self> {
+        let chunk = reg.chunk();
+        let exe = reg.executable(&format!("bitonic_n{chunk}_b{block}"))?;
+        Ok(XlaSortBlocks { exe, chunk, block })
+    }
+
+    /// Sort a payload of any length: pad to the chunk shape with
+    /// `i32::MAX`, bitonic-sort every block on the XLA side, then k-way
+    /// merge the sorted blocks on the host.
+    pub fn sort(&self, data: &[i32]) -> Result<Vec<i32>> {
+        if data.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(data.len());
+        let mut buf = vec![i32::MAX; self.chunk];
+        for chunk in data.chunks(self.chunk) {
+            buf[..chunk.len()].copy_from_slice(chunk);
+            buf[chunk.len()..].fill(i32::MAX);
+            let lit = xla::Literal::vec1(&buf);
+            let sorted = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?
+                .to_vec::<i32>()?;
+            merge_sorted_blocks(&sorted, self.block, chunk.len(), &mut out);
+        }
+        // Multi-chunk payloads: each chunk is internally sorted; merge the
+        // chunk runs pairwise (rare path — payloads usually fit a chunk).
+        if data.len() > self.chunk {
+            let run = self.chunk.min(out.len());
+            out = merge_runs(out, run);
+        }
+        Ok(out)
+    }
+}
+
+/// K-way merge of consecutive sorted `block`-sized runs, keeping the first
+/// `keep` non-sentinel keys.
+fn merge_sorted_blocks(sorted: &[i32], block: usize, keep: usize, out: &mut Vec<i32>) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heads: BinaryHeap<Reverse<(i32, usize)>> = sorted
+        .chunks(block)
+        .enumerate()
+        .filter(|(_, c)| !c.is_empty())
+        .map(|(i, c)| Reverse((c[0], i * block)))
+        .collect();
+    let mut taken = 0;
+    while taken < keep {
+        let Reverse((v, idx)) = heads.pop().expect("ran out of keys during merge");
+        out.push(v);
+        taken += 1;
+        let next = idx + 1;
+        if next % block != 0 && next < sorted.len() {
+            heads.push(Reverse((sorted[next], next)));
+        }
+    }
+}
+
+/// Merge equal-length sorted runs of `run` keys into one sorted vector.
+fn merge_runs(v: Vec<i32>, run: usize) -> Vec<i32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heads: BinaryHeap<Reverse<(i32, usize)>> = v
+        .chunks(run)
+        .enumerate()
+        .filter(|(_, c)| !c.is_empty())
+        .map(|(i, c)| Reverse((c[0], i * run)))
+        .collect();
+    let mut out = Vec::with_capacity(v.len());
+    while let Some(Reverse((val, idx))) = heads.pop() {
+        out.push(val);
+        let next = idx + 1;
+        if next % run != 0 && next < v.len() {
+            heads.push(Reverse((v[next], next)));
+        }
+    }
+    out
+}
+
+// These tests execute real lowered artifacts: they need `make artifacts`
+// plus the PJRT runtime, neither of which exists in the default build.
+#[cfg(all(test, feature = "xla"))]
+mod tests {
+    use super::*;
+    use crate::workload;
+    use std::path::PathBuf;
+
+    fn registry() -> ArtifactRegistry {
+        ArtifactRegistry::open(&PathBuf::from("artifacts")).expect("make artifacts first")
+    }
+
+    /// Native oracle for the divide pipeline.
+    fn native_divide(data: &[i32], p: usize) -> (Vec<u32>, Vec<usize>, i32, i32) {
+        let lo = *data.iter().min().unwrap();
+        let hi = *data.iter().max().unwrap();
+        let sub = (((hi as i64 - lo as i64) / p as i64).max(1)) as i32;
+        let mut hist = vec![0usize; p];
+        let ids: Vec<u32> = data
+            .iter()
+            .map(|&v| {
+                let b = (((v as i64 - lo as i64) / sub as i64) as usize).min(p - 1);
+                hist[b] += 1;
+                b as u32
+            })
+            .collect();
+        (ids, hist, lo, sub)
+    }
+
+    #[test]
+    fn xla_divide_matches_native_exact_chunk() {
+        let reg = registry();
+        let data = workload::random(CHUNK, 42);
+        let xd = XlaDivide::new(&reg, 36).unwrap();
+        let out = xd.divide(&data).unwrap();
+        let (ids, hist, lo, sub) = native_divide(&data, 36);
+        assert_eq!(out.lo, lo);
+        assert_eq!(out.sub, sub);
+        assert_eq!(out.ids, ids);
+        assert_eq!(out.hist, hist);
+    }
+
+    #[test]
+    fn xla_divide_matches_native_with_padding() {
+        let reg = registry();
+        let data = workload::random(CHUNK + 12_345, 43);
+        let xd = XlaDivide::new(&reg, 18).unwrap();
+        let out = xd.divide(&data).unwrap();
+        let (ids, hist, lo, sub) = native_divide(&data, 18);
+        assert_eq!(out.lo, lo);
+        assert_eq!(out.sub, sub);
+        assert_eq!(out.ids, ids);
+        assert_eq!(out.hist, hist);
+        assert_eq!(out.hist.iter().sum::<usize>(), data.len());
+    }
+
+    #[test]
+    fn xla_divide_small_input() {
+        let reg = registry();
+        let data = workload::sorted(1000, 7);
+        let xd = XlaDivide::new(&reg, 36).unwrap();
+        let out = xd.divide(&data).unwrap();
+        assert_eq!(out.hist.iter().sum::<usize>(), 1000);
+        // Monotone ids on sorted input.
+        assert!(out.ids.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn xla_splitter_partition_matches_searchsorted() {
+        let reg = registry();
+        let sp = XlaSplitterPartition::new(&reg, 36).unwrap();
+        let data = workload::random(CHUNK + 777, 5);
+        let mut splitters: Vec<i32> = (1..36)
+            .map(|k| (k as i64 * (1 << 24) / 36) as i32)
+            .collect();
+        splitters.sort_unstable();
+        let (ids, hist) = sp.partition(&data, &splitters).unwrap();
+        assert_eq!(hist.iter().sum::<usize>(), data.len());
+        for (&v, &b) in data.iter().zip(&ids) {
+            let expect = splitters.partition_point(|&s| s < v);
+            assert_eq!(b as usize, expect, "v={v}");
+        }
+        // Wrong splitter count rejected.
+        assert!(sp.partition(&data, &splitters[..10]).is_err());
+    }
+
+    #[test]
+    fn xla_bitonic_sorts_payloads() {
+        let reg = registry();
+        let sorter = XlaSortBlocks::new(&reg, 1024).unwrap();
+        for n in [1usize, 100, 1024, 5000, CHUNK] {
+            let data = workload::random(n, n as u64);
+            let got = sorter.sort(&data).unwrap();
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(got, expect, "n={n}");
+        }
+    }
+}

@@ -12,6 +12,15 @@
 //! conservation) before the result ships; per-job queue/sort/total
 //! latencies land in the shared [`ServiceStats`] histograms.
 //!
+//! The workers here are the *control plane* only — long-lived threads
+//! spawned once at [`SortService::start`].  All per-job parallel compute
+//! (divide waves, Waves local sorts) is submitted to the shared
+//! persistent executor ([`crate::runtime::Executor::global`]), so a
+//! burst of small jobs pays zero thread-spawn cost no matter how many
+//! jobs it contains.  Waves-mode jobs use the tuned
+//! [`Quicksort::throughput`] profile (insertion cutoff 24); the
+//! paper-faithful `paper_threads` mode keeps the paper-default sorter.
+//!
 //! [`TopologyBundle`]: crate::schedule::TopologyBundle
 //! [`FlatBuckets`]: crate::dataplane::FlatBuckets
 
@@ -33,7 +42,7 @@ use crate::service::job::{fnv1a, multiset_fingerprint, JobResult, JobSpec};
 use crate::service::queue::{JobQueue, RejectReason, Submit};
 use crate::service::stats::{ServiceSnapshot, ServiceStats};
 use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
-use crate::sort::is_sorted;
+use crate::sort::{is_sorted, Quicksort};
 use crate::util::par;
 
 /// Service knobs.
@@ -244,12 +253,16 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>, tx: &Sen
     let fingerprints: Vec<u64> = inputs.iter().map(|d| multiset_fingerprint(d)).collect();
     let total: usize = inputs.iter().map(Vec::len).sum();
 
-    let mode = if shared.cfg.paper_threads {
-        ThreadMode::Direct
+    // Waves jobs run as tasks on the shared executor with the tuned
+    // throughput sorter; `paper_threads` keeps the paper's one thread
+    // per processor and its default cutoff-0 sorter.
+    let sim = if shared.cfg.paper_threads {
+        ThreadedSimulator::new(&lease.net, &lease.plans).with_mode(ThreadMode::Direct)
     } else {
-        ThreadMode::Waves
+        ThreadedSimulator::new(&lease.net, &lease.plans)
+            .with_mode(ThreadMode::Waves)
+            .with_sorter(Quicksort::throughput())
     };
-    let sim = ThreadedSimulator::new(&lease.net, &lease.plans).with_mode(mode);
 
     let run = || -> Result<(Vec<i32>, Vec<Range<usize>>)> {
         if inputs.len() == 1 {

@@ -10,10 +10,14 @@
 //! itself **is** the globally sorted array; no keys move after the
 //! divide scatter.
 //!
-//! A `Waves` mode executes the same schedule on a bounded worker pool in
-//! gather-tree depth order — semantically identical, cheaper than 2304 OS
-//! threads, and the mode used for huge sweep runs.  `Direct` remains the
-//! paper-faithful default.
+//! A `Waves` mode executes the same schedule on the persistent
+//! work-stealing executor ([`crate::runtime::Executor`]) in gather-tree
+//! depth order — semantically identical, cheaper than 2304 OS threads,
+//! and the mode used for huge sweep runs and the sort service.  Its
+//! local sorts are pool tasks, so a Waves run spawns **zero** threads.
+//! `Direct` remains the paper-faithful default and is deliberately the
+//! one thread-spawning site left on the sort path: the paper's §5
+//! methodology *is* one OS thread per simulated processor.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
@@ -205,8 +209,9 @@ impl<'a> ThreadedSimulator<'a> {
         let n = self.net.total_processors();
         let start = Instant::now();
 
-        // Wave 1: all local sorts in parallel, in place on the disjoint
-        // arena segments.
+        // Wave 1: all local sorts as one task wave on the shared
+        // executor, in place on the disjoint arena segments — no thread
+        // spawn anywhere in this region.
         let workers = par::available_workers();
         let sorter = self.sorter;
         let results: Vec<(SortCounters, Duration)> = {
@@ -391,6 +396,34 @@ mod tests {
         assert_eq!(direct.sorted, waves.sorted);
         assert_eq!(direct.counters, waves.counters);
         assert_eq!(direct.messages, waves.messages);
+    }
+
+    #[test]
+    fn waves_throughput_profile_matches_direct_output() {
+        // The tuned service profile (insertion cutoff 24) must produce
+        // byte-identical sorted output on the pooled Waves path; only the
+        // work counters move (insertion sort replaces the deep recursion
+        // tail, so strictly fewer recursion calls on ~550-key buckets).
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let plans = gather_plan(&net);
+        let data = workload::random(20_000, 33);
+        let buckets = bucketize(&data, net.total_processors());
+        let direct = ThreadedSimulator::new(&net, &plans)
+            .with_mode(ThreadMode::Direct)
+            .run(buckets.clone(), data.len())
+            .unwrap();
+        let tuned = ThreadedSimulator::new(&net, &plans)
+            .with_mode(ThreadMode::Waves)
+            .with_sorter(crate::sort::Quicksort::throughput())
+            .run(buckets, data.len())
+            .unwrap();
+        assert_eq!(direct.sorted, tuned.sorted);
+        assert!(
+            tuned.counters.recursion_calls < direct.counters.recursion_calls,
+            "cutoff 24 should shrink the recursion tail: {} vs {}",
+            tuned.counters.recursion_calls,
+            direct.counters.recursion_calls
+        );
     }
 
     #[test]

@@ -21,6 +21,25 @@ pub struct Quicksort {
 }
 
 impl Quicksort {
+    /// Insertion-sort cutoff of the tuned [`Quicksort::throughput`]
+    /// profile (a conventional value for 4-byte keys; the delta is
+    /// measured per machine by `benches/executor.rs` into
+    /// `BENCH_executor.json`).
+    pub const THROUGHPUT_CUTOFF: usize = 24;
+
+    /// Tuned profile for the serving paths (Waves-mode service jobs):
+    /// middle pivot with sub-arrays at or below
+    /// [`Self::THROUGHPUT_CUTOFF`] keys finished by insertion sort.
+    /// The paper-default cutoff-0 configuration stays [`Default`], so
+    /// the experiment grid and the counter figures (Figs 6.20–6.24)
+    /// are untouched — this profile changes wall clock, never output.
+    pub fn throughput() -> Quicksort {
+        Quicksort {
+            insertion_cutoff: Self::THROUGHPUT_CUTOFF,
+            ..Default::default()
+        }
+    }
+
     /// Sort ascending in place; returns the work counters.
     pub fn sort(&self, data: &mut [i32]) -> SortCounters {
         let mut c = SortCounters::new();
@@ -193,6 +212,23 @@ mod tests {
         };
         qs.sort(&mut v);
         assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn throughput_profile_sorts_identically_with_fewer_calls() {
+        for dist in Distribution::ALL {
+            let mut tuned = workload::generate(dist, 20_000, 21);
+            let mut expect = tuned.clone();
+            let paper_counters = quicksort(&mut expect);
+            let tuned_counters = Quicksort::throughput().sort(&mut tuned);
+            assert_eq!(tuned, expect, "{dist:?}");
+            assert!(
+                tuned_counters.recursion_calls < paper_counters.recursion_calls,
+                "{dist:?}: cutoff 24 should prune the recursion tail"
+            );
+        }
+        assert_eq!(Quicksort::throughput().insertion_cutoff, 24);
+        assert_eq!(Quicksort::default().insertion_cutoff, 0, "paper default untouched");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!   `rand` for workload generation and property tests);
 //! * [`json`] — a minimal recursive-descent JSON parser (replaces
 //!   `serde_json` for the artifact manifest);
-//! * [`par`] — scoped-thread parallel map / index-chunk helpers (replaces
-//!   `rayon` for the waves backend and all-pairs BFS);
+//! * [`par`] — parallel map / index-chunk helpers on the persistent
+//!   executor pool (replaces `rayon` for the divide waves, the waves
+//!   backend, campaign sweeps, and all-pairs BFS);
 //! * [`mod@bench`] — a small timing harness with warmup, repetitions and
 //!   median/MAD reporting (replaces `criterion` for `rust/benches/`).
 

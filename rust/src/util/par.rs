@@ -1,4 +1,17 @@
-//! Scoped-thread parallelism helpers (the crate's rayon substitute).
+//! Executor-backed parallelism helpers (the crate's rayon substitute).
+//!
+//! Every helper here submits to the persistent work-stealing pool
+//! ([`Executor::global`]) instead of spawning scoped threads, so the sort
+//! hot path pays **zero** thread spawn/teardown inside the timed parallel
+//! region, and there are **zero per-item locks**: items and results live
+//! in plain slot arrays written exactly once by the unique claimant of
+//! each index (the same disjoint-raw-write idiom as the divide scatter).
+
+use std::mem::MaybeUninit;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::Executor;
 
 /// Host parallelism (≥ 1).
 pub fn available_workers() -> usize {
@@ -7,53 +20,86 @@ pub fn available_workers() -> usize {
         .unwrap_or(4)
 }
 
-/// Parallel map over owned items: applies `f` to every element using up to
-/// `workers` scoped threads, preserving order.
+/// Raw pointer into a slot array, shareable across pool tasks.
+struct Slots<P>(*mut MaybeUninit<P>);
+
+// SAFETY: the pointee arrays outlive the executor scope that uses them
+// (the scope blocks until every task completes), and the index counter
+// hands each slot to exactly one task — no write ever aliases.
+unsafe impl<P: Send> Send for Slots<P> {}
+unsafe impl<P: Send> Sync for Slots<P> {}
+
+/// Parallel map over owned items, preserving order: up to `workers`
+/// runner tasks on the shared pool claim indices from an atomic counter
+/// (work-steal over the index space, so heterogeneous item costs
+/// balance), each moving its item out of a slot and writing the result
+/// into the matching output slot — lock-free on the per-item path.
+///
+/// `workers == 1` (or a single item) runs inline on the caller.  If `f`
+/// panics the scope completes the remaining items, then rethrows here;
+/// unclaimed items and already-written results are leaked, never
+/// double-dropped.
 pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let workers = workers.max(1);
     let n = items.len();
+    let workers = workers.max(1);
     if n == 0 {
         return Vec::new();
     }
     if workers == 1 || n == 1 {
         return items.into_iter().map(f).collect();
     }
-    // Work-steal over a shared index counter; results land in slots.
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
+
+    let inputs: Vec<MaybeUninit<T>> = items.into_iter().map(MaybeUninit::new).collect();
+    let mut outputs: Vec<MaybeUninit<R>> = Vec::with_capacity(n);
+    outputs.resize_with(n, MaybeUninit::uninit);
     let next = AtomicUsize::new(0);
-    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
+    let input_slots = Slots(inputs.as_ptr().cast_mut());
+    let output_slots = Slots(outputs.as_mut_ptr());
+
+    Executor::global().scope(|s| {
         for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
+            let f = &f;
+            let next = &next;
+            let input_slots = &input_slots;
+            let output_slots = &output_slots;
+            s.submit(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let item = inputs[i].lock().unwrap().take().expect("item taken twice");
+                // SAFETY: the fetch_add hands index `i` to exactly one
+                // runner; the input slot was initialized above and is
+                // moved out exactly once, the output slot written
+                // exactly once — both strictly before the scope returns.
+                let item = unsafe { input_slots.0.add(i).read().assume_init() };
                 let r = f(item);
-                *outputs[i].lock().unwrap() = Some(r);
+                unsafe { output_slots.0.add(i).write(MaybeUninit::new(r)) };
             });
         }
     });
-    outputs
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("missing result"))
-        .collect()
+    debug_assert!(next.load(Ordering::Relaxed) >= n, "runner tasks exhausted the index space");
+
+    // Every input slot was moved out (`MaybeUninit` storage never drops
+    // its content) and every output slot written — reinterpret the
+    // output storage as the result vector.
+    drop(inputs);
+    let mut outputs = std::mem::ManuallyDrop::new(outputs);
+    // SAFETY: all `n` slots initialized by the scope above;
+    // `MaybeUninit<R>` has the same layout as `R`.
+    unsafe { Vec::from_raw_parts(outputs.as_mut_ptr().cast::<R>(), n, outputs.capacity()) }
 }
 
-/// Parallel fold over an index range: each worker reduces a chunk with
-/// `(map, merge)`; chunk results are merged in order.
+/// Parallel fold over an index range: each pooled task reduces one
+/// contiguous chunk with `map`; chunk results are merged in order.
 pub fn par_reduce_indices<R, M, G>(n: usize, workers: usize, map: M, merge: G, identity: R) -> R
 where
     R: Send,
-    M: Fn(std::ops::Range<usize>) -> R + Sync,
+    M: Fn(Range<usize>) -> R + Sync,
     G: Fn(R, R) -> R,
 {
     let workers = workers.clamp(1, n.max(1));
@@ -63,24 +109,38 @@ where
     if workers == 1 {
         return merge(identity, map(0..n));
     }
+    let parts = par_map(chunk_ranges(n, workers), workers, map);
+    parts.into_iter().fold(identity, merge)
+}
+
+/// Parallel for over an index range: `f` runs once per contiguous chunk
+/// (at most `workers` chunks) on the shared pool.  The side-effect
+/// counterpart of [`par_reduce_indices`], for fan-outs whose chunks need
+/// no per-chunk state threaded in (disjoint writes keyed purely on the
+/// index range; chunk-state waves like the divide scatter go through
+/// [`par_map`] instead).
+pub fn par_for_ranges<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return;
+    }
+    if workers == 1 {
+        f(0..n);
+        return;
+    }
+    par_map(chunk_ranges(n, workers), workers, f);
+}
+
+/// Split `0..n` into at most `workers` non-empty contiguous chunks.
+fn chunk_ranges(n: usize, workers: usize) -> Vec<Range<usize>> {
     let chunk = n.div_ceil(workers);
-    let mut parts = Vec::with_capacity(workers);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let map = &map;
-            handles.push(scope.spawn(move || map(lo..hi)));
-        }
-        for h in handles {
-            parts.push(h.join().expect("worker panicked"));
-        }
-    });
-    parts.into_iter().fold(identity, |acc, p| merge(acc, p))
+    (0..workers)
+        .map(|w| w * chunk..((w + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect()
 }
 
 #[cfg(test)]
@@ -101,6 +161,29 @@ mod tests {
     }
 
     #[test]
+    fn par_map_moves_non_copy_items_exactly_once() {
+        let items: Vec<String> = (0..200).map(|i| format!("item-{i}")).collect();
+        let out = par_map(items, 6, |s| s.len());
+        assert_eq!(out.len(), 200);
+        assert_eq!(out[0], "item-0".len());
+        assert_eq!(out[199], "item-199".len());
+    }
+
+    #[test]
+    fn par_map_nests_without_deadlock() {
+        // A pooled task fanning out again exercises the executor's
+        // helping loop (the campaign → divide nesting in miniature).
+        let outer: Vec<usize> = (0..8).collect();
+        let out = par_map(outer, 4, |i| {
+            let inner: Vec<usize> = (0..50).collect();
+            par_map(inner, 4, move |j| i * 1000 + j).into_iter().sum::<usize>()
+        });
+        for (i, &sum) in out.iter().enumerate() {
+            assert_eq!(sum, i * 1000 * 50 + 49 * 50 / 2);
+        }
+    }
+
+    #[test]
     fn par_reduce_sums() {
         let total = par_reduce_indices(10_000, 8, |r| r.sum::<usize>(), |a, b| a + b, 0);
         assert_eq!(total, 10_000 * 9_999 / 2);
@@ -116,5 +199,41 @@ mod tests {
             0,
         );
         assert_eq!(m, 100);
+    }
+
+    #[test]
+    fn par_for_ranges_covers_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_for_ranges(n, 8, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Degenerate shapes.
+        par_for_ranges(0, 4, |_| panic!("no ranges for n == 0"));
+        let small: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        par_for_ranges(3, 16, |r| {
+            for i in r {
+                small[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(small.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for (n, w) in [(10, 3), (1, 8), (100, 100), (7, 2)] {
+            let ranges = chunk_ranges(n, w);
+            assert!(ranges.len() <= w);
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                assert!(!r.is_empty());
+                expect = r.end;
+            }
+            assert_eq!(expect, n);
+        }
     }
 }

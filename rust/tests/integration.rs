@@ -169,3 +169,55 @@ fn output_really_is_sorted_spot_check() {
     assert!(is_sorted(&out.sorted));
     assert_eq!(out.sorted.len(), data.len());
 }
+
+#[test]
+fn campaign_and_service_share_one_executor_pool() {
+    // The tentpole contract of the persistent executor: a campaign sweep
+    // and a burst of service jobs run concurrently, both submitting all
+    // parallel compute to the one shared pool — no deadlock, and every
+    // output still verifies.
+    use std::time::Duration;
+
+    use ohhc_qsort::campaign::{Campaign, SweepSpec};
+    use ohhc_qsort::service::{JobSpec, ServiceConfig, SortService};
+
+    let service = SortService::start(ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    });
+    for id in 0..12u64 {
+        let accepted = service.submit(JobSpec {
+            id,
+            distribution: Distribution::Random,
+            elements: 3_000,
+            seed: 400 + id,
+            dimension: 1,
+            construction: Construction::FullGroup,
+            deadline: None,
+        });
+        assert!(accepted.is_accepted(), "job {id} rejected");
+    }
+
+    let spec = SweepSpec {
+        dimensions: vec![1],
+        constructions: vec![Construction::FullGroup],
+        distributions: vec![Distribution::Random, Distribution::Sorted],
+        sizes: vec![20_000],
+        backends: vec![Backend::Threaded],
+        workers: 4,
+        jobs: 2,
+        ..Default::default()
+    };
+    let report = Campaign::new(spec).run().unwrap();
+    assert_eq!(report.completed(), 2);
+
+    let mut done = 0;
+    while done < 12 {
+        let r = service.recv_timeout(Duration::from_secs(60)).expect("service stalled");
+        assert!(r.sorted_ok, "job {} failed verification", r.id);
+        done += 1;
+    }
+    let (snapshot, _) = service.shutdown();
+    assert_eq!(snapshot.completed, 12);
+    assert_eq!(snapshot.failed, 0);
+}
