@@ -5,6 +5,7 @@
 #   make fmt        rustfmt across the tree (check with make fmt-check)
 #   make lint       clippy, warnings denied
 #   make bench-json data-plane phase bench → BENCH_dataplane.json
+#   make doc        rustdoc with warnings denied + doc-test run
 #   make campaign   the acceptance-criteria campaign grid
 #   make artifacts  lower the L1/L2 JAX graphs to artifacts/*.hlo.txt
 #   make pytest     python kernel/model tests
@@ -12,7 +13,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test fmt fmt-check lint bench bench-json campaign artifacts pytest clean
+.PHONY: build test fmt fmt-check lint bench bench-json doc campaign artifacts pytest clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -34,13 +35,22 @@ bench:
 
 # Non-criterion JSON benches: the data-plane phase medians (flat arena
 # vs legacy nested, EXPERIMENTS.md §Perf), the service offered-load
-# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), and the
+# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), the
 # persistent-executor small-array / fan-out medians (pooled vs scoped
-# spawn, EXPERIMENTS.md §Perf).
+# spawn, EXPERIMENTS.md §Perf), and the typestate-session vs monolithic
+# pipeline medians (EXPERIMENTS.md §Perf).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
 	cd rust && OHHC_BENCH_JSON=../BENCH_executor.json $(CARGO) bench --bench executor
+	cd rust && OHHC_BENCH_JSON=../BENCH_pipeline.json $(CARGO) bench --bench pipeline
+
+# API docs gate: every public item documented, every intra-doc link
+# resolving, and every doc example (including the pipeline typestate
+# compile_fail) compiled/run.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	cd rust && $(CARGO) test --doc -q
 
 campaign: build
 	cd rust && $(CARGO) run --release -- campaign \

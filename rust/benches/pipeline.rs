@@ -1,0 +1,86 @@
+//! Bench: the typestate session path vs the monolithic simulator call
+//! it replaced, at 4k and 64k keys.
+//!
+//! `make bench-json` runs this and writes `BENCH_pipeline.json` —
+//! per-path medians plus the session's per-stage medians — joining the
+//! other `BENCH_*.json` CI perf-trajectory artifacts.  The interesting
+//! question is overhead: the session adds typestate transitions, stage
+//! clocks, and an observer seam around exactly the same divide / sort /
+//! gather work, so the two paths should be within noise of each other.
+
+use ohhc_qsort::config::Construction;
+use ohhc_qsort::coordinator::divide_native;
+use ohhc_qsort::pipeline::{Engine, Session, StageTrace};
+use ohhc_qsort::schedule::TopologyBundle;
+use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
+use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::util::json::Json;
+use ohhc_qsort::workload;
+
+fn main() {
+    let bench = Bench::from_env();
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap(); // P = 36
+    let p = bundle.net.total_processors();
+
+    println!("== pipeline: session vs monolithic (d=1 G=P, {p} buckets)");
+    let mut cases = Vec::new();
+    for &n in &[4_096usize, 65_536] {
+        let data = workload::random(n, 11);
+
+        let session = bench.run(&format!("session/divide+sort+gather/{n}"), || {
+            Session::single(&bundle.net, &bundle.plans, &data)
+                .with_engine(Engine::Pooled)
+                .divide()
+                .unwrap()
+                .local_sort()
+                .unwrap()
+                .gather()
+                .unwrap()
+                .sorted
+        });
+
+        let monolithic = bench.run(&format!("monolithic/divide+run/{n}"), || {
+            let divided = divide_native(&data, p).unwrap();
+            ThreadedSimulator::new(&bundle.net, &bundle.plans)
+                .with_mode(ThreadMode::Waves)
+                .run(divided.buckets, n)
+                .unwrap()
+                .sorted
+        });
+
+        // One more traced run for the per-stage medians.
+        let trace: StageTrace = Session::single(&bundle.net, &bundle.plans, &data)
+            .with_engine(Engine::Pooled)
+            .divide()
+            .unwrap()
+            .local_sort()
+            .unwrap()
+            .gather()
+            .unwrap()
+            .trace;
+
+        cases.push(Json::obj([
+            ("elements", Json::int(n)),
+            (
+                "monolithic_median_ns",
+                Json::num(monolithic.median.as_nanos() as f64),
+            ),
+            (
+                "session_median_ns",
+                Json::num(session.median.as_nanos() as f64),
+            ),
+            ("session_stages", trace.to_json()),
+        ]));
+    }
+
+    let doc = Json::obj([
+        ("buckets", Json::int(p)),
+        ("cases", Json::arr(cases)),
+        ("engine", Json::str("pooled_waves")),
+    ]);
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_pipeline.json");
+    println!("\npipeline medians → {out}");
+}

@@ -69,8 +69,14 @@ pub struct CellReport {
     pub seq_secs: f64,
     /// Median parallel wall time (s).
     pub par_secs: f64,
-    /// Median divide-phase wall time (s).
+    /// Median divide-phase wall time (s) — classification + scatter.
     pub divide_secs: f64,
+    /// Median scatter-stage wall time (s), from the session trace.
+    pub scatter_secs: f64,
+    /// Median local-sort-stage wall time (s), from the session trace.
+    pub sort_secs: f64,
+    /// Median gather-stage wall time (s), from the session trace.
+    pub gather_secs: f64,
     /// Relative speedup `T_s / T_p` from the medians.
     pub speedup: f64,
     /// The paper's percentage speedup presentation.
@@ -101,6 +107,9 @@ impl CellReport {
             seq_secs: 0.0,
             par_secs: 0.0,
             divide_secs: 0.0,
+            scatter_secs: 0.0,
+            sort_secs: 0.0,
+            gather_secs: 0.0,
             speedup: 0.0,
             speedup_pct: 0.0,
             efficiency: 0.0,
@@ -132,6 +141,9 @@ impl CellReport {
         let seq_secs = med(&|r| r.sequential_time.as_secs_f64());
         let par_secs = med(&|r| r.parallel_time.as_secs_f64());
         let divide_secs = med(&|r| r.divide_time.as_secs_f64());
+        let scatter_secs = med(&|r| r.stage_times.scatter.as_secs_f64());
+        let sort_secs = med(&|r| r.stage_times.local_sort.as_secs_f64());
+        let gather_secs = med(&|r| r.stage_times.gather.as_secs_f64());
         let first = &runs[0];
         CellReport {
             dimension: cell.dimension,
@@ -145,6 +157,9 @@ impl CellReport {
             seq_secs,
             par_secs,
             divide_secs,
+            scatter_secs,
+            sort_secs,
+            gather_secs,
             speedup: seq_secs / par_secs,
             speedup_pct: (seq_secs - par_secs) / seq_secs * 100.0,
             efficiency: seq_secs / (first.processors as f64 * par_secs),
@@ -217,6 +232,9 @@ impl CellReport {
         obj.insert("seq_secs".into(), Json::num(self.seq_secs));
         obj.insert("par_secs".into(), Json::num(self.par_secs));
         obj.insert("divide_secs".into(), Json::num(self.divide_secs));
+        obj.insert("scatter_secs".into(), Json::num(self.scatter_secs));
+        obj.insert("sort_secs".into(), Json::num(self.sort_secs));
+        obj.insert("gather_secs".into(), Json::num(self.gather_secs));
         obj.insert("speedup".into(), Json::num(self.speedup));
         obj.insert("speedup_pct".into(), Json::num(self.speedup_pct));
         obj.insert("efficiency".into(), Json::num(self.efficiency));
@@ -327,6 +345,31 @@ impl CampaignReport {
             .collect()
     }
 
+    /// Median wall time per pipeline stage across completed cells, as
+    /// `(classify, scatter, local_sort, gather)` seconds — sourced from
+    /// every cell's session [`StageTrace`](crate::pipeline::StageTrace).
+    /// `classify` is the divide phase *minus* its scatter pass (the
+    /// trace's `divide` component), so the four stages tile the
+    /// pipeline without double counting — unlike each cell's
+    /// `divide_secs`, which keeps the historical classify + scatter
+    /// meaning.  `None` when no cell completed.
+    pub fn stage_medians(&self) -> Option<(f64, f64, f64, f64)> {
+        let completed: Vec<&CellReport> =
+            self.cells.iter().filter(|c| c.status.is_completed()).collect();
+        if completed.is_empty() {
+            return None;
+        }
+        let med = |f: &dyn Fn(&CellReport) -> f64| {
+            Summary::of(&completed.iter().map(|c| f(c)).collect::<Vec<f64>>()).median
+        };
+        Some((
+            med(&|c| c.divide_secs - c.scatter_secs),
+            med(&|c| c.scatter_secs),
+            med(&|c| c.sort_secs),
+            med(&|c| c.gather_secs),
+        ))
+    }
+
     /// Parallel wall times of completed cells as a latency histogram
     /// (ns) — the same [`Histogram`] the service layer reports SLOs
     /// from, so campaign and service latencies compare directly.
@@ -356,6 +399,15 @@ impl CampaignReport {
             ("p95_ns", Json::num(lat.percentile(0.95) as f64)),
             ("p99_ns", Json::num(lat.percentile(0.99) as f64)),
         ]);
+        let stage_medians = match self.stage_medians() {
+            Some((classify, scatter, sort, gather)) => Json::obj([
+                ("classify_secs", Json::num(classify)),
+                ("gather_secs", Json::num(gather)),
+                ("local_sort_secs", Json::num(sort)),
+                ("scatter_secs", Json::num(scatter)),
+            ]),
+            None => Json::Null,
+        };
         Json::obj([
             ("cells", Json::arr(self.cells.iter().map(CellReport::to_json))),
             ("spec", self.spec.to_json()),
@@ -371,6 +423,7 @@ impl CampaignReport {
                     ("per_dimension", Json::arr(per_dim)),
                     ("planned", Json::int(self.cells.len())),
                     ("skipped", Json::int(self.skipped())),
+                    ("stage_medians", stage_medians),
                     ("topology_builds", Json::int(self.topology_builds)),
                     ("wall_secs", Json::num(self.wall_secs)),
                 ]),
@@ -422,6 +475,12 @@ impl CampaignReport {
                 lat.count()
             ));
         }
+        if let Some((classify, scatter, sort, gather)) = self.stage_medians() {
+            out.push_str(&format!(
+                "stage medians: classify {classify:.6}s scatter {scatter:.6}s \
+                 sort {sort:.6}s gather {gather:.6}s\n"
+            ));
+        }
         for (d, s) in self.per_dimension() {
             out.push_str(&format!(
                 "  d={d}: speedup median {:.3}x (min {:.3}, max {:.3}) over {} cells\n",
@@ -452,6 +511,10 @@ mod tests {
         r.repetitions = 1;
         r.seq_secs = 0.2;
         r.par_secs = 0.1;
+        r.divide_secs = 0.03;
+        r.scatter_secs = 0.01;
+        r.sort_secs = 0.06;
+        r.gather_secs = 0.005;
         r.speedup = 2.0;
         r.speedup_pct = 50.0;
         r.efficiency = 2.0 / 36.0;
@@ -533,6 +596,16 @@ mod tests {
         assert_eq!(lat.get("count").unwrap().as_usize(), Some(1));
         assert!(lat.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(report.summary_text().contains("parallel latency: p50"));
+        // Per-stage medians ride alongside parallel_latency (only the
+        // completed cell contributes).
+        let stages = summary.get("stage_medians").unwrap();
+        assert_eq!(stages.get("scatter_secs").unwrap().as_f64(), Some(0.01));
+        assert_eq!(stages.get("local_sort_secs").unwrap().as_f64(), Some(0.06));
+        assert_eq!(stages.get("gather_secs").unwrap().as_f64(), Some(0.005));
+        // classify = divide phase minus its scatter pass.
+        let classify = stages.get("classify_secs").unwrap().as_f64().unwrap();
+        assert!((classify - 0.02).abs() < 1e-12, "{classify}");
+        assert!(report.summary_text().contains("stage medians: classify"));
         let per_dim = summary.get("per_dimension").unwrap().as_arr().unwrap();
         assert_eq!(per_dim.len(), 1);
         assert_eq!(per_dim[0].get("dimension").unwrap().as_usize(), Some(1));

@@ -5,6 +5,8 @@
 //! in key value, concatenating sorted buckets in rank order yields the
 //! sorted array — the property that lets the paper skip the merge phase.
 
+use std::time::{Duration, Instant};
+
 use crate::config::DivideEngine;
 use crate::dataplane::FlatBuckets;
 use crate::error::{Error, Result};
@@ -21,6 +23,10 @@ pub struct Divided {
     pub lo: i32,
     /// The step point (≥ 1).
     pub sub: i32,
+    /// Wall time of the scatter pass alone (arena placement writes) —
+    /// lets the pipeline's [`crate::pipeline::StageTrace`] split the
+    /// divide phase into classification vs scatter.
+    pub scatter_time: Duration,
 }
 
 impl Divided {
@@ -123,6 +129,7 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     // range of every bucket's segment, so the raw writes never alias;
     // every slot is written exactly once, justifying the deferred
     // `set_len`.
+    let scatter_t0 = Instant::now();
     let mut arena: Vec<i32> = Vec::with_capacity(data.len());
     {
         let ptr = ArenaPtr(arena.as_mut_ptr());
@@ -146,8 +153,14 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
     }
     // SAFETY: capacity is exactly `data.len()` and every slot was written.
     unsafe { arena.set_len(data.len()) };
+    let scatter_time = scatter_t0.elapsed();
     let buckets = FlatBuckets::from_parts(arena, table);
-    Ok(Divided { buckets, lo, sub })
+    Ok(Divided {
+        buckets,
+        lo,
+        sub,
+        scatter_time,
+    })
 }
 
 /// Below this input length the parallel machinery is pure overhead.
@@ -343,11 +356,14 @@ pub fn divide_with_engine(
                     data.len()
                 )));
             }
+            let scatter_t0 = Instant::now();
             let arena = scatter_by_ids(data, &out.ids, &table)?;
+            let scatter_time = scatter_t0.elapsed();
             Ok(Divided {
                 buckets: FlatBuckets::from_parts(arena, table),
                 lo: out.lo,
                 sub: out.sub,
+                scatter_time,
             })
         }
     }

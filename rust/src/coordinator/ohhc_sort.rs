@@ -1,15 +1,18 @@
-//! End-to-end OHHC parallel Quick Sort driver.
+//! End-to-end OHHC parallel Quick Sort driver — a thin configuration
+//! adapter over the typestate [`Session`](crate::pipeline::Session):
+//! it maps an [`ExperimentConfig`] onto a pipeline engine, drives the
+//! three transitions, verifies the outcome against the sequential
+//! baseline, and assembles the paper-facing [`SortReport`] from the
+//! session's [`StageTrace`].
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{Backend, ExperimentConfig};
-use crate::coordinator::divide::{divide_with_engine, Divided};
 use crate::error::{Error, Result};
+use crate::pipeline::{Engine, Observer, Session, StageTrace};
 use crate::runtime::ArtifactRegistry;
 use crate::schedule::TopologyBundle;
-use crate::sim::engine::{DesOutcome, DesSimulator};
-use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
 use crate::sort::{is_sorted, quicksort, SortCounters};
 use crate::topology::ohhc::Ohhc;
 use crate::workload::Workload;
@@ -28,6 +31,9 @@ pub struct SortReport {
     pub parallel_time: Duration,
     /// Wall time of the divide phase alone.
     pub divide_time: Duration,
+    /// Per-stage wall-time breakdown (divide / scatter / local sort /
+    /// gather), straight from the session's trace.
+    pub stage_times: StageTrace,
     /// Summed local-sort counters (parallel run).
     pub counters: SortCounters,
     /// Counters of the sequential baseline.
@@ -46,13 +52,6 @@ pub struct SortReport {
     pub speedup_pct: f64,
     /// Efficiency `T_s / (P · T_p)`.
     pub efficiency: f64,
-}
-
-/// What one backend run contributes to the report.
-struct BackendOutcome {
-    parallel_time: Duration,
-    counters: SortCounters,
-    des: Option<DesOutcome>,
 }
 
 /// A measured sequential baseline (paper Fig 6.1): the sorted reference
@@ -91,6 +90,7 @@ pub struct OhhcSorter {
     cfg: ExperimentConfig,
     bundle: Arc<TopologyBundle>,
     registry: Option<ArtifactRegistry>,
+    observer: Option<Arc<dyn Observer + Send + Sync>>,
 }
 
 impl OhhcSorter {
@@ -121,7 +121,15 @@ impl OhhcSorter {
             cfg: cfg.clone(),
             bundle,
             registry,
+            observer: None,
         })
+    }
+
+    /// Install a stage-boundary observer forwarded to every session
+    /// this sorter drives (campaign progress, bench probes).
+    pub fn with_stage_observer(mut self, observer: Arc<dyn Observer + Send + Sync>) -> Self {
+        self.observer = Some(observer);
+        self
     }
 
     /// The topology in use.
@@ -160,105 +168,54 @@ impl OhhcSorter {
         let net = &self.bundle.net;
         let sequential_time = baseline.time;
         let sequential_counters = baseline.counters;
-        let seq = &baseline.sorted;
 
-        // Parallel run.
-        let t0 = Instant::now();
-        let divided = divide_with_engine(
-            data,
-            net.total_processors(),
-            self.cfg.divide_engine,
-            self.registry.as_ref(),
-        )?;
-        let divide_time = t0.elapsed();
-        let imbalance = divided.imbalance();
+        let engine = match self.cfg.backend {
+            Backend::Threaded if self.cfg.workers == 0 => Engine::DirectThreads,
+            Backend::Threaded => Engine::Pooled,
+            Backend::DiscreteEvent => Engine::DiscreteEvent {
+                link: self.cfg.link_model,
+            },
+        };
+        let mut session = Session::single(net, &self.bundle.plans, data)
+            .with_divide_engine(self.cfg.divide_engine, self.registry.as_ref())
+            .with_engine(engine);
+        if let Some(obs) = &self.observer {
+            session = session.with_observer(&**obs);
+        }
+        let outcome = session.divide()?.local_sort()?.gather()?;
+        if outcome.sorted != baseline.sorted {
+            return Err(Error::Invariant(
+                "parallel output differs from sequential baseline".into(),
+            ));
+        }
 
-        let out = match self.cfg.backend {
-            Backend::Threaded => self.run_threaded(divided, data.len(), seq, divide_time)?,
-            Backend::DiscreteEvent => self.run_des(divided, data.len(), seq, divide_time)?,
+        let divide_time = outcome.trace.divide_total();
+        // Threaded backends report wall clock; the DES reports the
+        // divide wall plus the simulated virtual completion time.
+        let parallel_time = match &outcome.des {
+            None => divide_time + outcome.parallel_time(),
+            Some(des) => divide_time + Duration::from_nanos(des.completion_ns as u64),
         };
 
         let ts = sequential_time.as_secs_f64();
-        let tp = out.parallel_time.as_secs_f64();
+        let tp = parallel_time.as_secs_f64();
         let p = net.total_processors() as f64;
         Ok(SortReport {
             elements: data.len(),
             processors: net.total_processors(),
             sequential_time,
-            parallel_time: out.parallel_time,
+            parallel_time,
             divide_time,
-            counters: out.counters,
+            stage_times: outcome.trace,
+            counters: outcome.counters,
             sequential_counters,
-            imbalance,
-            des_completion_ns: out.des.as_ref().map(|d| d.completion_ns),
-            des_steps: out.des.as_ref().map(|d| d.trace.steps()),
-            des_trace: out.des.map(|d| d.trace),
+            imbalance: outcome.imbalance,
+            des_completion_ns: outcome.des.as_ref().map(|d| d.completion_ns),
+            des_steps: outcome.des.as_ref().map(|d| d.trace.steps()),
+            des_trace: outcome.des.map(|d| d.trace),
             speedup: ts / tp,
             speedup_pct: (ts - tp) / ts * 100.0,
             efficiency: ts / (p * tp),
-        })
-    }
-
-    fn run_threaded(
-        &self,
-        divided: Divided,
-        total_len: usize,
-        expect: &[i32],
-        divide_time: Duration,
-    ) -> Result<BackendOutcome> {
-        let mode = if self.cfg.workers == 0 {
-            ThreadMode::Direct
-        } else {
-            ThreadMode::Waves
-        };
-        let out = ThreadedSimulator::new(&self.bundle.net, &self.bundle.plans)
-            .with_mode(mode)
-            .run(divided.buckets, total_len)?;
-        if out.sorted != expect {
-            return Err(Error::Invariant(
-                "parallel output differs from sequential baseline".into(),
-            ));
-        }
-        Ok(BackendOutcome {
-            parallel_time: divide_time + out.parallel_time,
-            counters: out.counters,
-            des: None,
-        })
-    }
-
-    fn run_des(
-        &self,
-        divided: Divided,
-        total_len: usize,
-        expect: &[i32],
-        divide_time: Duration,
-    ) -> Result<BackendOutcome> {
-        // Real local sorts (for counters + verified output) feed exact
-        // work into the DES clock.  They run in place on the arena's
-        // disjoint segments — the sorted arena is then compared against
-        // the baseline directly, no reassembly copy.
-        let mut buckets = divided.buckets;
-        let mut counters_vec = Vec::with_capacity(buckets.num_buckets());
-        let mut counters = SortCounters::default();
-        for seg in buckets.segments_mut() {
-            let c = quicksort(seg);
-            counters_vec.push(c);
-            counters += c;
-        }
-
-        if buckets.total_keys() != total_len || buckets.arena() != expect {
-            return Err(Error::Invariant(
-                "DES-path output differs from sequential baseline".into(),
-            ));
-        }
-
-        let des = DesSimulator::new(&self.bundle.net, &self.bundle.plans, self.cfg.link_model)
-            .run_buckets(&buckets, Some(&counters_vec))?;
-        let virtual_time = Duration::from_nanos(des.completion_ns as u64);
-        Ok(BackendOutcome {
-            parallel_time: divide_time + virtual_time,
-            counters,
-            des: Some(des),
         })
     }
 }
@@ -312,6 +269,27 @@ mod tests {
         assert_eq!(elec + opt, 2 * (36 - 1));
         assert_eq!(opt, 2 * (6 - 1));
         assert!(report.des_completion_ns.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stage_trace_sums_to_parallel_time() {
+        // Pooled engine: every stage measured at its own transition.
+        let mut c = cfg(1, Construction::FullGroup, Backend::Threaded);
+        c.workers = 4;
+        let r = OhhcSorter::new(&c).unwrap().run().unwrap();
+        assert_eq!(r.stage_times.total(), r.parallel_time);
+        assert_eq!(r.stage_times.divide_total(), r.divide_time);
+        assert!(r.stage_times.local_sort > Duration::ZERO);
+
+        // Direct engine: the fused region splits on its critical path,
+        // so the sum is still exactly the reported parallel time.
+        let r = OhhcSorter::new(&cfg(1, Construction::FullGroup, Backend::Threaded))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.stage_times.total(), r.parallel_time);
+        assert!(r.stage_times.local_sort > Duration::ZERO);
+        assert!(r.stage_times.gather > Duration::ZERO);
     }
 
     #[test]

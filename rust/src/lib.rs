@@ -7,16 +7,20 @@
 //! * **Layer 3 (this crate)** — the OHHC topology library, a discrete-event
 //!   optoelectronic network simulator, a paper-faithful multithreaded
 //!   simulation backend, the instrumented sequential Quick Sort, the
-//!   scatter / local-sort / three-phase-gather coordinator, workload
-//!   generators, metrics, the analytical model (Theorems 1–6), the
-//!   figure-regeneration harness, the [`campaign`] engine that runs
-//!   the paper's whole §6 experiment grid concurrently with shared
-//!   topology/plan caches, the [`service`] layer — a multi-tenant
-//!   sort service (bounded job queue, sorter pool, small-job batching,
-//!   admission control, latency SLOs) for online serving — and the
-//!   persistent work-stealing executor ([`runtime::Executor`]) that
-//!   every one of those layers submits its parallel work to, keeping
-//!   the sort hot path free of thread spawn/teardown after warmup.
+//!   **[`pipeline`] typestate session** (divide → local sort → gather,
+//!   one API behind every driver, with per-stage traces and observer
+//!   hooks), the thin configuration adapter over it
+//!   ([`coordinator::OhhcSorter`]), workload generators, metrics, the
+//!   analytical model (Theorems 1–6), the figure-regeneration harness,
+//!   the [`campaign`] engine that runs the paper's whole §6 experiment
+//!   grid concurrently with shared topology/plan caches, the
+//!   [`service`] layer — a multi-tenant sort service (bounded job
+//!   queue, per-job tickets, sorter pool, deadline-aware small-job
+//!   batching, admission control, latency SLOs) for online serving —
+//!   and the persistent work-stealing executor ([`runtime::Executor`])
+//!   that every one of those layers submits its parallel work to,
+//!   keeping the sort hot path free of thread spawn/teardown after
+//!   warmup.
 //! * **Layer 2 (python/compile/model.py)** — the array-division compute
 //!   graph (min/max → SubDivider → bucket-id + histogram) and a bitonic
 //!   block sorter, written in JAX.
@@ -28,7 +32,39 @@
 //! PJRT so the request path is pure rust (behind the `xla` feature — the
 //! default build uses the offline stub in [`xla`]).
 //!
-//! ## Quick start
+//! ## Quick start — the pipeline session
+//!
+//! Every driver in the crate runs the paper's pipeline through one
+//! typestate API: `Session<Configured>` → `divide()` →
+//! `Session<Divided>` → `local_sort()` → `Session<Sorted>` →
+//! `gather()` → `Outcome`.  Stage order is enforced by the type
+//! system, each transition is timed into a
+//! [`StageTrace`](pipeline::StageTrace), and the sorted output is the
+//! divide arena itself (zero-copy end to end):
+//!
+//! ```
+//! use ohhc_qsort::config::Construction;
+//! use ohhc_qsort::pipeline::{Engine, Session};
+//! use ohhc_qsort::schedule::TopologyBundle;
+//!
+//! let bundle = TopologyBundle::build(1, Construction::FullGroup)?; // 36 processors
+//! let data = ohhc_qsort::workload::random(50_000, 42);
+//! let outcome = Session::single(&bundle.net, &bundle.plans, &data)
+//!     .with_engine(Engine::Pooled) // or DirectThreads / DiscreteEvent
+//!     .divide()?
+//!     .local_sort()?
+//!     .gather()?;
+//! assert!(outcome.sorted.windows(2).all(|w| w[0] <= w[1]));
+//! println!("stages: {:?}", outcome.trace);
+//! # Ok::<(), ohhc_qsort::Error>(())
+//! ```
+//!
+//! ## Compatibility path — the experiment driver
+//!
+//! [`coordinator::OhhcSorter`] keeps the paper-facing configuration
+//! surface (dimension, construction, distribution, backend) and drives
+//! the same session underneath, adding the measured sequential
+//! baseline and the speedup/efficiency report:
 //!
 //! ```no_run
 //! use ohhc_qsort::config::{Construction, Distribution, ExperimentConfig};
@@ -43,6 +79,7 @@
 //! };
 //! let report = OhhcSorter::new(&cfg).unwrap().run().unwrap();
 //! println!("sorted {} keys in {:?}", report.elements, report.parallel_time);
+//! println!("stage breakdown: {:?}", report.stage_times);
 //! ```
 //!
 //! ## Campaign runs
@@ -67,6 +104,7 @@ pub mod dataplane;
 pub mod error;
 pub mod figures;
 pub mod metrics;
+pub mod pipeline;
 pub mod runtime;
 pub mod schedule;
 pub mod service;

@@ -32,7 +32,7 @@ use ohhc_qsort::figures::{ALL_IDS, FigureHarness};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::service::{
     loadgen, JobResult, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig,
-    SortService, Submit,
+    SortService, Submission,
 };
 use ohhc_qsort::topology::{hhc, hypercube, mesh, ring, NetworkProperties, Ohhc};
 use ohhc_qsort::util::json::Json;
@@ -271,6 +271,10 @@ fn cmd_run(args: &mut Args) -> CliResult {
     println!("parallel time       {:?}", r.parallel_time);
     println!("  divide phase      {:?}", r.divide_time);
     println!(
+        "  stages            divide {:?} / scatter {:?} / sort {:?} / gather {:?}",
+        r.stage_times.divide, r.stage_times.scatter, r.stage_times.local_sort, r.stage_times.gather
+    );
+    println!(
         "speedup             {:.4}x ({:.2}%)",
         r.speedup, r.speedup_pct
     );
@@ -430,38 +434,39 @@ fn cmd_serve(args: &mut Args) -> CliResult {
         cfg.queue_capacity
     );
     let service = SortService::start(cfg);
-    let mut accepted = 0usize;
     let mut retries = 0usize;
-    let mut results = Vec::with_capacity(specs.len());
+    let mut tickets = Vec::with_capacity(specs.len());
     for spec in specs {
         // serve owns a finite stream: on backpressure (queue full, rate,
-        // shed) wait for capacity — draining results meanwhile — instead
-        // of dropping input.  Only invalid jobs and shutdown are fatal.
+        // shed) wait for capacity instead of dropping input.  Only
+        // invalid jobs and shutdown are fatal.
         // NOTE: every retry is a fresh submission attempt, so the service
         // snapshot's submitted/rejected count attempts, not jobs — the
         // `stream` numbers below are the per-job truth.
         loop {
             match service.submit(spec.clone()) {
-                Submit::Accepted { .. } => {
-                    accepted += 1;
+                Submission::Accepted { ticket, .. } => {
+                    tickets.push(ticket);
                     break;
                 }
-                Submit::Rejected {
+                Submission::Rejected {
                     reason: reason @ (RejectReason::Closed | RejectReason::Invalid { .. }),
                 } => bail!("serve: job {} rejected: {reason}", spec.id),
-                Submit::Rejected { .. } => {
+                Submission::Rejected { .. } => {
                     retries += 1;
-                    if let Some(r) = service.recv_timeout(std::time::Duration::from_millis(5)) {
-                        results.push(r);
-                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
                 }
             }
         }
     }
-    while results.len() < accepted {
-        match service.recv_timeout(std::time::Duration::from_secs(300)) {
+    // Every accepted job has its own ticket; results cannot be mixed up
+    // across tenants, and a stall names the job that stalled.
+    let accepted = tickets.len();
+    let mut results = Vec::with_capacity(accepted);
+    for ticket in &tickets {
+        match ticket.wait_timeout(std::time::Duration::from_secs(300)) {
             Some(r) => results.push(r),
-            None => bail!("serve: service stalled waiting for results"),
+            None => bail!("serve: job {} produced no result in 300s", ticket.id()),
         }
     }
     let (snapshot, rest) = service.shutdown();

@@ -1,0 +1,73 @@
+//! One typestate pipeline API behind every driver.
+//!
+//! The paper's algorithm is a single fixed pipeline — array division
+//! (§3.1), scatter, parallel local Quick Sort, three-phase gather
+//! (§5) — yet it runs under several execution modes (Fasha's
+//! comparative study frames exactly this: one algorithm, many modes).
+//! A [`Session`] makes the pipeline itself the first-class object and
+//! plugs the modes in as [`Engine`]s:
+//!
+//! ```text
+//! Session<Configured> --divide()--> Session<Divided>
+//!                     --local_sort()--> Session<Sorted>
+//!                     --gather()--> Outcome
+//! ```
+//!
+//! Each state owns **exactly** the data legal at that stage: the
+//! [`FlatBuckets`](crate::dataplane::FlatBuckets) arena threads
+//! through by move, so the zero-copy guarantee (the sorted output *is*
+//! the divide allocation) is structural, not conventional.  Each
+//! transition records its wall time into a [`StageTrace`], and an
+//! [`Observer`] hook fires at every stage boundary — campaign
+//! reports, service stats, and bench probes subscribe there instead of
+//! inlining timing code into drivers.
+//!
+//! Every driver in the crate runs through a session: the coordinator's
+//! [`OhhcSorter`](crate::coordinator::OhhcSorter) is a thin
+//! config-to-`Session` adapter, service-pool workers drive sessions
+//! stage by stage (so the pool can interleave stages of different
+//! jobs on the shared executor), and the batcher's coalesced pass is a
+//! [`Session::batched`] over a multi-span arena.
+//!
+//! # Example
+//!
+//! ```
+//! use ohhc_qsort::config::Construction;
+//! use ohhc_qsort::pipeline::{Engine, Session};
+//! use ohhc_qsort::schedule::TopologyBundle;
+//!
+//! let bundle = TopologyBundle::build(1, Construction::FullGroup)?;
+//! let data = ohhc_qsort::workload::random(10_000, 7);
+//! let outcome = Session::single(&bundle.net, &bundle.plans, &data)
+//!     .with_engine(Engine::Pooled)
+//!     .divide()?
+//!     .local_sort()?
+//!     .gather()?;
+//! assert!(outcome.sorted.windows(2).all(|w| w[0] <= w[1]));
+//! assert_eq!(outcome.sorted.len(), 10_000);
+//! # Ok::<(), ohhc_qsort::Error>(())
+//! ```
+//!
+//! # Stage order is enforced at compile time
+//!
+//! A `Session<Configured>` has no `gather` (or `local_sort`) method —
+//! skipping a stage is a type error, not a runtime panic:
+//!
+//! ```compile_fail
+//! use ohhc_qsort::config::Construction;
+//! use ohhc_qsort::pipeline::Session;
+//! use ohhc_qsort::schedule::TopologyBundle;
+//!
+//! let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap();
+//! let data = vec![3, 1, 2];
+//! // ERROR: `gather` is only reachable from `Session<Sorted>`.
+//! let _ = Session::single(&bundle.net, &bundle.plans, &data).gather();
+//! ```
+
+mod observer;
+mod session;
+mod trace;
+
+pub use observer::{CollectingObserver, Observer};
+pub use session::{Configured, Divided, Engine, Outcome, Session, Sorted};
+pub use trace::{Stage, StageTrace};

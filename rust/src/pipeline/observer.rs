@@ -1,0 +1,67 @@
+//! Stage-boundary hooks: progress reporting, service stats, and bench
+//! probes observe a [`Session`] instead of inlining timing code into
+//! the drivers.
+//!
+//! [`Session`]: crate::pipeline::Session
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::pipeline::trace::{Stage, StageTrace};
+
+/// A stage-boundary hook.  The session invokes `on_stage` once per
+/// completed transition, from whichever thread drives the session —
+/// implementations must be cheap and thread-safe (the service installs
+/// one shared observer across every worker).
+pub trait Observer {
+    /// `stage` just finished after `elapsed` of wall time; `trace`
+    /// holds everything recorded so far (including this stage).
+    fn on_stage(&self, stage: Stage, elapsed: Duration, trace: &StageTrace);
+}
+
+/// Observer that records every stage event — the test/bench probe.
+#[derive(Debug, Default)]
+pub struct CollectingObserver {
+    events: Mutex<Vec<(Stage, Duration)>>,
+}
+
+impl CollectingObserver {
+    /// Fresh, empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Every `(stage, elapsed)` event observed so far, in firing order.
+    pub fn events(&self) -> Vec<(Stage, Duration)> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Stage labels in firing order (compact assertion helper).
+    pub fn stages(&self) -> Vec<&'static str> {
+        self.events.lock().unwrap().iter().map(|(s, _)| s.label()).collect()
+    }
+}
+
+impl Observer for CollectingObserver {
+    fn on_stage(&self, stage: Stage, elapsed: Duration, _trace: &StageTrace) {
+        self.events.lock().unwrap().push((stage, elapsed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_records_in_order() {
+        let c = CollectingObserver::new();
+        let trace = StageTrace::default();
+        c.on_stage(Stage::Divide, Duration::from_micros(1), &trace);
+        c.on_stage(Stage::LocalSort, Duration::from_micros(2), &trace);
+        c.on_stage(Stage::Gather, Duration::from_micros(3), &trace);
+        assert_eq!(c.stages(), vec!["divide", "local_sort", "gather"]);
+        let events = c.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[2].1, Duration::from_micros(3));
+    }
+}

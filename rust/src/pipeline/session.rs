@@ -1,0 +1,425 @@
+//! The typestate pipeline session — see the [module docs](crate::pipeline).
+
+use std::ops::Range;
+use std::time::{Duration, Instant};
+
+use crate::config::{DivideEngine, LinkModel};
+use crate::coordinator::divide_with_engine;
+use crate::dataplane::FlatBuckets;
+use crate::error::{Error, Result};
+use crate::pipeline::observer::Observer;
+use crate::pipeline::trace::{Stage, StageTrace};
+use crate::runtime::ArtifactRegistry;
+use crate::schedule::NodePlan;
+use crate::service::batcher::coalesce;
+use crate::sim::engine::{DesOutcome, DesSimulator};
+use crate::sim::threaded::{finish_gather, DirectRun, ThreadedSimulator};
+use crate::sort::{Quicksort, SortCounters};
+use crate::topology::ohhc::Ohhc;
+
+/// How the local-sort and gather stages execute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Engine {
+    /// Pooled waves on the persistent executor (the Waves mode): a
+    /// local-sort task wave over the arena segments, then the
+    /// bookkeeping gather.  The fast mode for sweeps and the service.
+    Pooled,
+    /// The paper's §5 methodology: one OS thread per simulated
+    /// processor, local sort and gather overlapped inside one thread
+    /// region.  Stage times split the fused region on its critical
+    /// path (see [`StageTrace`]).
+    DirectThreads,
+    /// Real instrumented local sorts feeding the discrete-event
+    /// simulator; the gather runs in virtual time under `link`.
+    DiscreteEvent {
+        /// Electrical/optical link timing parameters.
+        link: LinkModel,
+    },
+}
+
+/// Typestate marker + payload: a configured session that has not
+/// divided yet.  Holds (only) the input keys.
+pub struct Configured<'d> {
+    input: Input<'d>,
+}
+
+enum Input<'d> {
+    Single(&'d [i32]),
+    Batched(Vec<&'d [i32]>),
+}
+
+/// Typestate marker + payload: the input has been divided; the state
+/// owns the scattered arena and the per-job spans.
+pub struct Divided {
+    buckets: FlatBuckets,
+    total: usize,
+    spans: Vec<Range<usize>>,
+    imbalance: f64,
+}
+
+/// Typestate marker + payload: every bucket segment is sorted in
+/// place; the state owns whatever the configured engine needs to
+/// terminate the gather.
+pub struct Sorted {
+    payload: SortedPayload,
+    total: usize,
+    spans: Vec<Range<usize>>,
+    imbalance: f64,
+    counters: SortCounters,
+    max_local_sort: Duration,
+}
+
+enum SortedPayload {
+    /// Pooled wave sorted the arena; gather is bookkeeping.
+    Pooled { buckets: FlatBuckets },
+    /// The fused Direct region already ran; gather validates it.
+    Direct(Box<DirectRun>),
+    /// Serial sorts ran; gather is the DES in virtual time.
+    Des {
+        buckets: FlatBuckets,
+        counters_vec: Vec<SortCounters>,
+        link: LinkModel,
+    },
+}
+
+/// What a completed session hands back: the sorted arena (the divide
+/// allocation — never a copy), per-job output spans, the stage trace,
+/// and the engine-specific observables.
+#[derive(Debug)]
+pub struct Outcome {
+    /// The globally sorted keys — the divide arena itself (pointer and
+    /// capacity equal to the scattered arena; tested).
+    pub sorted: Vec<i32>,
+    /// Per-job output ranges of `sorted`, in submission order (one
+    /// `0..n` span for single-input sessions).
+    pub spans: Vec<Range<usize>>,
+    /// Wall time of every stage.
+    pub trace: StageTrace,
+    /// Summed local-sort counters.
+    pub counters: SortCounters,
+    /// Wall time of the slowest local sort (load-imbalance witness).
+    pub max_local_sort: Duration,
+    /// Messages passed by the gather (0 for the DES engine, which
+    /// reports its communication in `des` instead).
+    pub messages: usize,
+    /// Division load-imbalance factor.
+    pub imbalance: f64,
+    /// DES observables, when the session ran on that engine.
+    pub des: Option<DesOutcome>,
+}
+
+impl Outcome {
+    /// Job `j`'s sorted output slice.
+    pub fn job(&self, j: usize) -> &[i32] {
+        &self.sorted[self.spans[j].clone()]
+    }
+
+    /// Wall time of the parallel region (local sort + gather stages) —
+    /// what the threaded backends report as parallel time, divide
+    /// excluded.
+    pub fn parallel_time(&self) -> Duration {
+        self.trace.local_sort + self.trace.gather
+    }
+}
+
+/// The state-independent half of a session: topology, plans, engine
+/// and sorter configuration, hooks, and the accumulating trace.
+/// Moving it whole between typestates keeps every transition a
+/// two-field struct literal — no per-field copying to forget.
+struct Core<'a> {
+    net: &'a Ohhc,
+    plans: &'a [NodePlan],
+    engine: Engine,
+    sorter: Quicksort,
+    divide_engine: DivideEngine,
+    registry: Option<&'a ArtifactRegistry>,
+    observer: Option<&'a dyn Observer>,
+    trace: StageTrace,
+}
+
+impl Core<'_> {
+    fn emit(&self, stage: Stage, elapsed: Duration) {
+        if let Some(obs) = self.observer {
+            obs.on_stage(stage, elapsed, &self.trace);
+        }
+    }
+}
+
+/// One pipeline run as a typestate object: `Session<Configured>` →
+/// [`divide`](Session::divide) → `Session<Divided>` →
+/// [`local_sort`](Session::local_sort) → `Session<Sorted>` →
+/// [`gather`](Session::gather) → [`Outcome`].  Each state owns exactly
+/// the data legal at that stage; the arena moves through by value, so
+/// the zero-copy guarantee is structural, and out-of-order stage calls
+/// do not compile (see the [module docs](crate::pipeline)).
+pub struct Session<'a, S> {
+    core: Core<'a>,
+    state: S,
+}
+
+impl<S> Session<'_, S> {
+    /// The stage trace recorded so far.
+    pub fn trace(&self) -> &StageTrace {
+        &self.core.trace
+    }
+}
+
+impl<'a, 'd> Session<'a, Configured<'d>> {
+    /// A session over one input array: the whole topology sorts `data`
+    /// (the coordinator's path).
+    pub fn single(net: &'a Ohhc, plans: &'a [NodePlan], data: &'d [i32]) -> Self {
+        Self::with_input(net, plans, Input::Single(data))
+    }
+
+    /// A session over a batch of tenant jobs: each job receives a
+    /// contiguous bucket span of one shared arena and is divided by
+    /// its own step point (the batcher's multi-span path).  Spans in
+    /// the outcome follow `jobs` order.
+    pub fn batched(net: &'a Ohhc, plans: &'a [NodePlan], jobs: &[&'d [i32]]) -> Self {
+        Self::with_input(net, plans, Input::Batched(jobs.to_vec()))
+    }
+
+    fn with_input(net: &'a Ohhc, plans: &'a [NodePlan], input: Input<'d>) -> Self {
+        Session {
+            core: Core {
+                net,
+                plans,
+                engine: Engine::Pooled,
+                sorter: Quicksort::default(),
+                divide_engine: DivideEngine::Native,
+                registry: None,
+                observer: None,
+                trace: StageTrace::default(),
+            },
+            state: Configured { input },
+        }
+    }
+
+    /// Select the local-sort/gather engine (default [`Engine::Pooled`]).
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.core.engine = engine;
+        self
+    }
+
+    /// Override the local sorter configuration.
+    pub fn with_sorter(mut self, sorter: Quicksort) -> Self {
+        self.core.sorter = sorter;
+        self
+    }
+
+    /// Select the divide engine.  [`DivideEngine::Xla`] requires a
+    /// registry and applies to single-input sessions only (batched
+    /// sessions always divide natively, per job).
+    pub fn with_divide_engine(
+        mut self,
+        engine: DivideEngine,
+        registry: Option<&'a ArtifactRegistry>,
+    ) -> Self {
+        self.core.divide_engine = engine;
+        self.core.registry = registry;
+        self
+    }
+
+    /// Install a stage-boundary observer.
+    pub fn with_observer(mut self, observer: &'a dyn Observer) -> Self {
+        self.core.observer = Some(observer);
+        self
+    }
+
+    /// Stage 1 — array division (paper §3.1): classify every key by
+    /// its step point and scatter it to its final arena position.
+    pub fn divide(self) -> Result<Session<'a, Divided>> {
+        let Session { mut core, state } = self;
+        let p = core.net.total_processors();
+        let t0 = Instant::now();
+        let (buckets, spans, scatter) = match state.input {
+            Input::Single(data) => {
+                let d = divide_with_engine(data, p, core.divide_engine, core.registry)?;
+                (d.buckets, vec![0..data.len()], d.scatter_time)
+            }
+            Input::Batched(jobs) => {
+                let batch = coalesce(&jobs, p)?;
+                let spans = (0..batch.num_jobs()).map(|j| batch.job_range(j)).collect();
+                (batch.buckets, spans, batch.scatter_time)
+            }
+        };
+        let elapsed = t0.elapsed();
+        core.trace.scatter = scatter;
+        core.trace.divide = elapsed.saturating_sub(scatter);
+        core.emit(Stage::Divide, elapsed);
+        let imbalance = buckets.imbalance();
+        let total = buckets.total_keys();
+        Ok(Session {
+            core,
+            state: Divided {
+                buckets,
+                total,
+                spans,
+                imbalance,
+            },
+        })
+    }
+}
+
+impl<'a> Session<'a, Divided> {
+    /// The scattered arena (bucket `i` = processor `i`'s sub-array).
+    pub fn buckets(&self) -> &FlatBuckets {
+        &self.state.buckets
+    }
+
+    /// Per-job arena spans, submission order.
+    pub fn spans(&self) -> &[Range<usize>] {
+        &self.state.spans
+    }
+
+    /// Division load-imbalance factor.
+    pub fn imbalance(&self) -> f64 {
+        self.state.imbalance
+    }
+
+    /// Stage 2 — parallel local Quick Sorts on the disjoint arena
+    /// segments (paper §3.2 step 3), on the configured engine.
+    pub fn local_sort(self) -> Result<Session<'a, Sorted>> {
+        let Session { mut core, state } = self;
+        let n = core.net.total_processors();
+        let Divided {
+            mut buckets,
+            total,
+            spans,
+            imbalance,
+        } = state;
+        if buckets.num_buckets() != n {
+            return Err(Error::Sim(format!(
+                "expected {n} buckets, got {}",
+                buckets.num_buckets()
+            )));
+        }
+        if buckets.total_keys() != total {
+            return Err(Error::Invariant(format!(
+                "payload loss: buckets hold {} of {total} keys",
+                buckets.total_keys()
+            )));
+        }
+        let sim = ThreadedSimulator::new(core.net, core.plans).with_sorter(core.sorter);
+        let t0 = Instant::now();
+        let (payload, counters, max_local_sort) = match core.engine {
+            Engine::Pooled => {
+                let stats = sim.local_sort_wave(&mut buckets);
+                (
+                    SortedPayload::Pooled { buckets },
+                    stats.counters,
+                    stats.max_local_sort,
+                )
+            }
+            Engine::DirectThreads => {
+                let run = sim.run_direct_raw(buckets)?;
+                let (counters, max) = (run.counters, run.max_local_sort);
+                (SortedPayload::Direct(Box::new(run)), counters, max)
+            }
+            Engine::DiscreteEvent { link } => {
+                let mut counters_vec = Vec::with_capacity(buckets.num_buckets());
+                let mut counters = SortCounters::default();
+                let mut max = Duration::ZERO;
+                for seg in buckets.segments_mut() {
+                    let s0 = Instant::now();
+                    let c = core.sorter.sort(seg);
+                    max = max.max(s0.elapsed());
+                    counters_vec.push(c);
+                    counters += c;
+                }
+                (
+                    SortedPayload::Des {
+                        buckets,
+                        counters_vec,
+                        link,
+                    },
+                    counters,
+                    max,
+                )
+            }
+        };
+        let elapsed = t0.elapsed();
+        // The fused Direct region covers sort AND gather; attribute the
+        // critical-path sort here and leave the remainder to gather().
+        core.trace.local_sort = match core.engine {
+            Engine::DirectThreads => max_local_sort,
+            _ => elapsed,
+        };
+        core.emit(Stage::LocalSort, core.trace.local_sort);
+        Ok(Session {
+            core,
+            state: Sorted {
+                payload,
+                total,
+                spans,
+                imbalance,
+                counters,
+                max_local_sort,
+            },
+        })
+    }
+}
+
+impl Session<'_, Sorted> {
+    /// Summed local-sort counters so far.
+    pub fn counters(&self) -> SortCounters {
+        self.state.counters
+    }
+
+    /// Stage 3 — terminate the three-phase gather and surrender the
+    /// arena, which in bucket-rank order **is** the globally sorted
+    /// array (zero key copies on every engine).
+    pub fn gather(self) -> Result<Outcome> {
+        let Session { mut core, state } = self;
+        let Sorted {
+            payload,
+            total,
+            spans,
+            imbalance,
+            counters,
+            max_local_sort,
+        } = state;
+        let t0 = Instant::now();
+        let (sorted, messages, des, gather_time) = match payload {
+            SortedPayload::Pooled { buckets } => {
+                let sim = ThreadedSimulator::new(core.net, core.plans);
+                let messages = sim.gather_bookkeeping()?;
+                let (sorted, _) = buckets.into_arena();
+                (sorted, messages, None, t0.elapsed())
+            }
+            SortedPayload::Direct(run) => {
+                let run = *run;
+                // The fused region already gathered; validate coverage
+                // and attribute the region's non-sort remainder here so
+                // local_sort + gather equals the measured region
+                // (master-finish semantics, teardown excluded).
+                let gather_time = run.region.saturating_sub(run.max_local_sort);
+                let messages = run.messages;
+                let sorted = finish_gather(run.subarrays, run.buckets, total)?;
+                (sorted, messages, None, gather_time)
+            }
+            SortedPayload::Des {
+                buckets,
+                counters_vec,
+                link,
+            } => {
+                let des = DesSimulator::new(core.net, core.plans, link)
+                    .run_buckets(&buckets, Some(&counters_vec))?;
+                let (sorted, _) = buckets.into_arena();
+                (sorted, 0, Some(des), t0.elapsed())
+            }
+        };
+        core.trace.gather = gather_time;
+        core.emit(Stage::Gather, gather_time);
+        Ok(Outcome {
+            sorted,
+            spans,
+            trace: core.trace,
+            counters,
+            max_local_sort,
+            messages,
+            imbalance,
+            des,
+        })
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-stage timing: the [`StageTrace`] every [`Session`] transition
+//! writes into and every driver reads its report from.
+//!
+//! [`Session`]: crate::pipeline::Session
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// The pipeline stages a [`crate::pipeline::Session`] moves through.
+/// Observers receive one callback per completed transition; `Divide`
+/// covers both the classification and the arena scatter (their wall
+/// times are split inside the trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Step-point classification + arena scatter (paper §3.1).
+    Divide,
+    /// Per-bucket local Quick Sorts (paper §3.2 step 3).
+    LocalSort,
+    /// Three-phase gather / result validation (paper §3.2 step 4).
+    Gather,
+}
+
+impl Stage {
+    /// Stable label for logs, JSON, and observer output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Divide => "divide",
+            Stage::LocalSort => "local_sort",
+            Stage::Gather => "gather",
+        }
+    }
+}
+
+/// Wall time of each pipeline stage, filled in transition by
+/// transition.  `divide` is the classification work (step point +
+/// bucket ids); `scatter` is the arena placement writes — together they
+/// make up the coordinator's historical "divide phase".
+///
+/// Stage attribution per engine:
+///
+/// * **Pooled** — every stage is measured at its own transition.
+/// * **Direct threads** — the paper's §5 methodology overlaps local
+///   sort and gather inside one thread region, so the fused region is
+///   split on its critical path: `local_sort` is the slowest local
+///   sort, `gather` is the remainder (their sum is exactly the
+///   measured parallel region, master-finish semantics included).
+/// * **Discrete event** — `local_sort` and `gather` are the *host*
+///   wall times (serial instrumented sorts, DES engine run); the
+///   simulated virtual time lives in the outcome's `des` field.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTrace {
+    /// Step-point + bucket-id classification time.
+    pub divide: Duration,
+    /// Arena scatter (placement writes) time.
+    pub scatter: Duration,
+    /// Local-sort stage time.
+    pub local_sort: Duration,
+    /// Gather stage time.
+    pub gather: Duration,
+}
+
+impl StageTrace {
+    /// The historical "divide phase": classification + scatter.
+    pub fn divide_total(&self) -> Duration {
+        self.divide + self.scatter
+    }
+
+    /// Sum of every stage — the whole pipeline's wall time as seen by
+    /// the trace.
+    pub fn total(&self) -> Duration {
+        self.divide + self.scatter + self.local_sort + self.gather
+    }
+
+    /// The trace as a JSON object (nanoseconds per stage).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("divide_ns", Json::num(self.divide.as_nanos() as f64)),
+            ("gather_ns", Json::num(self.gather.as_nanos() as f64)),
+            ("local_sort_ns", Json::num(self.local_sort.as_nanos() as f64)),
+            ("scatter_ns", Json::num(self.scatter.as_nanos() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_labels() {
+        let t = StageTrace {
+            divide: Duration::from_micros(10),
+            scatter: Duration::from_micros(5),
+            local_sort: Duration::from_micros(100),
+            gather: Duration::from_micros(1),
+        };
+        assert_eq!(t.divide_total(), Duration::from_micros(15));
+        assert_eq!(t.total(), Duration::from_micros(116));
+        assert_eq!(Stage::Divide.label(), "divide");
+        assert_eq!(Stage::LocalSort.label(), "local_sort");
+        assert_eq!(Stage::Gather.label(), "gather");
+    }
+
+    #[test]
+    fn json_carries_every_stage() {
+        let t = StageTrace {
+            divide: Duration::from_nanos(7),
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("divide_ns").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("scatter_ns").unwrap().as_f64(), Some(0.0));
+        assert!(j.get("local_sort_ns").is_some());
+        assert!(j.get("gather_ns").is_some());
+    }
+}

@@ -17,6 +17,7 @@
 //! equals a per-job sequential sort for every distribution).
 
 use std::ops::Range;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::BucketFn;
 use crate::dataplane::{FlatBuckets, FlatSpan};
@@ -27,6 +28,10 @@ use crate::error::{Error, Result};
 pub struct CoalescedBatch {
     /// One arena with exactly the topology's bucket count.
     pub buckets: FlatBuckets,
+    /// Wall time spent in the scatter passes (arena placement writes),
+    /// summed over the batch — the multi-span counterpart of
+    /// [`crate::coordinator::Divided::scatter_time`].
+    pub scatter_time: Duration,
     /// Per-job arena key ranges, in batch order.
     job_ranges: Vec<Range<usize>>,
     /// Per-job bucket spans, in batch order.
@@ -124,6 +129,7 @@ pub fn coalesce(jobs: &[&[i32]], total_buckets: usize) -> Result<CoalescedBatch>
     let mut job_buckets = Vec::with_capacity(jobs.len());
     let mut arena_base = 0usize;
     let mut bucket_base = 0usize;
+    let mut scatter_time = Duration::ZERO;
 
     for (&data, &buckets_j) in jobs.iter().zip(&allot) {
         // Per-job step point (paper §3.1, scoped to the job's keys).
@@ -157,11 +163,13 @@ pub fn coalesce(jobs: &[&[i32]], total_buckets: usize) -> Result<CoalescedBatch>
         debug_assert_eq!(acc, arena_base + data.len());
 
         // Pass 2: scatter through the cached ids.
+        let scatter_t0 = Instant::now();
         for (&v, &b) in data.iter().zip(&ids) {
             let cursor = &mut cursors[b as usize];
             arena[*cursor] = v;
             *cursor += 1;
         }
+        scatter_time += scatter_t0.elapsed();
 
         job_ranges.push(arena_base..arena_base + data.len());
         job_buckets.push(bucket_base..bucket_base + buckets_j);
@@ -173,9 +181,29 @@ pub fn coalesce(jobs: &[&[i32]], total_buckets: usize) -> Result<CoalescedBatch>
 
     Ok(CoalescedBatch {
         buckets: FlatBuckets::from_parts(arena, offsets),
+        scatter_time,
         job_ranges,
         job_buckets,
     })
+}
+
+/// Order a claimed batch for coalescing: jobs with the smallest
+/// deadline key first, deadline-free (`None`) jobs last, FIFO among
+/// ties (the sort is stable).  The pool passes each job's *remaining
+/// slack* (absolute deadline minus now) as the key, so time already
+/// spent queued counts against a job.  Because [`coalesce`] lays jobs
+/// out in argument order, SLO-bound jobs land earliest in the shared
+/// arena and are the first results verified, split back, and
+/// published — the "pool-aware batching priorities" ordering half from
+/// the roadmap.  Batch members still share one pipeline pass (and
+/// therefore one sort latency), so the win is publish order within the
+/// batch; deadline-driven batch *membership* is the roadmap item's
+/// remaining half.
+pub fn order_by_deadline<T>(jobs: &mut [T], deadline_of: impl Fn(&T) -> Option<Duration>) {
+    jobs.sort_by_key(|j| match deadline_of(j) {
+        Some(d) => (0u8, d),
+        None => (1u8, Duration::MAX),
+    });
 }
 
 #[cfg(test)]
@@ -252,6 +280,24 @@ mod tests {
         let batch = coalesce(&[&data], 36).unwrap();
         let divided = crate::coordinator::divide_native(&data, 36).unwrap();
         assert_eq!(batch.buckets, divided.buckets);
+    }
+
+    #[test]
+    fn deadline_ordering_is_tightest_first_none_last_fifo_ties() {
+        // (id, deadline_ms)
+        let mut jobs: Vec<(u32, Option<u64>)> = vec![
+            (0, None),
+            (1, Some(50)),
+            (2, Some(10)),
+            (3, None),
+            (4, Some(10)),
+            (5, Some(5)),
+        ];
+        order_by_deadline(&mut jobs, |j| j.1.map(Duration::from_millis));
+        let ids: Vec<u32> = jobs.iter().map(|j| j.0).collect();
+        // Tightest deadline first; equal deadlines keep submission
+        // order (2 before 4); deadline-free jobs last, FIFO (0 then 3).
+        assert_eq!(ids, vec![5, 2, 4, 1, 0, 3]);
     }
 
     #[test]

@@ -174,8 +174,13 @@ impl LoadReport {
 
 /// Drive a running service with the config's schedule and collect the
 /// report.  Waits (bounded) for every accepted job's result — the
-/// service contract is one result per accepted job, so a stall here is
-/// a service bug, surfaced by the timeout rather than a hang.
+/// service contract is one result per accepted (and uncancelled) job,
+/// so a stall here is a service bug, surfaced by the timeout rather
+/// than a hang.  The generator deliberately drops its tickets and
+/// consumes the service's completion drain
+/// ([`SortService::next_completion`]): it wants *any* finished job,
+/// whichever tenant's it is — exactly the consumer that API exists
+/// for.
 pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
     const STALL: Duration = Duration::from_secs(120);
     let specs = schedule(cfg);
@@ -202,7 +207,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
                 if inflight == 0 {
                     break;
                 }
-                match service.recv_timeout(STALL) {
+                match service.next_completion(STALL) {
                     Some(r) => {
                         results.push(r);
                         inflight -= 1;
@@ -222,7 +227,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
                         break;
                     }
                     let wait = (due - now).min(Duration::from_millis(2));
-                    if let Some(r) = service.recv_timeout(wait) {
+                    if let Some(r) = service.next_completion(wait) {
                         results.push(r);
                     }
                 }
@@ -233,7 +238,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
                 }
             }
             while results.len() < accepted {
-                match service.recv_timeout(STALL) {
+                match service.next_completion(STALL) {
                     Some(r) => results.push(r),
                     None => break,
                 }

@@ -15,20 +15,52 @@
 //!   unbounded buffering);
 //! * [`admission`] — token-bucket rate limiting plus queue-depth
 //!   shedding, decided before a job touches the queue;
+//! * [`ticket`] — the per-job front door: [`Submission`] /
+//!   [`JobTicket`] completion handles (see the lifecycle below);
 //! * [`pool`] — the [`SortService`] worker pool; each worker leases
 //!   [`TopologyBundle`]s from a shared campaign
-//!   [`PlanCache`](crate::campaign::PlanCache) and drives
-//!   `divide_native` → `FlatBuckets` → `ThreadedSimulator` end to end;
-//! * [`batcher`] — coalesces small jobs into one arena-backed divide
-//!   and splits results back per job on the offset table;
-//! * [`stats`] — per-job queue/sort/total latency into shared
-//!   fixed-bucket histograms with p50/p95/p99;
-//! * [`loadgen`] — deterministic seeded open-/closed-loop generators
+//!   [`PlanCache`](crate::campaign::PlanCache) and drives a typestate
+//!   [`Session`](crate::pipeline::Session) stage by stage per job (or
+//!   per coalesced batch);
+//! * [`batcher`] — coalesces small jobs, tightest deadline first, into
+//!   one arena-backed multi-span divide and splits results back per
+//!   job on the offset table;
+//! * [`stats`] — per-job queue/sort/total latency plus per-stage
+//!   session times (the stats are a pipeline
+//!   [`Observer`](crate::pipeline::Observer)) in shared fixed-bucket
+//!   histograms with p50/p95/p99;
+//! * [`loadgen`] — deterministic seeded open/closed-loop generators
 //!   and the throughput/latency [`LoadReport`].
+//!
+//! # Ticket lifecycle
+//!
+//! [`SortService::submit`] validates and admission-checks the job, then
+//! returns a [`Submission`]: `Rejected { reason }` (nothing was
+//! enqueued), or `Accepted { depth, ticket }` where the [`JobTicket`]
+//! is the tenant's private handle to that one job:
+//!
+//! ```text
+//!   submit ─► Queued ──worker claims──► Running ──► Done ──take──► Taken
+//!                │
+//!                └──ticket.try_cancel()──► Cancelled   (no result, ever)
+//! ```
+//!
+//! * [`JobTicket::poll`] — non-blocking status;
+//! * [`JobTicket::wait_timeout`] / [`JobTicket::try_result`] — take
+//!   the result, exactly once; waiting after completion returns
+//!   immediately;
+//! * [`JobTicket::try_cancel`] — succeeds at most once, and only
+//!   before a worker claims the job (claim and cancel race; the
+//!   winner decides);
+//! * a **dropped** ticket leaks nothing: the worker still completes
+//!   the job's slot and [`SortService::next_completion`] (or the
+//!   deprecated `try_recv`/`recv_timeout` shims over it) hands the
+//!   result to whoever drains completions.
 //!
 //! Served by the `serve` and `loadgen` CLI subcommands; every future
 //! scaling layer (sharding, async backends, multi-cell placement) plugs
-//! into this seam.
+//! into this seam — per-job completion slots are exactly the shape an
+//! async front door awaits on.
 //!
 //! [`TopologyBundle`]: crate::schedule::TopologyBundle
 
@@ -39,11 +71,13 @@ pub mod loadgen;
 pub mod pool;
 pub mod queue;
 pub mod stats;
+pub mod ticket;
 
 pub use admission::{AdmissionControl, TokenBucket};
-pub use batcher::{allot_buckets, coalesce, CoalescedBatch};
+pub use batcher::{allot_buckets, coalesce, order_by_deadline, CoalescedBatch};
 pub use job::{fnv1a, fnv1a_bytes, multiset_fingerprint, JobResult, JobSpec};
 pub use loadgen::{schedule, LoadGenConfig, LoadMode, LoadReport};
 pub use pool::{ServiceConfig, SortService};
 pub use queue::{JobQueue, RejectReason, Submit};
 pub use stats::{LatencySummary, ServiceSnapshot, ServiceStats};
+pub use ticket::{JobTicket, Submission, TicketStatus};

@@ -4,44 +4,56 @@
 //! worker pops jobs from the shared bounded [`JobQueue`], leases the
 //! job's `(dimension, construction)` [`TopologyBundle`] from a shared
 //! campaign [`PlanCache`] (built once, shared by every worker that
-//! needs it), and drives the existing pipeline end to end:
-//! `divide_native` → [`FlatBuckets`] arena → [`ThreadedSimulator`]
-//! local-sort + gather.  Small jobs coalesce through the
-//! [`crate::service::batcher`] so one pipeline pass serves many
-//! tenants.  Every job's output is verified (sorted + multiset
-//! conservation) before the result ships; per-job queue/sort/total
-//! latencies land in the shared [`ServiceStats`] histograms.
+//! needs it), and drives the one pipeline behind every driver — a
+//! typestate [`Session`](crate::pipeline::Session) — **stage by
+//! stage**: divide, local sort, gather.  Each stage is a wave of tasks
+//! on the shared persistent executor, so the pool naturally
+//! interleaves stages of different jobs instead of blocking a worker
+//! inside one monolithic `run()`.  Small jobs coalesce through the
+//! [`crate::service::batcher`] into one multi-span
+//! [`Session::batched`](crate::pipeline::Session::batched) pass,
+//! deadline-tightest first.  Every job's output is verified (sorted +
+//! multiset conservation) before the result ships; per-job
+//! queue/sort/total latencies land in the shared [`ServiceStats`]
+//! histograms, and the stats also observe every session's stage
+//! boundaries ([`crate::pipeline::Observer`]).
+//!
+//! The front door is per-job: [`SortService::submit`] returns a
+//! [`Submission`] carrying a [`JobTicket`] backed by a private
+//! completion slot — poll it, wait on it with a timeout, or cancel the
+//! job before a worker claims it.  There is **no** shared result
+//! channel; [`SortService::next_completion`] drains finished jobs
+//! whose results nobody has taken yet (the compatibility path for
+//! callers that drop their tickets), with `try_recv`/`recv_timeout`
+//! kept as thin deprecated shims over that drain.
 //!
 //! The workers here are the *control plane* only — long-lived threads
-//! spawned once at [`SortService::start`].  All per-job parallel compute
-//! (divide waves, Waves local sorts) is submitted to the shared
-//! persistent executor ([`crate::runtime::Executor::global`]), so a
-//! burst of small jobs pays zero thread-spawn cost no matter how many
-//! jobs it contains.  Waves-mode jobs use the tuned
-//! [`Quicksort::throughput`] profile (insertion cutoff 24); the
-//! paper-faithful `paper_threads` mode keeps the paper-default sorter.
+//! spawned once at [`SortService::start`].  All per-job parallel
+//! compute is submitted to the shared persistent executor
+//! ([`crate::runtime::Executor::global`]), so a burst of small jobs
+//! pays zero thread-spawn cost no matter how many jobs it contains.
+//! Waves-mode jobs use the tuned [`Quicksort::throughput`] profile
+//! (insertion cutoff 24); the paper-faithful `paper_threads` mode
+//! keeps the paper-default sorter.
 //!
 //! [`TopologyBundle`]: crate::schedule::TopologyBundle
-//! [`FlatBuckets`]: crate::dataplane::FlatBuckets
 
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
-use std::ops::Range;
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::campaign::{BundleLease, PlanCache};
 use crate::config::Construction;
-use crate::coordinator::divide_native;
 use crate::error::Result;
+use crate::pipeline::{Engine, Outcome, Session};
 use crate::service::admission::AdmissionControl;
-use crate::service::batcher::coalesce;
+use crate::service::batcher::order_by_deadline;
 use crate::service::job::{fnv1a, multiset_fingerprint, JobResult, JobSpec};
 use crate::service::queue::{JobQueue, RejectReason, Submit};
 use crate::service::stats::{ServiceSnapshot, ServiceStats};
-use crate::sim::threaded::{ThreadMode, ThreadedSimulator};
+use crate::service::ticket::{JobTicket, Slot, Submission};
 use crate::sort::{is_sorted, Quicksort};
 use crate::util::par;
 
@@ -92,11 +104,37 @@ impl Default for ServiceConfig {
 }
 
 /// A job that made it past admission, stamped for queue-latency
-/// accounting.
+/// accounting and carrying its completion slot.
 #[derive(Debug)]
 struct QueuedJob {
     spec: JobSpec,
     accepted_at: Instant,
+    slot: Arc<Slot>,
+}
+
+/// The completion drain's backing store.  Tenants that consume results
+/// through their [`JobTicket`]s leave `Taken` slots behind here;
+/// `push` compacts those away once they outnumber a geometric
+/// watermark, so a long-running service whose tenants never drain
+/// stays bounded by its live (untaken) results, not its job count.
+#[derive(Debug, Default)]
+struct CompletedQueue {
+    slots: VecDeque<Arc<Slot>>,
+    compact_at: usize,
+}
+
+impl CompletedQueue {
+    const MIN_COMPACT: usize = 64;
+
+    fn push(&mut self, slot: Arc<Slot>) {
+        self.slots.push_back(slot);
+        if self.slots.len() >= self.compact_at.max(Self::MIN_COMPACT) {
+            self.slots.retain(|s| !s.is_taken());
+            // Geometric growth keeps the retain amortized O(1) even
+            // when every slot is live.
+            self.compact_at = (self.slots.len() * 2).max(Self::MIN_COMPACT);
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -106,13 +144,28 @@ struct Shared {
     admission: AdmissionControl,
     stats: ServiceStats,
     cache: PlanCache,
+    /// Finished slots whose results may not have been taken yet — what
+    /// the completion drain (and the deprecated recv shims) serve from.
+    completed: Mutex<CompletedQueue>,
+    completed_cv: Condvar,
 }
 
-/// The running service: submit jobs, receive results, shut down.
+impl Shared {
+    /// Record and publish one finished job: stats, the job's own slot,
+    /// and the completion drain.
+    fn publish(&self, slot: &Arc<Slot>, result: JobResult) {
+        self.stats.on_result(&result);
+        slot.complete(result);
+        self.completed.lock().unwrap().push(Arc::clone(slot));
+        self.completed_cv.notify_one();
+    }
+}
+
+/// The running service: submit jobs (per-job tickets), await results,
+/// shut down.
 pub struct SortService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
-    results: Receiver<JobResult>,
 }
 
 impl SortService {
@@ -123,59 +176,106 @@ impl SortService {
             admission: AdmissionControl::new(cfg.rate, cfg.burst, cfg.shed_depth),
             stats: ServiceStats::new(),
             cache: PlanCache::new(),
+            completed: Mutex::new(CompletedQueue::default()),
+            completed_cv: Condvar::new(),
             cfg,
         });
-        let (tx, rx) = std::sync::mpsc::channel();
         let workers = (0..shared.cfg.workers.max(1))
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                let tx = tx.clone();
                 std::thread::Builder::new()
                     .name(format!("ohhc-svc-{i}"))
-                    .spawn(move || worker_loop(&shared, &tx))
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawn service worker")
             })
             .collect();
-        SortService {
-            shared,
-            workers,
-            results: rx,
-        }
+        SortService { shared, workers }
     }
 
-    /// Submit one job: validated, admission-checked, then offered to the
-    /// bounded queue.  Never blocks; every path reports an explicit
-    /// [`Submit`] outcome.
-    pub fn submit(&self, spec: JobSpec) -> Submit {
+    /// Submit one job: validated, admission-checked, then offered to
+    /// the bounded queue.  Never blocks; every path reports an explicit
+    /// [`Submission`] outcome, and an accepted job hands back its
+    /// [`JobTicket`].  A ticket cancelled before a worker claims the
+    /// job keeps its queue slot until the worker pops (and skips) it.
+    pub fn submit(&self, spec: JobSpec) -> Submission {
         let outcome = if let Err(e) = spec.validate() {
-            Submit::Rejected {
+            Submission::Rejected {
                 reason: RejectReason::Invalid {
                     detail: e.to_string(),
                 },
             }
         } else if let Err(reason) = self.shared.admission.admit(self.shared.queue.depth()) {
-            Submit::Rejected { reason }
+            Submission::Rejected { reason }
         } else {
-            self.shared.queue.offer(QueuedJob {
+            let slot = Slot::new(spec.id);
+            let queued = QueuedJob {
                 spec,
                 accepted_at: Instant::now(),
-            })
+                slot: Arc::clone(&slot),
+            };
+            match self.shared.queue.offer(queued) {
+                Submit::Accepted { depth } => Submission::Accepted {
+                    depth,
+                    ticket: JobTicket::new(slot),
+                },
+                Submit::Rejected { reason } => Submission::Rejected { reason },
+            }
         };
         self.shared.stats.on_submit(outcome.is_accepted());
         outcome
     }
 
-    /// A finished job, if one is ready.
+    /// Wait up to `timeout` for any finished job whose result has not
+    /// been taken through its ticket yet, and take it.  This is the
+    /// drain for callers that do not hold tickets; mixing it with
+    /// per-ticket waits on the *same* jobs is first-taker-wins.  A
+    /// `timeout` too large to represent as a deadline (e.g.
+    /// `Duration::MAX`) waits indefinitely.
+    pub fn next_completion(&self, timeout: Duration) -> Option<JobResult> {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut q = self.shared.completed.lock().unwrap();
+        loop {
+            while let Some(slot) = q.slots.pop_front() {
+                if let Some(r) = slot.take() {
+                    return Some(r);
+                }
+                // Already taken through its ticket — keep draining.
+            }
+            q = match deadline {
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    self.shared
+                        .completed_cv
+                        .wait_timeout(q, deadline - now)
+                        .unwrap()
+                        .0
+                }
+                None => self.shared.completed_cv.wait(q).unwrap(),
+            };
+        }
+    }
+
+    /// Non-blocking [`Self::next_completion`].
+    pub fn try_next_completion(&self) -> Option<JobResult> {
+        self.next_completion(Duration::ZERO)
+    }
+
+    /// Shim over [`Self::try_next_completion`].
+    #[deprecated(note = "hold the JobTicket from submit(), or drain via try_next_completion()")]
     pub fn try_recv(&self) -> Option<JobResult> {
-        self.results.try_recv().ok()
+        self.try_next_completion()
     }
 
-    /// Wait up to `timeout` for a finished job.
+    /// Shim over [`Self::next_completion`].
+    #[deprecated(note = "wait on the JobTicket from submit(), or drain via next_completion()")]
     pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
-        self.results.recv_timeout(timeout).ok()
+        self.next_completion(timeout)
     }
 
-    /// Live queue depth.
+    /// Live queue depth (cancelled-but-not-yet-skipped jobs included).
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.depth()
     }
@@ -191,23 +291,36 @@ impl SortService {
     }
 
     /// Graceful shutdown: close the queue (backlog still executes),
-    /// join the pool, and return the final snapshot plus any results
-    /// the caller had not yet received.
+    /// join the pool, and return the final snapshot plus every result
+    /// nobody took through a ticket or the drain.
     pub fn shutdown(self) -> (ServiceSnapshot, Vec<JobResult>) {
         self.shared.queue.close();
         for w in self.workers {
             let _ = w.join();
         }
-        let rest: Vec<JobResult> = self.results.try_iter().collect();
+        let mut rest = Vec::new();
+        let mut q = self.shared.completed.lock().unwrap();
+        while let Some(slot) = q.slots.pop_front() {
+            if let Some(r) = slot.take() {
+                rest.push(r);
+            }
+        }
+        drop(q);
         (self.shared.stats.snapshot(), rest)
     }
 }
 
-fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
+fn worker_loop(shared: &Shared) {
     // One lease per (dimension, construction) this worker has served —
     // held for the worker's lifetime, shared through the PlanCache.
     let mut leases: HashMap<(u32, Construction), BundleLease> = HashMap::new();
     while let Some(first) = shared.queue.pop() {
+        // Claim the job; a tenant that cancelled first wins and the
+        // job is skipped without executing.
+        if !first.slot.claim() {
+            shared.stats.on_cancelled();
+            continue;
+        }
         let cfg = &shared.cfg;
         let key = (first.spec.dimension, first.spec.construction);
         let lease = match leases.entry(key) {
@@ -215,7 +328,7 @@ fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
             Entry::Vacant(v) => match shared.cache.lease(key.0, key.1) {
                 Ok(l) => v.insert(l),
                 Err(e) => {
-                    fail_batch(shared, &[first], Instant::now(), &e.to_string(), tx);
+                    fail_batch(shared, &[first], Instant::now(), &e.to_string());
                     continue;
                 }
             },
@@ -236,55 +349,74 @@ fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
                 }
                 fits
             });
-            batch.extend(more);
+            for job in more {
+                if job.slot.claim() {
+                    batch.push(job);
+                } else {
+                    shared.stats.on_cancelled();
+                }
+            }
+            // Deadline-aware coalescing: least remaining slack (the
+            // job's absolute deadline minus now, so time already spent
+            // queued counts) lands earliest in the shared arena and is
+            // split back / published first; deadline-free jobs ride
+            // last, FIFO among ties.  Overdue jobs saturate to zero
+            // slack and stay FIFO among themselves.
+            let now = Instant::now();
+            order_by_deadline(&mut batch, |j| {
+                j.spec
+                    .deadline
+                    .and_then(|d| j.accepted_at.checked_add(d))
+                    .map(|deadline| deadline.saturating_duration_since(now))
+            });
         }
-        execute(shared, lease, batch, tx);
+        execute(shared, lease, batch);
     }
 }
 
-fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>, tx: &Sender<JobResult>) {
+fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
     let started = Instant::now();
     shared.stats.on_batch(batch.len());
-    let p = lease.net.total_processors();
 
     // Inputs are deterministic in the specs; the multiset fingerprints
     // are the conservation half of the per-job verification.
     let inputs: Vec<Vec<i32>> = batch.iter().map(|j| j.spec.generate()).collect();
     let fingerprints: Vec<u64> = inputs.iter().map(|d| multiset_fingerprint(d)).collect();
-    let total: usize = inputs.iter().map(Vec::len).sum();
 
-    // Waves jobs run as tasks on the shared executor with the tuned
-    // throughput sorter; `paper_threads` keeps the paper's one thread
-    // per processor and its default cutoff-0 sorter.
-    let sim = if shared.cfg.paper_threads {
-        ThreadedSimulator::new(&lease.net, &lease.plans).with_mode(ThreadMode::Direct)
+    // Waves jobs run as pooled session stages with the tuned throughput
+    // sorter; `paper_threads` keeps the paper's one thread per
+    // processor and its default cutoff-0 sorter.
+    let (engine, sorter) = if shared.cfg.paper_threads {
+        (Engine::DirectThreads, Quicksort::default())
     } else {
-        ThreadedSimulator::new(&lease.net, &lease.plans)
-            .with_mode(ThreadMode::Waves)
-            .with_sorter(Quicksort::throughput())
+        (Engine::Pooled, Quicksort::throughput())
     };
 
-    let run = || -> Result<(Vec<i32>, Vec<Range<usize>>)> {
-        if inputs.len() == 1 {
-            let divided = divide_native(&inputs[0], p)?;
-            let out = sim.run(divided.buckets, total)?;
-            Ok((out.sorted, vec![0..total]))
+    let run = || -> Result<Outcome> {
+        let refs: Vec<&[i32]> = inputs.iter().map(Vec::as_slice).collect();
+        let session = if refs.len() == 1 {
+            Session::single(&lease.net, &lease.plans, refs[0])
         } else {
-            let refs: Vec<&[i32]> = inputs.iter().map(Vec::as_slice).collect();
-            let coalesced = coalesce(&refs, p)?;
-            let ranges: Vec<Range<usize>> =
-                (0..coalesced.num_jobs()).map(|j| coalesced.job_range(j)).collect();
-            let out = sim.run(coalesced.buckets, total)?;
-            Ok((out.sorted, ranges))
-        }
+            Session::batched(&lease.net, &lease.plans, &refs)
+        };
+        // Stage-by-stage drive: each transition is its own executor
+        // wave, so concurrent jobs interleave at stage boundaries, and
+        // the shared stats observe every boundary.
+        session
+            .with_engine(engine)
+            .with_sorter(sorter)
+            .with_observer(&shared.stats)
+            .divide()?
+            .local_sort()?
+            .gather()
     };
 
     match run() {
-        Ok((sorted, ranges)) => {
+        Ok(outcome) => {
             let sort_latency = started.elapsed();
             let batched = batch.len() > 1;
-            for ((job, range), fp) in batch.iter().zip(&ranges).zip(&fingerprints) {
-                let out = &sorted[range.clone()];
+            for ((job, span), fp) in batch.iter().zip(&outcome.spans).zip(&fingerprints) {
+                let out = &outcome.sorted[span.clone()];
                 let sorted_ok = is_sorted(out) && multiset_fingerprint(out) == *fp;
                 let queue_latency = started.duration_since(job.accepted_at);
                 let total_latency = queue_latency + sort_latency;
@@ -303,23 +435,16 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>, tx: &Sen
                     error: None,
                     output: shared.cfg.retain_output.then(|| out.to_vec()),
                 };
-                shared.stats.on_result(&result);
-                tx.send(result).ok();
+                shared.publish(&job.slot, result);
             }
         }
-        Err(e) => fail_batch(shared, &batch, started, &e.to_string(), tx),
+        Err(e) => fail_batch(shared, &batch, started, &e.to_string()),
     }
 }
 
 /// Ship an explicit failure result for every job of a batch — jobs are
 /// never dropped silently, even when the pipeline errors.
-fn fail_batch(
-    shared: &Shared,
-    batch: &[QueuedJob],
-    started: Instant,
-    error: &str,
-    tx: &Sender<JobResult>,
-) {
+fn fail_batch(shared: &Shared, batch: &[QueuedJob], started: Instant, error: &str) {
     let sort_latency = started.elapsed();
     for job in batch {
         let queue_latency = started.duration_since(job.accepted_at);
@@ -339,8 +464,7 @@ fn fail_batch(
             error: Some(error.to_string()),
             output: None,
         };
-        shared.stats.on_result(&result);
-        tx.send(result).ok();
+        shared.publish(&job.slot, result);
     }
 }
 
@@ -348,6 +472,7 @@ fn fail_batch(
 mod tests {
     use super::*;
     use crate::config::Distribution;
+    use crate::service::ticket::TicketStatus;
     use crate::sort::quicksort;
 
     fn spec(id: u64, dist: Distribution, elements: usize, dimension: u32) -> JobSpec {
@@ -369,15 +494,22 @@ mod tests {
             retain_output: true,
             ..Default::default()
         });
+        let mut tickets = Vec::new();
         for (id, d) in [(0u64, 1u32), (1, 2), (2, 1)] {
-            assert!(service.submit(spec(id, Distribution::Random, 8_000, d)).is_accepted());
+            let submission = service.submit(spec(id, Distribution::Random, 8_000, d));
+            tickets.push(submission.ticket().expect("accepted"));
         }
-        let mut results = Vec::new();
-        while results.len() < 3 {
-            results.push(service.recv_timeout(Duration::from_secs(30)).expect("stalled"));
+        // Results arrive through the per-job tickets, not a shared
+        // channel — each ticket waits on its own completion slot.
+        let mut results: Vec<JobResult> = tickets
+            .iter()
+            .map(|t| t.wait_timeout(Duration::from_secs(30)).expect("stalled"))
+            .collect();
+        for t in &tickets {
+            assert_eq!(t.poll(), TicketStatus::Taken);
         }
         let (snapshot, rest) = service.shutdown();
-        assert!(rest.is_empty());
+        assert!(rest.is_empty(), "tickets already took every result");
         assert_eq!(snapshot.accepted, 3);
         assert_eq!(snapshot.completed, 3);
         assert_eq!(snapshot.failed, 0);
@@ -394,6 +526,10 @@ mod tests {
             assert_eq!(r.checksum, fnv1a(&expect));
         }
         assert!(snapshot.total.p50 > Duration::ZERO);
+        // Every session reported its three stage boundaries to the
+        // shared stats observer.
+        assert_eq!(snapshot.stage_sort.count, 3);
+        assert!(snapshot.stage_sort.p50 > Duration::ZERO);
     }
 
     #[test]
@@ -407,7 +543,7 @@ mod tests {
             ..spec(9, Distribution::Sorted, 1, 1)
         };
         match service.submit(bad) {
-            Submit::Rejected {
+            Submission::Rejected {
                 reason: RejectReason::Invalid { detail },
             } => assert!(detail.contains("elements")),
             other => panic!("expected Invalid rejection, got {other:?}"),
@@ -433,7 +569,7 @@ mod tests {
         }
         let mut results = Vec::new();
         while results.len() < 6 {
-            results.push(service.recv_timeout(Duration::from_secs(60)).expect("stalled"));
+            results.push(service.next_completion(Duration::from_secs(60)).expect("stalled"));
         }
         let (snapshot, _) = service.shutdown();
         assert_eq!(snapshot.completed, 6);
@@ -458,7 +594,7 @@ mod tests {
         }
         let mut seen = 0;
         while seen < 9 {
-            service.recv_timeout(Duration::from_secs(30)).expect("stalled");
+            service.next_completion(Duration::from_secs(30)).expect("stalled");
             seen += 1;
         }
         // All workers served d=1: one build, leases outstanding until
@@ -468,5 +604,28 @@ mod tests {
         let shared = Arc::clone(&service.shared);
         service.shutdown();
         assert_eq!(shared.cache.active_leases(), 0, "leases returned on shutdown");
+    }
+
+    #[test]
+    fn dropped_tickets_do_not_leak_results_or_slots() {
+        let service = SortService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        // Drop the tickets immediately: the workers still complete the
+        // slots and the completion drain serves the results.
+        for id in 0..4 {
+            let submission = service.submit(spec(id, Distribution::Sorted, 3_000, 1));
+            drop(submission.ticket().expect("accepted"));
+        }
+        let mut got = 0;
+        while got < 4 {
+            let r = service.next_completion(Duration::from_secs(30)).expect("stalled");
+            assert!(r.sorted_ok);
+            got += 1;
+        }
+        let (snapshot, rest) = service.shutdown();
+        assert_eq!(snapshot.completed, 4);
+        assert!(rest.is_empty(), "drain already served every slot");
     }
 }

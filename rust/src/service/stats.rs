@@ -6,12 +6,19 @@
 //! checks.  Histograms are the fixed-bucket [`Histogram`] from
 //! [`crate::metrics`], so snapshots are cheap and worker merges are
 //! element-wise adds.
+//!
+//! The stats are also a pipeline [`Observer`]: every worker installs
+//! the shared instance on its [`Session`](crate::pipeline::Session),
+//! so per-stage (divide / local-sort / gather) wall times stream into
+//! their own histograms at stage boundaries instead of being inlined
+//! into the worker's timing code.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::metrics::Histogram;
+use crate::pipeline::{Observer, Stage, StageTrace};
 use crate::service::job::JobResult;
 use crate::util::json::Json;
 
@@ -23,12 +30,16 @@ pub struct ServiceStats {
     rejected: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    cancelled: AtomicU64,
     deadline_missed: AtomicU64,
     batches: AtomicU64,
     batched_jobs: AtomicU64,
     queue_ns: Mutex<Histogram>,
     sort_ns: Mutex<Histogram>,
     total_ns: Mutex<Histogram>,
+    stage_divide_ns: Mutex<Histogram>,
+    stage_sort_ns: Mutex<Histogram>,
+    stage_gather_ns: Mutex<Histogram>,
 }
 
 impl ServiceStats {
@@ -72,6 +83,12 @@ impl ServiceStats {
         self.total_ns.lock().unwrap().record_duration(r.total_latency);
     }
 
+    /// Record one job cancelled before any worker claimed it (the job
+    /// produced no result; it is neither completed nor failed).
+    pub fn on_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Jobs accepted so far.
     pub fn accepted(&self) -> u64 {
         self.accepted.load(Ordering::Relaxed)
@@ -100,13 +117,30 @@ impl ServiceStats {
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
             queue: LatencySummary::of(&self.queue_ns.lock().unwrap()),
             sort: LatencySummary::of(&self.sort_ns.lock().unwrap()),
             total: LatencySummary::of(&self.total_ns.lock().unwrap()),
+            stage_divide: LatencySummary::of(&self.stage_divide_ns.lock().unwrap()),
+            stage_sort: LatencySummary::of(&self.stage_sort_ns.lock().unwrap()),
+            stage_gather: LatencySummary::of(&self.stage_gather_ns.lock().unwrap()),
         }
+    }
+}
+
+impl Observer for ServiceStats {
+    /// Stage boundaries stream straight into the per-stage histograms —
+    /// one sample per session stage, batch or single alike.
+    fn on_stage(&self, stage: Stage, elapsed: Duration, _trace: &StageTrace) {
+        let hist = match stage {
+            Stage::Divide => &self.stage_divide_ns,
+            Stage::LocalSort => &self.stage_sort_ns,
+            Stage::Gather => &self.stage_gather_ns,
+        };
+        hist.lock().unwrap().record_duration(elapsed);
     }
 }
 
@@ -162,6 +196,8 @@ pub struct ServiceSnapshot {
     pub completed: u64,
     /// Finished with a pipeline error or failed verification.
     pub failed: u64,
+    /// Cancelled through their ticket before a worker claimed them.
+    pub cancelled: u64,
     /// Jobs whose deadline was set and missed.
     pub deadline_missed: u64,
     /// Multi-job batches executed.
@@ -174,21 +210,34 @@ pub struct ServiceSnapshot {
     pub sort: LatencySummary,
     /// Total-latency summary.
     pub total: LatencySummary,
+    /// Divide-stage wall-time summary (one sample per session).
+    pub stage_divide: LatencySummary,
+    /// Local-sort-stage wall-time summary.
+    pub stage_sort: LatencySummary,
+    /// Gather-stage wall-time summary.
+    pub stage_gather: LatencySummary,
 }
 
 impl ServiceSnapshot {
     /// The snapshot as a JSON object.
     pub fn to_json(&self) -> Json {
+        let stages = Json::obj([
+            ("divide", self.stage_divide.to_json()),
+            ("gather", self.stage_gather.to_json()),
+            ("local_sort", self.stage_sort.to_json()),
+        ]);
         Json::obj([
             ("accepted", Json::int(self.accepted as usize)),
             ("batched_jobs", Json::int(self.batched_jobs as usize)),
             ("batches", Json::int(self.batches as usize)),
+            ("cancelled", Json::int(self.cancelled as usize)),
             ("completed", Json::int(self.completed as usize)),
             ("deadline_missed", Json::int(self.deadline_missed as usize)),
             ("failed", Json::int(self.failed as usize)),
             ("queue_latency", self.queue.to_json()),
             ("rejected", Json::int(self.rejected as usize)),
             ("sort_latency", self.sort.to_json()),
+            ("stage_latency", stages),
             ("submitted", Json::int(self.submitted as usize)),
             ("total_latency", self.total.to_json()),
         ])
@@ -197,7 +246,8 @@ impl ServiceSnapshot {
     /// Human-readable multi-line summary for the CLI.
     pub fn summary_text(&self) -> String {
         format!(
-            "service: {} submitted, {} accepted, {} rejected, {} completed, {} failed\n\
+            "service: {} submitted, {} accepted, {} rejected, {} completed, {} failed, \
+             {} cancelled\n\
              batching: {} batches covering {} jobs; deadlines missed: {}\n\
              queue latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
              sort  latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
@@ -207,6 +257,7 @@ impl ServiceSnapshot {
             self.rejected,
             self.completed,
             self.failed,
+            self.cancelled,
             self.batches,
             self.batched_jobs,
             self.deadline_missed,
@@ -274,6 +325,29 @@ mod tests {
         assert!(s.queue.p99 >= s.queue.p50);
         assert!(s.total.max >= s.total.p99);
         assert!(s.sort.p95 > s.queue.p95);
+    }
+
+    #[test]
+    fn stage_observer_and_cancellations_land_in_the_snapshot() {
+        let stats = ServiceStats::new();
+        let trace = StageTrace::default();
+        for _ in 0..3 {
+            stats.on_stage(Stage::Divide, Duration::from_micros(10), &trace);
+            stats.on_stage(Stage::LocalSort, Duration::from_micros(100), &trace);
+            stats.on_stage(Stage::Gather, Duration::from_micros(1), &trace);
+        }
+        stats.on_cancelled();
+        let s = stats.snapshot();
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.stage_divide.count, 3);
+        assert_eq!(s.stage_sort.count, 3);
+        assert_eq!(s.stage_gather.count, 3);
+        assert!(s.stage_sort.p50 > s.stage_gather.p50);
+        let j = s.to_json();
+        assert_eq!(j.get("cancelled").unwrap().as_usize(), Some(1));
+        let stages = j.get("stage_latency").unwrap();
+        assert_eq!(stages.get("local_sort").unwrap().get("count").unwrap().as_usize(), Some(3));
+        assert!(stats.snapshot().summary_text().contains("1 cancelled"));
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Per-job tickets: the service's tenant-facing completion handles.
+//!
+//! Every accepted submission gets its own [`JobTicket`] backed by a
+//! private completion slot — no shared result channel, so tenants
+//! never see (or steal) each other's results.  The slot walks a small
+//! state machine:
+//!
+//! ```text
+//! Queued --claim (worker)--> Running --complete--> Done --take--> Taken
+//!    \
+//!     +--try_cancel (tenant)--> Cancelled        (claim loses the race)
+//! ```
+//!
+//! * [`JobTicket::poll`] reads the state without consuming anything;
+//! * [`JobTicket::wait_timeout`] blocks until the result is ready and
+//!   takes it (exactly once — later calls return `None`);
+//! * [`JobTicket::try_cancel`] succeeds only while the job is still
+//!   queued (a worker that already claimed it wins the race), and
+//!   succeeds at most once;
+//! * dropping a ticket leaks nothing: the worker still completes the
+//!   slot, and the service's completion drain
+//!   ([`SortService::next_completion`](crate::service::SortService::next_completion))
+//!   can hand the result to whoever is draining.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::service::job::JobResult;
+use crate::service::queue::RejectReason;
+
+/// Where a submitted job currently is, as seen through its ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketStatus {
+    /// Accepted, waiting in the queue; still cancellable.
+    Queued,
+    /// A worker claimed it; it will produce exactly one result.
+    Running,
+    /// The result is ready and unconsumed.
+    Done,
+    /// The result was consumed (by this ticket or a completion drain).
+    Taken,
+    /// Cancelled before any worker claimed it; no result will exist.
+    Cancelled,
+}
+
+#[derive(Debug)]
+enum SlotState {
+    Queued,
+    Claimed,
+    Done(Box<JobResult>),
+    Taken,
+    Cancelled,
+}
+
+/// One job's completion slot, shared by its ticket, the worker that
+/// executes it, and the service's completion drain.
+#[derive(Debug)]
+pub(crate) struct Slot {
+    id: u64,
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+impl Slot {
+    pub(crate) fn new(id: u64) -> Arc<Slot> {
+        Arc::new(Slot {
+            id,
+            state: Mutex::new(SlotState::Queued),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Worker-side: claim the job for execution.  Returns `false` when
+    /// the tenant cancelled first — the worker must skip the job.
+    pub(crate) fn claim(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match *st {
+            SlotState::Queued => {
+                *st = SlotState::Claimed;
+                true
+            }
+            SlotState::Cancelled => false,
+            ref other => unreachable!("claim on a {other:?} slot"),
+        }
+    }
+
+    /// Worker-side: publish the result and wake every waiter.
+    pub(crate) fn complete(&self, result: JobResult) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(matches!(*st, SlotState::Claimed), "complete on {st:?}");
+        *st = SlotState::Done(Box::new(result));
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Take the result out, exactly once.
+    pub(crate) fn take(&self) -> Option<JobResult> {
+        Self::take_locked(&mut self.state.lock().unwrap())
+    }
+
+    /// The Done → Taken transition under an already-held lock — shared
+    /// by [`Self::take`] and the ticket's wait loop.
+    fn take_locked(st: &mut SlotState) -> Option<JobResult> {
+        if matches!(*st, SlotState::Done(_)) {
+            match std::mem::replace(st, SlotState::Taken) {
+                SlotState::Done(r) => Some(*r),
+                _ => unreachable!(),
+            }
+        } else {
+            None
+        }
+    }
+
+    /// Is the result already consumed?  The completion drain compacts
+    /// taken slots away instead of holding them until shutdown.
+    pub(crate) fn is_taken(&self) -> bool {
+        matches!(*self.state.lock().unwrap(), SlotState::Taken)
+    }
+
+    fn status(&self) -> TicketStatus {
+        match *self.state.lock().unwrap() {
+            SlotState::Queued => TicketStatus::Queued,
+            SlotState::Claimed => TicketStatus::Running,
+            SlotState::Done(_) => TicketStatus::Done,
+            SlotState::Taken => TicketStatus::Taken,
+            SlotState::Cancelled => TicketStatus::Cancelled,
+        }
+    }
+}
+
+/// The tenant's handle to one accepted job.
+#[derive(Debug)]
+pub struct JobTicket {
+    slot: Arc<Slot>,
+}
+
+impl JobTicket {
+    pub(crate) fn new(slot: Arc<Slot>) -> Self {
+        JobTicket { slot }
+    }
+
+    /// The job id this ticket tracks.
+    pub fn id(&self) -> u64 {
+        self.slot.id
+    }
+
+    /// Non-blocking status read.
+    pub fn poll(&self) -> TicketStatus {
+        self.slot.status()
+    }
+
+    /// Non-blocking result take: `Some` exactly once, after the job
+    /// completed.
+    pub fn try_result(&self) -> Option<JobResult> {
+        self.slot.take()
+    }
+
+    /// Block until the result is ready (or `timeout` passes), then
+    /// take it.  Returns `None` on timeout, after the result was
+    /// already taken, or for a cancelled job.  Waiting *after*
+    /// completion returns immediately — the slot holds the result
+    /// until someone takes it.  A `timeout` too large to represent as
+    /// a deadline (e.g. `Duration::MAX`) waits indefinitely.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match *st {
+                SlotState::Done(_) => return Slot::take_locked(&mut *st),
+                SlotState::Taken | SlotState::Cancelled => return None,
+                SlotState::Queued | SlotState::Claimed => {}
+            }
+            st = match deadline {
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    self.slot.ready.wait_timeout(st, deadline - now).unwrap().0
+                }
+                None => self.slot.ready.wait(st).unwrap(),
+            };
+        }
+    }
+
+    /// Cancel the job if no worker has claimed it yet.  Returns `true`
+    /// exactly once, on the call that actually cancelled; `false` when
+    /// the job is already running, finished, or was cancelled before.
+    pub fn try_cancel(&self) -> bool {
+        let mut st = self.slot.state.lock().unwrap();
+        if matches!(*st, SlotState::Queued) {
+            *st = SlotState::Cancelled;
+            drop(st);
+            self.slot.ready.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Outcome of one [`SortService::submit`](crate::service::SortService::submit):
+/// either a live [`JobTicket`] or an explicit rejection the caller can
+/// act on.
+#[derive(Debug)]
+pub enum Submission {
+    /// Enqueued; `depth` is the queue depth right after the push and
+    /// `ticket` is the per-job completion handle.
+    Accepted {
+        /// Queue depth including this job.
+        depth: usize,
+        /// The job's completion handle.
+        ticket: JobTicket,
+    },
+    /// Turned away — the job was **not** enqueued and no ticket exists.
+    Rejected {
+        /// Why.
+        reason: RejectReason,
+    },
+}
+
+impl Submission {
+    /// Did the job make it into the queue?
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Submission::Accepted { .. })
+    }
+
+    /// The ticket, consuming the submission (`None` when rejected).
+    pub fn ticket(self) -> Option<JobTicket> {
+        match self {
+            Submission::Accepted { ticket, .. } => Some(ticket),
+            Submission::Rejected { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(id: u64) -> JobResult {
+        JobResult {
+            id,
+            elements: 1,
+            dimension: 1,
+            batched: false,
+            queue_latency: Duration::ZERO,
+            sort_latency: Duration::ZERO,
+            total_latency: Duration::ZERO,
+            deadline: None,
+            deadline_met: None,
+            sorted_ok: true,
+            checksum: 0,
+            error: None,
+            output: None,
+        }
+    }
+
+    #[test]
+    fn slot_walks_queued_claimed_done_taken() {
+        let slot = Slot::new(7);
+        let ticket = JobTicket::new(Arc::clone(&slot));
+        assert_eq!(ticket.poll(), TicketStatus::Queued);
+        assert!(slot.claim());
+        assert_eq!(ticket.poll(), TicketStatus::Running);
+        assert!(ticket.try_result().is_none(), "no result before complete");
+        slot.complete(result(7));
+        assert_eq!(ticket.poll(), TicketStatus::Done);
+        // Waiting after completion returns immediately, exactly once.
+        let r = ticket.wait_timeout(Duration::ZERO).expect("result ready");
+        assert_eq!(r.id, 7);
+        assert_eq!(ticket.poll(), TicketStatus::Taken);
+        assert!(ticket.wait_timeout(Duration::ZERO).is_none());
+        assert!(ticket.try_result().is_none());
+    }
+
+    #[test]
+    fn cancel_before_claim_wins_exactly_once() {
+        let slot = Slot::new(1);
+        let ticket = JobTicket::new(Arc::clone(&slot));
+        assert!(ticket.try_cancel(), "first cancel succeeds");
+        assert!(!ticket.try_cancel(), "second cancel is a no-op");
+        assert_eq!(ticket.poll(), TicketStatus::Cancelled);
+        assert!(!slot.claim(), "the worker must skip a cancelled job");
+        assert!(ticket.wait_timeout(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn cancel_after_claim_loses_the_race() {
+        let slot = Slot::new(2);
+        let ticket = JobTicket::new(Arc::clone(&slot));
+        assert!(slot.claim());
+        assert!(!ticket.try_cancel(), "claimed jobs cannot be cancelled");
+        slot.complete(result(2));
+        assert_eq!(ticket.wait_timeout(Duration::ZERO).unwrap().id, 2);
+    }
+
+    #[test]
+    fn wait_blocks_until_completion_from_another_thread() {
+        let slot = Slot::new(3);
+        let ticket = JobTicket::new(Arc::clone(&slot));
+        assert!(slot.claim());
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| ticket.wait_timeout(Duration::from_secs(10)));
+            std::thread::sleep(Duration::from_millis(20));
+            slot.complete(result(3));
+            let got = waiter.join().unwrap().expect("completion must wake waiter");
+            assert_eq!(got.id, 3);
+        });
+    }
+}

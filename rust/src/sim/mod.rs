@@ -22,5 +22,5 @@ pub mod trace;
 
 pub use engine::{DesOutcome, DesSimulator};
 pub use message::{Batch, SubArray};
-pub use threaded::{ThreadedOutcome, ThreadedSimulator};
+pub use threaded::{DirectRun, LocalSortStats, ThreadedOutcome, ThreadedSimulator};
 pub use trace::CommTrace;

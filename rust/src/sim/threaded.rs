@@ -56,6 +56,38 @@ pub struct ThreadedOutcome {
     pub messages: usize,
 }
 
+/// Stats of one pooled local-sort wave (see
+/// [`ThreadedSimulator::local_sort_wave`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LocalSortStats {
+    /// Summed per-segment counters.
+    pub counters: SortCounters,
+    /// Wall clock of the slowest local sort.
+    pub max_local_sort: Duration,
+}
+
+/// Raw outcome of the fused paper-faithful Direct region, before the
+/// master-side gather validation — what
+/// [`ThreadedSimulator::run_direct_raw`] hands a
+/// [`crate::pipeline::Session`] so the validation can run (and be
+/// timed) as its own gather stage.
+#[derive(Debug)]
+pub struct DirectRun {
+    /// The arena, every segment sorted in place.
+    pub buckets: FlatBuckets,
+    /// The descriptors the master accumulated.
+    pub subarrays: Vec<SubArray>,
+    /// Wall clock of the parallel region (threads spawned → master
+    /// finished its gather, worker teardown excluded).
+    pub region: Duration,
+    /// Summed per-processor local-sort counters.
+    pub counters: SortCounters,
+    /// Wall clock of the slowest local sort.
+    pub max_local_sort: Duration,
+    /// Messages passed.
+    pub messages: usize,
+}
+
 /// Threaded simulator: owns the topology, plans, and sorter config.
 pub struct ThreadedSimulator<'a> {
     net: &'a Ohhc,
@@ -112,7 +144,27 @@ impl<'a> ThreadedSimulator<'a> {
     /// Paper-faithful mode: one thread per processor.  Each thread owns
     /// its disjoint `&mut [i32]` arena segment; channel messages carry
     /// `(bucket, range)` descriptors only.
-    fn run_direct(&self, mut buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
+    fn run_direct(&self, buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
+        let run = self.run_direct_raw(buckets)?;
+        let parallel_time = run.region;
+        let (counters, max_local_sort, messages) =
+            (run.counters, run.max_local_sort, run.messages);
+        let sorted = finish_gather(run.subarrays, run.buckets, total_len)?;
+        Ok(ThreadedOutcome {
+            sorted,
+            parallel_time,
+            counters,
+            max_local_sort,
+            messages,
+        })
+    }
+
+    /// The fused Direct region without the master-side validation:
+    /// spawn one OS thread per processor, sort + gather, and hand back
+    /// the raw pieces ([`DirectRun`]) so a
+    /// [`crate::pipeline::Session`] can validate and time the gather
+    /// termination as its own stage.
+    pub fn run_direct_raw(&self, mut buckets: FlatBuckets) -> Result<DirectRun> {
         let n = self.net.total_processors();
         let offsets: Vec<usize> = buckets.offsets().to_vec();
         let (txs, rxs): (Vec<Sender<Batch>>, Vec<Receiver<Batch>>) =
@@ -182,7 +234,7 @@ impl<'a> ThreadedSimulator<'a> {
         let (subarrays, master_finished) = out_rx
             .recv()
             .map_err(|_| Error::Sim("master produced no output".into()))?;
-        let parallel_time = master_finished.duration_since(start);
+        let region = master_finished.duration_since(start);
 
         let mut counters = SortCounters::default();
         let mut max_local_sort = Duration::ZERO;
@@ -193,25 +245,23 @@ impl<'a> ThreadedSimulator<'a> {
             messages += sent;
         }
 
-        let sorted = finish_gather(subarrays, buckets, total_len)?;
-        Ok(ThreadedOutcome {
-            sorted,
-            parallel_time,
+        Ok(DirectRun {
+            buckets,
+            subarrays,
+            region,
             counters,
             max_local_sort,
             messages,
         })
     }
 
-    /// Wave mode: execute the schedule level-by-level on a worker pool.
-    fn run_waves(&self, mut buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
+    /// Pooled local-sort stage: one task wave on the shared executor,
+    /// sorting the disjoint arena segments in place — no thread spawn
+    /// anywhere in this region.  The Waves half of the pipeline's
+    /// local-sort stage; composed with [`Self::gather_bookkeeping`] by
+    /// both [`Self::run`] and [`crate::pipeline::Session`].
+    pub fn local_sort_wave(&self, buckets: &mut FlatBuckets) -> LocalSortStats {
         use crate::util::par;
-        let n = self.net.total_processors();
-        let start = Instant::now();
-
-        // Wave 1: all local sorts as one task wave on the shared
-        // executor, in place on the disjoint arena segments — no thread
-        // spawn anywhere in this region.
         let workers = par::available_workers();
         let sorter = self.sorter;
         let results: Vec<(SortCounters, Duration)> = {
@@ -222,14 +272,19 @@ impl<'a> ThreadedSimulator<'a> {
                 (c, t0.elapsed())
             })
         };
+        LocalSortStats {
+            counters: results.iter().map(|r| r.0).sum(),
+            max_local_sort: results.iter().map(|r| r.1).max().unwrap_or_default(),
+        }
+    }
 
-        let counters: SortCounters = results.iter().map(|r| r.0).sum();
-        let max_local_sort = results.iter().map(|r| r.1).max().unwrap_or_default();
-
-        // Waves 2..: drain the gather tree in depth order.  Pure
-        // bookkeeping — each node forwards descriptor *counts*; no key
-        // ever moves because the arena already is the sorted array.
-        // Message counting mirrors the Direct mode.
+    /// Pooled gather stage: drain the gather tree in depth order.
+    /// Pure bookkeeping — each node forwards descriptor *counts*; no
+    /// key ever moves because the arena already is the sorted array.
+    /// Message counting mirrors the Direct mode.  Returns the number
+    /// of messages passed.
+    pub fn gather_bookkeeping(&self) -> Result<usize> {
+        let n = self.net.total_processors();
         let mut held: Vec<usize> = vec![1; n];
         let order = gather_wave_order(self.net, self.plans);
         let mut messages = 0usize;
@@ -248,6 +303,14 @@ impl<'a> ThreadedSimulator<'a> {
                 held[0]
             )));
         }
+        Ok(messages)
+    }
+
+    /// Wave mode: the two pooled stages back to back.
+    fn run_waves(&self, mut buckets: FlatBuckets, total_len: usize) -> Result<ThreadedOutcome> {
+        let start = Instant::now();
+        let stats = self.local_sort_wave(&mut buckets);
+        let messages = self.gather_bookkeeping()?;
         let parallel_time = start.elapsed();
 
         debug_assert_eq!(buckets.total_keys(), total_len);
@@ -255,8 +318,8 @@ impl<'a> ThreadedSimulator<'a> {
         Ok(ThreadedOutcome {
             sorted,
             parallel_time,
-            counters,
-            max_local_sort,
+            counters: stats.counters,
+            max_local_sort: stats.max_local_sort,
             messages,
         })
     }
@@ -286,7 +349,7 @@ pub fn gather_wave_order(net: &Ohhc, plans: &[NodePlan]) -> Vec<usize> {
 /// Terminate the gather: validate that the master's descriptors cover
 /// every bucket segment exactly, then hand back the arena — which, in
 /// bucket-rank order, is the globally sorted array (zero key copies).
-fn finish_gather(
+pub fn finish_gather(
     mut subarrays: Vec<SubArray>,
     buckets: FlatBuckets,
     total_len: usize,

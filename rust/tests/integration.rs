@@ -171,6 +171,9 @@ fn output_really_is_sorted_spot_check() {
 }
 
 #[test]
+// Deliberately exercises the deprecated recv_timeout shim — it must
+// keep draining completions for pre-ticket callers.
+#[allow(deprecated)]
 fn campaign_and_service_share_one_executor_pool() {
     // The tentpole contract of the persistent executor: a campaign sweep
     // and a burst of service jobs run concurrently, both submitting all

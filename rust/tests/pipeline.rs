@@ -1,0 +1,171 @@
+//! Redesign invariants for the typestate pipeline session: zero-copy
+//! pointer/capacity equality of the final sorted arena across every
+//! dimension and distribution, engine equivalence (Direct vs Pooled vs
+//! DES observables), multi-span batched sessions, and the observer /
+//! stage-trace contract.
+
+use std::time::Duration;
+
+use ohhc_qsort::config::{Construction, Distribution, LinkModel};
+use ohhc_qsort::pipeline::{CollectingObserver, Engine, Session};
+use ohhc_qsort::schedule::TopologyBundle;
+use ohhc_qsort::sort::is_sorted;
+use ohhc_qsort::workload;
+
+/// The zero-copy guarantee survives the typestate path: for d = 1..3
+/// and every distribution, the outcome's `sorted` vector is the divide
+/// arena allocation itself — same pointer, same capacity — and equals
+/// the sequential sort.
+#[test]
+fn sorted_arena_is_the_divide_allocation_d1_to_d3_all_distributions() {
+    for (d, construction) in [
+        (1, Construction::FullGroup),
+        (2, Construction::HalfGroup),
+        (3, Construction::FullGroup),
+    ] {
+        let bundle = TopologyBundle::build(d, construction).unwrap();
+        for dist in Distribution::ALL {
+            let data = workload::generate(dist, 30_000, 17);
+            let divided = Session::single(&bundle.net, &bundle.plans, &data)
+                .with_engine(Engine::Pooled)
+                .divide()
+                .unwrap();
+            let ptr = divided.buckets().arena().as_ptr();
+            let cap = divided.buckets().arena_capacity();
+            let outcome = divided.local_sort().unwrap().gather().unwrap();
+            assert_eq!(outcome.sorted.as_ptr(), ptr, "d={d} {dist:?}: copied keys");
+            assert_eq!(outcome.sorted.capacity(), cap, "d={d} {dist:?}: reallocated");
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            assert_eq!(outcome.sorted, expect, "d={d} {dist:?}");
+        }
+    }
+}
+
+/// Direct (paper threads) and Pooled sessions agree on every
+/// observable: sorted output, counters, messages — and both report a
+/// stage trace whose local_sort + gather is the parallel region.
+#[test]
+fn direct_and_pooled_sessions_agree_on_observables() {
+    let bundle = TopologyBundle::build(1, Construction::HalfGroup).unwrap();
+    let data = workload::random(20_000, 5);
+    let run = |engine: Engine| {
+        Session::single(&bundle.net, &bundle.plans, &data)
+            .with_engine(engine)
+            .divide()
+            .unwrap()
+            .local_sort()
+            .unwrap()
+            .gather()
+            .unwrap()
+    };
+    let direct = run(Engine::DirectThreads);
+    let pooled = run(Engine::Pooled);
+    assert_eq!(direct.sorted, pooled.sorted);
+    assert_eq!(direct.counters, pooled.counters);
+    assert_eq!(direct.messages, pooled.messages);
+    assert_eq!(direct.messages, bundle.net.total_processors() - 1);
+    for outcome in [&direct, &pooled] {
+        assert!(outcome.parallel_time() > Duration::ZERO);
+        assert_eq!(
+            outcome.trace.total(),
+            outcome.trace.divide_total() + outcome.parallel_time()
+        );
+    }
+}
+
+/// A DES session reports virtual-time observables alongside the same
+/// zero-copy sorted arena.
+#[test]
+fn des_session_reports_virtual_time_and_keeps_the_arena() {
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap();
+    let data = workload::random(36_000, 9);
+    let divided = Session::single(&bundle.net, &bundle.plans, &data)
+        .with_engine(Engine::DiscreteEvent {
+            link: LinkModel::default(),
+        })
+        .divide()
+        .unwrap();
+    let ptr = divided.buckets().arena().as_ptr();
+    let outcome = divided.local_sort().unwrap().gather().unwrap();
+    assert_eq!(outcome.sorted.as_ptr(), ptr, "DES path copied keys");
+    assert!(is_sorted(&outcome.sorted));
+    let des = outcome.des.expect("DES observables");
+    assert!(des.completion_ns > 0.0);
+    // Scatter + gather trees: 2·(N−1) traversals.
+    let (elec, opt) = des.trace.steps();
+    assert_eq!(elec + opt, 2 * (bundle.net.total_processors() - 1));
+}
+
+/// Batched (multi-span) sessions: every job's span is exactly its own
+/// sequential sort, for every distribution — the batcher's split-back
+/// property through the typestate path.
+#[test]
+fn batched_session_split_back_equals_per_job_sequential_sort() {
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap(); // P = 36
+    for dist in Distribution::ALL {
+        let jobs: Vec<Vec<i32>> = [1_500usize, 700, 1, 2_400]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| workload::generate(dist, n, 200 + i as u64))
+            .collect();
+        let refs: Vec<&[i32]> = jobs.iter().map(|v| v.as_slice()).collect();
+        let outcome = Session::batched(&bundle.net, &bundle.plans, &refs)
+            .with_engine(Engine::Pooled)
+            .divide()
+            .unwrap()
+            .local_sort()
+            .unwrap()
+            .gather()
+            .unwrap();
+        assert_eq!(outcome.spans.len(), jobs.len());
+        // Spans tile the arena in submission order.
+        assert_eq!(outcome.spans[0].start, 0);
+        assert_eq!(outcome.spans.last().unwrap().end, outcome.sorted.len());
+        for (j, input) in jobs.iter().enumerate() {
+            let got = outcome.job(j);
+            let mut expect = input.clone();
+            expect.sort_unstable();
+            assert_eq!(got, expect.as_slice(), "{dist:?} job {j}");
+            assert!(is_sorted(got));
+        }
+    }
+}
+
+/// The observer fires exactly once per transition, in pipeline order,
+/// and the trace passed at the gather boundary is the final one.
+#[test]
+fn observer_fires_at_every_stage_boundary_in_order() {
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap();
+    let data = workload::random(10_000, 3);
+    let probe = CollectingObserver::new();
+    let outcome = Session::single(&bundle.net, &bundle.plans, &data)
+        .with_engine(Engine::Pooled)
+        .with_observer(&probe)
+        .divide()
+        .unwrap()
+        .local_sort()
+        .unwrap()
+        .gather()
+        .unwrap();
+    assert_eq!(probe.stages(), vec!["divide", "local_sort", "gather"]);
+    let events = probe.events();
+    // The divide event reports classification + scatter together.
+    assert_eq!(events[0].1, outcome.trace.divide_total());
+    assert_eq!(events[1].1, outcome.trace.local_sort);
+    assert_eq!(events[2].1, outcome.trace.gather);
+}
+
+/// Sessions reject malformed pipelines with errors, not panics: a
+/// batched session with more jobs than buckets, and an empty single
+/// input.
+#[test]
+fn sessions_surface_divide_errors() {
+    let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap(); // P = 36
+    let jobs: Vec<Vec<i32>> = (0..37).map(|i| vec![i]).collect();
+    let refs: Vec<&[i32]> = jobs.iter().map(|v| v.as_slice()).collect();
+    assert!(Session::batched(&bundle.net, &bundle.plans, &refs).divide().is_err());
+
+    let empty: Vec<i32> = Vec::new();
+    assert!(Session::single(&bundle.net, &bundle.plans, &empty).divide().is_err());
+}

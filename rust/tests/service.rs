@@ -1,13 +1,14 @@
 //! Integration tests for the multi-tenant sort service: saturation
-//! behavior, schedule/output determinism, batcher correctness across
-//! every distribution, and the 1,000-job acceptance run.
+//! behavior, ticket semantics, schedule/output determinism, batcher
+//! correctness across every distribution, and the 1,000-job acceptance
+//! run.
 
 use std::time::Duration;
 
 use ohhc_qsort::config::{Construction, Distribution};
 use ohhc_qsort::service::{
     coalesce, loadgen, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig, SortService,
-    Submit,
+    Submission, TicketStatus,
 };
 use ohhc_qsort::sort::is_sorted;
 use ohhc_qsort::workload;
@@ -42,11 +43,11 @@ fn saturation_rejects_explicitly_and_never_deadlocks() {
     let mut rejected = 0usize;
     for id in 1..=24 {
         match service.submit(spec(id, Distribution::Random, 2_000, 1)) {
-            Submit::Accepted { depth } => {
+            Submission::Accepted { depth, .. } => {
                 accepted += 1;
                 assert!(depth <= 4, "accepted beyond capacity (depth {depth})");
             }
-            Submit::Rejected { reason } => {
+            Submission::Rejected { reason } => {
                 rejected += 1;
                 assert_eq!(
                     reason,
@@ -64,11 +65,11 @@ fn saturation_rejects_explicitly_and_never_deadlocks() {
     while results.len() < accepted {
         results.push(
             service
-                .recv_timeout(Duration::from_secs(120))
+                .next_completion(Duration::from_secs(120))
                 .expect("service deadlocked under saturation"),
         );
     }
-    assert!(service.try_recv().is_none(), "more results than accepts");
+    assert!(service.try_next_completion().is_none(), "more results than accepts");
     let (snapshot, rest) = service.shutdown();
     assert!(rest.is_empty());
     assert_eq!(snapshot.accepted, accepted as u64);
@@ -201,6 +202,99 @@ fn thousand_concurrent_mixed_jobs_complete_with_slo_report() {
     assert!(snapshot.total.max >= snapshot.total.p99);
 }
 
+/// Ticket semantics end to end: waiting after completion still yields
+/// the result exactly once; cancel-before-claim succeeds exactly once
+/// and the job never executes; a dropped ticket leaks neither its slot
+/// nor its result.
+#[test]
+fn ticket_lifecycle_wait_cancel_and_drop() {
+    let service = SortService::start(ServiceConfig {
+        workers: 1,
+        batch_max_jobs: 1,
+        ..Default::default()
+    });
+    // Pin the single worker on a long job so queued jobs stay claimable.
+    let busy = service
+        .submit(spec(0, Distribution::Random, 4_000_000, 1))
+        .ticket()
+        .expect("accepted");
+
+    // (a) cancel-before-claim: succeeds exactly once, job never runs.
+    let doomed = service
+        .submit(spec(1, Distribution::Random, 2_000, 1))
+        .ticket()
+        .expect("accepted");
+    assert_eq!(doomed.poll(), TicketStatus::Queued);
+    assert!(doomed.try_cancel(), "first cancel must win the race");
+    assert!(!doomed.try_cancel(), "second cancel must reject");
+    assert_eq!(doomed.poll(), TicketStatus::Cancelled);
+    assert!(doomed.wait_timeout(Duration::from_millis(10)).is_none());
+
+    // (b) a dropped ticket's result flows to the completion drain.
+    drop(service.submit(spec(2, Distribution::Sorted, 2_000, 1)).ticket().expect("accepted"));
+
+    // (c) wait after completion: let the job finish first, then wait.
+    let late = service
+        .submit(spec(3, Distribution::Local, 2_000, 1))
+        .ticket()
+        .expect("accepted");
+    let r0 = busy.wait_timeout(Duration::from_secs(120)).expect("busy job result");
+    assert!(r0.sorted_ok);
+    // Drain the dropped job's result; the cancelled job must never
+    // produce one, so the drain sees exactly job 2.
+    let dropped = service.next_completion(Duration::from_secs(60)).expect("dropped-ticket result");
+    assert_eq!(dropped.id, 2);
+    while late.poll() != TicketStatus::Done {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let r3 = late.wait_timeout(Duration::ZERO).expect("result ready after completion");
+    assert_eq!(r3.id, 3);
+    assert!(late.wait_timeout(Duration::ZERO).is_none(), "take-once");
+
+    let (snapshot, rest) = service.shutdown();
+    assert!(rest.is_empty());
+    assert_eq!(snapshot.accepted, 4);
+    assert_eq!(snapshot.cancelled, 1);
+    assert_eq!(snapshot.completed, 3, "cancelled job must not execute");
+}
+
+/// A coalesced batch serves SLO-bound jobs first: the least remaining
+/// slack lands earliest in the shared arena and is published first.
+#[test]
+fn batches_order_deadlines_tightest_first() {
+    let service = SortService::start(ServiceConfig {
+        workers: 1,
+        batch_max_jobs: 8,
+        small_job_threshold: 2_000,
+        ..Default::default()
+    });
+    // Pin the worker, then queue small jobs with shuffled deadlines.
+    // All five are submitted within microseconds, so remaining-slack
+    // order equals deadline order here.
+    assert!(service.submit(spec(0, Distribution::Random, 3_000_000, 1)).is_accepted());
+    let deadlines = [None, Some(900_000u64), Some(100_000), None, Some(500_000)];
+    for (i, d) in deadlines.iter().enumerate() {
+        let mut s = spec(1 + i as u64, Distribution::Random, 1_000, 1);
+        s.deadline = d.map(Duration::from_millis);
+        assert!(service.submit(s).is_accepted());
+    }
+    let mut results = Vec::new();
+    while results.len() < 6 {
+        results.push(service.next_completion(Duration::from_secs(120)).expect("stalled"));
+    }
+    let (snapshot, _) = service.shutdown();
+    assert_eq!(snapshot.completed, 6);
+    assert_eq!(snapshot.batched_jobs, 5, "the five small jobs ride one batch");
+    for r in &results {
+        assert!(r.sorted_ok, "job {}", r.id);
+    }
+    // Publish order: the pinning job, then the batch tightest-slack
+    // first (3: 100s, 5: 500s, 2: 900s), then the deadline-free jobs
+    // FIFO (1, 4).
+    let order: Vec<u64> = results.iter().map(|r| r.id).collect();
+    assert_eq!(order, vec![0, 3, 5, 2, 1, 4], "deadline-aware batch ordering");
+}
+
 /// Queue-depth shedding and rate limiting reject with their own
 /// reasons, before the queue fills.
 #[test]
@@ -217,7 +311,7 @@ fn admission_sheds_with_named_reasons() {
     let mut shed = 0;
     for id in 1..=8 {
         let outcome = service.submit(spec(id, Distribution::Sorted, 1_000, 1));
-        if let Submit::Rejected { reason } = outcome {
+        if let Submission::Rejected { reason } = outcome {
             assert!(
                 matches!(reason, RejectReason::Overloaded { shed_depth: 2, .. }),
                 "job {id}: {reason:?}"
