@@ -12,6 +12,7 @@ use crate::campaign::report::{CampaignReport, CellReport};
 use crate::campaign::spec::{GridCell, SweepSpec};
 use crate::coordinator::{OhhcSorter, SortReport};
 use crate::error::Result;
+use crate::topology::fault::FaultSet;
 use crate::util::par;
 
 /// Executes a [`SweepSpec`] at a concurrency of `spec.jobs`.
@@ -110,7 +111,15 @@ impl Campaign {
     fn execute(&self, cell: &GridCell) -> Result<Vec<SortReport>> {
         let cfg = cell.config(&self.spec);
         let bundle = self.cache.get_or_build(cell.dimension, cell.construction)?;
-        let sorter = OhhcSorter::with_bundle(&cfg, bundle)?;
+        // Seeded link faults, nested across the axis: every link failed
+        // at rate r is also failed at every r' > r, so degradation is
+        // monotone along the curve by construction.
+        let faults = (cell.fault_permille > 0)
+            .then(|| FaultSet::seeded_links(bundle.net.graph(), cell.fault_permille, self.spec.seed));
+        let mut sorter = OhhcSorter::with_bundle(&cfg, bundle)?;
+        if let Some(f) = faults {
+            sorter = sorter.with_faults(f);
+        }
         let wb = self
             .baselines
             .get_or_measure(cell.distribution, cell.elements, self.spec.seed);
@@ -224,6 +233,33 @@ mod tests {
             })
             .unwrap();
         assert_eq!(calls.load(Ordering::Relaxed), report.cells.len());
+    }
+
+    #[test]
+    fn fault_axis_degrades_des_completion_monotonically() {
+        let mut spec = tiny_spec();
+        spec.constructions = vec![Construction::FullGroup];
+        spec.distributions = vec![Distribution::Random];
+        spec.backends = vec![Backend::DiscreteEvent];
+        spec.fault_permille = vec![0, 150, 400];
+        spec.jobs = 1;
+        let report = Campaign::new(spec).run().unwrap();
+        assert_eq!(report.cells.len(), 3);
+        assert_eq!(report.completed(), 3);
+        // Nested seeded fault sets: virtual completion time can only
+        // grow with the failure rate, and detours appear as soon as a
+        // tree edge is cut.
+        let mut cells = report.cells.clone();
+        cells.sort_by_key(|c| c.fault_permille);
+        let ns: Vec<f64> = cells.iter().map(|c| c.des_completion_ns.unwrap()).collect();
+        assert!(ns[0] <= ns[1] && ns[1] <= ns[2], "{ns:?}");
+        assert_eq!(cells[0].detours, 0);
+        assert!(cells[2].detours > 0);
+        // The aggregated report folds the axis into a degradation curve.
+        let curve = report.per_fault_rate();
+        assert_eq!(curve.len(), 3);
+        assert_eq!(curve[0].0, 0);
+        assert_eq!(curve[2].0, 400);
     }
 
     #[test]

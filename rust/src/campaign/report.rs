@@ -59,6 +59,8 @@ pub struct CellReport {
     pub backend: Backend,
     /// Keys sorted.
     pub elements: usize,
+    /// Injected link-failure rate (per-mille; 0 = healthy).
+    pub fault_permille: u32,
     /// Outcome.
     pub status: CellStatus,
     /// Total processors simulated (0 when never built).
@@ -91,6 +93,8 @@ pub struct CellReport {
     pub des_completion_ns: Option<f64>,
     /// DES communication steps `(electrical, optical)`.
     pub des_steps: Option<(usize, usize)>,
+    /// Detours taken around injected faults (0 on a healthy network).
+    pub detours: usize,
 }
 
 impl CellReport {
@@ -101,6 +105,7 @@ impl CellReport {
             distribution: cell.distribution,
             backend: cell.backend,
             elements: cell.elements,
+            fault_permille: cell.fault_permille,
             status,
             processors: 0,
             repetitions: 0,
@@ -117,6 +122,7 @@ impl CellReport {
             counters: SortCounters::default(),
             des_completion_ns: None,
             des_steps: None,
+            detours: 0,
         }
     }
 
@@ -151,6 +157,7 @@ impl CellReport {
             distribution: cell.distribution,
             backend: cell.backend,
             elements: cell.elements,
+            fault_permille: cell.fault_permille,
             status: CellStatus::Completed,
             processors: first.processors,
             repetitions: runs.len(),
@@ -167,19 +174,25 @@ impl CellReport {
             counters: first.counters,
             des_completion_ns: first.des_completion_ns,
             des_steps: first.des_steps,
+            detours: first.detours,
         }
     }
 
     /// Grid coordinates as a stable string key.
     pub fn key(&self) -> String {
-        format!(
+        let base = format!(
             "d={}/{}/{}/{}/{}",
             self.dimension,
             self.construction.label(),
             self.distribution.label(),
             self.elements,
             self.backend.label()
-        )
+        );
+        if self.fault_permille > 0 {
+            format!("{base}/f{}", self.fault_permille)
+        } else {
+            base
+        }
     }
 
     /// The deterministic fields shared by [`CellReport::fingerprint`] and
@@ -206,9 +219,11 @@ impl CellReport {
                     Json::arr([Json::int(e), Json::int(o)])
                 }),
             ),
+            ("detours", Json::int(self.detours)),
             ("dimension", Json::int(self.dimension as usize)),
             ("distribution", Json::str(self.distribution.label())),
             ("elements", Json::int(self.elements)),
+            ("fault_permille", Json::int(self.fault_permille as usize)),
             ("imbalance", Json::num(self.imbalance)),
             ("processors", Json::int(self.processors)),
             ("status", Json::str(self.status.label())),
@@ -247,9 +262,9 @@ impl CellReport {
 
     /// CSV header matching [`CellReport::csv_row`].
     pub const CSV_HEADER: &str = "dimension,construction,distribution,backend,elements,\
-         processors,status,seq_secs,par_secs,divide_secs,speedup,speedup_pct,efficiency,\
-         imbalance,recursions,iterations,swaps,comparisons,des_completion_ns,des_elec_steps,\
-         des_opt_steps";
+         fault_permille,processors,status,seq_secs,par_secs,divide_secs,speedup,speedup_pct,\
+         efficiency,imbalance,recursions,iterations,swaps,comparisons,des_completion_ns,\
+         des_elec_steps,des_opt_steps,detours";
 
     /// One CSV row per cell.
     pub fn csv_row(&self) -> String {
@@ -258,12 +273,13 @@ impl CellReport {
             _ => (String::new(), String::new(), String::new()),
         };
         format!(
-            "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{},{}",
             self.dimension,
             self.construction.label(),
             self.distribution.label(),
             self.backend.label(),
             self.elements,
+            self.fault_permille,
             self.processors,
             self.status.label(),
             self.seq_secs,
@@ -279,7 +295,8 @@ impl CellReport {
             self.counters.comparisons,
             des_ns,
             des_e,
-            des_o
+            des_o,
+            self.detours
         )
     }
 }
@@ -345,6 +362,34 @@ impl CampaignReport {
             .collect()
     }
 
+    /// The speedup-degradation curve: speedup statistics of completed
+    /// cells per injected fault rate, sorted by rate.  With a seeded
+    /// nested fault generator the curve is structurally monotone —
+    /// higher rates can only remove links, so detour costs (and the
+    /// lost speedup) only grow.  One entry when the campaign ran
+    /// healthy only.
+    pub fn per_fault_rate(&self) -> Vec<(u32, Summary)> {
+        let mut rates: Vec<u32> = self.cells.iter().map(|c| c.fault_permille).collect();
+        rates.sort_unstable();
+        rates.dedup();
+        rates
+            .into_iter()
+            .filter_map(|rate| {
+                let speedups: Vec<f64> = self
+                    .cells
+                    .iter()
+                    .filter(|c| c.fault_permille == rate && c.status.is_completed())
+                    .map(|c| c.speedup)
+                    .collect();
+                if speedups.is_empty() {
+                    None
+                } else {
+                    Some((rate, Summary::of(&speedups)))
+                }
+            })
+            .collect()
+    }
+
     /// Median wall time per pipeline stage across completed cells, as
     /// `(classify, scatter, local_sort, gather)` seconds — sourced from
     /// every cell's session [`StageTrace`](crate::pipeline::StageTrace).
@@ -392,6 +437,15 @@ impl CampaignReport {
                 ("min_speedup", Json::num(s.min)),
             ])
         });
+        let per_fault = self.per_fault_rate().into_iter().map(|(rate, s)| {
+            Json::obj([
+                ("fault_permille", Json::int(rate as usize)),
+                ("max_speedup", Json::num(s.max)),
+                ("mean_speedup", Json::num(s.mean)),
+                ("median_speedup", Json::num(s.median)),
+                ("min_speedup", Json::num(s.min)),
+            ])
+        });
         let lat = self.parallel_latency();
         let latency = Json::obj([
             ("count", Json::int(lat.count() as usize)),
@@ -421,6 +475,7 @@ impl CampaignReport {
                     ("failed", Json::int(self.failed())),
                     ("parallel_latency", latency),
                     ("per_dimension", Json::arr(per_dim)),
+                    ("per_fault_rate", Json::arr(per_fault)),
                     ("planned", Json::int(self.cells.len())),
                     ("skipped", Json::int(self.skipped())),
                     ("stage_medians", stage_medians),
@@ -487,6 +542,16 @@ impl CampaignReport {
                 s.median, s.min, s.max, s.n
             ));
         }
+        let curve = self.per_fault_rate();
+        if curve.len() > 1 {
+            out.push_str("degradation curve (median speedup by injected fault rate):\n");
+            for (rate, s) in curve {
+                out.push_str(&format!(
+                    "  rate {rate:>4}/1000: {:.3}x over {} cells\n",
+                    s.median, s.n
+                ));
+            }
+        }
         out
     }
 }
@@ -502,6 +567,7 @@ mod tests {
             distribution: Distribution::Random,
             elements: 36_000,
             backend: Backend::DiscreteEvent,
+            fault_permille: 0,
         }
     }
 
@@ -611,6 +677,50 @@ mod tests {
         assert_eq!(per_dim[0].get("dimension").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 3);
         assert!(report.summary_text().contains("1 completed"));
+    }
+
+    #[test]
+    fn fault_axis_builds_the_degradation_curve() {
+        let healthy = completed_report();
+        let mut degraded = completed_report();
+        degraded.fault_permille = 400;
+        degraded.par_secs = 0.15;
+        degraded.speedup = 0.2 / 0.15;
+        degraded.detours = 7;
+        assert_ne!(healthy.key(), degraded.key(), "fault rate is a grid coordinate");
+        assert!(degraded.key().ends_with("/f400"));
+        // The fault rate and detour count are deterministic fields.
+        assert_ne!(healthy.fingerprint(), degraded.fingerprint());
+        let j = degraded.to_json();
+        assert_eq!(j.get("fault_permille").unwrap().as_usize(), Some(400));
+        assert_eq!(j.get("detours").unwrap().as_usize(), Some(7));
+        let report = CampaignReport {
+            spec: SweepSpec::default(),
+            cells: vec![healthy, degraded],
+            topology_builds: 1,
+            cache_hits: 0,
+            baseline_measures: 1,
+            baseline_hits: 0,
+            wall_secs: 0.1,
+        };
+        let curve = report.per_fault_rate();
+        assert_eq!(curve.len(), 2);
+        assert_eq!((curve[0].0, curve[1].0), (0, 400), "sorted by rate");
+        assert!(
+            curve[0].1.median > curve[1].1.median,
+            "speedup degrades with the fault rate"
+        );
+        let j = report.to_json();
+        let per_fault = j
+            .get("summary")
+            .unwrap()
+            .get("per_fault_rate")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(per_fault.len(), 2);
+        assert_eq!(per_fault[1].get("fault_permille").unwrap().as_usize(), Some(400));
+        assert!(report.summary_text().contains("degradation curve"));
     }
 
     #[test]

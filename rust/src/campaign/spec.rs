@@ -21,19 +21,27 @@ pub struct GridCell {
     pub elements: usize,
     /// Simulation backend.
     pub backend: Backend,
+    /// Link failures injected into the run, in per-mille of the
+    /// topology's links (0 = healthy network).
+    pub fault_permille: u32,
 }
 
 impl GridCell {
     /// Short identifier used in progress lines and error messages.
     pub fn label(&self) -> String {
-        format!(
+        let base = format!(
             "d={}/{}/{}/{}k/{}",
             self.dimension,
             self.construction.label(),
             self.distribution.label(),
             self.elements / 1000,
             self.backend.label()
-        )
+        );
+        if self.fault_permille > 0 {
+            format!("{base}/f{}", self.fault_permille)
+        } else {
+            base
+        }
     }
 
     /// The experiment configuration this cell runs with.
@@ -66,6 +74,12 @@ pub struct SweepSpec {
     pub sizes: Vec<usize>,
     /// Simulation backends to sweep.
     pub backends: Vec<Backend>,
+    /// Link-failure rates to sweep, in per-mille of the topology's
+    /// links (`[0]` = healthy only).  Nonzero rates build a seeded
+    /// connectivity-preserving [`FaultSet`](crate::topology::FaultSet)
+    /// per cell, so the report's degradation curve is structurally
+    /// monotone in the rate.
+    pub fault_permille: Vec<u32>,
     /// Workload seed (same seed ⇒ byte-identical DES outcomes).
     pub seed: u64,
     /// Timing repetitions per cell (median reported).
@@ -86,6 +100,7 @@ impl Default for SweepSpec {
             distributions: Distribution::ALL.to_vec(),
             sizes: ExperimentConfig::paper_sizes(0.1),
             backends: vec![Backend::Threaded],
+            fault_permille: vec![0],
             seed: 0x0511_C0DE,
             repetitions: 1,
             workers: par::available_workers(),
@@ -141,6 +156,21 @@ impl SweepSpec {
         parse_list(s, "backend", Backend::parse)
     }
 
+    /// Parse a `--fault-rates` style list of per-mille link-failure
+    /// rates (`0,100,400`).
+    pub fn parse_fault_rates(s: &str) -> Result<Vec<u32>> {
+        let rates: Vec<u32> = parse_list(s, "fault rate", |e| {
+            e.parse()
+                .map_err(|err| Error::Config(format!("bad fault rate `{e}`: {err}")))
+        })?;
+        if let Some(&bad) = rates.iter().find(|&&r| r > 1000) {
+            return Err(Error::Config(format!(
+                "fault rate is per-mille, must be <= 1000, got {bad}"
+            )));
+        }
+        Ok(rates)
+    }
+
     /// Load a spec from a `key = value` file.  List keys take comma lists;
     /// unknown keys are rejected (same contract as the experiment files).
     pub fn from_file(path: &Path) -> Result<Self> {
@@ -166,6 +196,9 @@ impl SweepSpec {
                 }
                 "sizes" => spec.sizes = Self::parse_sizes(value).map_err(bad)?,
                 "backends" => spec.backends = Self::parse_backends(value).map_err(bad)?,
+                "fault_rates" => {
+                    spec.fault_permille = Self::parse_fault_rates(value).map_err(bad)?
+                }
                 "seed" => {
                     spec.seed = value
                         .parse()
@@ -206,10 +239,16 @@ impl SweepSpec {
             ("distributions", self.distributions.is_empty()),
             ("sizes", self.sizes.is_empty()),
             ("backends", self.backends.is_empty()),
+            ("fault rates", self.fault_permille.is_empty()),
         ] {
             if empty {
                 return Err(Error::Config(format!("sweep spec has no {name}")));
             }
+        }
+        if let Some(&bad) = self.fault_permille.iter().find(|&&r| r > 1000) {
+            return Err(Error::Config(format!(
+                "fault rate is per-mille, must be <= 1000, got {bad}"
+            )));
         }
         Ok(())
     }
@@ -226,15 +265,18 @@ impl SweepSpec {
                 for &distribution in &self.distributions {
                     for &elements in &self.sizes {
                         for &backend in &self.backends {
-                            let cell = GridCell {
-                                dimension,
-                                construction,
-                                distribution,
-                                elements,
-                                backend,
-                            };
-                            if seen.insert(cell) {
-                                cells.push(cell);
+                            for &fault_permille in &self.fault_permille {
+                                let cell = GridCell {
+                                    dimension,
+                                    construction,
+                                    distribution,
+                                    elements,
+                                    backend,
+                                    fault_permille,
+                                };
+                                if seen.insert(cell) {
+                                    cells.push(cell);
+                                }
                             }
                         }
                     }
@@ -262,6 +304,10 @@ impl SweepSpec {
             (
                 "distributions",
                 Json::arr(self.distributions.iter().map(|d| Json::str(d.label()))),
+            ),
+            (
+                "fault_rates",
+                Json::arr(self.fault_permille.iter().map(|&r| Json::int(r as usize))),
             ),
             ("jobs", Json::int(self.jobs)),
             ("repetitions", Json::int(self.repetitions)),
@@ -306,6 +352,7 @@ mod tests {
                             distribution: dist,
                             elements: n,
                             backend: b,
+                            fault_permille: 0,
                         };
                         assert!(set.contains(&cell), "{}", cell.label());
                     }
@@ -344,6 +391,28 @@ mod tests {
     }
 
     #[test]
+    fn fault_rate_axis_expands_innermost_and_labels_cells() {
+        let mut spec = tiny();
+        spec.fault_permille = vec![0, 150, 400];
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 16 * 3, "fault axis multiplies the grid");
+        // Innermost: consecutive cells walk the fault axis first.
+        assert_eq!(cells[0].fault_permille, 0);
+        assert_eq!(cells[1].fault_permille, 150);
+        assert_eq!(cells[2].fault_permille, 400);
+        assert_eq!(cells[0].backend, cells[2].backend);
+        assert!(!cells[0].label().contains("/f"), "healthy cells keep the old label");
+        assert!(cells[2].label().ends_with("/f400"), "{}", cells[2].label());
+        // Per-mille bounds enforced everywhere.
+        assert!(SweepSpec::parse_fault_rates("0,100,400").is_ok());
+        assert!(SweepSpec::parse_fault_rates("1500").is_err());
+        spec.fault_permille = vec![2000];
+        assert!(spec.expand().is_err());
+        spec.fault_permille.clear();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
     fn list_parsers_accept_cli_grammar() {
         assert_eq!(SweepSpec::parse_dimensions("1, 2,4").unwrap(), [1, 2, 4]);
         assert_eq!(
@@ -373,6 +442,7 @@ mod tests {
              distributions = random, reverse\n\
              sizes = 1048576, 4194304\n\
              backends = threaded, des\n\
+             fault_rates = 0, 250\n\
              seed = 42\n\
              jobs = 2\n",
         )
@@ -382,9 +452,10 @@ mod tests {
         assert_eq!(spec.constructions, vec![Construction::FullGroup]);
         assert_eq!(spec.sizes, vec![1_048_576, 4_194_304]);
         assert_eq!(spec.backends, Backend::ALL.to_vec());
+        assert_eq!(spec.fault_permille, vec![0, 250]);
         assert_eq!(spec.seed, 42);
         assert_eq!(spec.jobs, 2);
-        assert_eq!(spec.expand().unwrap().len(), 2 * 2 * 2 * 2);
+        assert_eq!(spec.expand().unwrap().len(), 2 * 2 * 2 * 2 * 2);
 
         std::fs::write(&path, "nope = 1\n").unwrap();
         assert!(SweepSpec::from_file(&path).is_err());
@@ -412,6 +483,10 @@ mod tests {
         assert_eq!(
             j.get("backends").unwrap().as_arr().unwrap()[1].as_str(),
             Some("des")
+        );
+        assert_eq!(
+            j.get("fault_rates").unwrap().as_arr().unwrap()[0].as_usize(),
+            Some(0)
         );
     }
 }

@@ -14,6 +14,7 @@ use crate::pipeline::{Engine, Observer, Session, StageTrace};
 use crate::runtime::ArtifactRegistry;
 use crate::schedule::TopologyBundle;
 use crate::sort::{is_sorted, quicksort, SortCounters};
+use crate::topology::fault::FaultSet;
 use crate::topology::ohhc::Ohhc;
 use crate::workload::Workload;
 
@@ -44,6 +45,10 @@ pub struct SortReport {
     pub des_completion_ns: Option<f64>,
     /// DES communication steps `(electrical, optical)`.
     pub des_steps: Option<(usize, usize)>,
+    /// Detours taken around injected faults: rerouted DES messages
+    /// when the DES ran, otherwise gather-tree edges that needed a
+    /// detour.  0 on a healthy network.
+    pub detours: usize,
     /// Full DES communication trace (for `--trace-out` export).
     pub des_trace: Option<crate::sim::trace::CommTrace>,
     /// Relative speedup `T_s / T_p`.
@@ -91,6 +96,7 @@ pub struct OhhcSorter {
     bundle: Arc<TopologyBundle>,
     registry: Option<ArtifactRegistry>,
     observer: Option<Arc<dyn Observer + Send + Sync>>,
+    faults: Option<FaultSet>,
 }
 
 impl OhhcSorter {
@@ -122,6 +128,7 @@ impl OhhcSorter {
             bundle,
             registry,
             observer: None,
+            faults: None,
         })
     }
 
@@ -129,6 +136,14 @@ impl OhhcSorter {
     /// this sorter drives (campaign progress, bench probes).
     pub fn with_stage_observer(mut self, observer: Arc<dyn Observer + Send + Sync>) -> Self {
         self.observer = Some(observer);
+        self
+    }
+
+    /// Inject a fault set into every session this sorter drives.
+    /// Routing detours around the failed elements and the run fails
+    /// with [`Error::Stage`] when a stage has no surviving route.
+    pub fn with_faults(mut self, faults: FaultSet) -> Self {
+        self.faults = Some(faults);
         self
     }
 
@@ -182,6 +197,9 @@ impl OhhcSorter {
         if let Some(obs) = &self.observer {
             session = session.with_observer(&**obs);
         }
+        if let Some(f) = &self.faults {
+            session = session.with_faults(f);
+        }
         let outcome = session.divide()?.local_sort()?.gather()?;
         if outcome.sorted != baseline.sorted {
             return Err(Error::Invariant(
@@ -212,6 +230,7 @@ impl OhhcSorter {
             imbalance: outcome.imbalance,
             des_completion_ns: outcome.des.as_ref().map(|d| d.completion_ns),
             des_steps: outcome.des.as_ref().map(|d| d.trace.steps()),
+            detours: outcome.des.as_ref().map_or(outcome.detours, |d| d.detours),
             des_trace: outcome.des.map(|d| d.trace),
             speedup: ts / tp,
             speedup_pct: (ts - tp) / ts * 100.0,
@@ -314,6 +333,47 @@ mod tests {
             let r = OhhcSorter::with_bundle(&c, bundle.clone()).unwrap().run().unwrap();
             assert_eq!(r.processors, 36, "{dist:?}");
         }
+    }
+
+    #[test]
+    fn faulty_links_detour_but_still_verify() {
+        // Seeded link faults never partition the network (bridges are
+        // skipped), so both backends must still produce the baseline
+        // order — the DES just pays for the detours.
+        let base = cfg(1, Construction::FullGroup, Backend::Threaded);
+        let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+        let faults = FaultSet::seeded_links(bundle.net.graph(), 250, 0xFA11);
+        assert!(faults.num_failed_links() > 0);
+
+        let threaded = OhhcSorter::with_bundle(&base, bundle.clone())
+            .unwrap()
+            .with_faults(faults.clone())
+            .run()
+            .unwrap();
+        assert_eq!(threaded.processors, 36);
+
+        let des_cfg = cfg(1, Construction::FullGroup, Backend::DiscreteEvent);
+        let des = OhhcSorter::with_bundle(&des_cfg, bundle.clone())
+            .unwrap()
+            .with_faults(faults)
+            .run()
+            .unwrap();
+        assert!(des.detours > 0);
+        let healthy = OhhcSorter::with_bundle(&des_cfg, bundle).unwrap().run().unwrap();
+        assert_eq!(healthy.detours, 0);
+        assert!(des.des_completion_ns.unwrap() >= healthy.des_completion_ns.unwrap());
+    }
+
+    #[test]
+    fn dead_node_fails_the_run_explicitly() {
+        let mut faults = FaultSet::new();
+        faults.fail_node(17);
+        let err = OhhcSorter::new(&cfg(1, Construction::FullGroup, Backend::Threaded))
+            .unwrap()
+            .with_faults(faults)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, Error::Stage(_)), "{err}");
     }
 
     #[test]

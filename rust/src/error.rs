@@ -5,6 +5,40 @@
 
 use std::fmt;
 
+/// A pipeline-stage failure caused by an injected (or modeled) fault.
+///
+/// Produced by every engine: the DES hits it when a gather/scatter tree
+/// edge has no surviving route, the pooled and direct engines when the
+/// session's pre-flight link check finds the modeled network partitioned.
+/// The service maps it onto its retry budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageError {
+    /// No surviving route between two processors — the fault set
+    /// partitions the pair.
+    LinkFailed {
+        /// Sending processor (flat node id).
+        src: usize,
+        /// Receiving processor (flat node id).
+        dst: usize,
+    },
+    /// A processor on the schedule is itself failed.
+    NodeFailed {
+        /// The dead processor (flat node id).
+        node: usize,
+    },
+}
+
+impl fmt::Display for StageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StageError::LinkFailed { src, dst } => {
+                write!(f, "link failed: no surviving route {src} -> {dst}")
+            }
+            StageError::NodeFailed { node } => write!(f, "node failed: processor {node} is down"),
+        }
+    }
+}
+
 /// Errors surfaced by the OHHC sort library.
 #[derive(Debug)]
 pub enum Error {
@@ -23,6 +57,9 @@ pub enum Error {
     /// Payload conservation / sortedness invariant violated.
     Invariant(String),
 
+    /// A pipeline stage failed on an injected/modeled fault.
+    Stage(StageError),
+
     /// I/O error (config files, CSV output, artifacts).
     Io(std::io::Error),
 }
@@ -35,6 +72,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Sim(m) => write!(f, "simulation error: {m}"),
             Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+            Error::Stage(e) => write!(f, "stage failed: {e}"),
             // Transparent, as thiserror's #[error(transparent)] renders it.
             Error::Io(e) => e.fmt(f),
         }
@@ -80,6 +118,14 @@ mod tests {
         assert_eq!(
             Error::Invariant("z".into()).to_string(),
             "invariant violated: z"
+        );
+        assert_eq!(
+            Error::Stage(StageError::LinkFailed { src: 3, dst: 9 }).to_string(),
+            "stage failed: link failed: no surviving route 3 -> 9"
+        );
+        assert_eq!(
+            Error::Stage(StageError::NodeFailed { node: 5 }).to_string(),
+            "stage failed: node failed: processor 5 is down"
         );
     }
 

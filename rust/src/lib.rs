@@ -115,7 +115,7 @@ pub mod util;
 pub mod workload;
 pub mod xla;
 
-pub use error::{Error, Result};
+pub use error::{Error, Result, StageError};
 
 /// Boxed-error result for binaries and examples — the crate's `anyhow`
 /// substitute (the default build is dependency-free).

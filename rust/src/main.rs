@@ -31,7 +31,7 @@ use ohhc_qsort::ensure;
 use ohhc_qsort::figures::{ALL_IDS, FigureHarness};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::service::{
-    loadgen, JobResult, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig,
+    loadgen, FaultPlan, JobResult, JobSpec, LoadGenConfig, LoadMode, RejectReason, ServiceConfig,
     SortService, Submission,
 };
 use ohhc_qsort::topology::{hhc, hypercube, mesh, ring, NetworkProperties, Ohhc};
@@ -67,6 +67,8 @@ COMMANDS
              --jobs N             concurrent cells (default 1)
              --reps N             timing repetitions per cell (default 1)
              --seed N             workload seed
+             --fault-rates LIST   link-failure axis in permille, e.g. 0,100,250
+                                  (seeded, bridge-free; default 0 = healthy)
              --spec FILE          key=value sweep spec (axis flags override it)
              --out FILE           aggregated JSON (default results/campaign.json)
              --csv FILE           also write a per-cell CSV table
@@ -81,6 +83,11 @@ COMMANDS
              --shed-depth N       shed at queue depth N (default: off)
              --batch N            coalesce up to N small jobs (default 8)
              --small N            batchable-job key threshold (default 4096)
+             --fault-rate P       inject worker panics with probability P
+             --fault-links N      fail N permille of links per attempt
+             --fault-nodes N      kill N processors per attempt (jobs fail)
+             --fault-seed N       fault-plan seed (default 64017)
+             --retry-budget N     retries per panicked/detoured job (default 2)
              --retain             keep sorted outputs in results (memory!)
              --out FILE           write the service report JSON
   loadgen    drive an in-process service with a seeded synthetic stream
@@ -94,6 +101,7 @@ COMMANDS
              --max-keys N         largest job, log-uniform (default 32000)
              --deadline-ms N      per-job latency SLO
              --workers/--queue/--burst/--shed-depth/--batch/--small
+             --fault-rate/--fault-links/--fault-nodes/--fault-seed/--retry-budget
                                   service knobs as in `serve`
              --admit-rate R       service token-bucket admit rate, jobs/s
              --assert-no-rejects  exit nonzero if anything was rejected
@@ -333,6 +341,9 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     if let Some(v) = args.opt("--backends")? {
         spec.backends = SweepSpec::parse_backends(&v)?;
     }
+    if let Some(v) = args.opt("--fault-rates")? {
+        spec.fault_permille = SweepSpec::parse_fault_rates(&v)?;
+    }
     spec.workers = args.parse_or("--workers", spec.workers)?;
     spec.jobs = args.parse_or("--jobs", spec.jobs)?;
     spec.repetitions = args.parse_or("--reps", spec.repetitions)?;
@@ -341,12 +352,13 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     let planned = spec.expand()?.len();
     eprintln!(
         "campaign: {planned} cells ({} dims × {} constructions × {} dists × {} sizes × {} \
-         backends, deduplicated), {} job(s)",
+         backends × {} fault rates, deduplicated), {} job(s)",
         spec.dimensions.len(),
         spec.constructions.len(),
         spec.distributions.len(),
         spec.sizes.len(),
         spec.backends.len(),
+        spec.fault_permille.len(),
         spec.jobs.max(1)
     );
 
@@ -383,6 +395,22 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
 /// Consume the service knobs shared by `serve` and `loadgen`.
 fn service_config(args: &mut Args) -> CliResult<ServiceConfig> {
     let defaults = ServiceConfig::default();
+    let faults = FaultPlan {
+        worker_panic_rate: args.parse_or("--fault-rate", defaults.faults.worker_panic_rate)?,
+        link_fail_permille: args.parse_or("--fault-links", defaults.faults.link_fail_permille)?,
+        node_failures: args.parse_or("--fault-nodes", defaults.faults.node_failures)?,
+        seed: args.parse_or("--fault-seed", defaults.faults.seed)?,
+    };
+    ensure!(
+        (0.0..=1.0).contains(&faults.worker_panic_rate),
+        "{}: --fault-rate must be in [0, 1]",
+        args.cmd
+    );
+    ensure!(
+        faults.link_fail_permille <= 1000,
+        "{}: --fault-links is per mille (0..=1000)",
+        args.cmd
+    );
     Ok(ServiceConfig {
         workers: args.parse_or("--workers", defaults.workers)?,
         queue_capacity: args.parse_or("--queue", defaults.queue_capacity)?,
@@ -390,6 +418,8 @@ fn service_config(args: &mut Args) -> CliResult<ServiceConfig> {
         shed_depth: args.parse_or("--shed-depth", defaults.shed_depth)?,
         batch_max_jobs: args.parse_or("--batch", defaults.batch_max_jobs)?,
         small_job_threshold: args.parse_or("--small", defaults.small_job_threshold)?,
+        faults,
+        retry_budget: args.parse_or("--retry-budget", defaults.retry_budget)?,
         ..defaults
     })
 }
@@ -404,6 +434,7 @@ fn cmd_serve(args: &mut Args) -> CliResult {
     let mut cfg = service_config(args)?;
     cfg.rate = rate;
     cfg.retain_output = retain;
+    let faults_active = cfg.faults.is_active();
 
     // Read the whole job stream up front: jobfile or stdin.
     let text = match &jobs_file {
@@ -497,7 +528,16 @@ fn cmd_serve(args: &mut Args) -> CliResult {
         std::fs::write(&path, text)?;
         println!("service report      → {path}");
     }
-    ensure!(failures == 0, "serve: {failures} job(s) failed verification");
+    // Under injected faults, explicit failures are expected (retry
+    // budgets exhaust); silent drops never are — every accepted ticket
+    // already produced a result above.
+    if faults_active {
+        if failures > 0 {
+            eprintln!("serve: {failures} job(s) failed explicitly under injected faults");
+        }
+    } else {
+        ensure!(failures == 0, "serve: {failures} job(s) failed verification");
+    }
     Ok(())
 }
 
@@ -522,6 +562,7 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
     let admit_rate = args.opt_parse::<f64>("--admit-rate")?;
     let mut cfg = service_config(args)?;
     cfg.rate = admit_rate;
+    let faults_active = cfg.faults.is_active();
 
     let gen_cfg = LoadGenConfig {
         jobs,
@@ -560,15 +601,27 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
         std::fs::write(&path, text)?;
         println!("loadgen report      → {path}");
     }
+    // Explicit failures are tolerated only when faults are injected
+    // (exhausted retry budgets fail jobs on purpose).  A job that
+    // vanished without any result is a bug in every mode.
+    if faults_active {
+        if report.failures > 0 {
+            eprintln!(
+                "loadgen: {} job(s) failed explicitly under injected faults",
+                report.failures
+            );
+        }
+    } else {
+        ensure!(
+            report.failures == 0,
+            "loadgen: {} job(s) failed verification",
+            report.failures
+        );
+    }
     ensure!(
-        report.failures == 0,
-        "loadgen: {} job(s) failed verification",
-        report.failures
-    );
-    ensure!(
-        report.completed == report.accepted,
+        report.completed + report.failures == report.accepted,
         "loadgen: {} accepted jobs never produced results",
-        report.accepted - report.completed
+        report.accepted - report.completed - report.failures
     );
     if assert_no_rejects {
         ensure!(

@@ -6,7 +6,7 @@ use std::time::{Duration, Instant};
 use crate::config::{DivideEngine, LinkModel};
 use crate::coordinator::divide_with_engine;
 use crate::dataplane::FlatBuckets;
-use crate::error::{Error, Result};
+use crate::error::{Error, Result, StageError};
 use crate::pipeline::observer::Observer;
 use crate::pipeline::trace::{Stage, StageTrace};
 use crate::runtime::ArtifactRegistry;
@@ -15,6 +15,7 @@ use crate::service::batcher::coalesce;
 use crate::sim::engine::{DesOutcome, DesSimulator};
 use crate::sim::threaded::{finish_gather, DirectRun, ThreadedSimulator};
 use crate::sort::{Quicksort, SortCounters};
+use crate::topology::fault::{route_avoiding, FaultSet, RouteOutcome};
 use crate::topology::ohhc::Ohhc;
 
 /// How the local-sort and gather stages execute.
@@ -67,6 +68,7 @@ pub struct Sorted {
     imbalance: f64,
     counters: SortCounters,
     max_local_sort: Duration,
+    detours: usize,
 }
 
 enum SortedPayload {
@@ -104,6 +106,9 @@ pub struct Outcome {
     pub messages: usize,
     /// Division load-imbalance factor.
     pub imbalance: f64,
+    /// Gather-tree edges whose planned link is failed but that still
+    /// route over a detour (degraded-mode witness; 0 when healthy).
+    pub detours: usize,
     /// DES observables, when the session ran on that engine.
     pub des: Option<DesOutcome>,
 }
@@ -134,6 +139,7 @@ struct Core<'a> {
     divide_engine: DivideEngine,
     registry: Option<&'a ArtifactRegistry>,
     observer: Option<&'a dyn Observer>,
+    faults: Option<&'a FaultSet>,
     trace: StageTrace,
 }
 
@@ -142,6 +148,47 @@ impl Core<'_> {
         if let Some(obs) = self.observer {
             obs.on_stage(stage, elapsed, &self.trace);
         }
+    }
+
+    /// Pre-flight the gather tree against the fault set: every planned
+    /// tree edge must still route on the surviving subgraph.  Returns
+    /// how many tree edges need a detour; errors with
+    /// [`Error::Stage`] when a processor on the schedule is dead or the
+    /// fault set partitions the tree.  The DES additionally *charges*
+    /// those detours at real link costs; the wall-clock engines treat
+    /// the check as the modeled network's admission gate.
+    fn preflight_tree(&self) -> Result<usize> {
+        let faults = match self.faults {
+            Some(f) if !f.is_empty() => f,
+            _ => return Ok(0),
+        };
+        let g = self.net.graph();
+        let mut detours = 0;
+        for (id, plan) in self.plans.iter().enumerate() {
+            let dst = match plan.last().send_to {
+                Some(a) => self.net.id(a),
+                None => {
+                    if faults.is_node_failed(id) {
+                        return Err(Error::Stage(StageError::NodeFailed { node: id }));
+                    }
+                    continue;
+                }
+            };
+            if faults.is_node_failed(id) {
+                return Err(Error::Stage(StageError::NodeFailed { node: id }));
+            }
+            if faults.is_node_failed(dst) {
+                return Err(Error::Stage(StageError::NodeFailed { node: dst }));
+            }
+            match route_avoiding(g, faults, id, dst) {
+                RouteOutcome::Path(p) if p.len() > 2 => detours += 1,
+                RouteOutcome::Path(_) => {}
+                RouteOutcome::Unreachable => {
+                    return Err(Error::Stage(StageError::LinkFailed { src: id, dst }));
+                }
+            }
+        }
+        Ok(detours)
     }
 }
 
@@ -189,6 +236,7 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
                 divide_engine: DivideEngine::Native,
                 registry: None,
                 observer: None,
+                faults: None,
                 trace: StageTrace::default(),
             },
             state: Configured { input },
@@ -223,6 +271,16 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
     /// Install a stage-boundary observer.
     pub fn with_observer(mut self, observer: &'a dyn Observer) -> Self {
         self.core.observer = Some(observer);
+        self
+    }
+
+    /// Run the pipeline under a fault set.  Dead tree links are
+    /// detoured (and, on the DES engine, charged at real
+    /// electronic/optical hop costs); a partitioned tree surfaces as
+    /// [`Error::Stage`] with [`StageError::LinkFailed`] /
+    /// [`StageError::NodeFailed`] from `local_sort()` on every engine.
+    pub fn with_faults(mut self, faults: &'a FaultSet) -> Self {
+        self.core.faults = Some(faults);
         self
     }
 
@@ -300,6 +358,9 @@ impl<'a> Session<'a, Divided> {
                 buckets.total_keys()
             )));
         }
+        // Fail fast before any sort work when the modeled network cannot
+        // complete the gather; count the detours it will need otherwise.
+        let detours = core.preflight_tree()?;
         let sim = ThreadedSimulator::new(core.net, core.plans).with_sorter(core.sorter);
         let t0 = Instant::now();
         let (payload, counters, max_local_sort) = match core.engine {
@@ -355,6 +416,7 @@ impl<'a> Session<'a, Divided> {
                 imbalance,
                 counters,
                 max_local_sort,
+                detours,
             },
         })
     }
@@ -378,6 +440,7 @@ impl Session<'_, Sorted> {
             imbalance,
             counters,
             max_local_sort,
+            detours,
         } = state;
         let t0 = Instant::now();
         let (sorted, messages, des, gather_time) = match payload {
@@ -403,8 +466,11 @@ impl Session<'_, Sorted> {
                 counters_vec,
                 link,
             } => {
-                let des = DesSimulator::new(core.net, core.plans, link)
-                    .run_buckets(&buckets, Some(&counters_vec))?;
+                let mut sim = DesSimulator::new(core.net, core.plans, link);
+                if let Some(f) = core.faults {
+                    sim = sim.with_faults(f);
+                }
+                let des = sim.run_buckets(&buckets, Some(&counters_vec))?;
                 let (sorted, _) = buckets.into_arena();
                 (sorted, 0, Some(des), t0.elapsed())
             }
@@ -419,6 +485,7 @@ impl Session<'_, Sorted> {
             max_local_sort,
             messages,
             imbalance,
+            detours,
             des,
         })
     }

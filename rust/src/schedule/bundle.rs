@@ -10,7 +10,9 @@
 use crate::config::Construction;
 use crate::error::Result;
 use crate::schedule::{gather_plan, NodePlan};
+use crate::topology::fault::{route_avoiding, FaultSet, RouteOutcome};
 use crate::topology::ohhc::Ohhc;
+use crate::topology::routing;
 
 /// An OHHC topology and the static gather plans derived from it.
 #[derive(Debug, Clone)]
@@ -33,6 +35,25 @@ impl TopologyBundle {
     pub fn key(&self) -> (u32, Construction) {
         (self.net.dimension, self.net.construction)
     }
+
+    /// Route between two processors under a fault set.
+    ///
+    /// Healthy network: the deterministic OTIS router
+    /// ([`routing::route`]), which is what the schedule assumes.  Under
+    /// faults: a hop-shortest detour on the surviving subgraph through
+    /// whatever redundancy remains (hexa-cell edges, hypercube
+    /// dimensions, the optical transpose), or
+    /// [`RouteOutcome::Unreachable`] when the pair is partitioned.
+    pub fn route(&self, src: usize, dst: usize, faults: &FaultSet) -> RouteOutcome {
+        if faults.is_empty() {
+            return RouteOutcome::Path(routing::route(
+                &self.net,
+                self.net.addr(src),
+                self.net.addr(dst),
+            ));
+        }
+        route_avoiding(self.net.graph(), faults, src, dst)
+    }
 }
 
 #[cfg(test)]
@@ -52,5 +73,38 @@ mod tests {
     fn bundle_rejects_bad_dimension() {
         assert!(TopologyBundle::build(0, Construction::FullGroup).is_err());
         assert!(TopologyBundle::build(9, Construction::FullGroup).is_err());
+    }
+
+    #[test]
+    fn bundle_routes_around_faults() {
+        let bundle = TopologyBundle::build(1, Construction::FullGroup).unwrap();
+        // Healthy: the deterministic router.
+        let healthy = bundle.route(0, 7, &FaultSet::new());
+        let direct = crate::topology::routing::route(
+            &bundle.net,
+            bundle.net.addr(0),
+            bundle.net.addr(7),
+        );
+        assert_eq!(healthy.path().unwrap(), &direct[..]);
+        // Fail every link of the healthy route: a detour must appear
+        // that avoids them all (hexa-cell redundancy guarantees one).
+        let mut faults = FaultSet::new();
+        for w in direct.windows(2) {
+            faults.fail_link(w[0], w[1]);
+        }
+        match bundle.route(0, 7, &faults) {
+            RouteOutcome::Path(p) => {
+                assert_eq!((p[0], *p.last().unwrap()), (0, 7));
+                for w in p.windows(2) {
+                    assert!(faults.allows(w[0], w[1]));
+                    assert!(bundle.net.graph().has_edge(w[0], w[1]));
+                }
+            }
+            RouteOutcome::Unreachable => panic!("OHHC redundancy should survive this"),
+        }
+        // A dead destination is unreachable.
+        let mut faults = FaultSet::new();
+        faults.fail_node(7);
+        assert!(bundle.route(0, 7, &faults).is_unreachable());
     }
 }

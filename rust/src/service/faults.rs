@@ -1,0 +1,162 @@
+//! Seeded fault injection for the sort service: the chaos dial.
+//!
+//! A [`FaultPlan`] describes *how unreliable* the serving environment
+//! should pretend to be — worker panics, failed links, dead processors —
+//! without saying *which* job gets hit when.  Every concrete draw is a
+//! pure function of `(plan seed, job id, attempt)`, so
+//!
+//! * the same plan replays the same failures run after run (chaos tests
+//!   are deterministic), and
+//! * a **retry is a fresh draw**: transient faults that hit attempt 0
+//!   usually miss attempt 1, which is what makes the service's bounded
+//!   retry budget worth having.
+//!
+//! The pool applies the plan in two places: [`FaultPlan::injects_panic`]
+//! decides whether the worker thread executing a batch panics mid-sort
+//! (exercising the catch-unwind / requeue path), and
+//! [`FaultPlan::fault_set_for`] builds the [`FaultSet`] the pipeline
+//! session routes around (exercising detours and
+//! [`StageError`](crate::error::StageError) surfacing).
+
+use crate::topology::fault::{splitmix64, FaultSet};
+use crate::topology::ohhc::Ohhc;
+
+/// Domain-separation constants so the panic draw, the link draw and the
+/// node draw never reuse one another's randomness.
+const PANIC_STREAM: u64 = 0x50A1_C0DE;
+const LINK_STREAM: u64 = 0x11F0_11ED;
+const NODE_STREAM: u64 = 0xDEAD_0000;
+
+/// A seeded description of the faults to inject into the service.
+///
+/// The default plan is [`FaultPlan::none`]: fully healthy, zero
+/// overhead on the job path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed; all per-(job, attempt) draws derive from it.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that a given (job, attempt) panics the
+    /// worker mid-execution.
+    pub worker_panic_rate: f64,
+    /// Per-mille of network links failed for a given (job, attempt),
+    /// drawn connectivity-preserving via [`FaultSet::seeded_links`].
+    pub link_fail_permille: u32,
+    /// Number of processors killed for a given (job, attempt), drawn
+    /// via [`FaultSet::seeded_nodes`] (never the master, node 0).
+    pub node_failures: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The healthy plan: nothing ever fails.
+    pub fn none() -> Self {
+        FaultPlan {
+            seed: 0xFA11,
+            worker_panic_rate: 0.0,
+            link_fail_permille: 0,
+            node_failures: 0,
+        }
+    }
+
+    /// Does this plan inject anything at all?  When `false` the pool
+    /// skips the fault machinery entirely.
+    pub fn is_active(&self) -> bool {
+        self.worker_panic_rate > 0.0 || self.link_fail_permille > 0 || self.node_failures > 0
+    }
+
+    /// Per-(job, attempt) stream seed with domain separation.
+    fn draw(&self, stream: u64, job_id: u64, attempt: u32) -> u64 {
+        splitmix64(self.seed ^ splitmix64(stream ^ job_id) ^ ((attempt as u64) << 48))
+    }
+
+    /// Should the worker executing `(job_id, attempt)` panic?
+    /// Deterministic in the plan seed; independent draws per attempt.
+    pub fn injects_panic(&self, job_id: u64, attempt: u32) -> bool {
+        if self.worker_panic_rate <= 0.0 {
+            return false;
+        }
+        // Top 53 bits -> uniform f64 in [0, 1).
+        let unit = (self.draw(PANIC_STREAM, job_id, attempt) >> 11) as f64 / (1u64 << 53) as f64;
+        unit < self.worker_panic_rate
+    }
+
+    /// The network fault set for `(job_id, attempt)`, or `None` when the
+    /// plan injects no network faults (the session then skips its
+    /// pre-flight route check entirely).
+    pub fn fault_set_for(&self, net: &Ohhc, job_id: u64, attempt: u32) -> Option<FaultSet> {
+        if self.link_fail_permille == 0 && self.node_failures == 0 {
+            return None;
+        }
+        let mut set = FaultSet::seeded_links(
+            net.graph(),
+            self.link_fail_permille,
+            self.draw(LINK_STREAM, job_id, attempt),
+        );
+        set.extend(&FaultSet::seeded_nodes(
+            net.total_processors(),
+            self.node_failures,
+            self.draw(NODE_STREAM, job_id, attempt),
+        ));
+        Some(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Construction;
+
+    #[test]
+    fn inactive_plan_draws_nothing() {
+        let plan = FaultPlan::none();
+        assert!(!plan.is_active());
+        assert!(!plan.injects_panic(1, 0));
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        assert!(plan.fault_set_for(&net, 1, 0).is_none());
+    }
+
+    #[test]
+    fn panic_draws_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan {
+            worker_panic_rate: 0.5,
+            ..FaultPlan::none()
+        };
+        let hits: Vec<bool> = (0..1000).map(|id| plan.injects_panic(id, 0)).collect();
+        let again: Vec<bool> = (0..1000).map(|id| plan.injects_panic(id, 0)).collect();
+        assert_eq!(hits, again, "same plan, same draws");
+        let rate = hits.iter().filter(|&&h| h).count();
+        assert!(
+            (300..700).contains(&rate),
+            "~half of 1000 jobs should draw a panic, got {rate}"
+        );
+        // Retries redraw: a job that panicked on attempt 0 is not doomed.
+        let doomed = (0..1000)
+            .filter(|&id| (0..4).all(|a| plan.injects_panic(id, a)))
+            .count();
+        assert!(doomed < 200, "attempt draws must be independent, {doomed} doomed");
+    }
+
+    #[test]
+    fn fault_sets_vary_by_attempt_but_replay_by_seed() {
+        let plan = FaultPlan {
+            link_fail_permille: 100,
+            node_failures: 1,
+            ..FaultPlan::none()
+        };
+        assert!(plan.is_active());
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let a0 = plan.fault_set_for(&net, 7, 0).unwrap();
+        let a0_again = plan.fault_set_for(&net, 7, 0).unwrap();
+        assert_eq!(a0, a0_again, "deterministic per (job, attempt)");
+        assert!(a0.num_failed_links() > 0);
+        assert_eq!(a0.num_failed_nodes(), 1);
+        assert!(!a0.is_node_failed(0), "the master survives every plan");
+        let a1 = plan.fault_set_for(&net, 7, 1).unwrap();
+        assert_ne!(a0, a1, "a retry redraws the fault set");
+    }
+}

@@ -109,6 +109,9 @@ pub struct JobResult {
     /// Order-sensitive FNV-1a checksum of the sorted output — the
     /// determinism witness loadgen compares across runs.
     pub checksum: u64,
+    /// How many times the job was requeued after an injected fault
+    /// before this result was produced (0 = clean first attempt).
+    pub retries: u32,
     /// Execution error, if the pipeline failed.
     pub error: Option<String>,
     /// The sorted keys (only when the service retains outputs).
@@ -127,6 +130,7 @@ impl JobResult {
             ("error", self.error.as_deref().map_or(Json::Null, Json::str)),
             ("id", Json::int(self.id as usize)),
             ("queue_ns", Json::num(self.queue_latency.as_nanos() as f64)),
+            ("retries", Json::int(self.retries as usize)),
             ("sort_ns", Json::num(self.sort_latency.as_nanos() as f64)),
             ("sorted_ok", Json::Bool(self.sorted_ok)),
             ("total_ns", Json::num(self.total_latency.as_nanos() as f64)),
@@ -243,11 +247,13 @@ mod tests {
             deadline_met: Some(true),
             sorted_ok: true,
             checksum: 0xabcd,
+            retries: 1,
             error: None,
             output: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("retries").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("deadline_met").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("sorted_ok").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("total_ns").unwrap().as_f64(), Some(500_000.0));

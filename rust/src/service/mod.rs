@@ -15,6 +15,10 @@
 //!   unbounded buffering);
 //! * [`admission`] — token-bucket rate limiting plus queue-depth
 //!   shedding, decided before a job touches the queue;
+//! * [`faults`] — the seeded [`FaultPlan`] chaos dial: deterministic
+//!   per-(job, attempt) worker panics and network fault sets; the pool
+//!   catches the fallout and requeues within a bounded retry budget,
+//!   so every accepted job still completes or fails **explicitly**;
 //! * [`ticket`] — the per-job front door: [`Submission`] /
 //!   [`JobTicket`] completion handles (see the lifecycle below);
 //! * [`pool`] — the [`SortService`] worker pool; each worker leases
@@ -66,6 +70,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod faults;
 pub mod job;
 pub mod loadgen;
 pub mod pool;
@@ -75,6 +80,7 @@ pub mod ticket;
 
 pub use admission::{AdmissionControl, TokenBucket};
 pub use batcher::{allot_buckets, coalesce, order_by_deadline, CoalescedBatch};
+pub use faults::FaultPlan;
 pub use job::{fnv1a, fnv1a_bytes, multiset_fingerprint, JobResult, JobSpec};
 pub use loadgen::{schedule, LoadGenConfig, LoadMode, LoadReport};
 pub use pool::{ServiceConfig, SortService};

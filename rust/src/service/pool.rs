@@ -27,6 +27,16 @@
 //! callers that drop their tickets), with `try_recv`/`recv_timeout`
 //! kept as thin deprecated shims over that drain.
 //!
+//! Faults are first-class: the configured [`FaultPlan`] can panic a
+//! worker mid-pipeline or hand the session a seeded network
+//! [`FaultSet`](crate::topology::FaultSet) to route around.  The pool
+//! contains both — panics are caught, [`StageError`](crate::error::StageError)s
+//! counted — and requeues the affected jobs (front of the queue,
+//! capacity-exempt) with fresh fault draws, up to the configured
+//! `retry_budget`; after that the job fails **explicitly**.  An
+//! accepted job therefore always ends in exactly one published
+//! [`JobResult`] or an observed cancellation, faults or not.
+//!
 //! The workers here are the *control plane* only — long-lived threads
 //! spawned once at [`SortService::start`].  All per-job parallel
 //! compute is submitted to the shared persistent executor
@@ -46,10 +56,11 @@ use std::time::{Duration, Instant};
 
 use crate::campaign::{BundleLease, PlanCache};
 use crate::config::Construction;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::pipeline::{Engine, Outcome, Session};
 use crate::service::admission::AdmissionControl;
 use crate::service::batcher::order_by_deadline;
+use crate::service::faults::FaultPlan;
 use crate::service::job::{fnv1a, multiset_fingerprint, JobResult, JobSpec};
 use crate::service::queue::{JobQueue, RejectReason, Submit};
 use crate::service::stats::{ServiceSnapshot, ServiceStats};
@@ -84,6 +95,12 @@ pub struct ServiceConfig {
     /// Attach the sorted keys to every [`JobResult`] (tests; costly for
     /// large jobs).
     pub retain_output: bool,
+    /// Seeded fault injection (worker panics, link/node failures);
+    /// [`FaultPlan::none`] serves healthy with zero overhead.
+    pub faults: FaultPlan,
+    /// How many times a job hit by an injected fault is requeued before
+    /// it fails explicitly (0 = fail on the first fault).
+    pub retry_budget: u32,
 }
 
 impl Default for ServiceConfig {
@@ -99,6 +116,8 @@ impl Default for ServiceConfig {
             small_job_threshold: 4096,
             paper_threads: false,
             retain_output: false,
+            faults: FaultPlan::none(),
+            retry_budget: 2,
         }
     }
 }
@@ -110,6 +129,10 @@ struct QueuedJob {
     spec: JobSpec,
     accepted_at: Instant,
     slot: Arc<Slot>,
+    /// 0 on first execution; incremented each time a fault requeues the
+    /// job.  Feeds the per-(job, attempt) fault draws and the result's
+    /// `retries` field.
+    attempt: u32,
 }
 
 /// The completion drain's backing store.  Tenants that consume results
@@ -212,6 +235,7 @@ impl SortService {
                 spec,
                 accepted_at: Instant::now(),
                 slot: Arc::clone(&slot),
+                attempt: 0,
             };
             match self.shared.queue.offer(queued) {
                 Submit::Accepted { depth } => Submission::Accepted {
@@ -383,6 +407,16 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
     let inputs: Vec<Vec<i32>> = batch.iter().map(|j| j.spec.generate()).collect();
     let fingerprints: Vec<u64> = inputs.iter().map(|d| multiset_fingerprint(d)).collect();
 
+    // Fault injection, decided before the pipeline runs: the batch
+    // leader's (id, attempt) seeds the network fault set (one modeled
+    // network per pipeline pass), and any member's draw can panic the
+    // worker.  Retries redraw — see `FaultPlan`.
+    let plan = &shared.cfg.faults;
+    let leader = &batch[0];
+    let fault_set = plan.fault_set_for(&lease.net, leader.spec.id, leader.attempt);
+    let inject_panic = plan.worker_panic_rate > 0.0
+        && batch.iter().any(|j| plan.injects_panic(j.spec.id, j.attempt));
+
     // Waves jobs run as pooled session stages with the tuned throughput
     // sorter; `paper_threads` keeps the paper's one thread per
     // processor and its default cutoff-0 sorter.
@@ -402,17 +436,25 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
         // Stage-by-stage drive: each transition is its own executor
         // wave, so concurrent jobs interleave at stage boundaries, and
         // the shared stats observe every boundary.
-        session
+        let mut session = session
             .with_engine(engine)
             .with_sorter(sorter)
-            .with_observer(&shared.stats)
-            .divide()?
-            .local_sort()?
-            .gather()
+            .with_observer(&shared.stats);
+        if let Some(f) = &fault_set {
+            session = session.with_faults(f);
+        }
+        let divided = session.divide()?;
+        if inject_panic {
+            panic!(
+                "injected fault: worker panic (job {}, attempt {})",
+                leader.spec.id, leader.attempt
+            );
+        }
+        divided.local_sort()?.gather()
     };
 
-    match run() {
-        Ok(outcome) => {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)) {
+        Ok(Ok(outcome)) => {
             let sort_latency = started.elapsed();
             let batched = batch.len() > 1;
             for ((job, span), fp) in batch.iter().zip(&outcome.spans).zip(&fingerprints) {
@@ -432,13 +474,71 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
                     deadline_met: job.spec.deadline.map(|d| total_latency <= d),
                     sorted_ok,
                     checksum: fnv1a(out),
+                    retries: job.attempt,
                     error: None,
                     output: shared.cfg.retain_output.then(|| out.to_vec()),
                 };
                 shared.publish(&job.slot, result);
             }
         }
-        Err(e) => fail_batch(shared, &batch, started, &e.to_string()),
+        // A fault the session surfaced (no surviving route / dead
+        // processor): count it, then retry within budget.
+        Ok(Err(e @ Error::Stage(_))) => {
+            shared.stats.on_link_failure();
+            retry_or_fail(shared, batch, started, &e.to_string());
+        }
+        // Any other pipeline error is a bug, not an injected fault —
+        // retrying would just repeat it deterministically.
+        Ok(Err(e)) => fail_batch(shared, &batch, started, &e.to_string()),
+        // The worker panicked mid-pipeline (injected or real): the
+        // unwind is contained here, the jobs retry within budget.
+        Err(panic) => {
+            shared.stats.on_worker_panic();
+            let msg = panic_message(&panic);
+            retry_or_fail(shared, batch, started, &format!("worker panicked: {msg}"));
+        }
+    }
+}
+
+/// Best-effort text out of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Requeue every job of a faulted batch that still has retry budget
+/// (fresh fault draws next attempt), and fail the rest explicitly.
+/// Nothing is ever dropped: each job ends up either back in the queue
+/// or published with an error.
+fn retry_or_fail(shared: &Shared, batch: Vec<QueuedJob>, started: Instant, error: &str) {
+    let budget = shared.cfg.retry_budget;
+    for mut job in batch {
+        if job.attempt >= budget {
+            shared.stats.on_retry_exhausted();
+            let msg = format!("{error} (retry budget {budget} exhausted)");
+            fail_batch(shared, std::slice::from_ref(&job), started, &msg);
+            continue;
+        }
+        job.attempt += 1;
+        // Claimed -> Queued on the slot first, then back into the queue
+        // (capacity-exempt: the job already paid admission once).
+        job.slot.requeue();
+        shared.stats.on_retry();
+        if let Err(job) = shared.queue.requeue(job) {
+            // Shutdown raced the retry: fail explicitly instead.  The
+            // reclaim can only lose to a tenant cancelling right now.
+            if job.slot.claim() {
+                let msg = format!("{error} (retry abandoned: service shutting down)");
+                fail_batch(shared, std::slice::from_ref(&job), started, &msg);
+            } else {
+                shared.stats.on_cancelled();
+            }
+        }
     }
 }
 
@@ -461,6 +561,7 @@ fn fail_batch(shared: &Shared, batch: &[QueuedJob], started: Instant, error: &st
             deadline_met: job.spec.deadline.map(|d| total_latency <= d),
             sorted_ok: false,
             checksum: 0,
+            retries: job.attempt,
             error: Some(error.to_string()),
             output: None,
         };
@@ -604,6 +705,165 @@ mod tests {
         let shared = Arc::clone(&service.shared);
         service.shutdown();
         assert_eq!(shared.cache.active_leases(), 0, "leases returned on shutdown");
+    }
+
+    #[test]
+    fn injected_panics_retry_to_checksum_identical_results() {
+        // Half the (job, attempt) draws panic the worker.  Every ticket
+        // must still resolve (retry within budget or explicit failure —
+        // never a hang or a silent drop), and every job that completes,
+        // retried or not, must equal an independent sequential sort.
+        let service = SortService::start(ServiceConfig {
+            workers: 2,
+            retain_output: true,
+            faults: FaultPlan {
+                worker_panic_rate: 0.5,
+                ..FaultPlan::none()
+            },
+            retry_budget: 6,
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..12)
+            .map(|id| {
+                service
+                    .submit(spec(id, Distribution::Random, 5_000, 1))
+                    .ticket()
+                    .expect("accepted")
+            })
+            .collect();
+        let results: Vec<JobResult> = tickets
+            .iter()
+            .map(|t| t.wait_timeout(Duration::from_secs(60)).expect("job dropped"))
+            .collect();
+        let (snapshot, _) = service.shutdown();
+        let retried = results.iter().filter(|r| r.retries > 0).count();
+        assert!(retried > 0, "rate 0.5 over 12 jobs should hit someone");
+        let mut completed_after_retry = 0;
+        for r in &results {
+            if r.error.is_some() {
+                continue; // explicit failure: budget exhausted, still no drop
+            }
+            assert!(r.sorted_ok, "job {} (retries {})", r.id, r.retries);
+            let mut expect = spec(r.id, Distribution::Random, 5_000, 1).generate();
+            quicksort(&mut expect);
+            assert_eq!(r.checksum, fnv1a(&expect), "job {} checksum drifted", r.id);
+            completed_after_retry += (r.retries > 0) as usize;
+        }
+        assert!(
+            completed_after_retry > 0,
+            "some retried job must complete with a verified checksum"
+        );
+        assert_eq!(snapshot.completed + snapshot.failed, 12);
+        assert!(snapshot.worker_panics > 0);
+        // Jobs never coalesce here (5000 > small_job_threshold), so
+        // every caught panic ends in exactly one requeue or exhaustion.
+        assert_eq!(
+            snapshot.worker_panics,
+            snapshot.retries + snapshot.retries_exhausted
+        );
+        assert_eq!(snapshot.degraded_jobs as usize, retried);
+        assert!(snapshot.degraded_total.count > 0);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_explicitly() {
+        // Every draw panics and the budget is zero: each job must come
+        // back once, immediately, as an explicit failure.
+        let service = SortService::start(ServiceConfig {
+            workers: 1,
+            faults: FaultPlan {
+                worker_panic_rate: 1.0,
+                ..FaultPlan::none()
+            },
+            retry_budget: 0,
+            ..Default::default()
+        });
+        let t = service
+            .submit(spec(0, Distribution::Sorted, 1_000, 1))
+            .ticket()
+            .expect("accepted");
+        let r = t.wait_timeout(Duration::from_secs(30)).expect("job dropped");
+        assert!(!r.sorted_ok);
+        let err = r.error.expect("explicit error");
+        assert!(err.contains("retry budget 0 exhausted"), "{err}");
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.failed, 1);
+        assert_eq!(snapshot.retries_exhausted, 1);
+        assert_eq!(snapshot.retries, 0);
+    }
+
+    #[test]
+    fn link_faults_degrade_but_jobs_still_verify() {
+        // Seeded link failures are connectivity-preserving, so every
+        // session routes around them and still completes — the jobs
+        // must all verify despite a heavily degraded network.
+        let service = SortService::start(ServiceConfig {
+            workers: 2,
+            retain_output: true,
+            faults: FaultPlan {
+                link_fail_permille: 300,
+                ..FaultPlan::none()
+            },
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..8)
+            .map(|id| {
+                service
+                    .submit(spec(id, Distribution::Random, 3_000, 1))
+                    .ticket()
+                    .expect("accepted")
+            })
+            .collect();
+        for t in &tickets {
+            let r = t.wait_timeout(Duration::from_secs(60)).expect("job dropped");
+            assert!(r.sorted_ok, "job {}: {:?}", r.id, r.error);
+            let mut expect = spec(r.id, Distribution::Random, 3_000, 1).generate();
+            quicksort(&mut expect);
+            assert_eq!(r.checksum, fnv1a(&expect));
+        }
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.completed, 8);
+        assert_eq!(snapshot.failed, 0);
+    }
+
+    #[test]
+    fn dead_processors_surface_stage_errors_and_fail_explicitly() {
+        // A dead processor cannot run its bucket, so every attempt
+        // fails the session pre-flight with a StageError; the budget
+        // burns down and every job ends in an explicit error — never a
+        // hang, never a silent drop.
+        let service = SortService::start(ServiceConfig {
+            workers: 2,
+            faults: FaultPlan {
+                node_failures: 2,
+                ..FaultPlan::none()
+            },
+            retry_budget: 2,
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..6)
+            .map(|id| {
+                service
+                    .submit(spec(id, Distribution::Random, 2_000, 1))
+                    .ticket()
+                    .expect("accepted")
+            })
+            .collect();
+        for t in &tickets {
+            let r = t.wait_timeout(Duration::from_secs(60)).expect("job dropped");
+            assert!(!r.sorted_ok);
+            let err = r.error.expect("explicit error");
+            assert!(
+                err.contains("node failed") && err.contains("exhausted"),
+                "{err}"
+            );
+        }
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.failed, 6);
+        assert_eq!(snapshot.completed, 0);
+        assert!(snapshot.link_failures > 0, "StageErrors must be counted");
+        assert!(snapshot.retries > 0, "attempts within budget must requeue");
+        assert_eq!(snapshot.retries_exhausted, 6);
     }
 
     #[test]

@@ -138,6 +138,24 @@ impl<T> JobQueue<T> {
         Submit::Accepted { depth }
     }
 
+    /// Put a previously-popped job back at the **front** of the queue,
+    /// bypassing the capacity check — the job already paid admission
+    /// once, and a fault-retry must never be silently dropped just
+    /// because the queue refilled behind it.  Returns the new depth, or
+    /// hands the item back when the queue is closed (the caller fails
+    /// the job explicitly instead).
+    pub fn requeue(&self, item: T) -> std::result::Result<usize, T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(item);
+        }
+        inner.items.push_front(item);
+        let depth = inner.items.len();
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
     /// Blocking consume: the next job, or `None` once the queue is
     /// closed **and** drained (workers exit on `None`).
     pub fn pop(&self) -> Option<T> {
@@ -210,6 +228,20 @@ mod tests {
         assert_eq!(q.try_pop(), Some(2));
         assert_eq!(q.try_pop(), Some(3));
         assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn requeue_jumps_the_line_and_ignores_capacity() {
+        let q = JobQueue::bounded(2);
+        q.offer(1);
+        q.offer(2);
+        // Full queue: offer rejects, requeue does not.
+        assert!(!q.offer(3).is_accepted());
+        assert_eq!(q.requeue(0), Ok(3));
+        assert_eq!(q.try_pop(), Some(0), "retries go to the front");
+        assert_eq!(q.try_pop(), Some(1));
+        q.close();
+        assert_eq!(q.requeue(9), Err(9), "closed queues hand the job back");
     }
 
     #[test]

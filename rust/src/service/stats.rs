@@ -34,12 +34,18 @@ pub struct ServiceStats {
     deadline_missed: AtomicU64,
     batches: AtomicU64,
     batched_jobs: AtomicU64,
+    worker_panics: AtomicU64,
+    link_failures: AtomicU64,
+    retries: AtomicU64,
+    retries_exhausted: AtomicU64,
+    degraded_jobs: AtomicU64,
     queue_ns: Mutex<Histogram>,
     sort_ns: Mutex<Histogram>,
     total_ns: Mutex<Histogram>,
     stage_divide_ns: Mutex<Histogram>,
     stage_sort_ns: Mutex<Histogram>,
     stage_gather_ns: Mutex<Histogram>,
+    degraded_total_ns: Mutex<Histogram>,
 }
 
 impl ServiceStats {
@@ -81,6 +87,33 @@ impl ServiceStats {
         self.queue_ns.lock().unwrap().record_duration(r.queue_latency);
         self.sort_ns.lock().unwrap().record_duration(r.sort_latency);
         self.total_ns.lock().unwrap().record_duration(r.total_latency);
+        if r.retries > 0 {
+            // The job survived at least one injected fault — track its
+            // latency separately so degraded-mode SLOs are visible.
+            self.degraded_jobs.fetch_add(1, Ordering::Relaxed);
+            self.degraded_total_ns.lock().unwrap().record_duration(r.total_latency);
+        }
+    }
+
+    /// Record one worker panic caught by the pool (injected or real).
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one batch lost to a network fault
+    /// ([`StageError`](crate::error::StageError) from the session).
+    pub fn on_link_failure(&self) {
+        self.link_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one job requeued for another attempt.
+    pub fn on_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one job that burned its whole retry budget and failed.
+    pub fn on_retry_exhausted(&self) {
+        self.retries_exhausted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one job cancelled before any worker claimed it (the job
@@ -109,6 +142,11 @@ impl ServiceStats {
         self.batched_jobs.load(Ordering::Relaxed)
     }
 
+    /// Jobs requeued after an injected fault so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
     /// Freeze everything into a snapshot.
     pub fn snapshot(&self) -> ServiceSnapshot {
         ServiceSnapshot {
@@ -121,12 +159,18 @@ impl ServiceStats {
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            link_failures: self.link_failures.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            retries_exhausted: self.retries_exhausted.load(Ordering::Relaxed),
+            degraded_jobs: self.degraded_jobs.load(Ordering::Relaxed),
             queue: LatencySummary::of(&self.queue_ns.lock().unwrap()),
             sort: LatencySummary::of(&self.sort_ns.lock().unwrap()),
             total: LatencySummary::of(&self.total_ns.lock().unwrap()),
             stage_divide: LatencySummary::of(&self.stage_divide_ns.lock().unwrap()),
             stage_sort: LatencySummary::of(&self.stage_sort_ns.lock().unwrap()),
             stage_gather: LatencySummary::of(&self.stage_gather_ns.lock().unwrap()),
+            degraded_total: LatencySummary::of(&self.degraded_total_ns.lock().unwrap()),
         }
     }
 }
@@ -204,6 +248,16 @@ pub struct ServiceSnapshot {
     pub batches: u64,
     /// Jobs that rode those batches.
     pub batched_jobs: u64,
+    /// Worker panics caught by the pool.
+    pub worker_panics: u64,
+    /// Batches lost to a network fault (link/node failure).
+    pub link_failures: u64,
+    /// Jobs requeued for another attempt.
+    pub retries: u64,
+    /// Jobs that burned the whole retry budget and failed.
+    pub retries_exhausted: u64,
+    /// Jobs that completed only after at least one retry.
+    pub degraded_jobs: u64,
     /// Queue-latency summary.
     pub queue: LatencySummary,
     /// Sort-latency summary.
@@ -216,6 +270,8 @@ pub struct ServiceSnapshot {
     pub stage_sort: LatencySummary,
     /// Gather-stage wall-time summary.
     pub stage_gather: LatencySummary,
+    /// Total-latency summary over degraded jobs only (retries > 0).
+    pub degraded_total: LatencySummary,
 }
 
 impl ServiceSnapshot {
@@ -233,13 +289,19 @@ impl ServiceSnapshot {
             ("cancelled", Json::int(self.cancelled as usize)),
             ("completed", Json::int(self.completed as usize)),
             ("deadline_missed", Json::int(self.deadline_missed as usize)),
+            ("degraded_jobs", Json::int(self.degraded_jobs as usize)),
+            ("degraded_total_latency", self.degraded_total.to_json()),
             ("failed", Json::int(self.failed as usize)),
+            ("link_failures", Json::int(self.link_failures as usize)),
             ("queue_latency", self.queue.to_json()),
             ("rejected", Json::int(self.rejected as usize)),
+            ("retries", Json::int(self.retries as usize)),
+            ("retries_exhausted", Json::int(self.retries_exhausted as usize)),
             ("sort_latency", self.sort.to_json()),
             ("stage_latency", stages),
             ("submitted", Json::int(self.submitted as usize)),
             ("total_latency", self.total.to_json()),
+            ("worker_panics", Json::int(self.worker_panics as usize)),
         ])
     }
 
@@ -249,6 +311,8 @@ impl ServiceSnapshot {
             "service: {} submitted, {} accepted, {} rejected, {} completed, {} failed, \
              {} cancelled\n\
              batching: {} batches covering {} jobs; deadlines missed: {}\n\
+             faults: {} worker panics, {} link failures, {} retries ({} exhausted), \
+             {} degraded jobs\n\
              queue latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
              sort  latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
              total latency: p50 {:.3?} p95 {:.3?} p99 {:.3?} max {:.3?}\n",
@@ -261,6 +325,11 @@ impl ServiceSnapshot {
             self.batches,
             self.batched_jobs,
             self.deadline_missed,
+            self.worker_panics,
+            self.link_failures,
+            self.retries,
+            self.retries_exhausted,
+            self.degraded_jobs,
             self.queue.p50,
             self.queue.p95,
             self.queue.p99,
@@ -292,9 +361,41 @@ mod tests {
             deadline_met: met,
             sorted_ok: ok,
             checksum: 0,
+            retries: 0,
             error: None,
             output: None,
         }
+    }
+
+    #[test]
+    fn fault_counters_and_degraded_latency_accumulate() {
+        let stats = ServiceStats::new();
+        stats.on_worker_panic();
+        stats.on_link_failure();
+        stats.on_link_failure();
+        stats.on_retry();
+        stats.on_retry();
+        stats.on_retry_exhausted();
+        // A job that needed a retry lands in the degraded histogram…
+        let mut degraded = result(10, 1000, true, None);
+        degraded.retries = 1;
+        stats.on_result(&degraded);
+        // …and a clean job does not.
+        stats.on_result(&result(10, 100, true, None));
+        let s = stats.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.link_failures, 2);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.retries_exhausted, 1);
+        assert_eq!(s.degraded_jobs, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.degraded_total.count, 1);
+        assert!(s.degraded_total.p50 >= Duration::from_micros(1000));
+        let j = s.to_json();
+        assert_eq!(j.get("worker_panics").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("degraded_jobs").unwrap().as_usize(), Some(1));
+        assert!(j.get("degraded_total_latency").unwrap().get("count").is_some());
+        assert!(s.summary_text().contains("2 retries (1 exhausted)"));
     }
 
     #[test]

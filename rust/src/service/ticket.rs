@@ -84,6 +84,17 @@ impl Slot {
         }
     }
 
+    /// Worker-side: hand a claimed job back to the queue (the pool's
+    /// fault-retry path).  The tenant's view returns to `Queued`; a
+    /// later [`Self::claim`] picks the job up again.  Cancellation
+    /// stays live: a requeued job can still lose the claim race to
+    /// [`JobTicket::try_cancel`].
+    pub(crate) fn requeue(&self) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(matches!(*st, SlotState::Claimed), "requeue on {st:?}");
+        *st = SlotState::Queued;
+    }
+
     /// Worker-side: publish the result and wake every waiter.
     pub(crate) fn complete(&self, result: JobResult) {
         let mut st = self.state.lock().unwrap();
@@ -251,9 +262,25 @@ mod tests {
             deadline_met: None,
             sorted_ok: true,
             checksum: 0,
+            retries: 0,
             error: None,
             output: None,
         }
+    }
+
+    #[test]
+    fn requeue_returns_a_claimed_slot_to_the_queue() {
+        let slot = Slot::new(9);
+        let ticket = JobTicket::new(Arc::clone(&slot));
+        assert!(slot.claim());
+        slot.requeue();
+        assert_eq!(ticket.poll(), TicketStatus::Queued);
+        // The retry claim works, and cancellation still wins a race
+        // against it when it gets there first.
+        assert!(slot.claim());
+        slot.requeue();
+        assert!(ticket.try_cancel(), "requeued jobs are cancellable again");
+        assert!(!slot.claim(), "the worker skips the cancelled retry");
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Fault sets and fault-aware routing over the OHHC.
+//!
+//! OTIS-class networks tolerate node and link failures by detouring over
+//! the redundant intra-group hexa-cell edges and the optical transpose
+//! (Ghosh et al., arXiv:1109.1706).  This module supplies the machinery:
+//!
+//! * [`FaultSet`] — a per-node / per-link failure set, with a seeded
+//!   generator whose selections are **nested** (the set at rate `r₁` is a
+//!   subset of the set at `r₂ ≥ r₁` under the same seed) and
+//!   **connectivity-preserving**, so degradation curves are structurally
+//!   monotone;
+//! * [`route_avoiding`] — BFS hop-shortest detour on the surviving
+//!   subgraph, returning [`RouteOutcome::Unreachable`] exactly when the
+//!   failure set partitions the pair;
+//! * [`cheapest_path`] — min-*cost* detour under a caller-supplied
+//!   per-link-kind weight, used by the DES so detour hops are charged at
+//!   their real electronic/optical prices rather than hop counts.
+
+use std::collections::HashSet;
+
+use super::graph::{Graph, LinkKind};
+
+/// Stateless 64-bit mix (splitmix64 finalizer) — gives every edge / node a
+/// deterministic rank under a seed without any RNG state to thread.
+pub(crate) fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A set of failed processors and links.
+///
+/// Links are stored normalized as `(min, max)`; querying either direction
+/// of an undirected edge gives the same answer.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSet {
+    nodes: HashSet<usize>,
+    links: HashSet<(usize, usize)>,
+}
+
+impl FaultSet {
+    /// The empty (healthy) fault set.
+    pub fn new() -> Self {
+        FaultSet::default()
+    }
+
+    /// Mark a processor failed.
+    pub fn fail_node(&mut self, node: usize) {
+        self.nodes.insert(node);
+    }
+
+    /// Mark an undirected link failed.
+    pub fn fail_link(&mut self, u: usize, v: usize) {
+        self.links.insert((u.min(v), u.max(v)));
+    }
+
+    /// Whether a processor is failed.
+    pub fn is_node_failed(&self, node: usize) -> bool {
+        self.nodes.contains(&node)
+    }
+
+    /// Whether a link is failed (either direction).
+    pub fn is_link_failed(&self, u: usize, v: usize) -> bool {
+        self.links.contains(&(u.min(v), u.max(v)))
+    }
+
+    /// True when nothing is failed.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty() && self.links.is_empty()
+    }
+
+    /// Number of failed processors.
+    pub fn num_failed_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of failed links.
+    pub fn num_failed_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Whether the hop `u → v` is usable: both endpoints alive and the
+    /// link itself not failed.  (Existence of the edge is the graph's
+    /// business, not the fault set's.)
+    pub fn allows(&self, u: usize, v: usize) -> bool {
+        !self.is_node_failed(u) && !self.is_node_failed(v) && !self.is_link_failed(u, v)
+    }
+
+    /// Merge another fault set into this one.
+    pub fn extend(&mut self, other: &FaultSet) {
+        self.nodes.extend(other.nodes.iter().copied());
+        self.links.extend(other.links.iter().copied());
+    }
+
+    /// Fail `⌈permille · |E| / 1000⌉` links of `graph`, seeded.
+    ///
+    /// Edges are scanned in a fixed seed-ranked permutation and selected
+    /// greedily, **skipping any edge whose removal would disconnect the
+    /// surviving graph**.  Two consequences, both load-bearing for the
+    /// campaign's degradation curves:
+    ///
+    /// * *nested*: under one seed, the set at a lower rate is a strict
+    ///   prefix (subset) of the set at any higher rate, so detour costs
+    ///   can only grow with the rate;
+    /// * *connectivity-preserving*: every node pair still routes, so the
+    ///   sort completes (degraded) instead of failing outright.
+    ///
+    /// Node failures are the tool for modeling outright partitions — see
+    /// [`FaultSet::seeded_nodes`].
+    pub fn seeded_links(graph: &Graph, permille: u32, seed: u64) -> Self {
+        let mut set = FaultSet::new();
+        let total = graph.num_edges();
+        let target = (total * permille as usize).div_ceil(1000).min(total);
+        if target == 0 {
+            return set;
+        }
+        // Fixed seed-ranked permutation of all edges.
+        let mut ranked: Vec<(u64, usize, usize)> = Vec::with_capacity(total);
+        for u in 0..graph.len() {
+            for &(v, _) in graph.neighbors(u) {
+                if u < v {
+                    let key = splitmix64(seed ^ ((u as u64) << 32 | v as u64));
+                    ranked.push((key, u, v));
+                }
+            }
+        }
+        ranked.sort_unstable();
+        for &(_, u, v) in &ranked {
+            if set.num_failed_links() >= target {
+                break;
+            }
+            set.fail_link(u, v);
+            if !connected_avoiding(graph, &set) {
+                // A bridge by now — keep it alive and move on.
+                set.links.remove(&(u, v));
+            }
+        }
+        set
+    }
+
+    /// Fail `count` distinct processors, seeded, never the master
+    /// (node 0 owns the array; its death is the client process dying,
+    /// not a network fault).  Nested in `count` under one seed.
+    pub fn seeded_nodes(num_nodes: usize, count: usize, seed: u64) -> Self {
+        let mut set = FaultSet::new();
+        if num_nodes < 2 {
+            return set;
+        }
+        let mut ranked: Vec<(u64, usize)> = (1..num_nodes)
+            .map(|n| (splitmix64(seed ^ 0xA11C_E500 ^ n as u64), n))
+            .collect();
+        ranked.sort_unstable();
+        for &(_, n) in ranked.iter().take(count) {
+            set.fail_node(n);
+        }
+        set
+    }
+}
+
+/// Whether the surviving subgraph (alive nodes, alive links) is still
+/// connected over the alive nodes.
+fn connected_avoiding(g: &Graph, faults: &FaultSet) -> bool {
+    let n = g.len();
+    let start = match (0..n).find(|&u| !faults.is_node_failed(u)) {
+        Some(u) => u,
+        None => return true,
+    };
+    let mut seen = vec![false; n];
+    let mut stack = vec![start];
+    seen[start] = true;
+    let mut reached = 1;
+    while let Some(u) = stack.pop() {
+        for &(v, _) in g.neighbors(u) {
+            if !seen[v] && faults.allows(u, v) {
+                seen[v] = true;
+                reached += 1;
+                stack.push(v);
+            }
+        }
+    }
+    reached == n - faults.num_failed_nodes()
+}
+
+/// Result of fault-aware routing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// A surviving route, inclusive of both endpoints.
+    Path(Vec<usize>),
+    /// The failure set separates the pair (or an endpoint is dead).
+    Unreachable,
+}
+
+impl RouteOutcome {
+    /// The route, if one survives.
+    pub fn path(&self) -> Option<&[usize]> {
+        match self {
+            RouteOutcome::Path(p) => Some(p),
+            RouteOutcome::Unreachable => None,
+        }
+    }
+
+    /// True when no route survives.
+    pub fn is_unreachable(&self) -> bool {
+        matches!(self, RouteOutcome::Unreachable)
+    }
+}
+
+/// Hop-shortest route from `src` to `dst` avoiding every failed element
+/// (BFS over the surviving subgraph).  Falls back through whatever
+/// redundancy survives — intra-group hexa-cell edges, the hypercube
+/// dimensions, the optical transpose — and reports
+/// [`RouteOutcome::Unreachable`] exactly when the pair is partitioned.
+pub fn route_avoiding(g: &Graph, faults: &FaultSet, src: usize, dst: usize) -> RouteOutcome {
+    if faults.is_node_failed(src) || faults.is_node_failed(dst) {
+        return RouteOutcome::Unreachable;
+    }
+    if src == dst {
+        return RouteOutcome::Path(vec![src]);
+    }
+    let mut prev = vec![usize::MAX; g.len()];
+    let mut seen = vec![false; g.len()];
+    let mut q = std::collections::VecDeque::new();
+    seen[src] = true;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        for &(v, _) in g.neighbors(u) {
+            if !seen[v] && faults.allows(u, v) {
+                seen[v] = true;
+                prev[v] = u;
+                if v == dst {
+                    let mut path = vec![dst];
+                    let mut cur = dst;
+                    while cur != src {
+                        cur = prev[cur];
+                        path.push(cur);
+                    }
+                    path.reverse();
+                    return RouteOutcome::Path(path);
+                }
+                q.push_back(v);
+            }
+        }
+    }
+    RouteOutcome::Unreachable
+}
+
+/// Min-*cost* route from `src` to `dst` avoiding failed elements, under a
+/// per-hop cost function of the link kind (Dijkstra).  This is what the
+/// DES detours over: a two-hop electrical detour and a one-hop optical
+/// alternative are compared at their real §1.5 prices, not hop counts.
+/// Returns the path and its total cost, or `None` when partitioned.
+pub fn cheapest_path(
+    g: &Graph,
+    faults: &FaultSet,
+    src: usize,
+    dst: usize,
+    cost: impl Fn(LinkKind) -> u64,
+) -> Option<(Vec<usize>, u64)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    if faults.is_node_failed(src) || faults.is_node_failed(dst) {
+        return None;
+    }
+    if src == dst {
+        return Some((vec![src], 0));
+    }
+    let n = g.len();
+    let mut dist = vec![u64::MAX; n];
+    let mut prev = vec![usize::MAX; n];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0;
+    heap.push(Reverse((0u64, src)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u] {
+            continue;
+        }
+        if u == dst {
+            let mut path = vec![dst];
+            let mut cur = dst;
+            while cur != src {
+                cur = prev[cur];
+                path.push(cur);
+            }
+            path.reverse();
+            return Some((path, d));
+        }
+        for &(v, kind) in g.neighbors(u) {
+            if !faults.allows(u, v) {
+                continue;
+            }
+            let nd = d.saturating_add(cost(kind));
+            if nd < dist[v] {
+                dist[v] = nd;
+                prev[v] = u;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Construction;
+    use crate::topology::ohhc::Ohhc;
+    use crate::topology::routing::path_is_valid;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut g = Graph::with_nodes(n);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1, LinkKind::Electrical);
+        }
+        g
+    }
+
+    #[test]
+    fn queries_normalize_link_direction() {
+        let mut f = FaultSet::new();
+        assert!(f.is_empty());
+        f.fail_link(5, 2);
+        f.fail_node(7);
+        assert!(f.is_link_failed(2, 5) && f.is_link_failed(5, 2));
+        assert!(!f.is_link_failed(2, 4));
+        assert!(f.is_node_failed(7));
+        assert!(!f.allows(2, 5));
+        assert!(!f.allows(7, 8));
+        assert!(f.allows(0, 1));
+        assert!(!f.is_empty());
+        assert_eq!((f.num_failed_nodes(), f.num_failed_links()), (1, 1));
+    }
+
+    #[test]
+    fn seeded_links_are_nested_and_connectivity_preserving() {
+        let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+        let g = net.graph();
+        let mut prev = FaultSet::new();
+        for permille in [0, 50, 150, 300, 500] {
+            let f = FaultSet::seeded_links(g, permille, 0xFA11);
+            // Nested: every earlier selection survives into later sets.
+            for &(u, v) in &prev.links {
+                assert!(f.is_link_failed(u, v), "{permille}‰ dropped ({u},{v})");
+            }
+            assert!(connected_avoiding(g, &f), "{permille}‰ disconnected");
+            assert!(f.num_failed_links() <= (g.num_edges() * permille as usize).div_ceil(1000));
+            prev = f;
+        }
+        assert!(prev.num_failed_links() > 0);
+        // Determinism: same seed, same set.
+        assert_eq!(prev, FaultSet::seeded_links(g, 500, 0xFA11));
+        // Different seed, (almost surely) different set.
+        assert_ne!(prev, FaultSet::seeded_links(g, 500, 0xFA12));
+    }
+
+    #[test]
+    fn seeded_nodes_never_kill_the_master() {
+        for count in [1, 3, 7] {
+            let f = FaultSet::seeded_nodes(36, count, 9);
+            assert_eq!(f.num_failed_nodes(), count);
+            assert!(!f.is_node_failed(0));
+        }
+        // Nested in count.
+        let small = FaultSet::seeded_nodes(36, 2, 9);
+        let large = FaultSet::seeded_nodes(36, 5, 9);
+        for &n in &small.nodes {
+            assert!(large.is_node_failed(n));
+        }
+    }
+
+    #[test]
+    fn route_avoiding_detours_and_detects_partitions() {
+        // Cycle 0-1-2-3-0: killing (0,1) forces the long way round.
+        let mut g = path_graph(4);
+        g.add_edge(3, 0, LinkKind::Optical);
+        let mut f = FaultSet::new();
+        f.fail_link(0, 1);
+        match route_avoiding(&g, &f, 0, 1) {
+            RouteOutcome::Path(p) => assert_eq!(p, vec![0, 3, 2, 1]),
+            RouteOutcome::Unreachable => panic!("cycle survives one failure"),
+        }
+        // Killing the opposite side too partitions the pair.
+        f.fail_link(2, 3);
+        assert!(route_avoiding(&g, &f, 0, 2).is_unreachable());
+        assert!(!route_avoiding(&g, &f, 0, 3).is_unreachable());
+        // A dead endpoint is unreachable by definition.
+        let mut f = FaultSet::new();
+        f.fail_node(2);
+        assert!(route_avoiding(&g, &f, 0, 2).is_unreachable());
+        assert!(route_avoiding(&g, &f, 2, 0).is_unreachable());
+        // Dead intermediate nodes are routed around.
+        match route_avoiding(&g, &f, 1, 3) {
+            RouteOutcome::Path(p) => assert_eq!(p, vec![1, 0, 3]),
+            RouteOutcome::Unreachable => panic!("1-0-3 survives"),
+        }
+    }
+
+    #[test]
+    fn cheapest_path_prices_link_kinds() {
+        // Triangle: 0-1-2 electrical, 0-2 optical.  With optical priced
+        // above two electrical hops the detour wins, and vice versa.
+        let mut g = Graph::with_nodes(3);
+        g.add_edge(0, 1, LinkKind::Electrical);
+        g.add_edge(1, 2, LinkKind::Electrical);
+        g.add_edge(0, 2, LinkKind::Optical);
+        let f = FaultSet::new();
+        let price_optics_high = |k: LinkKind| match k {
+            LinkKind::Electrical => 10,
+            LinkKind::Optical => 25,
+        };
+        let (p, c) = cheapest_path(&g, &f, 0, 2, price_optics_high).unwrap();
+        assert_eq!((p, c), (vec![0, 1, 2], 20));
+        let price_optics_low = |k: LinkKind| match k {
+            LinkKind::Electrical => 10,
+            LinkKind::Optical => 5,
+        };
+        let (p, c) = cheapest_path(&g, &f, 0, 2, price_optics_low).unwrap();
+        assert_eq!((p, c), (vec![0, 2], 5));
+        // Faults apply: kill the optical link and the detour is forced.
+        let mut f = FaultSet::new();
+        f.fail_link(0, 2);
+        let (p, c) = cheapest_path(&g, &f, 0, 2, price_optics_low).unwrap();
+        assert_eq!((p, c), (vec![0, 1, 2], 20));
+        f.fail_node(1);
+        assert!(cheapest_path(&g, &f, 0, 2, price_optics_low).is_none());
+    }
+
+    #[test]
+    fn detours_on_the_real_ohhc_are_valid() {
+        let net = Ohhc::new(2, Construction::HalfGroup).unwrap();
+        let g = net.graph();
+        let f = FaultSet::seeded_links(g, 200, 7);
+        for src in (0..net.total_processors()).step_by(11) {
+            for dst in (0..net.total_processors()).step_by(13) {
+                match route_avoiding(g, &f, src, dst) {
+                    RouteOutcome::Path(p) => {
+                        assert_eq!(p[0], src);
+                        assert_eq!(*p.last().unwrap(), dst);
+                        assert!(path_is_valid(g, &p));
+                        for w in p.windows(2) {
+                            assert!(f.allows(w[0], w[1]), "{src}->{dst} uses a dead hop");
+                        }
+                    }
+                    // seeded_links preserves connectivity.
+                    RouteOutcome::Unreachable => panic!("{src}->{dst} unreachable"),
+                }
+            }
+        }
+    }
+}

@@ -14,9 +14,13 @@
 //! * [`ring`], [`mesh`] — classic baselines for the ablation benches;
 //! * [`routing`] — deterministic routing (intra-cell, e-cube across cells,
 //!   one-hop optical across groups) validated against BFS shortest paths;
+//! * [`fault`] — per-node/per-link [`FaultSet`]s with seeded, nested,
+//!   connectivity-preserving generation, plus fault-aware detour routing
+//!   (hop-shortest and cost-cheapest) per Ghosh et al. (arXiv:1109.1706);
 //! * [`properties`] — degree / diameter / average-distance / link-census
 //!   reports.
 
+pub mod fault;
 pub mod graph;
 pub mod hhc;
 pub mod hypercube;
@@ -27,6 +31,7 @@ pub mod properties;
 pub mod ring;
 pub mod routing;
 
+pub use fault::{FaultSet, RouteOutcome};
 pub use graph::{Graph, LinkKind};
 pub use hhc::{hhc_graph, CELL_SIZE};
 pub use ohhc::{Addr, Ohhc};

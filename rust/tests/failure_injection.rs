@@ -1,15 +1,32 @@
-//! Failure injection: malformed configs, corrupted artifacts, and invalid
-//! simulator inputs must fail loudly with actionable errors — never
-//! silently produce wrong output.
+//! Failure injection, two layers deep.
+//!
+//! The original suite: malformed configs, corrupted artifacts, and
+//! invalid simulator inputs must fail loudly with actionable errors —
+//! never silently produce wrong output.
+//!
+//! The chaos suite (grown with the fault layer): seeded link and node
+//! failures with detour routing, worker panics with bounded retries,
+//! and the campaign's failure-rate axis.  The contract under chaos is
+//! the same at every layer: a job either completes with output
+//! checksum-identical to a healthy run, or fails explicitly — never a
+//! hang, a silent drop, or a quietly wrong answer.
 
-use ohhc_qsort::config::{Construction, ExperimentConfig};
+use ohhc_qsort::campaign::{Campaign, SweepSpec};
+use ohhc_qsort::config::{Backend, Construction, Distribution, ExperimentConfig, LinkModel};
 use ohhc_qsort::coordinator::{divide_native, OhhcSorter};
 use ohhc_qsort::dataplane::FlatBuckets;
+use ohhc_qsort::pipeline::{Engine, Session};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::schedule::gather_plan;
+use ohhc_qsort::service::{fnv1a, FaultPlan, JobSpec, ServiceConfig, SortService};
 use ohhc_qsort::sim::threaded::ThreadedSimulator;
+use ohhc_qsort::sort::quicksort;
+use ohhc_qsort::topology::fault::{cheapest_path, route_avoiding, FaultSet, RouteOutcome};
+use ohhc_qsort::topology::graph::{Graph, LinkKind};
 use ohhc_qsort::topology::ohhc::Ohhc;
+use ohhc_qsort::Error;
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("ohhc_fail_{name}"));
@@ -103,6 +120,271 @@ fn assemble_detects_payload_loss() {
         .run(buckets, 9999)
         .unwrap_err();
     assert!(err.to_string().contains("payload loss"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Chaos suite: injected faults in the topology, the pipeline, the
+// service, and the campaign.
+// ---------------------------------------------------------------------
+
+/// Independent reachability check on the surviving subgraph — the
+/// oracle `route_avoiding` is tested against.
+fn reachable(g: &Graph, faults: &FaultSet, src: usize, dst: usize) -> bool {
+    if faults.is_node_failed(src) || faults.is_node_failed(dst) {
+        return false;
+    }
+    let mut seen = vec![false; g.len()];
+    let mut stack = vec![src];
+    seen[src] = true;
+    while let Some(u) = stack.pop() {
+        if u == dst {
+            return true;
+        }
+        for &(v, _) in g.neighbors(u) {
+            if !seen[v] && faults.allows(u, v) {
+                seen[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    false
+}
+
+/// The per-hop price the DES charges (electrical cheap, optical dear);
+/// exact magnitudes don't matter for the property, only that the path
+/// cost reported by `cheapest_path` is the sum of its hops' prices.
+fn hop_price(kind: LinkKind) -> u64 {
+    match kind {
+        LinkKind::Electrical => 10,
+        LinkKind::Optical => 25,
+    }
+}
+
+/// Property: for **every** single-link failure at d = 1..3, the severed
+/// pair (and a sample of other pairs) either routes over a valid detour
+/// that avoids the failure, or is `Unreachable` exactly when the
+/// failure partitions the pair.  Detour costs are the sum of the real
+/// per-kind hop prices and never undercut the healthy route.
+#[test]
+fn every_single_link_failure_detours_or_partitions_honestly() {
+    for d in 1..=3u32 {
+        let net = Ohhc::new(d, Construction::FullGroup).unwrap();
+        let g = net.graph();
+        let n = net.total_processors();
+        // Sample a few witness pairs beyond the severed one.
+        let pair_step = (n / 6).max(1);
+        let mut edges = Vec::new();
+        for u in 0..g.len() {
+            for &(v, _) in g.neighbors(u) {
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        for &(u, v) in &edges {
+            let mut f = FaultSet::new();
+            f.fail_link(u, v);
+            let mut pairs = vec![(u, v)];
+            pairs.extend((0..n).step_by(pair_step).map(|s| (s, (s + n / 2) % n)));
+            for (src, dst) in pairs {
+                match route_avoiding(g, &f, src, dst) {
+                    RouteOutcome::Path(p) => {
+                        assert_eq!(p[0], src, "d={d} ({u},{v})");
+                        assert_eq!(*p.last().unwrap(), dst, "d={d} ({u},{v})");
+                        for w in p.windows(2) {
+                            assert!(
+                                g.edge_kind(w[0], w[1]).is_some(),
+                                "d={d}: {}→{} is not an edge",
+                                w[0],
+                                w[1]
+                            );
+                            assert!(f.allows(w[0], w[1]), "d={d}: route uses dead ({u},{v})");
+                        }
+                        // Cost accounting matches the DES: reported cost
+                        // is the per-kind sum, and a detour is never
+                        // cheaper than the healthy min-cost route.
+                        let (cp, cost) = cheapest_path(g, &f, src, dst, hop_price).unwrap();
+                        let summed: u64 = cp
+                            .windows(2)
+                            .map(|w| hop_price(g.edge_kind(w[0], w[1]).unwrap()))
+                            .sum();
+                        assert_eq!(cost, summed, "d={d} ({src},{dst})");
+                        let (_, healthy) =
+                            cheapest_path(g, &FaultSet::new(), src, dst, hop_price).unwrap();
+                        assert!(cost >= healthy, "d={d}: detour undercut the healthy route");
+                    }
+                    RouteOutcome::Unreachable => {
+                        assert!(
+                            !reachable(g, &f, src, dst),
+                            "d={d}: ({u},{v}) down but {src}→{dst} is reachable"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// All three pipeline engines surface a dead processor as
+/// [`Error::Stage`] naming the node — not a wrong answer, not a hang.
+#[test]
+fn every_engine_surfaces_stage_errors_for_dead_processors() {
+    let net = Ohhc::new(1, Construction::FullGroup).unwrap();
+    let plans = gather_plan(&net);
+    let data: Vec<i32> = (0..4000).map(|x| 4000 - x).collect();
+    let mut faults = FaultSet::new();
+    faults.fail_node(5);
+    let engines = [
+        Engine::Pooled,
+        Engine::DirectThreads,
+        Engine::DiscreteEvent {
+            link: LinkModel::default(),
+        },
+    ];
+    for engine in engines {
+        let err = Session::single(&net, &plans, &data)
+            .with_engine(engine)
+            .with_faults(&faults)
+            .divide()
+            .and_then(|s| s.local_sort())
+            .and_then(|s| s.gather())
+            .map(|_| ())
+            .unwrap_err();
+        assert!(matches!(err, Error::Stage(_)), "{err}");
+        assert!(err.to_string().contains("processor 5"), "{err}");
+    }
+}
+
+fn chaos_spec(id: u64, dimension: u32, elements: usize) -> JobSpec {
+    JobSpec {
+        id,
+        distribution: Distribution::Random,
+        elements,
+        seed: 9_000 + id,
+        dimension,
+        construction: Construction::FullGroup,
+        deadline: None,
+    }
+}
+
+/// A seeded single-node-failure plan at d = 1..3: the dead processor is
+/// in every gather tree, so **every** job must fail explicitly once its
+/// retry budget exhausts — and none may hang or vanish.
+#[test]
+fn dead_node_fault_plans_fail_every_job_explicitly_d1_to_d3() {
+    for dim in 1..=3u32 {
+        let service = SortService::start(ServiceConfig {
+            workers: 2,
+            faults: FaultPlan {
+                node_failures: 1,
+                ..FaultPlan::none()
+            },
+            retry_budget: 1,
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..4)
+            .map(|id| {
+                service
+                    .submit(chaos_spec(id, dim, 6_000))
+                    .ticket()
+                    .expect("accepted")
+            })
+            .collect();
+        for t in &tickets {
+            let r = t
+                .wait_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|| panic!("d={dim}: job {} silently dropped", t.id()));
+            let msg = r.error.unwrap_or_else(|| {
+                panic!("d={dim}: job {} completed on a dead processor", r.id)
+            });
+            assert!(msg.contains("node failed"), "d={dim}: {msg}");
+            assert!(msg.contains("exhausted"), "d={dim}: {msg}");
+        }
+        let (snap, rest) = service.shutdown();
+        assert!(rest.is_empty(), "d={dim}: results escaped their tickets");
+        assert_eq!(snap.failed, 4, "d={dim}");
+        assert_eq!(snap.retries_exhausted, 4, "d={dim}");
+    }
+}
+
+/// Mixed chaos — worker panics and link failures together, across
+/// dimensions.  Link faults are connectivity-preserving, so the only
+/// legal outcomes are a verified completion (checksum-identical to an
+/// independent sequential sort of the same seeded input) or an explicit
+/// budget-exhausted failure.
+#[test]
+fn mixed_chaos_jobs_complete_checksum_identical_or_fail_explicitly() {
+    let service = SortService::start(ServiceConfig {
+        workers: 3,
+        faults: FaultPlan {
+            worker_panic_rate: 0.3,
+            link_fail_permille: 200,
+            ..FaultPlan::none()
+        },
+        retry_budget: 5,
+        ..Default::default()
+    });
+    let dims = [1u32, 2, 1, 3, 1, 2, 1, 1, 2, 1];
+    let tickets: Vec<_> = dims
+        .iter()
+        .enumerate()
+        .map(|(id, &dim)| {
+            service
+                .submit(chaos_spec(id as u64, dim, 6_000))
+                .ticket()
+                .expect("accepted")
+        })
+        .collect();
+    let mut completed = 0usize;
+    for t in &tickets {
+        let r = t
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("job {} silently dropped", t.id()));
+        match r.error {
+            Some(msg) => assert!(msg.contains("exhausted"), "{msg}"),
+            None => {
+                assert!(r.sorted_ok, "job {} unverified", r.id);
+                let mut expect = chaos_spec(r.id, dims[r.id as usize], 6_000).generate();
+                quicksort(&mut expect);
+                assert_eq!(r.checksum, fnv1a(&expect), "job {} corrupted", r.id);
+                completed += 1;
+            }
+        }
+    }
+    let (snap, _) = service.shutdown();
+    assert!(completed > 0, "rate 0.3 with budget 5 must complete jobs");
+    assert_eq!(snap.completed as usize + snap.failed as usize, dims.len());
+}
+
+/// The campaign's failure-rate axis: nested seeded fault sets make DES
+/// degradation monotone in the rate, and the aggregated report exposes
+/// the curve.
+#[test]
+fn campaign_failure_axis_builds_a_monotone_degradation_curve() {
+    let spec = SweepSpec {
+        dimensions: vec![1],
+        constructions: vec![Construction::FullGroup],
+        distributions: vec![Distribution::Random],
+        sizes: vec![9_000],
+        backends: vec![Backend::DiscreteEvent],
+        fault_permille: vec![0, 150, 400],
+        workers: 4,
+        jobs: 1,
+        ..Default::default()
+    };
+    let report = Campaign::new(spec).run().unwrap();
+    assert_eq!(report.completed(), 3);
+    let mut cells = report.cells.clone();
+    cells.sort_by_key(|c| c.fault_permille);
+    let ns: Vec<f64> = cells.iter().map(|c| c.des_completion_ns.unwrap()).collect();
+    assert!(ns[0] <= ns[1] && ns[1] <= ns[2], "not monotone: {ns:?}");
+    assert_eq!(cells[0].detours, 0);
+    assert!(cells[2].detours > 0, "400‰ must cut some tree edge");
+    let curve = report.per_fault_rate();
+    assert_eq!(
+        curve.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
+        vec![0, 150, 400]
+    );
 }
 
 #[test]
