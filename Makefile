@@ -37,13 +37,15 @@ bench:
 # vs legacy nested, EXPERIMENTS.md §Perf), the service offered-load
 # levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), the
 # persistent-executor small-array / fan-out medians (pooled vs scoped
-# spawn, EXPERIMENTS.md §Perf), and the typestate-session vs monolithic
-# pipeline medians (EXPERIMENTS.md §Perf).
+# spawn, EXPERIMENTS.md §Perf), the typestate-session vs monolithic
+# pipeline medians (EXPERIMENTS.md §Perf), and the divide-strategy ×
+# distribution robustness grid (EXPERIMENTS.md §Adversarial).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
 	cd rust && OHHC_BENCH_JSON=../BENCH_executor.json $(CARGO) bench --bench executor
 	cd rust && OHHC_BENCH_JSON=../BENCH_pipeline.json $(CARGO) bench --bench pipeline
+	cd rust && OHHC_BENCH_JSON=../BENCH_divide.json $(CARGO) bench --bench divide
 
 # API docs gate: every public item documented, every intra-doc link
 # resolving, and every doc example (including the pipeline typestate

@@ -1,13 +1,20 @@
 //! Bench: the array-division hot path (paper §3.1) — native rust vs the
-//! XLA AOT artifact (L1 Pallas partition kernel via PJRT).
+//! XLA AOT artifact (L1 Pallas partition kernel via PJRT), plus the
+//! divide-strategy × distribution robustness grid.
 //!
 //! This is the §Perf focus bench: the divide runs once per sort but
-//! touches every key twice (min/max + bucket scatter).
+//! touches every key twice (min/max + bucket scatter).  The strategy
+//! grid prices the sampling hardening: what `RegularSampling` and
+//! `Adaptive` cost over `PaperFixed` on friendly inputs, and what they
+//! buy (bounded imbalance) on hostile ones.  `make bench-json` runs it
+//! and writes `BENCH_divide.json` (median ns + imbalance + re-divides
+//! per cell) — tracked alongside `BENCH_dataplane.json` in CI.
 
-use ohhc_qsort::config::DivideEngine;
-use ohhc_qsort::coordinator::{divide_native, divide_with_engine};
+use ohhc_qsort::config::{Distribution, DivideEngine, DivideStrategy};
+use ohhc_qsort::coordinator::{divide_native, divide_with_engine, divide_with_strategy};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::util::bench::Bench;
+use ohhc_qsort::util::json::Json;
 use ohhc_qsort::workload;
 use std::path::Path;
 
@@ -49,4 +56,43 @@ fn main() {
         (lo, hi)
     });
     b.run("phase/full-divide", || divide_native(&data, 576).unwrap());
+
+    println!("\n== divide: strategy x distribution grid (n=2^20, p=576)");
+    let n = 1usize << 20;
+    let p = 576usize;
+    let grid_dists = [
+        Distribution::Random,
+        Distribution::Sorted,
+        Distribution::Zipf,
+        Distribution::AntiPivot,
+    ];
+    let mut cells = Vec::new();
+    for dist in grid_dists {
+        let data = workload::generate(dist, n, 3);
+        for strategy in DivideStrategy::ALL {
+            let r = b.run(&format!("{}/{}", strategy.label(), dist.label()), || {
+                divide_with_strategy(&data, p, strategy, DivideEngine::Native, None).unwrap()
+            });
+            let (divided, redivides) =
+                divide_with_strategy(&data, p, strategy, DivideEngine::Native, None).unwrap();
+            cells.push(Json::obj([
+                ("distribution", Json::str(dist.label())),
+                ("imbalance", Json::num(divided.imbalance())),
+                ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                ("skew_redivides", Json::int(redivides as usize)),
+                ("strategy", Json::str(strategy.label())),
+            ]));
+        }
+    }
+
+    let doc = Json::obj([
+        ("elements", Json::int(n)),
+        ("grid", Json::arr(cells)),
+        ("processors", Json::int(p)),
+    ]);
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_divide.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_divide.json");
+    println!("\nstrategy grid → {out}");
 }

@@ -34,5 +34,5 @@ mod spec;
 
 pub use cache::{BaselineCache, BundleLease, PlanCache, WorkloadBaseline};
 pub use engine::Campaign;
-pub use report::{CampaignReport, CellReport, CellStatus};
+pub use report::{CampaignReport, CellReport, CellStatus, StrategySummary};
 pub use spec::{GridCell, SweepSpec};

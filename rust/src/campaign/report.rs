@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::campaign::spec::{GridCell, SweepSpec};
-use crate::config::{Backend, Construction, Distribution};
+use crate::config::{Backend, Construction, Distribution, DivideStrategy};
 use crate::coordinator::SortReport;
 use crate::error::Result;
 use crate::metrics::{write_csv_rows, Histogram, Summary};
@@ -57,6 +57,8 @@ pub struct CellReport {
     pub distribution: Distribution,
     /// Simulation backend.
     pub backend: Backend,
+    /// Divide strategy the cell ran with.
+    pub strategy: DivideStrategy,
     /// Keys sorted.
     pub elements: usize,
     /// Injected link-failure rate (per-mille; 0 = healthy).
@@ -87,6 +89,8 @@ pub struct CellReport {
     pub efficiency: f64,
     /// Division load-imbalance factor.
     pub imbalance: f64,
+    /// Skew-guardrail re-divides the divide performed (adaptive only).
+    pub skew_redivides: u32,
     /// Summed local-sort counters.
     pub counters: SortCounters,
     /// DES virtual completion (ns), DES backend only.
@@ -104,6 +108,7 @@ impl CellReport {
             construction: cell.construction,
             distribution: cell.distribution,
             backend: cell.backend,
+            strategy: cell.strategy,
             elements: cell.elements,
             fault_permille: cell.fault_permille,
             status,
@@ -119,6 +124,7 @@ impl CellReport {
             speedup_pct: 0.0,
             efficiency: 0.0,
             imbalance: 0.0,
+            skew_redivides: 0,
             counters: SortCounters::default(),
             des_completion_ns: None,
             des_steps: None,
@@ -156,6 +162,7 @@ impl CellReport {
             construction: cell.construction,
             distribution: cell.distribution,
             backend: cell.backend,
+            strategy: cell.strategy,
             elements: cell.elements,
             fault_permille: cell.fault_permille,
             status: CellStatus::Completed,
@@ -171,6 +178,7 @@ impl CellReport {
             speedup_pct: (seq_secs - par_secs) / seq_secs * 100.0,
             efficiency: seq_secs / (first.processors as f64 * par_secs),
             imbalance: first.imbalance,
+            skew_redivides: first.skew_redivides,
             counters: first.counters,
             des_completion_ns: first.des_completion_ns,
             des_steps: first.des_steps,
@@ -180,7 +188,7 @@ impl CellReport {
 
     /// Grid coordinates as a stable string key.
     pub fn key(&self) -> String {
-        let base = format!(
+        let mut base = format!(
             "d={}/{}/{}/{}/{}",
             self.dimension,
             self.construction.label(),
@@ -188,6 +196,10 @@ impl CellReport {
             self.elements,
             self.backend.label()
         );
+        if self.strategy != DivideStrategy::PaperFixed {
+            base.push('/');
+            base.push_str(self.strategy.label());
+        }
         if self.fault_permille > 0 {
             format!("{base}/f{}", self.fault_permille)
         } else {
@@ -226,7 +238,9 @@ impl CellReport {
             ("fault_permille", Json::int(self.fault_permille as usize)),
             ("imbalance", Json::num(self.imbalance)),
             ("processors", Json::int(self.processors)),
+            ("skew_redivides", Json::int(self.skew_redivides as usize)),
             ("status", Json::str(self.status.label())),
+            ("strategy", Json::str(self.strategy.label())),
         ]);
         match obj {
             Json::Obj(m) => m,
@@ -262,9 +276,9 @@ impl CellReport {
 
     /// CSV header matching [`CellReport::csv_row`].
     pub const CSV_HEADER: &str = "dimension,construction,distribution,backend,elements,\
-         fault_permille,processors,status,seq_secs,par_secs,divide_secs,speedup,speedup_pct,\
-         efficiency,imbalance,recursions,iterations,swaps,comparisons,des_completion_ns,\
-         des_elec_steps,des_opt_steps,detours";
+         fault_permille,strategy,processors,status,seq_secs,par_secs,divide_secs,speedup,\
+         speedup_pct,efficiency,imbalance,skew_redivides,recursions,iterations,swaps,\
+         comparisons,des_completion_ns,des_elec_steps,des_opt_steps,detours";
 
     /// One CSV row per cell.
     pub fn csv_row(&self) -> String {
@@ -273,13 +287,14 @@ impl CellReport {
             _ => (String::new(), String::new(), String::new()),
         };
         format!(
-            "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{},{},{}",
             self.dimension,
             self.construction.label(),
             self.distribution.label(),
             self.backend.label(),
             self.elements,
             self.fault_permille,
+            self.strategy.label(),
             self.processors,
             self.status.label(),
             self.seq_secs,
@@ -289,6 +304,7 @@ impl CellReport {
             self.speedup_pct,
             self.efficiency,
             self.imbalance,
+            self.skew_redivides,
             self.counters.recursion_calls,
             self.counters.iterations,
             self.counters.swaps,
@@ -299,6 +315,23 @@ impl CellReport {
             self.detours
         )
     }
+}
+
+/// Per-strategy aggregates for the robustness table.
+#[derive(Debug, Clone)]
+pub struct StrategySummary {
+    /// The divide strategy.
+    pub strategy: DivideStrategy,
+    /// Speedup statistics over completed cells.
+    pub speedup: Summary,
+    /// Divide load-imbalance statistics over completed cells — the
+    /// skew-guardrail witness (`max` is the bound the adversarial CI
+    /// smoke asserts on).
+    pub imbalance: Summary,
+    /// Parallel wall-time statistics (s) over completed cells.
+    pub par_secs: Summary,
+    /// Total skew-guardrail re-divides across those cells.
+    pub skew_redivides: u64,
 }
 
 /// The aggregated outcome of one campaign invocation.
@@ -390,6 +423,37 @@ impl CampaignReport {
             .collect()
     }
 
+    /// The robustness table: speedup, divide imbalance, and parallel
+    /// wall-time statistics of completed cells per divide strategy, in
+    /// [`DivideStrategy::ALL`] order.  One entry when the campaign ran
+    /// the paper's fixed divide only; strategies with no completed
+    /// cells are omitted.
+    pub fn per_strategy(&self) -> Vec<StrategySummary> {
+        DivideStrategy::ALL
+            .into_iter()
+            .filter_map(|strategy| {
+                let done: Vec<&CellReport> = self
+                    .cells
+                    .iter()
+                    .filter(|c| c.strategy == strategy && c.status.is_completed())
+                    .collect();
+                if done.is_empty() {
+                    return None;
+                }
+                let speedups: Vec<f64> = done.iter().map(|c| c.speedup).collect();
+                let imbalances: Vec<f64> = done.iter().map(|c| c.imbalance).collect();
+                let pars: Vec<f64> = done.iter().map(|c| c.par_secs).collect();
+                Some(StrategySummary {
+                    strategy,
+                    speedup: Summary::of(&speedups),
+                    imbalance: Summary::of(&imbalances),
+                    par_secs: Summary::of(&pars),
+                    skew_redivides: done.iter().map(|c| c.skew_redivides as u64).sum(),
+                })
+            })
+            .collect()
+    }
+
     /// Median wall time per pipeline stage across completed cells, as
     /// `(classify, scatter, local_sort, gather)` seconds — sourced from
     /// every cell's session [`StageTrace`](crate::pipeline::StageTrace).
@@ -446,6 +510,16 @@ impl CampaignReport {
                 ("min_speedup", Json::num(s.min)),
             ])
         });
+        let per_strategy = self.per_strategy().into_iter().map(|s| {
+            Json::obj([
+                ("max_imbalance", Json::num(s.imbalance.max)),
+                ("median_imbalance", Json::num(s.imbalance.median)),
+                ("median_par_secs", Json::num(s.par_secs.median)),
+                ("median_speedup", Json::num(s.speedup.median)),
+                ("skew_redivides", Json::int(s.skew_redivides as usize)),
+                ("strategy", Json::str(s.strategy.label())),
+            ])
+        });
         let lat = self.parallel_latency();
         let latency = Json::obj([
             ("count", Json::int(lat.count() as usize)),
@@ -476,6 +550,7 @@ impl CampaignReport {
                     ("parallel_latency", latency),
                     ("per_dimension", Json::arr(per_dim)),
                     ("per_fault_rate", Json::arr(per_fault)),
+                    ("per_strategy", Json::arr(per_strategy)),
                     ("planned", Json::int(self.cells.len())),
                     ("skipped", Json::int(self.skipped())),
                     ("stage_medians", stage_medians),
@@ -552,6 +627,22 @@ impl CampaignReport {
                 ));
             }
         }
+        let strategies = self.per_strategy();
+        if strategies.len() > 1 {
+            out.push_str("divide strategies (completed cells):\n");
+            for s in strategies {
+                out.push_str(&format!(
+                    "  {:>8}: speedup {:.3}x, imbalance median {:.2}x max {:.2}x, \
+                     {} re-divides over {} cells\n",
+                    s.strategy.label(),
+                    s.speedup.median,
+                    s.imbalance.median,
+                    s.imbalance.max,
+                    s.skew_redivides,
+                    s.speedup.n
+                ));
+            }
+        }
         out
     }
 }
@@ -567,6 +658,7 @@ mod tests {
             distribution: Distribution::Random,
             elements: 36_000,
             backend: Backend::DiscreteEvent,
+            strategy: DivideStrategy::PaperFixed,
             fault_permille: 0,
         }
     }
@@ -721,6 +813,58 @@ mod tests {
         assert_eq!(per_fault.len(), 2);
         assert_eq!(per_fault[1].get("fault_permille").unwrap().as_usize(), Some(400));
         assert!(report.summary_text().contains("degradation curve"));
+    }
+
+    #[test]
+    fn strategy_axis_builds_the_robustness_table() {
+        // A paper-fixed cell collapsed by an attack vs. a sampling cell
+        // that held the guardrail, plus an adaptive cell that paid one
+        // re-divide: the per-strategy table must separate all three.
+        let mut attacked = completed_report();
+        attacked.imbalance = 30.0;
+        attacked.speedup = 1.1;
+        let mut sampled = completed_report();
+        sampled.strategy = DivideStrategy::RegularSampling;
+        sampled.imbalance = 1.3;
+        let mut adaptive = completed_report();
+        adaptive.strategy = DivideStrategy::Adaptive;
+        adaptive.imbalance = 1.4;
+        adaptive.skew_redivides = 1;
+        assert_ne!(attacked.key(), sampled.key(), "strategy is a grid coordinate");
+        assert!(sampled.key().ends_with("/sampling"));
+        assert_ne!(attacked.fingerprint(), adaptive.fingerprint());
+        let j = adaptive.to_json();
+        assert_eq!(j.get("strategy").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(j.get("skew_redivides").unwrap().as_usize(), Some(1));
+        let report = CampaignReport {
+            spec: SweepSpec::default(),
+            cells: vec![attacked, sampled, adaptive],
+            topology_builds: 1,
+            cache_hits: 0,
+            baseline_measures: 1,
+            baseline_hits: 0,
+            wall_secs: 0.1,
+        };
+        let table = report.per_strategy();
+        assert_eq!(table.len(), 3, "one row per strategy, in ALL order");
+        assert_eq!(table[0].strategy, DivideStrategy::PaperFixed);
+        assert_eq!(table[0].imbalance.max, 30.0);
+        assert!(table[1].imbalance.max <= 2.0, "sampling held the guardrail");
+        assert_eq!(table[2].skew_redivides, 1);
+        let j = report.to_json();
+        let per_strategy = j
+            .get("summary")
+            .unwrap()
+            .get("per_strategy")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(per_strategy.len(), 3);
+        assert_eq!(per_strategy[1].get("strategy").unwrap().as_str(), Some("sampling"));
+        assert_eq!(per_strategy[0].get("max_imbalance").unwrap().as_f64(), Some(30.0));
+        assert_eq!(per_strategy[2].get("skew_redivides").unwrap().as_usize(), Some(1));
+        assert!(report.summary_text().contains("divide strategies"));
+        assert!(report.summary_text().contains("sampling"));
     }
 
     #[test]

@@ -3,7 +3,9 @@
 use std::collections::HashSet;
 use std::path::Path;
 
-use crate::config::{Backend, Construction, Distribution, ExperimentConfig, LinkModel};
+use crate::config::{
+    Backend, Construction, Distribution, DivideStrategy, ExperimentConfig, LinkModel,
+};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 use crate::util::par;
@@ -21,6 +23,8 @@ pub struct GridCell {
     pub elements: usize,
     /// Simulation backend.
     pub backend: Backend,
+    /// How the divide picks bucket boundaries.
+    pub strategy: DivideStrategy,
     /// Link failures injected into the run, in per-mille of the
     /// topology's links (0 = healthy network).
     pub fault_permille: u32,
@@ -29,7 +33,7 @@ pub struct GridCell {
 impl GridCell {
     /// Short identifier used in progress lines and error messages.
     pub fn label(&self) -> String {
-        let base = format!(
+        let mut base = format!(
             "d={}/{}/{}/{}k/{}",
             self.dimension,
             self.construction.label(),
@@ -37,6 +41,10 @@ impl GridCell {
             self.elements / 1000,
             self.backend.label()
         );
+        if self.strategy != DivideStrategy::PaperFixed {
+            base.push('/');
+            base.push_str(self.strategy.label());
+        }
         if self.fault_permille > 0 {
             format!("{base}/f{}", self.fault_permille)
         } else {
@@ -53,6 +61,7 @@ impl GridCell {
             elements: self.elements,
             seed: spec.seed,
             backend: self.backend,
+            divide_strategy: self.strategy,
             link_model: spec.link_model,
             workers: spec.workers,
             repetitions: spec.repetitions,
@@ -74,6 +83,10 @@ pub struct SweepSpec {
     pub sizes: Vec<usize>,
     /// Simulation backends to sweep.
     pub backends: Vec<Backend>,
+    /// Divide strategies to sweep (`[PaperFixed]` = the paper's fixed
+    /// step points only; add `sampling`/`adaptive` to measure the skew
+    /// guardrail against adversarial distributions).
+    pub strategies: Vec<DivideStrategy>,
     /// Link-failure rates to sweep, in per-mille of the topology's
     /// links (`[0]` = healthy only).  Nonzero rates build a seeded
     /// connectivity-preserving [`FaultSet`](crate::topology::FaultSet)
@@ -100,6 +113,7 @@ impl Default for SweepSpec {
             distributions: Distribution::ALL.to_vec(),
             sizes: ExperimentConfig::paper_sizes(0.1),
             backends: vec![Backend::Threaded],
+            strategies: vec![DivideStrategy::PaperFixed],
             fault_permille: vec![0],
             seed: 0x0511_C0DE,
             repetitions: 1,
@@ -156,6 +170,11 @@ impl SweepSpec {
         parse_list(s, "backend", Backend::parse)
     }
 
+    /// Parse a `--divide-strategies` style list (`paper,sampling,adaptive`).
+    pub fn parse_strategies(s: &str) -> Result<Vec<DivideStrategy>> {
+        parse_list(s, "divide strategy", DivideStrategy::parse)
+    }
+
     /// Parse a `--fault-rates` style list of per-mille link-failure
     /// rates (`0,100,400`).
     pub fn parse_fault_rates(s: &str) -> Result<Vec<u32>> {
@@ -196,6 +215,7 @@ impl SweepSpec {
                 }
                 "sizes" => spec.sizes = Self::parse_sizes(value).map_err(bad)?,
                 "backends" => spec.backends = Self::parse_backends(value).map_err(bad)?,
+                "strategies" => spec.strategies = Self::parse_strategies(value).map_err(bad)?,
                 "fault_rates" => {
                     spec.fault_permille = Self::parse_fault_rates(value).map_err(bad)?
                 }
@@ -239,6 +259,7 @@ impl SweepSpec {
             ("distributions", self.distributions.is_empty()),
             ("sizes", self.sizes.is_empty()),
             ("backends", self.backends.is_empty()),
+            ("divide strategies", self.strategies.is_empty()),
             ("fault rates", self.fault_permille.is_empty()),
         ] {
             if empty {
@@ -265,17 +286,20 @@ impl SweepSpec {
                 for &distribution in &self.distributions {
                     for &elements in &self.sizes {
                         for &backend in &self.backends {
-                            for &fault_permille in &self.fault_permille {
-                                let cell = GridCell {
-                                    dimension,
-                                    construction,
-                                    distribution,
-                                    elements,
-                                    backend,
-                                    fault_permille,
-                                };
-                                if seen.insert(cell) {
-                                    cells.push(cell);
+                            for &strategy in &self.strategies {
+                                for &fault_permille in &self.fault_permille {
+                                    let cell = GridCell {
+                                        dimension,
+                                        construction,
+                                        distribution,
+                                        elements,
+                                        backend,
+                                        strategy,
+                                        fault_permille,
+                                    };
+                                    if seen.insert(cell) {
+                                        cells.push(cell);
+                                    }
                                 }
                             }
                         }
@@ -315,6 +339,10 @@ impl SweepSpec {
             // precision through the f64-backed Json numbers.
             ("seed", Json::str(self.seed.to_string())),
             ("sizes", Json::arr(self.sizes.iter().map(|&n| Json::int(n)))),
+            (
+                "strategies",
+                Json::arr(self.strategies.iter().map(|s| Json::str(s.label()))),
+            ),
             ("workers", Json::int(self.workers)),
         ])
     }
@@ -352,6 +380,7 @@ mod tests {
                             distribution: dist,
                             elements: n,
                             backend: b,
+                            strategy: DivideStrategy::PaperFixed,
                             fault_permille: 0,
                         };
                         assert!(set.contains(&cell), "{}", cell.label());
@@ -409,6 +438,44 @@ mod tests {
         spec.fault_permille = vec![2000];
         assert!(spec.expand().is_err());
         spec.fault_permille.clear();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn strategy_axis_expands_between_backend_and_fault_rate() {
+        let mut spec = tiny();
+        spec.strategies = vec![
+            DivideStrategy::PaperFixed,
+            DivideStrategy::RegularSampling,
+            DivideStrategy::Adaptive,
+        ];
+        spec.fault_permille = vec![0, 200];
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 16 * 3 * 2, "strategy axis multiplies the grid");
+        // Fault rate stays innermost; strategy walks just outside it.
+        assert_eq!(cells[0].strategy, DivideStrategy::PaperFixed);
+        assert_eq!(cells[0].fault_permille, 0);
+        assert_eq!(cells[1].fault_permille, 200);
+        assert_eq!(cells[2].strategy, DivideStrategy::RegularSampling);
+        assert_eq!(cells[0].backend, cells[4].backend);
+        // Labels: the paper default keeps the old label, others tag it.
+        assert!(!cells[0].label().contains("sampling"));
+        assert!(cells[2].label().contains("/sampling"), "{}", cells[2].label());
+        assert!(cells[5].label().ends_with("/adaptive/f200"), "{}", cells[5].label());
+        // The strategy reaches the cell's experiment config.
+        assert_eq!(cells[2].config(&spec).divide_strategy, DivideStrategy::RegularSampling);
+        // Parser grammar + JSON echo.
+        assert_eq!(
+            SweepSpec::parse_strategies("paper, sampling,adaptive").unwrap(),
+            DivideStrategy::ALL.to_vec()
+        );
+        assert!(SweepSpec::parse_strategies("paper,nope").is_err());
+        let j = spec.to_json();
+        assert_eq!(
+            j.get("strategies").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("sampling")
+        );
+        spec.strategies.clear();
         assert!(spec.expand().is_err());
     }
 

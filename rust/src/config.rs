@@ -46,7 +46,9 @@ impl Construction {
     }
 }
 
-/// Input distribution (paper §5: random, sorted, reverse sorted, local).
+/// Input distribution: the paper's four (§5: random, sorted, reverse
+/// sorted, local) plus the adversarial suite (skewed and attack inputs
+/// for the divide-strategy robustness work).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Distribution {
     /// Uniform random keys.
@@ -58,15 +60,36 @@ pub enum Distribution {
     /// The paper's "local distribution": values clustered around their
     /// position so each region of the array spans a narrow value band.
     Local,
+    /// Ascending then descending ramp (organ pipe) — classic quicksort
+    /// stressor.
+    OrganPipe,
+    /// Only a handful of distinct values, so buckets tie-break hard.
+    FewUniques,
+    /// Zipf-distributed ranks (fixed exponent s ≈ 1.2): heavy head,
+    /// long tail — the shape of real-world key popularity.
+    Zipf,
+    /// Adversarial: constructed to dump every key but one into bucket 0
+    /// under the paper's fixed step-point divide rule.
+    AntiPivot,
 }
 
 impl Distribution {
-    /// All four distributions in the paper's presentation order.
+    /// The paper's four distributions in its presentation order (drives
+    /// every paper-faithful sweep, figure, and default grid — the
+    /// adversarial variants are deliberately excluded).
     pub const ALL: [Distribution; 4] = [
         Distribution::Random,
         Distribution::Sorted,
         Distribution::ReverseSorted,
         Distribution::Local,
+    ];
+
+    /// The adversarial suite, mildest to nastiest.
+    pub const ADVERSARIAL: [Distribution; 4] = [
+        Distribution::OrganPipe,
+        Distribution::FewUniques,
+        Distribution::Zipf,
+        Distribution::AntiPivot,
     ];
 
     /// Label used in figures / CSV.
@@ -76,17 +99,69 @@ impl Distribution {
             Distribution::Sorted => "sorted",
             Distribution::ReverseSorted => "reverse_sorted",
             Distribution::Local => "local",
+            Distribution::OrganPipe => "organ_pipe",
+            Distribution::FewUniques => "few_uniques",
+            Distribution::Zipf => "zipf",
+            Distribution::AntiPivot => "anti_pivot",
+        }
+    }
+
+    /// Parse from config text (delegates to the one shared registry,
+    /// [`crate::workload::parse`], so every caller accepts the same
+    /// names and reports the same error).
+    pub fn parse(s: &str) -> Result<Self> {
+        crate::workload::parse(s)
+    }
+}
+
+/// How the divide stage picks bucket boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DivideStrategy {
+    /// The paper's fixed step-point rule (§3.1) — the default, so every
+    /// paper-faithful number is unchanged. Vulnerable to skew: an
+    /// adversarial input can land nearly all keys in one bucket.
+    PaperFixed,
+    /// Regular sampling (PSRS-style): a sorted p·(p−1) sample yields
+    /// p−1 splitters, bounding max bucket size ≤ 2× ideal on any input.
+    RegularSampling,
+    /// Run [`DivideStrategy::PaperFixed`] first; if the measured
+    /// imbalance breaches the skew guardrail, re-divide with sampled
+    /// splitters (counted as a `skew_redivides` stat).
+    Adaptive,
+}
+
+impl DivideStrategy {
+    /// All strategies, paper-faithful first.
+    pub const ALL: [DivideStrategy; 3] = [
+        DivideStrategy::PaperFixed,
+        DivideStrategy::RegularSampling,
+        DivideStrategy::Adaptive,
+    ];
+
+    /// Imbalance guardrail for [`DivideStrategy::Adaptive`]: re-divide
+    /// when max bucket exceeds this multiple of ideal.  Sampling
+    /// guarantees ≤ 2×, so any breach beyond 4× signals a divide the
+    /// sampled splitters will beat decisively.
+    pub const SKEW_GUARDRAIL: f64 = 4.0;
+
+    /// Label used in campaign reports / CSV.
+    pub fn label(self) -> &'static str {
+        match self {
+            DivideStrategy::PaperFixed => "paper",
+            DivideStrategy::RegularSampling => "sampling",
+            DivideStrategy::Adaptive => "adaptive",
         }
     }
 
     /// Parse from config text.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
-            "random" => Ok(Distribution::Random),
-            "sorted" => Ok(Distribution::Sorted),
-            "reverse_sorted" | "reversed" | "reverse" => Ok(Distribution::ReverseSorted),
-            "local" => Ok(Distribution::Local),
-            other => Err(Error::Config(format!("unknown distribution `{other}`"))),
+            "paper" | "fixed" | "paper_fixed" => Ok(DivideStrategy::PaperFixed),
+            "sampling" | "sampled" | "regular_sampling" => Ok(DivideStrategy::RegularSampling),
+            "adaptive" => Ok(DivideStrategy::Adaptive),
+            other => Err(Error::Config(format!(
+                "unknown divide strategy `{other}` (valid: paper, sampling, adaptive)"
+            ))),
         }
     }
 }
@@ -190,6 +265,9 @@ pub struct ExperimentConfig {
     pub backend: Backend,
     /// Division engine for the scatter phase.
     pub divide_engine: DivideEngine,
+    /// How bucket boundaries are chosen (paper step points, sampled
+    /// splitters, or adaptive guardrail).
+    pub divide_strategy: DivideStrategy,
     /// DES link model (ignored by the threaded backend — the paper's
     /// conclusion notes thread simulation cannot express link speeds).
     pub link_model: LinkModel,
@@ -212,6 +290,7 @@ impl Default for ExperimentConfig {
             seed: 0x0511C0DE,
             backend: Backend::Threaded,
             divide_engine: DivideEngine::Native,
+            divide_strategy: DivideStrategy::PaperFixed,
             link_model: LinkModel::default(),
             workers: 0,
             artifact_dir: PathBuf::from("artifacts"),
@@ -290,6 +369,10 @@ impl ExperimentConfig {
                 }
                 "divide_engine" => {
                     cfg.divide_engine = DivideEngine::parse(value).map_err(|e| bad(e.to_string()))?
+                }
+                "divide_strategy" => {
+                    cfg.divide_strategy =
+                        DivideStrategy::parse(value).map_err(|e| bad(e.to_string()))?
                 }
                 "workers" => cfg.workers = value.parse().map_err(|e| bad(e.to_string()))?,
                 "artifact_dir" => cfg.artifact_dir = PathBuf::from(value),
@@ -450,5 +533,38 @@ mod tests {
         assert!(Backend::parse("threaded").is_ok());
         assert_eq!(Backend::parse("des").unwrap().label(), "des");
         assert!(DivideEngine::parse("xla").is_ok());
+        assert_eq!(
+            DivideStrategy::parse("paper").unwrap(),
+            DivideStrategy::PaperFixed
+        );
+        assert_eq!(
+            DivideStrategy::parse("sampling").unwrap(),
+            DivideStrategy::RegularSampling
+        );
+        assert_eq!(
+            DivideStrategy::parse("adaptive").unwrap().label(),
+            "adaptive"
+        );
+        assert!(DivideStrategy::parse("xxx")
+            .unwrap_err()
+            .to_string()
+            .contains("paper, sampling, adaptive"));
+        assert!(Distribution::parse("anti_pivot").is_ok());
+        assert!(Distribution::parse("zipf").is_ok());
+    }
+
+    #[test]
+    fn config_file_accepts_divide_strategy() {
+        let dir = std::env::temp_dir().join("ohhc_cfg_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("strat.conf");
+        std::fs::write(&path, "divide_strategy = adaptive\n").unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.divide_strategy, DivideStrategy::Adaptive);
+        // Default stays paper-faithful.
+        assert_eq!(
+            ExperimentConfig::default().divide_strategy,
+            DivideStrategy::PaperFixed
+        );
     }
 }

@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::config::DivideEngine;
+use crate::config::{DivideEngine, DivideStrategy};
 use crate::dataplane::FlatBuckets;
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, XlaDivide};
@@ -369,6 +369,121 @@ pub fn divide_with_engine(
     }
 }
 
+/// Sampling-based division (PSRS / hyperquicksort style): a regular
+/// `p·(p−1)` sample of the input is sorted and its `p−1` quantiles
+/// become the bucket splitters, so boundaries adapt to the *observed*
+/// distribution instead of trusting the value range.  Keys route by
+/// binary search over the splitters; keys equal to a tied splitter run
+/// are spread round-robin across the tied bucket range (legal because
+/// equal keys sort equal — concatenation stays sorted), which is what
+/// keeps few-uniques and Zipf heads from collapsing onto one processor.
+/// The scatter reuses the same chunked prefix-scan arena writes as the
+/// native path ([`scatter_by_ids`]).
+///
+/// `Divided::lo`/`sub` have no step-point meaning here: `lo` is the
+/// sample minimum and `sub` is 1 (only the paper-fixed rule has a real
+/// step point; nothing downstream consumes these for splitter divides).
+pub fn divide_sampled(data: &[i32], num_buckets: usize) -> Result<Divided> {
+    if data.is_empty() {
+        return Err(Error::Config("cannot divide an empty array".into()));
+    }
+    if num_buckets == 0 {
+        return Err(Error::Config("need at least one bucket".into()));
+    }
+    let p = num_buckets;
+
+    // Regular sample: p·(p−1) evenly spaced positions (clamped to n —
+    // small inputs are sampled exhaustively, making the splitters exact
+    // quantiles).
+    let want = (p * p.saturating_sub(1)).clamp(1, data.len());
+    let mut sample: Vec<i32> = (0..want).map(|k| data[k * data.len() / want]).collect();
+    sample.sort_unstable();
+    let splitters: Vec<i32> = (1..p).map(|k| sample[k * sample.len() / p]).collect();
+    let lo = sample[0];
+
+    // Classify: bucket = #splitters strictly below the key, ties spread
+    // round-robin over the tied range.  Per-chunk ids + histograms, same
+    // wave shape as the native pass 2.
+    let (workers, chunk_ranges) = scatter_chunks(data.len());
+    let splitters_ref = &splitters;
+    let per_chunk: Vec<(Vec<u32>, Vec<u32>)> =
+        par::par_map(chunk_ranges.clone(), workers, move |(s, e)| {
+            let mut ids = Vec::with_capacity(e - s);
+            let mut h = vec![0u32; p];
+            // Round-robin cursor per tied splitter run, keyed by the run's
+            // first bucket (a run never starts at bucket p−1, but sizing by
+            // p keeps the indexing trivially in range).
+            let mut rr = vec![0u32; p];
+            for &v in &data[s..e] {
+                let first = splitters_ref.partition_point(|&sp| sp < v);
+                let last = splitters_ref.partition_point(|&sp| sp <= v);
+                let b = if first == last {
+                    first
+                } else {
+                    let span = (last - first + 1) as u32;
+                    let r = rr[first];
+                    rr[first] = (r + 1) % span;
+                    first + r as usize
+                };
+                ids.push(b as u32);
+                h[b] += 1;
+            }
+            (ids, h)
+        });
+
+    // Offset table from the summed histograms, then the shared validated
+    // scatter.
+    let mut table = Vec::with_capacity(p + 1);
+    let mut acc = 0usize;
+    table.push(0);
+    for b in 0..p {
+        acc += per_chunk.iter().map(|(_, h)| h[b] as usize).sum::<usize>();
+        table.push(acc);
+    }
+    debug_assert_eq!(acc, data.len());
+    let ids: Vec<u32> = per_chunk.into_iter().flat_map(|(ids, _)| ids).collect();
+    let scatter_t0 = Instant::now();
+    let arena = scatter_by_ids(data, &ids, &table)?;
+    let scatter_time = scatter_t0.elapsed();
+    Ok(Divided {
+        buckets: FlatBuckets::from_parts(arena, table),
+        lo,
+        sub: 1,
+        scatter_time,
+    })
+}
+
+/// Division under a [`DivideStrategy`].  Returns the division plus the
+/// number of skew re-divides it took (0 or 1 — only
+/// [`DivideStrategy::Adaptive`] ever re-divides, when the paper-fixed
+/// imbalance breaches [`DivideStrategy::SKEW_GUARDRAIL`]).
+///
+/// The sampling path is native-only (the XLA artifact bakes in the
+/// paper's step-point kernel); `engine` applies to the paper-fixed rule
+/// and to the adaptive strategy's first attempt.
+pub fn divide_with_strategy(
+    data: &[i32],
+    num_buckets: usize,
+    strategy: DivideStrategy,
+    engine: DivideEngine,
+    registry: Option<&ArtifactRegistry>,
+) -> Result<(Divided, u32)> {
+    match strategy {
+        DivideStrategy::PaperFixed => {
+            Ok((divide_with_engine(data, num_buckets, engine, registry)?, 0))
+        }
+        DivideStrategy::RegularSampling => Ok((divide_sampled(data, num_buckets)?, 0)),
+        DivideStrategy::Adaptive => {
+            let fixed = divide_with_engine(data, num_buckets, engine, registry)?;
+            if fixed.imbalance() > DivideStrategy::SKEW_GUARDRAIL {
+                Ok((divide_sampled(data, num_buckets)?, 1))
+            } else {
+                Ok((fixed, 0))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,5 +620,121 @@ mod tests {
         let l = divide_native(&workload::local_distribution(100_000, 1), 36).unwrap();
         assert!(r.imbalance() < 1.5);
         assert!(l.imbalance() < 1.5);
+    }
+
+    #[test]
+    fn sampled_conservation_and_order_on_every_distribution() {
+        for dist in Distribution::ALL.iter().chain(&Distribution::ADVERSARIAL) {
+            let data = workload::generate(*dist, 50_000, 3);
+            let d = divide_sampled(&data, 36).unwrap();
+            assert_eq!(d.buckets.total_keys(), data.len(), "{dist:?}");
+            // Cross-bucket order still holds (equal keys may straddle
+            // adjacent buckets — concatenation stays sorted).
+            let mut last_max = i64::MIN;
+            for b in d.buckets.iter() {
+                if b.is_empty() {
+                    continue;
+                }
+                let mn = *b.iter().min().unwrap() as i64;
+                let mx = *b.iter().max().unwrap() as i64;
+                assert!(mn >= last_max, "{dist:?}: bucket order violated");
+                last_max = mx;
+            }
+            // Sorting segments in place sorts the arena globally.
+            let mut d = d;
+            for seg in d.buckets.segments_mut() {
+                seg.sort_unstable();
+            }
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(d.buckets.arena(), expect.as_slice(), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn sampled_stays_balanced_where_step_points_collapse() {
+        // The acceptance headline at unit scope: anti_pivot dumps all but
+        // one key into bucket 0 under the fixed rule; sampled splitters
+        // keep max bucket ≤ 2× ideal.
+        let data = workload::generate(Distribution::AntiPivot, 60_000, 7);
+        let fixed = divide_native(&data, 144).unwrap();
+        let sampled = divide_sampled(&data, 144).unwrap();
+        assert!(fixed.imbalance() > 2.0, "attack failed: {}", fixed.imbalance());
+        assert!(sampled.imbalance() <= 2.0, "{}", sampled.imbalance());
+    }
+
+    #[test]
+    fn sampled_splits_heavy_duplicates_across_tied_buckets() {
+        // A constant array is the extreme duplicate case: round-robin tie
+        // routing must spread it near-evenly instead of bucket 0.
+        let data = vec![42i32; 36_000];
+        let d = divide_sampled(&data, 36).unwrap();
+        assert!(d.imbalance() <= 1.5, "{}", d.imbalance());
+        assert_eq!(d.buckets.total_keys(), 36_000);
+    }
+
+    #[test]
+    fn sampled_edge_cases() {
+        assert!(divide_sampled(&[], 6).is_err());
+        assert!(divide_sampled(&[1], 0).is_err());
+        // One bucket, fewer keys than processors — both legal.
+        let d = divide_sampled(&[3, 1, 2], 1).unwrap();
+        assert_eq!(d.buckets.size(0), 3);
+        let d = divide_sampled(&[5, 4], 36).unwrap();
+        assert_eq!(d.buckets.total_keys(), 2);
+    }
+
+    #[test]
+    fn strategy_dispatch_counts_redivides() {
+        let attack = workload::generate(Distribution::AntiPivot, 40_000, 5);
+        let friendly = workload::random(40_000, 5);
+
+        // PaperFixed and RegularSampling never re-divide.
+        let (d, r) = divide_with_strategy(
+            &attack,
+            36,
+            DivideStrategy::PaperFixed,
+            DivideEngine::Native,
+            None,
+        )
+        .unwrap();
+        assert_eq!(r, 0);
+        assert!(d.imbalance() > DivideStrategy::SKEW_GUARDRAIL);
+        let (d, r) = divide_with_strategy(
+            &attack,
+            36,
+            DivideStrategy::RegularSampling,
+            DivideEngine::Native,
+            None,
+        )
+        .unwrap();
+        assert_eq!(r, 0);
+        assert!(d.imbalance() <= 2.0);
+
+        // Adaptive: exactly one re-divide on the attack, none on friendly
+        // input — and the friendly division is bit-identical to the
+        // paper-fixed one (the guardrail never fires).
+        let (d, r) = divide_with_strategy(
+            &attack,
+            36,
+            DivideStrategy::Adaptive,
+            DivideEngine::Native,
+            None,
+        )
+        .unwrap();
+        assert_eq!(r, 1);
+        assert!(d.imbalance() <= 2.0);
+        let (d, r) = divide_with_strategy(
+            &friendly,
+            36,
+            DivideStrategy::Adaptive,
+            DivideEngine::Native,
+            None,
+        )
+        .unwrap();
+        assert_eq!(r, 0);
+        let fixed = divide_native(&friendly, 36).unwrap();
+        assert_eq!(d.buckets.arena(), fixed.buckets.arena());
+        assert_eq!(d.buckets.offsets(), fixed.buckets.offsets());
     }
 }

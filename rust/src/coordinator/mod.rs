@@ -14,5 +14,8 @@ mod divide;
 mod ohhc_sort;
 
 pub use crate::dataplane::FlatBuckets;
-pub use divide::{bucket_of, divide_native, divide_with_engine, BucketFn, Divided};
+pub use divide::{
+    bucket_of, divide_native, divide_sampled, divide_with_engine, divide_with_strategy, BucketFn,
+    Divided,
+};
 pub use ohhc_sort::{OhhcSorter, SeqBaseline, SortReport};

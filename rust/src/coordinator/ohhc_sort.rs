@@ -41,6 +41,9 @@ pub struct SortReport {
     pub sequential_counters: SortCounters,
     /// Load imbalance factor of the division.
     pub imbalance: f64,
+    /// Skew-guardrail re-divides (0 or 1; only the adaptive divide
+    /// strategy ever re-divides).
+    pub skew_redivides: u32,
     /// DES virtual completion time (ns), when the DES backend ran.
     pub des_completion_ns: Option<f64>,
     /// DES communication steps `(electrical, optical)`.
@@ -193,6 +196,7 @@ impl OhhcSorter {
         };
         let mut session = Session::single(net, &self.bundle.plans, data)
             .with_divide_engine(self.cfg.divide_engine, self.registry.as_ref())
+            .with_divide_strategy(self.cfg.divide_strategy)
             .with_engine(engine);
         if let Some(obs) = &self.observer {
             session = session.with_observer(&**obs);
@@ -228,6 +232,7 @@ impl OhhcSorter {
             counters: outcome.counters,
             sequential_counters,
             imbalance: outcome.imbalance,
+            skew_redivides: outcome.skew_redivides,
             des_completion_ns: outcome.des.as_ref().map(|d| d.completion_ns),
             des_steps: outcome.des.as_ref().map(|d| d.trace.steps()),
             detours: outcome.des.as_ref().map_or(outcome.detours, |d| d.detours),
@@ -319,6 +324,36 @@ mod tests {
             c.workers = 4;
             let report = OhhcSorter::new(&c).unwrap().run().unwrap();
             assert!(report.counters.recursion_calls > 0, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn divide_strategies_verify_on_hostile_input() {
+        use crate::config::DivideStrategy;
+        let base = cfg(1, Construction::FullGroup, Backend::Threaded);
+        let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+        for strategy in DivideStrategy::ALL {
+            let mut c = base.clone();
+            c.distribution = Distribution::AntiPivot;
+            c.divide_strategy = strategy;
+            c.workers = 4;
+            let r = OhhcSorter::with_bundle(&c, bundle.clone()).unwrap().run().unwrap();
+            match strategy {
+                // The attack succeeds against the paper rule...
+                DivideStrategy::PaperFixed => {
+                    assert!(r.imbalance > 2.0, "{}", r.imbalance);
+                    assert_eq!(r.skew_redivides, 0);
+                }
+                // ...and both hardened strategies bound it.
+                DivideStrategy::RegularSampling => {
+                    assert!(r.imbalance <= 2.0, "{}", r.imbalance);
+                    assert_eq!(r.skew_redivides, 0);
+                }
+                DivideStrategy::Adaptive => {
+                    assert!(r.imbalance <= 2.0, "{}", r.imbalance);
+                    assert_eq!(r.skew_redivides, 1);
+                }
+            }
         }
     }
 

@@ -25,7 +25,9 @@ use std::path::PathBuf;
 use ohhc_qsort::analysis::validate;
 use ohhc_qsort::bail;
 use ohhc_qsort::campaign::{Campaign, SweepSpec};
-use ohhc_qsort::config::{Backend, Construction, Distribution, DivideEngine, ExperimentConfig};
+use ohhc_qsort::config::{
+    Backend, Construction, Distribution, DivideEngine, DivideStrategy, ExperimentConfig,
+};
 use ohhc_qsort::coordinator::OhhcSorter;
 use ohhc_qsort::ensure;
 use ohhc_qsort::figures::{ALL_IDS, FigureHarness};
@@ -49,9 +51,12 @@ COMMANDS
   run        run one experiment cell
              --dimension N        OHHC dimension (default 1)
              --construction C     full | half (default full)
-             --distribution D     random | sorted | reversed | local
+             --distribution D     random | sorted | reversed | local, or an
+                                  adversarial one: organ_pipe | few_uniques |
+                                  zipf | anti_pivot
              --elements N         i32 keys (default 1048576)
              --backend B          threaded | des (default threaded)
+             --divide-strategy S  paper | sampling | adaptive (default paper)
              --xla-divide         divide via the XLA AOT artifact
              --workers N          0 = one OS thread per processor (default)
              --config FILE        load a key=value experiment file
@@ -59,10 +64,14 @@ COMMANDS
   campaign   run the paper's §6 grid as one concurrent campaign
              --dims LIST          dimensions (default 1,2,3,4)
              --constructions LIST full,half (default both)
-             --dists LIST         random,sorted,reverse,local (default all)
+             --dists LIST         random,sorted,reverse,local (default all;
+                                  adversarial names accepted)
              --sizes LIST         key counts (default paper sizes × --scale)
              --scale F            scale for the default sizes (default 0.1)
              --backends LIST      threaded,des (default threaded)
+             --divide-strategies LIST
+                                  paper,sampling,adaptive (default paper); the
+                                  report gains a per_strategy robustness table
              --workers N          per-run workers; 0 = direct (default pool)
              --jobs N             concurrent cells (default 1)
              --reps N             timing repetitions per cell (default 1)
@@ -74,8 +83,8 @@ COMMANDS
              --csv FILE           also write a per-cell CSV table
              --quiet              no per-cell progress lines
   serve      run the in-process multi-tenant sort service on a job stream
-             --jobs-file FILE     one `dist,elements,seed[,dim[,deadline_ms]]`
-                                  per line (default: read the same from stdin)
+             --jobs-file FILE     one `dist,elements,seed[,dim[,deadline_ms
+                                  [,strategy]]]` per line (default: stdin)
              --workers N          sorter-pool threads (default: host-sized)
              --queue N            bounded queue capacity (default 256)
              --rate R             token-bucket admit rate, jobs/s (default: off)
@@ -96,9 +105,11 @@ COMMANDS
              --rate R             OPEN loop: offered jobs/s
              --concurrency N      CLOSED loop: jobs in flight (default 8)
              --dims LIST          dimensions to mix (default 1,2,3)
-             --dists LIST         distributions to mix (default all four)
+             --dists LIST         distributions to mix (default all four;
+                                  adversarial names accepted)
              --min-keys N         smallest job (default 2000)
              --max-keys N         largest job, log-uniform (default 32000)
+             --divide-strategy S  paper | sampling | adaptive for every job
              --deadline-ms N      per-job latency SLO
              --workers/--queue/--burst/--shed-depth/--batch/--small
              --fault-rate/--fault-links/--fault-nodes/--fault-seed/--retry-budget
@@ -259,6 +270,9 @@ fn cmd_run(args: &mut Args) -> CliResult {
             } else {
                 DivideEngine::Native
             },
+            divide_strategy: DivideStrategy::parse(
+                &args.opt("--divide-strategy")?.unwrap_or_else(|| "paper".into()),
+            )?,
             workers: args.parse_or("--workers", 0usize)?,
             ..Default::default()
         }
@@ -341,6 +355,9 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     if let Some(v) = args.opt("--backends")? {
         spec.backends = SweepSpec::parse_backends(&v)?;
     }
+    if let Some(v) = args.opt("--divide-strategies")? {
+        spec.strategies = SweepSpec::parse_strategies(&v)?;
+    }
     if let Some(v) = args.opt("--fault-rates")? {
         spec.fault_permille = SweepSpec::parse_fault_rates(&v)?;
     }
@@ -352,12 +369,13 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     let planned = spec.expand()?.len();
     eprintln!(
         "campaign: {planned} cells ({} dims × {} constructions × {} dists × {} sizes × {} \
-         backends × {} fault rates, deduplicated), {} job(s)",
+         backends × {} strategies × {} fault rates, deduplicated), {} job(s)",
         spec.dimensions.len(),
         spec.constructions.len(),
         spec.distributions.len(),
         spec.sizes.len(),
         spec.backends.len(),
+        spec.strategies.len(),
         spec.fault_permille.len(),
         spec.jobs.max(1)
     );
@@ -558,6 +576,9 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
     };
     let min_keys: usize = args.parse_or("--min-keys", 2_000)?;
     let max_keys: usize = args.parse_or("--max-keys", 32_000)?;
+    let strategy = DivideStrategy::parse(
+        &args.opt("--divide-strategy")?.unwrap_or_else(|| "paper".into()),
+    )?;
     let deadline_ms = args.opt_parse::<u64>("--deadline-ms")?;
     let admit_rate = args.opt_parse::<f64>("--admit-rate")?;
     let mut cfg = service_config(args)?;
@@ -571,6 +592,7 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
         distributions: dists,
         min_elements: min_keys,
         max_elements: max_keys,
+        strategy,
         deadline: deadline_ms.map(std::time::Duration::from_millis),
         mode: match rate {
             Some(r) => LoadMode::Open { rate: r },

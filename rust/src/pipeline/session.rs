@@ -3,8 +3,8 @@
 use std::ops::Range;
 use std::time::{Duration, Instant};
 
-use crate::config::{DivideEngine, LinkModel};
-use crate::coordinator::divide_with_engine;
+use crate::config::{DivideEngine, DivideStrategy, LinkModel};
+use crate::coordinator::divide_with_strategy;
 use crate::dataplane::FlatBuckets;
 use crate::error::{Error, Result, StageError};
 use crate::pipeline::observer::Observer;
@@ -56,6 +56,7 @@ pub struct Divided {
     total: usize,
     spans: Vec<Range<usize>>,
     imbalance: f64,
+    skew_redivides: u32,
 }
 
 /// Typestate marker + payload: every bucket segment is sorted in
@@ -66,6 +67,7 @@ pub struct Sorted {
     total: usize,
     spans: Vec<Range<usize>>,
     imbalance: f64,
+    skew_redivides: u32,
     counters: SortCounters,
     max_local_sort: Duration,
     detours: usize,
@@ -106,6 +108,9 @@ pub struct Outcome {
     pub messages: usize,
     /// Division load-imbalance factor.
     pub imbalance: f64,
+    /// Skew-guardrail re-divides the divide stage performed (0 or 1;
+    /// only [`DivideStrategy::Adaptive`] ever re-divides).
+    pub skew_redivides: u32,
     /// Gather-tree edges whose planned link is failed but that still
     /// route over a detour (degraded-mode witness; 0 when healthy).
     pub detours: usize,
@@ -137,6 +142,7 @@ struct Core<'a> {
     engine: Engine,
     sorter: Quicksort,
     divide_engine: DivideEngine,
+    divide_strategy: DivideStrategy,
     registry: Option<&'a ArtifactRegistry>,
     observer: Option<&'a dyn Observer>,
     faults: Option<&'a FaultSet>,
@@ -234,6 +240,7 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
                 engine: Engine::Pooled,
                 sorter: Quicksort::default(),
                 divide_engine: DivideEngine::Native,
+                divide_strategy: DivideStrategy::PaperFixed,
                 registry: None,
                 observer: None,
                 faults: None,
@@ -268,6 +275,17 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
         self
     }
 
+    /// Select the divide strategy (default
+    /// [`DivideStrategy::PaperFixed`], the paper's rule).  Applies to
+    /// single-input sessions; batched sessions always divide per job
+    /// with the paper's step points (jobs small enough to batch are
+    /// bounded by their span allotment, so one tenant's skew cannot
+    /// starve the batch).
+    pub fn with_divide_strategy(mut self, strategy: DivideStrategy) -> Self {
+        self.core.divide_strategy = strategy;
+        self
+    }
+
     /// Install a stage-boundary observer.
     pub fn with_observer(mut self, observer: &'a dyn Observer) -> Self {
         self.core.observer = Some(observer);
@@ -290,15 +308,21 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
         let Session { mut core, state } = self;
         let p = core.net.total_processors();
         let t0 = Instant::now();
-        let (buckets, spans, scatter) = match state.input {
+        let (buckets, spans, scatter, skew_redivides) = match state.input {
             Input::Single(data) => {
-                let d = divide_with_engine(data, p, core.divide_engine, core.registry)?;
-                (d.buckets, vec![0..data.len()], d.scatter_time)
+                let (d, redivides) = divide_with_strategy(
+                    data,
+                    p,
+                    core.divide_strategy,
+                    core.divide_engine,
+                    core.registry,
+                )?;
+                (d.buckets, vec![0..data.len()], d.scatter_time, redivides)
             }
             Input::Batched(jobs) => {
                 let batch = coalesce(&jobs, p)?;
                 let spans = (0..batch.num_jobs()).map(|j| batch.job_range(j)).collect();
-                (batch.buckets, spans, batch.scatter_time)
+                (batch.buckets, spans, batch.scatter_time, 0)
             }
         };
         let elapsed = t0.elapsed();
@@ -314,6 +338,7 @@ impl<'a, 'd> Session<'a, Configured<'d>> {
                 total,
                 spans,
                 imbalance,
+                skew_redivides,
             },
         })
     }
@@ -345,6 +370,7 @@ impl<'a> Session<'a, Divided> {
             total,
             spans,
             imbalance,
+            skew_redivides,
         } = state;
         if buckets.num_buckets() != n {
             return Err(Error::Sim(format!(
@@ -414,6 +440,7 @@ impl<'a> Session<'a, Divided> {
                 total,
                 spans,
                 imbalance,
+                skew_redivides,
                 counters,
                 max_local_sort,
                 detours,
@@ -438,6 +465,7 @@ impl Session<'_, Sorted> {
             total,
             spans,
             imbalance,
+            skew_redivides,
             counters,
             max_local_sort,
             detours,
@@ -485,6 +513,7 @@ impl Session<'_, Sorted> {
             max_local_sort,
             messages,
             imbalance,
+            skew_redivides,
             detours,
             des,
         })

@@ -2,7 +2,7 @@
 
 use std::time::Duration;
 
-use crate::config::{Construction, Distribution};
+use crate::config::{Construction, Distribution, DivideStrategy};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 use crate::workload;
@@ -24,6 +24,9 @@ pub struct JobSpec {
     pub dimension: u32,
     /// Construction rule.
     pub construction: Construction,
+    /// How the divide picks bucket boundaries for this job (tenants
+    /// sending hostile arrays opt into `sampling`/`adaptive`).
+    pub strategy: DivideStrategy,
     /// Latency SLO: total (queue + sort) time budget, if any.
     pub deadline: Option<Duration>,
 }
@@ -48,20 +51,24 @@ impl JobSpec {
         workload::generate(self.distribution, self.elements, self.seed)
     }
 
-    /// Parse a jobfile line: `distribution,elements,seed[,dimension[,deadline_ms]]`
+    /// Parse a jobfile line:
+    /// `distribution,elements,seed[,dimension[,deadline_ms[,strategy]]]`
     /// (whitespace around fields ignored).  `id` is assigned by the
-    /// caller, typically the line number.
+    /// caller, typically the line number.  Distribution names resolve
+    /// through [`workload::parse`] — the adversarial suite is accepted
+    /// here too.
     pub fn parse_line(line: &str, id: u64) -> Result<JobSpec> {
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        if !(3..=5).contains(&fields.len()) {
+        if !(3..=6).contains(&fields.len()) {
             return Err(Error::Config(format!(
-                "job line needs `dist,elements,seed[,dimension[,deadline_ms]]`, got `{line}`"
+                "job line needs `dist,elements,seed[,dimension[,deadline_ms[,strategy]]]`, \
+                 got `{line}`"
             )));
         }
         let bad = |what: &str, v: &str| Error::Config(format!("job {id}: bad {what} `{v}`"));
         let spec = JobSpec {
             id,
-            distribution: Distribution::parse(fields[0])?,
+            distribution: workload::parse(fields[0])?,
             elements: fields[1].parse().map_err(|_| bad("elements", fields[1]))?,
             seed: fields[2].parse().map_err(|_| bad("seed", fields[2]))?,
             dimension: match fields.get(3) {
@@ -69,6 +76,10 @@ impl JobSpec {
                 None => 1,
             },
             construction: Construction::FullGroup,
+            strategy: match fields.get(5) {
+                Some(v) => DivideStrategy::parse(v)?,
+                None => DivideStrategy::PaperFixed,
+            },
             deadline: match fields.get(4) {
                 Some(v) => Some(Duration::from_millis(
                     v.parse().map_err(|_| bad("deadline_ms", v))?,
@@ -109,6 +120,13 @@ pub struct JobResult {
     /// Order-sensitive FNV-1a checksum of the sorted output — the
     /// determinism witness loadgen compares across runs.
     pub checksum: u64,
+    /// Divide load-imbalance factor the job's pipeline observed (a
+    /// batched job reports its batch's figure) — the per-job witness
+    /// that a strategy held the skew guardrail.
+    pub imbalance: f64,
+    /// Skew-guardrail re-divides the job's divide performed (0 unless
+    /// the adaptive strategy fired).
+    pub skew_redivides: u32,
     /// How many times the job was requeued after an injected fault
     /// before this result was produced (0 = clean first attempt).
     pub retries: u32,
@@ -129,8 +147,10 @@ impl JobResult {
             ("elements", Json::int(self.elements)),
             ("error", self.error.as_deref().map_or(Json::Null, Json::str)),
             ("id", Json::int(self.id as usize)),
+            ("imbalance", Json::num(self.imbalance)),
             ("queue_ns", Json::num(self.queue_latency.as_nanos() as f64)),
             ("retries", Json::int(self.retries as usize)),
+            ("skew_redivides", Json::int(self.skew_redivides as usize)),
             ("sort_ns", Json::num(self.sort_latency.as_nanos() as f64)),
             ("sorted_ok", Json::Bool(self.sorted_ok)),
             ("total_ns", Json::num(self.total_latency.as_nanos() as f64)),
@@ -187,17 +207,29 @@ mod tests {
         let j = JobSpec::parse_line("sorted,500,1", 0).unwrap();
         assert_eq!(j.dimension, 1);
         assert_eq!(j.deadline, None);
+        assert_eq!(j.strategy, DivideStrategy::PaperFixed);
+    }
+
+    #[test]
+    fn parse_line_accepts_strategy_and_adversarial_names() {
+        let j = JobSpec::parse_line("anti_pivot, 10000, 3, 2, 250, adaptive", 9).unwrap();
+        assert_eq!(j.distribution, Distribution::AntiPivot);
+        assert_eq!(j.strategy, DivideStrategy::Adaptive);
+        assert_eq!(j.deadline, Some(Duration::from_millis(250)));
+        let j = JobSpec::parse_line("zipf,5000,1,1,10,sampling", 0).unwrap();
+        assert_eq!(j.strategy, DivideStrategy::RegularSampling);
     }
 
     #[test]
     fn parse_line_rejects_malformed_input() {
         for bad in [
-            "random,10000",          // too few fields
-            "random,10000,1,2,5,9",  // too many
-            "nosuch,10000,1",        // unknown distribution
-            "random,zero,1",         // non-numeric elements
-            "random,0,1",            // empty job
-            "random,100,1,9",        // dimension out of range
+            "random,10000",             // too few fields
+            "random,10000,1,2,5,9",     // sixth field is not a strategy
+            "random,10000,1,2,5,pap,x", // too many fields
+            "nosuch,10000,1",           // unknown distribution
+            "random,zero,1",            // non-numeric elements
+            "random,0,1",               // empty job
+            "random,100,1,9",           // dimension out of range
         ] {
             assert!(JobSpec::parse_line(bad, 0).is_err(), "{bad:?}");
         }
@@ -247,6 +279,8 @@ mod tests {
             deadline_met: Some(true),
             sorted_ok: true,
             checksum: 0xabcd,
+            imbalance: 1.25,
+            skew_redivides: 1,
             retries: 1,
             error: None,
             output: None,
@@ -257,5 +291,7 @@ mod tests {
         assert_eq!(j.get("deadline_met").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("sorted_ok").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("total_ns").unwrap().as_f64(), Some(500_000.0));
+        assert_eq!(j.get("imbalance").unwrap().as_f64(), Some(1.25));
+        assert_eq!(j.get("skew_redivides").unwrap().as_usize(), Some(1));
     }
 }

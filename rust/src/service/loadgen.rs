@@ -16,7 +16,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::config::{Construction, Distribution};
+use crate::config::{Construction, Distribution, DivideStrategy};
 use crate::service::job::{fnv1a_bytes, JobResult, JobSpec};
 use crate::service::pool::SortService;
 use crate::service::stats::ServiceSnapshot;
@@ -55,6 +55,9 @@ pub struct LoadGenConfig {
     pub min_elements: usize,
     /// Largest job, keys (sizes are log-uniform in between).
     pub max_elements: usize,
+    /// Divide strategy stamped on every job (adversarial mixes pair
+    /// naturally with `Sampling`/`Adaptive`).
+    pub strategy: DivideStrategy,
     /// Per-job latency SLO, if any.
     pub deadline: Option<Duration>,
     /// Open or closed loop.
@@ -71,6 +74,7 @@ impl Default for LoadGenConfig {
             distributions: Distribution::ALL.to_vec(),
             min_elements: 2_000,
             max_elements: 32_000,
+            strategy: DivideStrategy::PaperFixed,
             deadline: None,
             mode: LoadMode::Closed { concurrency: 8 },
         }
@@ -97,6 +101,7 @@ pub fn schedule(cfg: &LoadGenConfig) -> Vec<JobSpec> {
                 seed: rng.next_u64(),
                 dimension,
                 construction: cfg.construction,
+                strategy: cfg.strategy,
                 deadline: cfg.deadline,
             }
         })

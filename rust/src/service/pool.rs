@@ -55,7 +55,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::campaign::{BundleLease, PlanCache};
-use crate::config::Construction;
+use crate::config::{Construction, DivideStrategy};
 use crate::error::{Error, Result};
 use crate::pipeline::{Engine, Outcome, Session};
 use crate::service::admission::AdmissionControl;
@@ -364,9 +364,14 @@ fn worker_loop(shared: &Shared) {
         let max_batch = cfg.batch_max_jobs.min(lease.net.total_processors());
         if max_batch > 1 && batch[0].spec.elements <= cfg.small_job_threshold {
             let mut keys = batch[0].spec.elements;
+            // Batches are strategy-uniform: a coalesced pass divides
+            // once with the leader's strategy, so a job asking for a
+            // different divide must not ride along.
+            let strategy = batch[0].spec.strategy;
             let more = shared.queue.drain_matching(max_batch - 1, |j| {
                 let fits = j.spec.elements <= cfg.small_job_threshold
                     && (j.spec.dimension, j.spec.construction) == key
+                    && j.spec.strategy == strategy
                     && keys + j.spec.elements <= cfg.batch_max_keys;
                 if fits {
                     keys += j.spec.elements;
@@ -438,6 +443,7 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
         // the shared stats observe every boundary.
         let mut session = session
             .with_engine(engine)
+            .with_divide_strategy(leader.spec.strategy)
             .with_sorter(sorter)
             .with_observer(&shared.stats);
         if let Some(f) = &fault_set {
@@ -474,6 +480,8 @@ fn execute(shared: &Shared, lease: &BundleLease, batch: Vec<QueuedJob>) {
                     deadline_met: job.spec.deadline.map(|d| total_latency <= d),
                     sorted_ok,
                     checksum: fnv1a(out),
+                    imbalance: outcome.imbalance,
+                    skew_redivides: outcome.skew_redivides,
                     retries: job.attempt,
                     error: None,
                     output: shared.cfg.retain_output.then(|| out.to_vec()),
@@ -561,6 +569,8 @@ fn fail_batch(shared: &Shared, batch: &[QueuedJob], started: Instant, error: &st
             deadline_met: job.spec.deadline.map(|d| total_latency <= d),
             sorted_ok: false,
             checksum: 0,
+            imbalance: 0.0,
+            skew_redivides: 0,
             retries: job.attempt,
             error: Some(error.to_string()),
             output: None,
@@ -584,6 +594,7 @@ mod tests {
             seed: 1000 + id,
             dimension,
             construction: Construction::FullGroup,
+            strategy: DivideStrategy::PaperFixed,
             deadline: None,
         }
     }
@@ -864,6 +875,31 @@ mod tests {
         assert!(snapshot.link_failures > 0, "StageErrors must be counted");
         assert!(snapshot.retries > 0, "attempts within budget must requeue");
         assert_eq!(snapshot.retries_exhausted, 6);
+    }
+
+    #[test]
+    fn adaptive_strategy_flows_through_the_service() {
+        // An anti-pivot job under the paper's fixed divide collapses
+        // onto bucket 0; the same job submitted with the adaptive
+        // strategy must re-divide once and come back balanced, with
+        // both witnesses visible in the result and the snapshot.
+        let service = SortService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let adaptive = JobSpec {
+            strategy: DivideStrategy::Adaptive,
+            ..spec(0, Distribution::AntiPivot, 6_000, 1)
+        };
+        let t = service.submit(adaptive).ticket().expect("accepted");
+        let r = t.wait_timeout(Duration::from_secs(30)).expect("stalled");
+        assert!(r.sorted_ok, "{:?}", r.error);
+        assert_eq!(r.skew_redivides, 1, "guardrail must fire on anti_pivot");
+        assert!(r.imbalance <= 2.0, "re-divide must balance, got {}", r.imbalance);
+        let (snapshot, _) = service.shutdown();
+        assert_eq!(snapshot.skew_redivides, 1);
+        assert!(snapshot.max_imbalance <= 2.0, "{}", snapshot.max_imbalance);
+        assert!(snapshot.max_imbalance >= 1.0);
     }
 
     #[test]

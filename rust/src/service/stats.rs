@@ -39,6 +39,10 @@ pub struct ServiceStats {
     retries: AtomicU64,
     retries_exhausted: AtomicU64,
     degraded_jobs: AtomicU64,
+    skew_redivides: AtomicU64,
+    // Imbalance is recorded in milli-units (×1000) so the integer
+    // nanosecond histogram doubles as a ratio histogram.
+    imbalance_milli: Mutex<Histogram>,
     queue_ns: Mutex<Histogram>,
     sort_ns: Mutex<Histogram>,
     total_ns: Mutex<Histogram>,
@@ -87,6 +91,10 @@ impl ServiceStats {
         self.queue_ns.lock().unwrap().record_duration(r.queue_latency);
         self.sort_ns.lock().unwrap().record_duration(r.sort_latency);
         self.total_ns.lock().unwrap().record_duration(r.total_latency);
+        self.imbalance_milli.lock().unwrap().record((r.imbalance * 1000.0) as u64);
+        if r.skew_redivides > 0 {
+            self.skew_redivides.fetch_add(r.skew_redivides as u64, Ordering::Relaxed);
+        }
         if r.retries > 0 {
             // The job survived at least one injected fault — track its
             // latency separately so degraded-mode SLOs are visible.
@@ -164,6 +172,8 @@ impl ServiceStats {
             retries: self.retries.load(Ordering::Relaxed),
             retries_exhausted: self.retries_exhausted.load(Ordering::Relaxed),
             degraded_jobs: self.degraded_jobs.load(Ordering::Relaxed),
+            skew_redivides: self.skew_redivides.load(Ordering::Relaxed),
+            max_imbalance: self.imbalance_milli.lock().unwrap().max() as f64 / 1000.0,
             queue: LatencySummary::of(&self.queue_ns.lock().unwrap()),
             sort: LatencySummary::of(&self.sort_ns.lock().unwrap()),
             total: LatencySummary::of(&self.total_ns.lock().unwrap()),
@@ -258,6 +268,11 @@ pub struct ServiceSnapshot {
     pub retries_exhausted: u64,
     /// Jobs that completed only after at least one retry.
     pub degraded_jobs: u64,
+    /// Skew-guardrail re-divides across all jobs (adaptive strategy).
+    pub skew_redivides: u64,
+    /// Worst divide load-imbalance factor any job observed (0.0 before
+    /// the first result) — the service-level skew-guardrail witness.
+    pub max_imbalance: f64,
     /// Queue-latency summary.
     pub queue: LatencySummary,
     /// Sort-latency summary.
@@ -293,10 +308,12 @@ impl ServiceSnapshot {
             ("degraded_total_latency", self.degraded_total.to_json()),
             ("failed", Json::int(self.failed as usize)),
             ("link_failures", Json::int(self.link_failures as usize)),
+            ("max_imbalance", Json::num(self.max_imbalance)),
             ("queue_latency", self.queue.to_json()),
             ("rejected", Json::int(self.rejected as usize)),
             ("retries", Json::int(self.retries as usize)),
             ("retries_exhausted", Json::int(self.retries_exhausted as usize)),
+            ("skew_redivides", Json::int(self.skew_redivides as usize)),
             ("sort_latency", self.sort.to_json()),
             ("stage_latency", stages),
             ("submitted", Json::int(self.submitted as usize)),
@@ -313,6 +330,7 @@ impl ServiceSnapshot {
              batching: {} batches covering {} jobs; deadlines missed: {}\n\
              faults: {} worker panics, {} link failures, {} retries ({} exhausted), \
              {} degraded jobs\n\
+             divide balance: max imbalance {:.2}x, {} skew re-divides\n\
              queue latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
              sort  latency: p50 {:.3?} p95 {:.3?} p99 {:.3?}\n\
              total latency: p50 {:.3?} p95 {:.3?} p99 {:.3?} max {:.3?}\n",
@@ -330,6 +348,8 @@ impl ServiceSnapshot {
             self.retries,
             self.retries_exhausted,
             self.degraded_jobs,
+            self.max_imbalance,
+            self.skew_redivides,
             self.queue.p50,
             self.queue.p95,
             self.queue.p99,
@@ -361,6 +381,8 @@ mod tests {
             deadline_met: met,
             sorted_ok: ok,
             checksum: 0,
+            imbalance: 1.0,
+            skew_redivides: 0,
             retries: 0,
             error: None,
             output: None,
@@ -379,6 +401,8 @@ mod tests {
         // A job that needed a retry lands in the degraded histogram…
         let mut degraded = result(10, 1000, true, None);
         degraded.retries = 1;
+        degraded.imbalance = 2.5;
+        degraded.skew_redivides = 1;
         stats.on_result(&degraded);
         // …and a clean job does not.
         stats.on_result(&result(10, 100, true, None));
@@ -391,11 +415,16 @@ mod tests {
         assert_eq!(s.completed, 2);
         assert_eq!(s.degraded_total.count, 1);
         assert!(s.degraded_total.p50 >= Duration::from_micros(1000));
+        assert_eq!(s.skew_redivides, 1);
+        assert!((s.max_imbalance - 2.5).abs() < 1e-9, "{}", s.max_imbalance);
         let j = s.to_json();
         assert_eq!(j.get("worker_panics").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("degraded_jobs").unwrap().as_usize(), Some(1));
         assert!(j.get("degraded_total_latency").unwrap().get("count").is_some());
+        assert_eq!(j.get("max_imbalance").unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.get("skew_redivides").unwrap().as_usize(), Some(1));
         assert!(s.summary_text().contains("2 retries (1 exhausted)"));
+        assert!(s.summary_text().contains("max imbalance 2.50x, 1 skew re-divides"));
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Adversarial and skewed workload generators — inputs built to break
+//! the paper's fixed step-point divide rule.
+//!
+//! The paper's §5 menu (random / sorted / reverse / local) is friendly
+//! to value-range bucketing: keys spread across the range, so the step
+//! point lands near the quantiles.  These generators do the opposite —
+//! mass concentrates (Zipf, few-uniques), order misleads (organ pipe),
+//! or the range itself is weaponised (`anti_pivot`, which plants one
+//! sentinel at the top of the key range so the computed step point
+//! strands every other key in bucket 0).  All are deterministic in the
+//! seed and keep keys in `[0, KEY_RANGE)` like the paper generators, so
+//! they drop into every existing harness (campaign, loadgen, figures).
+
+use super::gen::{sorted, KEY_RANGE};
+use crate::util::rng::Rng;
+
+/// Distinct values in a [`few_uniques`] workload.
+pub const FEW_UNIQUE_VALUES: usize = 8;
+
+/// Distinct ranks a [`zipf`] workload draws from.
+pub const ZIPF_RANKS: usize = 1024;
+
+/// Zipf exponent: `P(rank r) ∝ r^-s`.  Fixed (rather than a parameter)
+/// so [`crate::config::Distribution`] stays `Copy + Eq + Hash` with a
+/// static label; 1.2 is the classic "web popularity" ballpark.
+pub const ZIPF_S: f64 = 1.2;
+
+/// Width of the [`anti_pivot`] low band: every non-sentinel key is in
+/// `[0, ANTI_PIVOT_BAND)` while one sentinel sits at `KEY_RANGE - 1`.
+/// The fixed rule's step point `sub = (max - min) / P` then exceeds the
+/// band for every `P <= 4095` — far past the paper's largest machine
+/// (d=4, G=P: 2304 processors) — so all `n - 1` band keys land in
+/// bucket 0 and the "parallel" sort degenerates to a sequential one.
+pub const ANTI_PIVOT_BAND: i32 = 1 << 12;
+
+/// Organ pipe: the sorted multiset laid out ascending then descending.
+/// Locally monotone everywhere, yet the second half undoes any gain a
+/// divider extracts from the first.
+pub fn organ_pipe(n: usize, seed: u64) -> Vec<i32> {
+    let s = sorted(n, seed);
+    let mut rising: Vec<i32> = s.iter().copied().step_by(2).collect();
+    let mut falling: Vec<i32> = s.iter().copied().skip(1).step_by(2).collect();
+    falling.reverse();
+    rising.append(&mut falling);
+    rising
+}
+
+/// Only [`FEW_UNIQUE_VALUES`] distinct keys: buckets tie-break hard and
+/// whole value classes land on single processors.
+pub fn few_uniques(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let values: Vec<i32> = (0..FEW_UNIQUE_VALUES)
+        .map(|_| rng.below(KEY_RANGE as u64) as i32)
+        .collect();
+    (0..n)
+        .map(|_| values[rng.below(FEW_UNIQUE_VALUES as u64) as usize])
+        .collect()
+}
+
+/// Zipf-distributed keys: rank `r` (of [`ZIPF_RANKS`]) drawn with
+/// probability `∝ r^-s`, mapped onto evenly spaced key values.  The
+/// head ranks soak up most of the mass, so value-range buckets starve.
+pub fn zipf(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut cdf = Vec::with_capacity(ZIPF_RANKS);
+    let mut total = 0.0f64;
+    for r in 1..=ZIPF_RANKS {
+        total += (r as f64).powf(-ZIPF_S);
+        cdf.push(total);
+    }
+    let step = KEY_RANGE / ZIPF_RANKS as i32;
+    (0..n)
+        .map(|_| {
+            let u = rng.f64() * total;
+            let rank = cdf.partition_point(|&c| c < u).min(ZIPF_RANKS - 1);
+            rank as i32 * step
+        })
+        .collect()
+}
+
+/// The attack workload: `n - 1` keys uniform in `[0, ANTI_PIVOT_BAND)`
+/// plus one sentinel at `KEY_RANGE - 1` (at a seeded position).  Against
+/// the fixed rule this maximises one bucket by construction — max bucket
+/// is `n - 1` keys, an imbalance of ≈ `P` — while sampled splitters
+/// shrug it off.
+pub fn anti_pivot(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<i32> = (0..n)
+        .map(|_| rng.below(ANTI_PIVOT_BAND as u64) as i32)
+        .collect();
+    if !v.is_empty() {
+        let sentinel_at = rng.below(v.len() as u64) as usize;
+        v[sentinel_at] = KEY_RANGE - 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Distribution;
+    use crate::workload::generate;
+
+    #[test]
+    fn adversarial_deterministic_in_seed() {
+        for dist in Distribution::ADVERSARIAL {
+            assert_eq!(generate(dist, 1000, 7), generate(dist, 1000, 7));
+            assert_ne!(
+                generate(dist, 1000, 7),
+                generate(dist, 1000, 8),
+                "{dist:?} ignores the seed"
+            );
+        }
+    }
+
+    #[test]
+    fn adversarial_keys_non_negative_and_bounded() {
+        for dist in Distribution::ADVERSARIAL {
+            let v = generate(dist, 10_000, 99);
+            assert_eq!(v.len(), 10_000);
+            assert!(v.iter().all(|&x| (0..KEY_RANGE).contains(&x)), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn organ_pipe_rises_then_falls() {
+        let v = organ_pipe(10_000, 3);
+        let peak = 10_000 / 2;
+        assert!(v[..peak].windows(2).all(|w| w[0] <= w[1]));
+        assert!(v[peak..].windows(2).all(|w| w[0] >= w[1]));
+        // Same multiset as the sorted generator.
+        let mut back = v;
+        back.sort_unstable();
+        assert_eq!(back, sorted(10_000, 3));
+    }
+
+    #[test]
+    fn few_uniques_has_few_uniques() {
+        let mut v = few_uniques(50_000, 5);
+        v.sort_unstable();
+        v.dedup();
+        assert!(v.len() <= FEW_UNIQUE_VALUES, "{} distinct", v.len());
+        assert!(v.len() > 1);
+    }
+
+    #[test]
+    fn zipf_is_head_heavy() {
+        let v = zipf(100_000, 11);
+        let mut counts = std::collections::HashMap::new();
+        for &k in &v {
+            *counts.entry(k).or_insert(0usize) += 1;
+        }
+        let top = *counts.values().max().unwrap();
+        // Rank 1 alone holds a large share of the mass under s = 1.2.
+        assert!(top > v.len() / 10, "head only {top} of {}", v.len());
+        assert!(counts.len() > 100, "tail too short: {}", counts.len());
+    }
+
+    #[test]
+    fn anti_pivot_is_one_sentinel_plus_a_low_band() {
+        let v = anti_pivot(20_000, 13);
+        let sentinels = v.iter().filter(|&&k| k == KEY_RANGE - 1).count();
+        assert_eq!(sentinels, 1);
+        assert_eq!(
+            v.iter().filter(|&&k| k < ANTI_PIVOT_BAND).count(),
+            v.len() - 1
+        );
+    }
+
+    #[test]
+    fn anti_pivot_empty_input_is_fine() {
+        assert!(anti_pivot(0, 1).is_empty());
+    }
+}

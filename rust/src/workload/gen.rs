@@ -14,13 +14,18 @@ use crate::util::rng::Rng;
 /// SubDivider arithmetic while still exceeding any array length we sweep.
 pub const KEY_RANGE: i32 = 1 << 24;
 
-/// Dispatch on the paper's distribution menu.
+/// Dispatch on the full distribution menu (paper §5 + adversarial).
 pub fn generate(dist: Distribution, n: usize, seed: u64) -> Vec<i32> {
+    use super::adversarial;
     match dist {
         Distribution::Random => random(n, seed),
         Distribution::Sorted => sorted(n, seed),
         Distribution::ReverseSorted => reverse_sorted(n, seed),
         Distribution::Local => local_distribution(n, seed),
+        Distribution::OrganPipe => adversarial::organ_pipe(n, seed),
+        Distribution::FewUniques => adversarial::few_uniques(n, seed),
+        Distribution::Zipf => adversarial::zipf(n, seed),
+        Distribution::AntiPivot => adversarial::anti_pivot(n, seed),
     }
 }
 

@@ -1,11 +1,38 @@
 //! Input workload generation — the paper's four distributions (§5) at the
-//! paper's sizes (10–60 MB of `i32`), seeded for reproducibility.
+//! paper's sizes (10–60 MB of `i32`), the adversarial suite
+//! ([`adversarial`]: organ pipe, few-uniques, Zipf, `anti_pivot`), and
+//! the one shared distribution-name registry ([`parse`]) every CLI
+//! surface resolves names through.  All generators are seeded for
+//! reproducibility.
 
+pub mod adversarial;
 mod gen;
 
-pub use gen::{generate, local_distribution, random, reverse_sorted, sorted};
+pub use gen::{generate, local_distribution, random, reverse_sorted, sorted, KEY_RANGE};
 
 use crate::config::Distribution;
+use crate::error::{Error, Result};
+
+/// Every recognised distribution name, canonical label first — campaign
+/// specs, loadgen, jobfile lines, and the CLI all resolve through this
+/// one registry (and its error message), so a name accepted anywhere is
+/// accepted everywhere.
+pub fn parse(s: &str) -> Result<Distribution> {
+    match s {
+        "random" => Ok(Distribution::Random),
+        "sorted" => Ok(Distribution::Sorted),
+        "reverse_sorted" | "reversed" | "reverse" => Ok(Distribution::ReverseSorted),
+        "local" => Ok(Distribution::Local),
+        "organ_pipe" | "organpipe" => Ok(Distribution::OrganPipe),
+        "few_uniques" | "few-uniques" => Ok(Distribution::FewUniques),
+        "zipf" => Ok(Distribution::Zipf),
+        "anti_pivot" | "antipivot" => Ok(Distribution::AntiPivot),
+        other => Err(Error::Config(format!(
+            "unknown distribution `{other}` (valid: random, sorted, reverse_sorted, \
+             local, organ_pipe, few_uniques, zipf, anti_pivot)"
+        ))),
+    }
+}
 
 /// A generated workload plus its provenance, so figures can label series.
 #[derive(Debug, Clone)]
@@ -31,5 +58,32 @@ impl Workload {
     /// Size in (fractional) megabytes, as the paper's x-axes report.
     pub fn size_mb(&self) -> f64 {
         (self.data.len() * 4) as f64 / (1 << 20) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_label() {
+        for dist in Distribution::ALL.iter().chain(&Distribution::ADVERSARIAL) {
+            assert_eq!(parse(dist.label()).unwrap(), *dist, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_the_historical_aliases() {
+        assert_eq!(parse("reversed").unwrap(), Distribution::ReverseSorted);
+        assert_eq!(parse("reverse").unwrap(), Distribution::ReverseSorted);
+    }
+
+    #[test]
+    fn parse_error_lists_every_valid_name() {
+        let msg = parse("nope").unwrap_err().to_string();
+        for dist in Distribution::ALL.iter().chain(&Distribution::ADVERSARIAL) {
+            assert!(msg.contains(dist.label()), "missing {} in {msg}", dist.label());
+        }
+        assert!(msg.contains("`nope`"));
     }
 }

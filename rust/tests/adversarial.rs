@@ -1,0 +1,140 @@
+//! Adversarial-input robustness: the attack-workload suite run end to
+//! end against every divide strategy.
+//!
+//! The paper's fixed step points assume near-uniform key ranges; a
+//! single outlier key (`anti_pivot`) or a head-heavy distribution
+//! (`zipf`) collapses them onto a few buckets.  These tests pin the
+//! contract of the hardened strategies across dimensions 1..=3:
+//!
+//! * `RegularSampling` bounds the bucket imbalance by 2× ideal on every
+//!   adversarial workload, with zero re-divides;
+//! * `PaperFixed` demonstrably breaks on `anti_pivot` (the attack is
+//!   real, not hypothetical);
+//! * `Adaptive` re-divides at most once, holds the 2× bound whenever it
+//!   fires, and fires on the workloads that breach the guardrail;
+//! * every run's output equals an independent sequential sort —
+//!   [`OhhcSorter::run`] errors otherwise, so `unwrap` is the assert.
+
+use ohhc_qsort::config::{Construction, Distribution, DivideStrategy, ExperimentConfig};
+use ohhc_qsort::coordinator::OhhcSorter;
+
+/// Keys per dimension — enough for hundreds of keys per processor even
+/// at d=3 (576 processors) while staying fast in debug builds.
+fn elements_for(dimension: u32) -> usize {
+    match dimension {
+        1 => 40_000,
+        2 => 60_000,
+        _ => 120_000,
+    }
+}
+
+fn config(dimension: u32, distribution: Distribution, strategy: DivideStrategy) -> ExperimentConfig {
+    ExperimentConfig {
+        dimension,
+        construction: Construction::FullGroup,
+        distribution,
+        elements: elements_for(dimension),
+        workers: 4,
+        divide_strategy: strategy,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sampling_bounds_imbalance_on_every_adversarial_workload() {
+    for dimension in 1..=3u32 {
+        let base = config(dimension, Distribution::Random, DivideStrategy::RegularSampling);
+        let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+        for distribution in Distribution::ADVERSARIAL {
+            let mut cfg = base.clone();
+            cfg.distribution = distribution;
+            let r = OhhcSorter::with_bundle(&cfg, bundle.clone()).unwrap().run().unwrap();
+            assert!(
+                r.imbalance <= 2.0,
+                "d={dimension} {}: sampling imbalance {} exceeds 2x ideal",
+                distribution.label(),
+                r.imbalance
+            );
+            assert_eq!(r.skew_redivides, 0, "sampling never re-divides");
+        }
+    }
+}
+
+#[test]
+fn paper_fixed_divide_is_broken_by_the_anti_pivot_attack() {
+    for dimension in 1..=3u32 {
+        let cfg = config(dimension, Distribution::AntiPivot, DivideStrategy::PaperFixed);
+        let r = OhhcSorter::new(&cfg).unwrap().run().unwrap();
+        // One outlier key stretches the step point past the whole data
+        // band: everything lands in bucket 0.
+        assert!(
+            r.imbalance > 2.0,
+            "d={dimension}: the attack must defeat fixed step points, got {}",
+            r.imbalance
+        );
+        assert_eq!(r.skew_redivides, 0, "paper divide never re-divides");
+    }
+}
+
+#[test]
+fn adaptive_redivides_exactly_once_on_guardrail_breaches() {
+    for dimension in 1..=3u32 {
+        let base = config(dimension, Distribution::Random, DivideStrategy::Adaptive);
+        let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+        for distribution in Distribution::ADVERSARIAL {
+            let mut cfg = base.clone();
+            cfg.distribution = distribution;
+            let r = OhhcSorter::with_bundle(&cfg, bundle.clone()).unwrap().run().unwrap();
+            assert!(r.skew_redivides <= 1, "adaptive re-divides at most once");
+            if r.skew_redivides == 1 {
+                // The guardrail fired: the sampled re-divide must fix it.
+                assert!(
+                    r.imbalance <= 2.0,
+                    "d={dimension} {}: re-divide left imbalance {}",
+                    distribution.label(),
+                    r.imbalance
+                );
+            } else {
+                // The guardrail held: the paper divide was good enough.
+                assert!(
+                    r.imbalance <= DivideStrategy::SKEW_GUARDRAIL,
+                    "d={dimension} {}: imbalance {} breached without a re-divide",
+                    distribution.label(),
+                    r.imbalance
+                );
+            }
+            // Attacks that defeat fixed step points must trip the wire.
+            if matches!(distribution, Distribution::AntiPivot | Distribution::Zipf) {
+                assert_eq!(
+                    r.skew_redivides,
+                    1,
+                    "d={dimension} {}: guardrail must fire",
+                    distribution.label()
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance bar: at d=2, on `anti_pivot` and `zipf`, both
+/// hardened strategies keep max bucket occupancy within 2× ideal.
+#[test]
+fn acceptance_d2_hardened_strategies_hold_two_x_ideal() {
+    let base = config(2, Distribution::Random, DivideStrategy::PaperFixed);
+    let bundle = OhhcSorter::new(&base).unwrap().bundle().clone();
+    for distribution in [Distribution::AntiPivot, Distribution::Zipf] {
+        for strategy in [DivideStrategy::RegularSampling, DivideStrategy::Adaptive] {
+            let mut cfg = base.clone();
+            cfg.distribution = distribution;
+            cfg.divide_strategy = strategy;
+            let r = OhhcSorter::with_bundle(&cfg, bundle.clone()).unwrap().run().unwrap();
+            assert!(
+                r.imbalance <= 2.0,
+                "d=2 {} {}: imbalance {}",
+                distribution.label(),
+                strategy.label(),
+                r.imbalance
+            );
+        }
+    }
+}
