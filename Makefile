@@ -35,14 +35,17 @@ bench:
 
 # Non-criterion JSON benches: the data-plane phase medians (flat arena
 # vs legacy nested, EXPERIMENTS.md §Perf), the service offered-load
-# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), the
-# persistent-executor small-array / fan-out medians (pooled vs scoped
-# spawn, EXPERIMENTS.md §Perf), the typestate-session vs monolithic
-# pipeline medians (EXPERIMENTS.md §Perf), and the divide-strategy ×
-# distribution robustness grid (EXPERIMENTS.md §Adversarial).
+# levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), the cluster
+# shard-scaling sweep (jobs/sec at 1/2/4/8 shards, EXPERIMENTS.md
+# §Cluster), the persistent-executor small-array / fan-out medians
+# (pooled vs scoped spawn, EXPERIMENTS.md §Perf), the typestate-session
+# vs monolithic pipeline medians (EXPERIMENTS.md §Perf), and the
+# divide-strategy × distribution robustness grid (EXPERIMENTS.md
+# §Adversarial).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
+	cd rust && OHHC_BENCH_JSON=../BENCH_cluster.json $(CARGO) bench --bench cluster
 	cd rust && OHHC_BENCH_JSON=../BENCH_executor.json $(CARGO) bench --bench executor
 	cd rust && OHHC_BENCH_JSON=../BENCH_pipeline.json $(CARGO) bench --bench pipeline
 	cd rust && OHHC_BENCH_JSON=../BENCH_divide.json $(CARGO) bench --bench divide

@@ -1,0 +1,91 @@
+//! Bench: cluster shard scaling — the same seeded closed-loop load
+//! replayed against 1 / 2 / 4 / 8 shards, one sorter thread per shard.
+//!
+//! `make bench-json` runs this and writes `BENCH_cluster.json` — jobs
+//! per second, speedup over one shard, and p99 total latency per shard
+//! count — joining the other BENCH_*.json CI perf-trajectory artifacts
+//! (see EXPERIMENTS.md §Cluster).  Jobs sit below the split threshold,
+//! so the sweep isolates the routed path: near-linear jobs/sec is the
+//! headline the cluster layer exists for.
+
+use ohhc_qsort::cluster::{Cluster, ClusterConfig};
+use ohhc_qsort::config::Distribution;
+use ohhc_qsort::service::{loadgen, LoadGenConfig, LoadMode, ServiceConfig};
+use ohhc_qsort::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("OHHC_BENCH_FAST").as_deref() == Ok("1");
+    let jobs = if fast { 160 } else { 600 };
+    let shard_counts = [1usize, 2, 4, 8];
+
+    println!("== cluster: closed-loop shard scaling, {jobs} jobs per count");
+    let mut rows = Vec::new();
+    let mut base_jps = None;
+    for &shards in &shard_counts {
+        let gen_cfg = LoadGenConfig {
+            jobs,
+            seed: 7,
+            dimensions: vec![1],
+            distributions: Distribution::ALL.to_vec(),
+            min_elements: 500,
+            max_elements: 4_000,
+            deadline: None,
+            mode: LoadMode::Closed {
+                concurrency: 2 * shards,
+            },
+            ..Default::default()
+        };
+        let cluster = Cluster::start(ClusterConfig {
+            shards,
+            shard: ServiceConfig {
+                workers: 1,
+                ..ServiceConfig::default()
+            },
+            ..Default::default()
+        });
+        let report = loadgen::run_on(&cluster, &gen_cfg);
+        let (snap, _leftovers) = cluster.shutdown();
+        assert_eq!(report.failures, 0, "bench jobs must verify");
+        assert_eq!(
+            report.completed + report.failures,
+            report.accepted,
+            "no silent drops"
+        );
+
+        let speedup = match base_jps {
+            None => {
+                base_jps = Some(report.throughput_jps);
+                1.0
+            }
+            Some(base) if base > 0.0 => report.throughput_jps / base,
+            Some(_) => 0.0,
+        };
+        let total = &snap.merged.total;
+        println!(
+            "shards {shards:>2}: {:>8.1} jobs/s ({speedup:>5.2}x)  p50 {:>10.3?}  p99 {:>10.3?}",
+            report.throughput_jps, total.p50, total.p99
+        );
+        rows.push(Json::obj([
+            ("completed", Json::int(report.completed)),
+            ("cross_shard_bytes", Json::int(snap.cross_shard_bytes as usize)),
+            ("jobs", Json::int(jobs)),
+            ("jobs_per_sec", Json::num(report.throughput_jps)),
+            ("p50_total_ns", Json::num(total.p50.as_nanos() as f64)),
+            ("p99_total_ns", Json::num(total.p99.as_nanos() as f64)),
+            ("shards", Json::int(shards)),
+            ("speedup_vs_one_shard", Json::num(speedup)),
+            ("wall_secs", Json::num(report.wall.as_secs_f64())),
+        ]));
+    }
+
+    let doc = Json::obj([
+        ("mode", Json::str("closed_loop_routed")),
+        ("shard_counts", Json::arr(rows)),
+        ("workers_per_shard", Json::int(1)),
+    ]);
+    let out = std::env::var("OHHC_BENCH_JSON").unwrap_or_else(|_| "BENCH_cluster.json".into());
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_cluster.json");
+    println!("\nshard scaling → {out}");
+}

@@ -5,13 +5,19 @@
 //! [`CellReport`] and the aggregated report's `stage_medians` without
 //! any timing code here.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::campaign::cache::{BaselineCache, PlanCache};
+use crate::campaign::cache::{BaselineCache, PlanCache, WorkloadBaseline};
 use crate::campaign::report::{CampaignReport, CellReport};
 use crate::campaign::spec::{GridCell, SweepSpec};
-use crate::coordinator::{OhhcSorter, SortReport};
-use crate::error::Result;
+use crate::cluster::kway_merge;
+use crate::config::Backend;
+use crate::coordinator::{divide_sampled, OhhcSorter, SortReport};
+use crate::error::{Error, Result};
+use crate::pipeline::{Engine, Session, StageTrace};
+use crate::schedule::TopologyBundle;
+use crate::sim::InterShardModel;
+use crate::sort::SortCounters;
 use crate::topology::fault::FaultSet;
 use crate::util::par;
 
@@ -116,16 +122,165 @@ impl Campaign {
         // monotone along the curve by construction.
         let faults = (cell.fault_permille > 0)
             .then(|| FaultSet::seeded_links(bundle.net.graph(), cell.fault_permille, self.spec.seed));
+        let wb = self
+            .baselines
+            .get_or_measure(cell.distribution, cell.elements, self.spec.seed);
+        if cell.shards > 1 {
+            return (0..self.spec.repetitions.max(1))
+                .map(|_| self.run_sharded(cell, &bundle, faults.as_ref(), &wb))
+                .collect();
+        }
         let mut sorter = OhhcSorter::with_bundle(&cfg, bundle)?;
         if let Some(f) = faults {
             sorter = sorter.with_faults(f);
         }
-        let wb = self
-            .baselines
-            .get_or_measure(cell.distribution, cell.elements, self.spec.seed);
         (0..self.spec.repetitions.max(1))
             .map(|_| sorter.run_on_with_baseline(&wb.workload, &wb.baseline))
             .collect()
+    }
+
+    /// One repetition of a sharded cell: the cluster's scatter/merge
+    /// path in miniature.  The splitter divide cuts the workload into
+    /// `cell.shards` spans, every span runs the full pipeline session on
+    /// its own simulated OHHC (all shards lease the same
+    /// `(dimension, construction)` bundle — a cluster of identical
+    /// networks), and a k-way merge reassembles the output, which must
+    /// equal the memoized sequential baseline.  The synthesized
+    /// [`SortReport`] counts `shards × per-OHHC` processors; on the DES
+    /// backend virtual completion is the slowest shard plus the
+    /// inter-shard optical transfer charge, so shard scaling is priced,
+    /// not free.
+    fn run_sharded(
+        &self,
+        cell: &GridCell,
+        bundle: &TopologyBundle,
+        faults: Option<&FaultSet>,
+        wb: &WorkloadBaseline,
+    ) -> Result<SortReport> {
+        let cfg = cell.config(&self.spec);
+        let engine = match cell.backend {
+            Backend::Threaded if cfg.workers == 0 => Engine::DirectThreads,
+            Backend::Threaded => Engine::Pooled,
+            Backend::DiscreteEvent => Engine::DiscreteEvent {
+                link: cfg.link_model,
+            },
+        };
+        let strategy = cfg.divide_strategy;
+
+        let t0 = Instant::now();
+        let divided = divide_sampled(&wb.workload.data, cell.shards)?;
+        let divide_time = t0.elapsed();
+        let imbalance = divided.imbalance();
+        let sizes: Vec<usize> = (0..cell.shards).map(|s| divided.buckets.size(s)).collect();
+
+        let t1 = Instant::now();
+        let outcomes = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cell.shards)
+                .map(|s| {
+                    let span = divided.buckets.bucket(s);
+                    scope.spawn(move || {
+                        if span.is_empty() {
+                            return Ok(None);
+                        }
+                        let mut session = Session::single(&bundle.net, &bundle.plans, span)
+                            .with_divide_strategy(strategy)
+                            .with_engine(engine);
+                        if let Some(f) = faults {
+                            session = session.with_faults(f);
+                        }
+                        session.divide()?.local_sort()?.gather().map(Some)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .map_err(|_| Error::Invariant("sharded span sort panicked".into()))?
+                })
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let shard_wall = t1.elapsed();
+
+        let t2 = Instant::now();
+        let parts: Vec<&[i32]> = outcomes
+            .iter()
+            .flatten()
+            .map(|o| o.sorted.as_slice())
+            .collect();
+        let merged = kway_merge(&parts);
+        let merge_wall = t2.elapsed();
+        if merged != wb.baseline.sorted {
+            return Err(Error::Invariant(
+                "sharded merge differs from sequential baseline".into(),
+            ));
+        }
+
+        // Fold the per-shard outcomes: counters sum, per-stage times take
+        // the slowest shard (the concurrent critical path), DES virtual
+        // completion takes the slowest shard plus the transfer charge.
+        let mut counters = SortCounters::default();
+        let mut stage_times = StageTrace {
+            divide: divide_time,
+            ..StageTrace::default()
+        };
+        let mut skew_redivides = 0u32;
+        let mut detours = 0usize;
+        let mut des_completion = 0.0f64;
+        let mut des_steps = (0usize, 0usize);
+        let mut any_des = false;
+        for o in outcomes.iter().flatten() {
+            counters += o.counters;
+            skew_redivides += o.skew_redivides;
+            stage_times.divide += o.trace.divide;
+            stage_times.scatter = stage_times.scatter.max(o.trace.scatter);
+            stage_times.local_sort = stage_times.local_sort.max(o.trace.local_sort);
+            stage_times.gather = stage_times.gather.max(o.trace.gather);
+            if let Some(d) = &o.des {
+                any_des = true;
+                des_completion = des_completion.max(d.completion_ns);
+                let (e, op) = d.trace.steps();
+                des_steps.0 += e;
+                des_steps.1 += op;
+                detours += d.detours;
+            } else {
+                detours += o.detours;
+            }
+        }
+        stage_times.gather += merge_wall;
+
+        // All spans are scattered from one coordinator, so every span
+        // except shard 0's crosses the optical boundary both ways.
+        let transfer = InterShardModel::new(cfg.link_model).split_transfer(0, &sizes);
+        let des_total = des_completion + transfer.transfer_ns;
+        let parallel_time = if any_des {
+            divide_time + Duration::from_nanos(des_total as u64) + merge_wall
+        } else {
+            divide_time + shard_wall + merge_wall
+        };
+
+        let processors = bundle.net.total_processors() * cell.shards;
+        let ts = wb.baseline.time.as_secs_f64();
+        let tp = parallel_time.as_secs_f64();
+        Ok(SortReport {
+            elements: wb.workload.data.len(),
+            processors,
+            sequential_time: wb.baseline.time,
+            parallel_time,
+            divide_time,
+            stage_times,
+            counters,
+            sequential_counters: wb.baseline.counters,
+            imbalance,
+            skew_redivides,
+            des_completion_ns: any_des.then_some(des_total),
+            des_steps: any_des.then_some(des_steps),
+            detours,
+            des_trace: None,
+            speedup: ts / tp,
+            speedup_pct: (ts - tp) / ts * 100.0,
+            efficiency: ts / (processors as f64 * tp),
+        })
     }
 }
 
@@ -260,6 +415,51 @@ mod tests {
         assert_eq!(curve.len(), 3);
         assert_eq!(curve[0].0, 0);
         assert_eq!(curve[2].0, 400);
+    }
+
+    #[test]
+    fn sharded_cells_split_merge_and_scale_the_processor_count() {
+        let mut spec = tiny_spec();
+        spec.constructions = vec![Construction::FullGroup];
+        spec.distributions = vec![Distribution::Random];
+        spec.shards = vec![1, 4];
+        spec.jobs = 1;
+        let report = Campaign::new(spec).run().unwrap();
+        // 1 construction × 1 distribution × 1 size × 2 backends × 2 shard counts.
+        assert_eq!(report.cells.len(), 4);
+        assert_eq!(report.completed(), 4);
+        for cell in &report.cells {
+            // Sharded or not, the merged output was verified against the
+            // same memoized sequential baseline, so a completed cell is a
+            // correct sort with real work behind it.
+            assert!(cell.counters.comparisons > 0, "{}", cell.key());
+            assert!(cell.speedup > 0.0, "{}", cell.key());
+            if cell.shards == 4 {
+                assert!(cell.key().ends_with("/x4"), "{}", cell.key());
+                assert_eq!(cell.processors, 4 * 36);
+            } else {
+                assert!(!cell.key().contains("/x"), "{}", cell.key());
+                assert_eq!(cell.processors, 36);
+            }
+        }
+        // The sharded DES completion prices the inter-shard transfer on
+        // top of the slowest shard, so it can only exceed a single
+        // shard's virtual time for the same workload.
+        let des = |shards: usize| {
+            report
+                .cells
+                .iter()
+                .find(|c| c.backend == Backend::DiscreteEvent && c.shards == shards)
+                .unwrap()
+                .des_completion_ns
+                .unwrap()
+        };
+        assert!(des(4) > 0.0);
+        // The aggregated report folds the axis into the scaling table.
+        let table = report.per_shard_count();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table[0].0, 1);
+        assert_eq!(table[1].0, 4);
     }
 
     #[test]

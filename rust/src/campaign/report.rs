@@ -63,6 +63,8 @@ pub struct CellReport {
     pub elements: usize,
     /// Injected link-failure rate (per-mille; 0 = healthy).
     pub fault_permille: u32,
+    /// Cluster shards the input was scattered over (1 = single OHHC).
+    pub shards: usize,
     /// Outcome.
     pub status: CellStatus,
     /// Total processors simulated (0 when never built).
@@ -111,6 +113,7 @@ impl CellReport {
             strategy: cell.strategy,
             elements: cell.elements,
             fault_permille: cell.fault_permille,
+            shards: cell.shards,
             status,
             processors: 0,
             repetitions: 0,
@@ -165,6 +168,7 @@ impl CellReport {
             strategy: cell.strategy,
             elements: cell.elements,
             fault_permille: cell.fault_permille,
+            shards: cell.shards,
             status: CellStatus::Completed,
             processors: first.processors,
             repetitions: runs.len(),
@@ -201,10 +205,12 @@ impl CellReport {
             base.push_str(self.strategy.label());
         }
         if self.fault_permille > 0 {
-            format!("{base}/f{}", self.fault_permille)
-        } else {
-            base
+            base = format!("{base}/f{}", self.fault_permille);
         }
+        if self.shards > 1 {
+            base = format!("{base}/x{}", self.shards);
+        }
+        base
     }
 
     /// The deterministic fields shared by [`CellReport::fingerprint`] and
@@ -238,6 +244,7 @@ impl CellReport {
             ("fault_permille", Json::int(self.fault_permille as usize)),
             ("imbalance", Json::num(self.imbalance)),
             ("processors", Json::int(self.processors)),
+            ("shards", Json::int(self.shards)),
             ("skew_redivides", Json::int(self.skew_redivides as usize)),
             ("status", Json::str(self.status.label())),
             ("strategy", Json::str(self.strategy.label())),
@@ -276,7 +283,7 @@ impl CellReport {
 
     /// CSV header matching [`CellReport::csv_row`].
     pub const CSV_HEADER: &str = "dimension,construction,distribution,backend,elements,\
-         fault_permille,strategy,processors,status,seq_secs,par_secs,divide_secs,speedup,\
+         fault_permille,shards,strategy,processors,status,seq_secs,par_secs,divide_secs,speedup,\
          speedup_pct,efficiency,imbalance,skew_redivides,recursions,iterations,swaps,\
          comparisons,des_completion_ns,des_elec_steps,des_opt_steps,detours";
 
@@ -287,13 +294,14 @@ impl CellReport {
             _ => (String::new(), String::new(), String::new()),
         };
         format!(
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.3},{},{},{},{},{},{},{},{},{}",
             self.dimension,
             self.construction.label(),
             self.distribution.label(),
             self.backend.label(),
             self.elements,
             self.fault_permille,
+            self.shards,
             self.strategy.label(),
             self.processors,
             self.status.label(),
@@ -423,6 +431,33 @@ impl CampaignReport {
             .collect()
     }
 
+    /// The shard-scaling table: speedup statistics of completed cells
+    /// per shard count, sorted by count.  One entry when the campaign
+    /// ran single-OHHC only; the multi-shard entries are the campaign's
+    /// view of the cluster layer's scatter/merge path (per-shard spans
+    /// sorted concurrently, merge traffic charged at optical prices).
+    pub fn per_shard_count(&self) -> Vec<(usize, Summary)> {
+        let mut counts: Vec<usize> = self.cells.iter().map(|c| c.shards).collect();
+        counts.sort_unstable();
+        counts.dedup();
+        counts
+            .into_iter()
+            .filter_map(|shards| {
+                let speedups: Vec<f64> = self
+                    .cells
+                    .iter()
+                    .filter(|c| c.shards == shards && c.status.is_completed())
+                    .map(|c| c.speedup)
+                    .collect();
+                if speedups.is_empty() {
+                    None
+                } else {
+                    Some((shards, Summary::of(&speedups)))
+                }
+            })
+            .collect()
+    }
+
     /// The robustness table: speedup, divide imbalance, and parallel
     /// wall-time statistics of completed cells per divide strategy, in
     /// [`DivideStrategy::ALL`] order.  One entry when the campaign ran
@@ -510,6 +545,15 @@ impl CampaignReport {
                 ("min_speedup", Json::num(s.min)),
             ])
         });
+        let per_shard = self.per_shard_count().into_iter().map(|(shards, s)| {
+            Json::obj([
+                ("max_speedup", Json::num(s.max)),
+                ("mean_speedup", Json::num(s.mean)),
+                ("median_speedup", Json::num(s.median)),
+                ("min_speedup", Json::num(s.min)),
+                ("shards", Json::int(shards)),
+            ])
+        });
         let per_strategy = self.per_strategy().into_iter().map(|s| {
             Json::obj([
                 ("max_imbalance", Json::num(s.imbalance.max)),
@@ -550,6 +594,7 @@ impl CampaignReport {
                     ("parallel_latency", latency),
                     ("per_dimension", Json::arr(per_dim)),
                     ("per_fault_rate", Json::arr(per_fault)),
+                    ("per_shard_count", Json::arr(per_shard)),
                     ("per_strategy", Json::arr(per_strategy)),
                     ("planned", Json::int(self.cells.len())),
                     ("skipped", Json::int(self.skipped())),
@@ -627,6 +672,16 @@ impl CampaignReport {
                 ));
             }
         }
+        let scaling = self.per_shard_count();
+        if scaling.len() > 1 {
+            out.push_str("shard scaling (median speedup by shard count):\n");
+            for (shards, s) in scaling {
+                out.push_str(&format!(
+                    "  x{shards}: {:.3}x over {} cells\n",
+                    s.median, s.n
+                ));
+            }
+        }
         let strategies = self.per_strategy();
         if strategies.len() > 1 {
             out.push_str("divide strategies (completed cells):\n");
@@ -660,6 +715,7 @@ mod tests {
             backend: Backend::DiscreteEvent,
             strategy: DivideStrategy::PaperFixed,
             fault_permille: 0,
+            shards: 1,
         }
     }
 
@@ -813,6 +869,48 @@ mod tests {
         assert_eq!(per_fault.len(), 2);
         assert_eq!(per_fault[1].get("fault_permille").unwrap().as_usize(), Some(400));
         assert!(report.summary_text().contains("degradation curve"));
+    }
+
+    #[test]
+    fn shards_axis_builds_the_scaling_table() {
+        let single = completed_report();
+        let mut sharded = completed_report();
+        sharded.shards = 4;
+        sharded.par_secs = 0.03;
+        sharded.speedup = 0.2 / 0.03;
+        assert_ne!(single.key(), sharded.key(), "shard count is a grid coordinate");
+        assert!(sharded.key().ends_with("/x4"));
+        // The shard count is a deterministic field.
+        assert_ne!(single.fingerprint(), sharded.fingerprint());
+        let j = sharded.to_json();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(4));
+        let report = CampaignReport {
+            spec: SweepSpec::default(),
+            cells: vec![single, sharded],
+            topology_builds: 1,
+            cache_hits: 0,
+            baseline_measures: 1,
+            baseline_hits: 0,
+            wall_secs: 0.1,
+        };
+        let scaling = report.per_shard_count();
+        assert_eq!(scaling.len(), 2);
+        assert_eq!((scaling[0].0, scaling[1].0), (1, 4), "sorted by shard count");
+        assert!(
+            scaling[1].1.median > scaling[0].1.median,
+            "more shards, more speedup"
+        );
+        let j = report.to_json();
+        let per_shard = j
+            .get("summary")
+            .unwrap()
+            .get("per_shard_count")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(per_shard.len(), 2);
+        assert_eq!(per_shard[1].get("shards").unwrap().as_usize(), Some(4));
+        assert!(report.summary_text().contains("shard scaling"));
     }
 
     #[test]

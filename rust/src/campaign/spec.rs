@@ -28,6 +28,11 @@ pub struct GridCell {
     /// Link failures injected into the run, in per-mille of the
     /// topology's links (0 = healthy network).
     pub fault_permille: u32,
+    /// Cluster shards the input is scattered over (1 = single OHHC,
+    /// the paper's setting; N > 1 splits the input with the sampled
+    /// divider and sorts per-shard spans concurrently, charging the
+    /// merge traffic at optical prices — see [`crate::cluster`]).
+    pub shards: usize,
 }
 
 impl GridCell {
@@ -46,10 +51,12 @@ impl GridCell {
             base.push_str(self.strategy.label());
         }
         if self.fault_permille > 0 {
-            format!("{base}/f{}", self.fault_permille)
-        } else {
-            base
+            base = format!("{base}/f{}", self.fault_permille);
         }
+        if self.shards > 1 {
+            base = format!("{base}/x{}", self.shards);
+        }
+        base
     }
 
     /// The experiment configuration this cell runs with.
@@ -93,6 +100,8 @@ pub struct SweepSpec {
     /// per cell, so the report's degradation curve is structurally
     /// monotone in the rate.
     pub fault_permille: Vec<u32>,
+    /// Shard counts to sweep (`[1]` = single OHHC only).
+    pub shards: Vec<usize>,
     /// Workload seed (same seed ⇒ byte-identical DES outcomes).
     pub seed: u64,
     /// Timing repetitions per cell (median reported).
@@ -115,6 +124,7 @@ impl Default for SweepSpec {
             backends: vec![Backend::Threaded],
             strategies: vec![DivideStrategy::PaperFixed],
             fault_permille: vec![0],
+            shards: vec![1],
             seed: 0x0511_C0DE,
             repetitions: 1,
             workers: par::available_workers(),
@@ -190,6 +200,18 @@ impl SweepSpec {
         Ok(rates)
     }
 
+    /// Parse a `--shards-list` style list of shard counts (`1,2,4,8`).
+    pub fn parse_shards(s: &str) -> Result<Vec<usize>> {
+        let shards: Vec<usize> = parse_list(s, "shard count", |e| {
+            e.parse()
+                .map_err(|err| Error::Config(format!("bad shard count `{e}`: {err}")))
+        })?;
+        if shards.contains(&0) {
+            return Err(Error::Config("shard count must be >= 1".into()));
+        }
+        Ok(shards)
+    }
+
     /// Load a spec from a `key = value` file.  List keys take comma lists;
     /// unknown keys are rejected (same contract as the experiment files).
     pub fn from_file(path: &Path) -> Result<Self> {
@@ -219,6 +241,7 @@ impl SweepSpec {
                 "fault_rates" => {
                     spec.fault_permille = Self::parse_fault_rates(value).map_err(bad)?
                 }
+                "shards" => spec.shards = Self::parse_shards(value).map_err(bad)?,
                 "seed" => {
                     spec.seed = value
                         .parse()
@@ -261,6 +284,7 @@ impl SweepSpec {
             ("backends", self.backends.is_empty()),
             ("divide strategies", self.strategies.is_empty()),
             ("fault rates", self.fault_permille.is_empty()),
+            ("shard counts", self.shards.is_empty()),
         ] {
             if empty {
                 return Err(Error::Config(format!("sweep spec has no {name}")));
@@ -270,6 +294,9 @@ impl SweepSpec {
             return Err(Error::Config(format!(
                 "fault rate is per-mille, must be <= 1000, got {bad}"
             )));
+        }
+        if self.shards.contains(&0) {
+            return Err(Error::Config("shard count must be >= 1".into()));
         }
         Ok(())
     }
@@ -288,17 +315,20 @@ impl SweepSpec {
                         for &backend in &self.backends {
                             for &strategy in &self.strategies {
                                 for &fault_permille in &self.fault_permille {
-                                    let cell = GridCell {
-                                        dimension,
-                                        construction,
-                                        distribution,
-                                        elements,
-                                        backend,
-                                        strategy,
-                                        fault_permille,
-                                    };
-                                    if seen.insert(cell) {
-                                        cells.push(cell);
+                                    for &shards in &self.shards {
+                                        let cell = GridCell {
+                                            dimension,
+                                            construction,
+                                            distribution,
+                                            elements,
+                                            backend,
+                                            strategy,
+                                            fault_permille,
+                                            shards,
+                                        };
+                                        if seen.insert(cell) {
+                                            cells.push(cell);
+                                        }
                                     }
                                 }
                             }
@@ -338,6 +368,10 @@ impl SweepSpec {
             // String, not number: u64 seeds above 2^53 would lose
             // precision through the f64-backed Json numbers.
             ("seed", Json::str(self.seed.to_string())),
+            (
+                "shards",
+                Json::arr(self.shards.iter().map(|&n| Json::int(n))),
+            ),
             ("sizes", Json::arr(self.sizes.iter().map(|&n| Json::int(n)))),
             (
                 "strategies",
@@ -382,6 +416,7 @@ mod tests {
                             backend: b,
                             strategy: DivideStrategy::PaperFixed,
                             fault_permille: 0,
+                            shards: 1,
                         };
                         assert!(set.contains(&cell), "{}", cell.label());
                     }
@@ -477,6 +512,43 @@ mod tests {
         );
         spec.strategies.clear();
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn shards_axis_expands_innermost_and_labels_cells() {
+        let mut spec = tiny();
+        spec.shards = vec![1, 2, 4];
+        spec.fault_permille = vec![0, 100];
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 16 * 3 * 2, "shards axis multiplies the grid");
+        // Innermost: consecutive cells walk the shard axis first, then
+        // the fault axis just outside it.
+        assert_eq!(cells[0].shards, 1);
+        assert_eq!(cells[1].shards, 2);
+        assert_eq!(cells[2].shards, 4);
+        assert_eq!(cells[0].fault_permille, 0);
+        assert_eq!(cells[3].fault_permille, 100);
+        assert_eq!(cells[3].shards, 1);
+        assert_eq!(cells[0].backend, cells[5].backend);
+        // Labels: single-shard cells keep the old label, sharded ones
+        // get the /xN suffix after the fault tag.
+        assert!(!cells[0].label().contains("/x"), "{}", cells[0].label());
+        assert!(cells[2].label().ends_with("/x4"), "{}", cells[2].label());
+        assert!(cells[5].label().ends_with("/f100/x4"), "{}", cells[5].label());
+        // Parser grammar + validation.
+        assert_eq!(SweepSpec::parse_shards("1, 2,4").unwrap(), [1, 2, 4]);
+        assert!(SweepSpec::parse_shards("0").is_err());
+        assert!(SweepSpec::parse_shards("2x").is_err());
+        spec.shards = vec![0];
+        assert!(spec.expand().is_err());
+        spec.shards.clear();
+        assert!(spec.expand().is_err());
+        // JSON echo.
+        let j = tiny().to_json();
+        assert_eq!(
+            j.get("shards").unwrap().as_arr().unwrap()[0].as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

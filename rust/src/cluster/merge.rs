@@ -1,0 +1,88 @@
+//! K-way merge: reassembles a split job's per-shard sorted spans into
+//! one globally sorted array.
+//!
+//! The sampled splitter's spans are range-partitioned, so for healthy
+//! splits a plain concatenation would already be sorted — but the
+//! merge must hold for *any* per-part sorted inputs (degraded shards,
+//! future splitters without the range property), so it is a real
+//! heap-based k-way merge.  For the cluster's small k (shard counts)
+//! the heap overhead is negligible next to the span sorts it follows.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Merge `parts` (each individually sorted ascending) into one sorted
+/// vector.  Empty parts are fine; an empty part list yields an empty
+/// output.
+pub fn kway_merge(parts: &[&[i32]]) -> Vec<i32> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    // Fast paths: nothing to interleave.
+    let mut non_empty = parts.iter().filter(|p| !p.is_empty());
+    if let (Some(first), None) = (non_empty.next(), non_empty.next()) {
+        out.extend_from_slice(first);
+        return out;
+    }
+    // Heap of (head value, part index); cursors advance per part.
+    let mut cursors = vec![0usize; parts.len()];
+    let mut heap: BinaryHeap<Reverse<(i32, usize)>> = parts
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| !p.is_empty())
+        .map(|(i, p)| Reverse((p[0], i)))
+        .collect();
+    while let Some(Reverse((v, i))) = heap.pop() {
+        out.push(v);
+        cursors[i] += 1;
+        if let Some(&next) = parts[i].get(cursors[i]) {
+            heap.push(Reverse((next, i)));
+        }
+    }
+    debug_assert_eq!(out.len(), total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merge_equals_sorted_concatenation() {
+        let mut rng = Rng::new(0xCAFE);
+        for k in [2usize, 3, 8] {
+            let parts: Vec<Vec<i32>> = (0..k)
+                .map(|_| {
+                    let n = rng.below(500) as usize;
+                    let mut v: Vec<i32> =
+                        (0..n).map(|_| rng.below(10_000) as i32 - 5_000).collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            let refs: Vec<&[i32]> = parts.iter().map(Vec::as_slice).collect();
+            let merged = kway_merge(&refs);
+            let mut expect: Vec<i32> = parts.concat();
+            expect.sort_unstable();
+            assert_eq!(merged, expect, "k = {k}");
+        }
+    }
+
+    #[test]
+    fn merge_handles_empty_and_singleton_parts() {
+        assert_eq!(kway_merge(&[]), Vec::<i32>::new());
+        assert_eq!(kway_merge(&[&[][..], &[][..]]), Vec::<i32>::new());
+        assert_eq!(kway_merge(&[&[1, 2, 3][..]]), vec![1, 2, 3]);
+        assert_eq!(kway_merge(&[&[][..], &[5][..], &[][..]]), vec![5]);
+        assert_eq!(
+            kway_merge(&[&[1, 4][..], &[][..], &[2, 3][..]]),
+            vec![1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn merge_preserves_duplicate_multiplicities() {
+        let merged = kway_merge(&[&[1, 1, 2][..], &[1, 2, 2][..]]);
+        assert_eq!(merged, vec![1, 1, 1, 2, 2, 2]);
+    }
+}

@@ -1,0 +1,744 @@
+//! The sharded scale-out service: OTIS groups mapped to shards.
+//!
+//! The OHHC is a two-level network — electronic links inside a
+//! hexa-cell group, optical transpose links between groups — and that
+//! is exactly the shape of a sharded serving cluster.  This module is
+//! the cluster layer over [`crate::service`]:
+//!
+//! * a [`Cluster`] fronts N independent [`SortService`] shards, each
+//!   with its own worker pool, [`PlanCache`](crate::campaign::PlanCache)
+//!   leases, admission control, and fault plan;
+//! * a deterministic rendezvous [`Router`] (consistent hashing on the
+//!   [`job_key`]) homes every small job on one shard, so shard-local
+//!   traffic stays on the electronic links of one "group";
+//! * jobs too big for one shard take the **scatter/merge** path: the
+//!   PSRS-style sampled splitter
+//!   ([`divide_sampled`](crate::coordinator::divide_sampled)) cuts the
+//!   input into per-shard spans, every shard sorts its span through
+//!   the normal [`Session`](crate::pipeline::Session) pipeline on its
+//!   own leased topology, and a k-way merge ([`kway_merge`])
+//!   reassembles the result while the
+//!   [`InterShardModel`](crate::sim::InterShardModel) charges the
+//!   cross-shard traffic at the DES's optical-hop prices — the paper's
+//!   §5 analytical story extended to cluster scale;
+//! * ticket forwarding: [`Cluster::submit`] returns a
+//!   [`ClusterSubmission`] whose [`ClusterTicket`] wraps the shard's
+//!   own [`JobTicket`] (routed jobs) or a cluster-owned completion
+//!   slot (split jobs) — poll, wait, cancel, exactly the service's
+//!   per-job contract;
+//! * observability: [`Cluster::snapshot`] merges every shard's
+//!   [`ServiceStats`] at histogram level ([`ServiceStats::merge`]) so
+//!   cluster percentiles are computed after the merge, never averaged,
+//!   plus the cluster-only counters in [`ClusterStats`] (routed vs
+//!   split, cross-shard bytes, virtual transfer charge).
+//!
+//! A dead shard is handled at the router: [`Router::route_alive`]
+//! remaps only the dead shard's keys (rendezvous hashing's minimal
+//! disruption), and in-flight jobs on the dying shard fail explicitly
+//! through the service's fault plan / retry budget — never silently.
+
+mod merge;
+mod router;
+mod stats;
+
+pub use merge::kway_merge;
+pub use router::{job_key, Router};
+pub use stats::{ClusterSnapshot, ClusterStats};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::LinkModel;
+use crate::coordinator::divide_sampled;
+use crate::error::{Error, Result};
+use crate::pipeline::Session;
+use crate::service::job::{fnv1a, multiset_fingerprint, JobResult, JobSpec};
+use crate::service::loadgen::JobSink;
+use crate::service::queue::RejectReason;
+use crate::service::stats::{ServiceSnapshot, ServiceStats};
+use crate::service::ticket::{JobTicket, Slot, Submission};
+use crate::service::{ServiceConfig, SortService};
+use crate::sim::transfer::InterShardModel;
+use crate::sort::is_sorted;
+
+/// Cluster knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of shards (independent [`SortService`]s).
+    pub shards: usize,
+    /// Per-shard service configuration (cloned per shard).
+    pub shard: ServiceConfig,
+    /// Jobs with more keys than this take the scatter/merge path
+    /// (single-shard clusters route everything regardless).
+    pub split_threshold: usize,
+    /// At most this many split jobs in flight; beyond it the cluster
+    /// front door sheds explicitly.
+    pub max_inflight_splits: usize,
+    /// Router seed — same seed, same shard assignment, run after run.
+    pub router_seed: u64,
+    /// Link parameters pricing the cross-shard optical traffic.
+    pub link: LinkModel,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            shards: 2,
+            shard: ServiceConfig::default(),
+            split_threshold: 65_536,
+            max_inflight_splits: 8,
+            router_seed: 0x0715C,
+            link: LinkModel::default(),
+        }
+    }
+}
+
+/// The tenant's handle to one accepted cluster job.
+#[derive(Debug)]
+pub struct ClusterTicket {
+    shard: Option<usize>,
+    inner: JobTicket,
+}
+
+impl ClusterTicket {
+    /// The job id this ticket tracks.
+    pub fn id(&self) -> u64 {
+        self.inner.id()
+    }
+
+    /// The home shard of a routed job; `None` for a split job (it ran
+    /// on every shard).
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
+    }
+
+    /// Did this job take the scatter/merge path?
+    pub fn is_split(&self) -> bool {
+        self.shard.is_none()
+    }
+
+    /// Non-blocking status read (see
+    /// [`JobTicket::poll`]).
+    pub fn poll(&self) -> crate::service::TicketStatus {
+        self.inner.poll()
+    }
+
+    /// Non-blocking result take: `Some` exactly once.
+    pub fn try_result(&self) -> Option<JobResult> {
+        self.inner.try_result()
+    }
+
+    /// Block until the result is ready (or `timeout` passes), then
+    /// take it.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        self.inner.wait_timeout(timeout)
+    }
+
+    /// Cancel if nothing claimed the job yet.  Split jobs claim their
+    /// slot at submit, so they always lose this race — by design: the
+    /// scatter begins immediately.
+    pub fn try_cancel(&self) -> bool {
+        self.inner.try_cancel()
+    }
+}
+
+/// Outcome of one [`Cluster::submit`].
+#[derive(Debug)]
+pub enum ClusterSubmission {
+    /// Accepted; `shard` is the home shard (`None` for a split job).
+    Accepted {
+        /// Home shard index, or `None` when the job was split.
+        shard: Option<usize>,
+        /// The job's completion handle.
+        ticket: ClusterTicket,
+    },
+    /// Turned away — nothing was enqueued anywhere.
+    Rejected {
+        /// Why.
+        reason: RejectReason,
+    },
+}
+
+impl ClusterSubmission {
+    /// Did the job make it in?
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, ClusterSubmission::Accepted { .. })
+    }
+
+    /// The ticket, consuming the submission (`None` when rejected).
+    pub fn ticket(self) -> Option<ClusterTicket> {
+        match self {
+            ClusterSubmission::Accepted { ticket, .. } => Some(ticket),
+            ClusterSubmission::Rejected { .. } => None,
+        }
+    }
+}
+
+/// Split-path shared state: completed split slots for the drain, plus
+/// the in-flight gauge the front door sheds on.
+#[derive(Debug, Default)]
+struct SplitShared {
+    completed: Mutex<VecDeque<Arc<Slot>>>,
+    ready: Condvar,
+    inflight: AtomicUsize,
+}
+
+/// N sort-service shards behind one deterministic router.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    shards: Arc<Vec<SortService>>,
+    router: Router,
+    transfer: InterShardModel,
+    stats: Arc<ClusterStats>,
+    split: Arc<SplitShared>,
+    splitters: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// Start `cfg.shards` independent shards.
+    pub fn start(cfg: ClusterConfig) -> Cluster {
+        let n = cfg.shards.max(1);
+        let shards: Vec<SortService> =
+            (0..n).map(|_| SortService::start(cfg.shard.clone())).collect();
+        Cluster {
+            router: Router::new(n, cfg.router_seed),
+            transfer: InterShardModel::new(cfg.link),
+            shards: Arc::new(shards),
+            stats: Arc::new(ClusterStats::new()),
+            split: Arc::new(SplitShared::default()),
+            splitters: Mutex::new(Vec::new()),
+            cfg,
+        }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `i`'s service (tests, diagnostics).
+    pub fn shard(&self, i: usize) -> &SortService {
+        &self.shards[i]
+    }
+
+    /// The router in use.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Live cluster-level counters.
+    pub fn stats(&self) -> &ClusterStats {
+        &self.stats
+    }
+
+    /// Submit one job.  Small jobs route to their home shard
+    /// (consistent hashing on [`job_key`]); jobs above the split
+    /// threshold scatter across every shard and merge back.
+    pub fn submit(&self, spec: JobSpec) -> ClusterSubmission {
+        if self.shards.len() > 1 && spec.elements > self.cfg.split_threshold {
+            self.submit_split(spec)
+        } else {
+            self.submit_routed(spec)
+        }
+    }
+
+    fn submit_routed(&self, spec: JobSpec) -> ClusterSubmission {
+        let shard = self.router.route(job_key(&spec));
+        match self.shards[shard].submit(spec) {
+            Submission::Accepted { ticket, .. } => {
+                self.stats.on_routed();
+                ClusterSubmission::Accepted {
+                    shard: Some(shard),
+                    ticket: ClusterTicket {
+                        shard: Some(shard),
+                        inner: ticket,
+                    },
+                }
+            }
+            Submission::Rejected { reason } => ClusterSubmission::Rejected { reason },
+        }
+    }
+
+    fn submit_split(&self, spec: JobSpec) -> ClusterSubmission {
+        if let Err(e) = spec.validate() {
+            return ClusterSubmission::Rejected {
+                reason: RejectReason::Invalid {
+                    detail: e.to_string(),
+                },
+            };
+        }
+        let inflight = self.split.inflight.fetch_add(1, Ordering::AcqRel);
+        if inflight >= self.cfg.max_inflight_splits {
+            self.split.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.stats.on_split_rejected();
+            return ClusterSubmission::Rejected {
+                reason: RejectReason::Overloaded {
+                    depth: inflight,
+                    shed_depth: self.cfg.max_inflight_splits,
+                },
+            };
+        }
+        let slot = Slot::new(spec.id);
+        // The scatter begins immediately: claim now so a cancel can
+        // never race a job that is already generating its input.
+        assert!(slot.claim(), "fresh slot must claim");
+        let ticket = ClusterTicket {
+            shard: None,
+            inner: JobTicket::new(Arc::clone(&slot)),
+        };
+        let accepted_at = Instant::now();
+        let home = self.router.route(job_key(&spec));
+        let shards = Arc::clone(&self.shards);
+        let split = Arc::clone(&self.split);
+        let stats = Arc::clone(&self.stats);
+        let transfer = self.transfer.clone();
+        let retain = self.cfg.shard.retain_output;
+        let handle = std::thread::Builder::new()
+            .name(format!("ohhc-split-{}", spec.id))
+            .spawn(move || {
+                let result =
+                    execute_split(&shards, &spec, home, &transfer, &stats, retain, accepted_at);
+                slot.complete(result);
+                let mut q = split.completed.lock().unwrap();
+                q.push_back(slot);
+                drop(q);
+                split.ready.notify_all();
+                split.inflight.fetch_sub(1, Ordering::AcqRel);
+            })
+            .expect("spawn split worker");
+        self.splitters.lock().unwrap().push(handle);
+        ClusterSubmission::Accepted {
+            shard: None,
+            ticket,
+        }
+    }
+
+    /// Wait up to `timeout` for any finished job (routed on any shard,
+    /// or split) whose result nobody has taken yet, and take it.
+    pub fn next_completion(&self, timeout: Duration) -> Option<JobResult> {
+        const TICK: Duration = Duration::from_millis(1);
+        let deadline = Instant::now().checked_add(timeout);
+        loop {
+            {
+                let mut q = self.split.completed.lock().unwrap();
+                while let Some(slot) = q.pop_front() {
+                    if let Some(r) = slot.take() {
+                        return Some(r);
+                    }
+                }
+            }
+            for shard in self.shards.iter() {
+                if let Some(r) = shard.try_next_completion() {
+                    return Some(r);
+                }
+            }
+            let wait = match deadline {
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    (deadline - now).min(TICK)
+                }
+                None => TICK,
+            };
+            // Split completions signal this condvar; shard completions
+            // are picked up on the next tick.
+            let q = self.split.completed.lock().unwrap();
+            let _ = self.split.ready.wait_timeout(q, wait).unwrap();
+        }
+    }
+
+    /// Non-blocking [`Self::next_completion`].
+    pub fn try_next_completion(&self) -> Option<JobResult> {
+        self.next_completion(Duration::ZERO)
+    }
+
+    /// Freeze the cluster view: per-shard snapshots plus the
+    /// histogram-level merge ([`ServiceStats::merge`]).
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        let merged = ServiceStats::new();
+        let mut per = Vec::with_capacity(self.shards.len());
+        for shard in self.shards.iter() {
+            merged.merge(shard.stats());
+            per.push(shard.stats().snapshot());
+        }
+        self.stats.freeze(per, merged.snapshot())
+    }
+
+    /// Graceful shutdown: join every split worker, shut each shard
+    /// down (their backlogs still execute), and return the final
+    /// snapshot plus every result nobody took.  Drain completions
+    /// first (as loadgen does) if the merged histograms must cover
+    /// every job — the merge is frozen as the shards close.
+    pub fn shutdown(self) -> (ClusterSnapshot, Vec<JobResult>) {
+        let Cluster {
+            shards,
+            stats,
+            split,
+            splitters,
+            ..
+        } = self;
+        for h in splitters.into_inner().unwrap() {
+            let _ = h.join();
+        }
+        let mut rest = Vec::new();
+        {
+            let mut q = split.completed.lock().unwrap();
+            while let Some(slot) = q.pop_front() {
+                if let Some(r) = slot.take() {
+                    rest.push(r);
+                }
+            }
+        }
+        let shards = Arc::try_unwrap(shards)
+            .ok()
+            .expect("split workers joined; no shard handle outlives the cluster");
+        let merged = ServiceStats::new();
+        for shard in &shards {
+            merged.merge(shard.stats());
+        }
+        let mut finals = Vec::with_capacity(shards.len());
+        for shard in shards {
+            let (snap, leftover) = shard.shutdown();
+            finals.push(snap);
+            rest.extend(leftover);
+        }
+        (stats.freeze(finals, merged.snapshot()), rest)
+    }
+}
+
+impl JobSink for Cluster {
+    fn offer(&self, spec: JobSpec) -> bool {
+        self.submit(spec).is_accepted()
+    }
+
+    fn drain_next(&self, timeout: Duration) -> Option<JobResult> {
+        self.next_completion(timeout)
+    }
+
+    fn stats_snapshot(&self) -> ServiceSnapshot {
+        self.snapshot().merged
+    }
+}
+
+/// The scatter/merge path, run on a dedicated split worker thread:
+/// sampled split into per-shard spans, one pipeline session per shard
+/// on that shard's leased topology (accounted into that shard's
+/// stats), k-way merge, full verification, optical transfer charge.
+fn execute_split(
+    shards: &[SortService],
+    spec: &JobSpec,
+    home: usize,
+    transfer: &InterShardModel,
+    stats: &ClusterStats,
+    retain: bool,
+    accepted_at: Instant,
+) -> JobResult {
+    let data = spec.generate();
+    let t0 = Instant::now();
+    let queue_latency = t0.duration_since(accepted_at);
+    let run = (|| -> Result<(Vec<i32>, f64, u64, Duration, f64)> {
+        let n = shards.len();
+        let divided = divide_sampled(&data, n)?;
+        let imbalance = divided.imbalance();
+        let sizes = divided.sizes();
+        // One session per shard, concurrently; each shard leases its
+        // own (dimension, construction) bundle from its own PlanCache
+        // and its stats observe the session's stage boundaries.
+        let spans: Vec<&[i32]> = (0..n).map(|b| divided.buckets.bucket(b)).collect();
+        let parts: Vec<Result<Option<Vec<i32>>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &span)| {
+                    let shard = &shards[i];
+                    scope.spawn(move || sort_span_on_shard(shard, spec, span))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::Invariant("span sorter panicked".into())))
+                })
+                .collect()
+        });
+        let mut sorted_parts: Vec<Vec<i32>> = Vec::with_capacity(n);
+        for part in parts {
+            if let Some(p) = part? {
+                sorted_parts.push(p);
+            }
+        }
+        let refs: Vec<&[i32]> = sorted_parts.iter().map(Vec::as_slice).collect();
+        let merge_t0 = Instant::now();
+        let merged = kway_merge(&refs);
+        let merge_wall = merge_t0.elapsed();
+        if merged.len() != data.len()
+            || !is_sorted(&merged)
+            || multiset_fingerprint(&merged) != multiset_fingerprint(&data)
+        {
+            return Err(Error::Invariant(
+                "cluster merge is not a sorted permutation of the input".into(),
+            ));
+        }
+        let charge = transfer.split_transfer(home, &sizes);
+        Ok((
+            merged,
+            imbalance,
+            charge.cross_shard_bytes,
+            merge_wall,
+            charge.transfer_ns,
+        ))
+    })();
+    let sort_latency = t0.elapsed();
+    let total_latency = accepted_at.elapsed();
+    let deadline_met = spec.deadline.map(|d| total_latency <= d);
+    match run {
+        Ok((merged, imbalance, bytes, merge_wall, transfer_ns)) => {
+            stats.on_split(bytes, transfer_ns, merge_wall);
+            JobResult {
+                id: spec.id,
+                elements: data.len(),
+                dimension: spec.dimension,
+                batched: false,
+                queue_latency,
+                sort_latency,
+                total_latency,
+                deadline: spec.deadline,
+                deadline_met,
+                sorted_ok: true,
+                checksum: fnv1a(&merged),
+                imbalance,
+                skew_redivides: 0,
+                retries: 0,
+                error: None,
+                output: retain.then_some(merged),
+            }
+        }
+        Err(e) => JobResult {
+            id: spec.id,
+            elements: data.len(),
+            dimension: spec.dimension,
+            batched: false,
+            queue_latency,
+            sort_latency,
+            total_latency,
+            deadline: spec.deadline,
+            deadline_met,
+            sorted_ok: false,
+            checksum: 0,
+            imbalance: 0.0,
+            skew_redivides: 0,
+            retries: 0,
+            error: Some(e.to_string()),
+            output: None,
+        },
+    }
+}
+
+/// Sort one span through the shard's normal pipeline path, accounting
+/// the sub-job into the shard's stats (one accepted, one completed or
+/// failed — the per-shard invariant holds for split traffic too).
+fn sort_span_on_shard(
+    shard: &SortService,
+    spec: &JobSpec,
+    span: &[i32],
+) -> Result<Option<Vec<i32>>> {
+    if span.is_empty() {
+        return Ok(None);
+    }
+    let lease = shard.plan_cache().lease(spec.dimension, spec.construction)?;
+    shard.stats().on_submit(true);
+    let t0 = Instant::now();
+    let run = (|| -> Result<crate::pipeline::Outcome> {
+        Ok(Session::single(&lease.net, &lease.plans, span)
+            .with_divide_strategy(spec.strategy)
+            .with_observer(shard.stats())
+            .divide()?
+            .local_sort()?
+            .gather()?)
+    })();
+    let wall = t0.elapsed();
+    let sub = |ok: bool, checksum: u64, imbalance: f64, redivides: u32, error: Option<String>| {
+        JobResult {
+            id: spec.id,
+            elements: span.len(),
+            dimension: spec.dimension,
+            batched: false,
+            queue_latency: Duration::ZERO,
+            sort_latency: wall,
+            total_latency: wall,
+            deadline: None,
+            deadline_met: None,
+            sorted_ok: ok,
+            checksum,
+            imbalance,
+            skew_redivides: redivides,
+            retries: 0,
+            error,
+            output: None,
+        }
+    };
+    match run {
+        Ok(outcome) => {
+            let ok = is_sorted(&outcome.sorted)
+                && multiset_fingerprint(&outcome.sorted) == multiset_fingerprint(span);
+            shard.stats().on_result(&sub(
+                ok,
+                fnv1a(&outcome.sorted),
+                outcome.imbalance,
+                outcome.skew_redivides,
+                None,
+            ));
+            if ok {
+                Ok(Some(outcome.sorted))
+            } else {
+                Err(Error::Invariant("shard span failed verification".into()))
+            }
+        }
+        Err(e) => {
+            shard.stats().on_result(&sub(false, 0, 0.0, 0, Some(e.to_string())));
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Construction, Distribution, DivideStrategy};
+
+    fn spec(id: u64, elements: usize) -> JobSpec {
+        JobSpec {
+            id,
+            distribution: Distribution::Random,
+            elements,
+            seed: 0xC0FFEE + id,
+            dimension: 1,
+            construction: Construction::FullGroup,
+            strategy: DivideStrategy::PaperFixed,
+            deadline: None,
+        }
+    }
+
+    fn tiny_cluster(shards: usize, split_threshold: usize) -> Cluster {
+        Cluster::start(ClusterConfig {
+            shards,
+            shard: ServiceConfig {
+                workers: 1,
+                retain_output: true,
+                ..Default::default()
+            },
+            split_threshold,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn routed_jobs_complete_on_their_home_shard() {
+        let cluster = tiny_cluster(2, usize::MAX);
+        let mut homes = Vec::new();
+        for id in 0..8u64 {
+            match cluster.submit(spec(id, 2_000)) {
+                ClusterSubmission::Accepted { shard, ticket } => {
+                    assert_eq!(shard, ticket.shard());
+                    assert!(!ticket.is_split());
+                    homes.push((ticket, shard.unwrap()));
+                }
+                ClusterSubmission::Rejected { reason } => panic!("rejected: {reason}"),
+            }
+        }
+        for (ticket, home) in &homes {
+            let r = ticket.wait_timeout(Duration::from_secs(60)).expect("result");
+            assert!(r.sorted_ok, "{:?}", r.error);
+            assert!(*home < 2);
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.routed, 8);
+        assert_eq!(snap.split_jobs, 0);
+        assert_eq!(snap.merged.completed, 8);
+        assert_eq!(
+            snap.shards.iter().map(|s| s.completed).sum::<u64>(),
+            snap.merged.completed
+        );
+        let (final_snap, rest) = cluster.shutdown();
+        assert!(rest.is_empty(), "all results already taken");
+        assert_eq!(final_snap.merged.completed, 8);
+    }
+
+    #[test]
+    fn split_job_output_matches_the_sequential_sort() {
+        let cluster = tiny_cluster(3, 1_000);
+        let job = spec(1, 12_000);
+        let mut expect = job.generate();
+        expect.sort_unstable();
+        let sub = cluster.submit(job);
+        assert!(sub.is_accepted());
+        let ticket = sub.ticket().unwrap();
+        assert!(ticket.is_split());
+        assert!(!ticket.try_cancel(), "split jobs claim at submit");
+        let r = ticket.wait_timeout(Duration::from_secs(120)).expect("split result");
+        assert!(r.sorted_ok, "{:?}", r.error);
+        assert_eq!(r.output.as_deref(), Some(expect.as_slice()));
+        let snap = cluster.snapshot();
+        assert_eq!(snap.split_jobs, 1);
+        assert!(snap.cross_shard_bytes > 0, "spans must cross shards");
+        assert!(snap.transfer.p50 > Duration::ZERO);
+        // Every shard that sorted a span accounted it.
+        for s in &snap.shards {
+            assert_eq!(s.accepted, s.completed + s.failed);
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn split_shedding_is_explicit() {
+        let cluster = Cluster::start(ClusterConfig {
+            shards: 2,
+            shard: ServiceConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            split_threshold: 100,
+            max_inflight_splits: 0,
+            ..Default::default()
+        });
+        match cluster.submit(spec(0, 10_000)) {
+            ClusterSubmission::Rejected {
+                reason: RejectReason::Overloaded { .. },
+            } => {}
+            other => panic!("expected Overloaded shed, got {other:?}"),
+        }
+        assert_eq!(cluster.snapshot().split_rejected, 1);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn drain_covers_routed_and_split_results() {
+        let cluster = tiny_cluster(2, 4_000);
+        let mut accepted = 0;
+        for id in 0..4u64 {
+            // ids 0/2 small (routed), 1/3 big (split).
+            let elements = if id % 2 == 0 { 2_000 } else { 9_000 };
+            if cluster.submit(spec(id, elements)).is_accepted() {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4);
+        let mut got = Vec::new();
+        while got.len() < accepted {
+            match cluster.next_completion(Duration::from_secs(120)) {
+                Some(r) => got.push(r.id),
+                None => panic!("drain stalled with {} of {accepted}", got.len()),
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert!(cluster.try_next_completion().is_none());
+        cluster.shutdown();
+    }
+}

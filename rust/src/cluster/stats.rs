@@ -1,0 +1,182 @@
+//! Cluster observability: per-shard [`ServiceSnapshot`]s, one merged
+//! roll-up (histogram-accurate, via [`ServiceStats::merge`]), and the
+//! cluster-level counters no single shard can see — routed vs split
+//! jobs, cross-shard bytes, and the virtual optical transfer charge.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::Histogram;
+use crate::service::stats::{LatencySummary, ServiceSnapshot};
+use crate::util::json::Json;
+
+/// Live cluster-level counters, shared by the router front door and
+/// every split worker.
+#[derive(Debug, Default)]
+pub struct ClusterStats {
+    routed: AtomicU64,
+    split_jobs: AtomicU64,
+    split_rejected: AtomicU64,
+    cross_shard_bytes: AtomicU64,
+    transfer_ns: Mutex<Histogram>,
+    merge_ns: Mutex<Histogram>,
+}
+
+impl ClusterStats {
+    /// Fresh stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One small job accepted onto its home shard.
+    pub fn on_routed(&self) {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One split job finished its scatter/merge: `bytes` crossed the
+    /// optical fabric (both directions), charged `transfer_ns` of
+    /// virtual optical time, and the host-side k-way merge took
+    /// `merge_wall`.
+    pub fn on_split(&self, bytes: u64, transfer_ns: f64, merge_wall: Duration) {
+        self.split_jobs.fetch_add(1, Ordering::Relaxed);
+        self.cross_shard_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.transfer_ns.lock().unwrap().record(transfer_ns.max(0.0) as u64);
+        self.merge_ns.lock().unwrap().record_duration(merge_wall);
+    }
+
+    /// One split job shed at the cluster front door.
+    pub fn on_split_rejected(&self) {
+        self.split_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Jobs routed whole to a shard so far.
+    pub fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// Split jobs finished so far.
+    pub fn split_jobs(&self) -> u64 {
+        self.split_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Cross-shard bytes accumulated so far.
+    pub fn cross_shard_bytes(&self) -> u64 {
+        self.cross_shard_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Freeze the cluster-level half of a snapshot (the caller supplies
+    /// the per-shard and merged service views).
+    pub fn freeze(&self, shards: Vec<ServiceSnapshot>, merged: ServiceSnapshot) -> ClusterSnapshot {
+        ClusterSnapshot {
+            shards,
+            merged,
+            routed: self.routed(),
+            split_jobs: self.split_jobs(),
+            split_rejected: self.split_rejected.load(Ordering::Relaxed),
+            cross_shard_bytes: self.cross_shard_bytes(),
+            transfer: LatencySummary::of(&self.transfer_ns.lock().unwrap()),
+            merge: LatencySummary::of(&self.merge_ns.lock().unwrap()),
+        }
+    }
+}
+
+/// Frozen cluster view: every shard's service snapshot, the merged
+/// roll-up, and the cluster-level counters.
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    /// Per-shard service snapshots, shard order.
+    pub shards: Vec<ServiceSnapshot>,
+    /// All shards merged at histogram level — percentiles are computed
+    /// *after* the merge, not averaged across shards.
+    pub merged: ServiceSnapshot,
+    /// Jobs routed whole to their home shard.
+    pub routed: u64,
+    /// Jobs that took the scatter/merge path.
+    pub split_jobs: u64,
+    /// Split jobs shed at the cluster front door.
+    pub split_rejected: u64,
+    /// Bytes that crossed the optical fabric (both directions).
+    pub cross_shard_bytes: u64,
+    /// Virtual optical transfer charge per split job (ns).
+    pub transfer: LatencySummary,
+    /// Host wall time of the k-way merge per split job.
+    pub merge: LatencySummary,
+}
+
+impl ClusterSnapshot {
+    /// The snapshot as a JSON object (alphabetical keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("cross_shard_bytes", Json::int(self.cross_shard_bytes as usize)),
+            ("merge_latency", self.merge.to_json()),
+            ("merged", self.merged.to_json()),
+            ("routed", Json::int(self.routed as usize)),
+            (
+                "shards",
+                Json::arr(self.shards.iter().map(ServiceSnapshot::to_json)),
+            ),
+            ("split_jobs", Json::int(self.split_jobs as usize)),
+            ("split_rejected", Json::int(self.split_rejected as usize)),
+            ("transfer_ns", self.transfer.to_json()),
+        ])
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn summary_text(&self) -> String {
+        let mut out = format!(
+            "cluster: {} shards, {} routed, {} split ({} shed), \
+             {} cross-shard bytes\n\
+             transfer (virtual): p50 {} ns p99 {} ns; merge: p50 {:.3?} p99 {:.3?}\n\
+             merged {}",
+            self.shards.len(),
+            self.routed,
+            self.split_jobs,
+            self.split_rejected,
+            self.cross_shard_bytes,
+            self.transfer.p50.as_nanos(),
+            self.transfer.p99.as_nanos(),
+            self.merge.p50,
+            self.merge.p99,
+            self.merged.summary_text(),
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "shard {i}: {} accepted, {} completed, {} failed, {} rejected\n",
+                s.accepted, s.completed, s.failed, s.rejected
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::stats::ServiceStats;
+
+    #[test]
+    fn counters_accumulate_and_freeze() {
+        let stats = ClusterStats::new();
+        stats.on_routed();
+        stats.on_routed();
+        stats.on_split(8_000, 525.0, Duration::from_micros(40));
+        stats.on_split_rejected();
+        let empty = ServiceStats::new().snapshot();
+        let snap = stats.freeze(vec![empty.clone(), empty.clone()], empty);
+        assert_eq!(snap.routed, 2);
+        assert_eq!(snap.split_jobs, 1);
+        assert_eq!(snap.split_rejected, 1);
+        assert_eq!(snap.cross_shard_bytes, 8_000);
+        assert_eq!(snap.transfer.count, 1);
+        assert_eq!(snap.merge.count, 1);
+        let j = snap.to_json();
+        assert_eq!(j.get("routed").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("cross_shard_bytes").unwrap().as_usize(), Some(8_000));
+        assert_eq!(j.get("shards").unwrap().as_arr().map(<[Json]>::len), Some(2));
+        assert!(j.get("merged").unwrap().get("completed").is_some());
+        let text = snap.summary_text();
+        assert!(text.contains("2 routed"));
+        assert!(text.contains("shard 1:"));
+    }
+}

@@ -16,7 +16,10 @@
 //!   grid concurrently with shared topology/plan caches, the
 //!   [`service`] layer — a multi-tenant sort service (bounded job
 //!   queue, per-job tickets, sorter pool, deadline-aware small-job
-//!   batching, admission control, latency SLOs) for online serving —
+//!   batching, admission control, latency SLOs) for online serving,
+//!   the [`cluster`] layer that scales that service out — N shards
+//!   behind a deterministic rendezvous router, with a sampled
+//!   scatter/merge path for jobs too big for one shard —
 //!   and the persistent work-stealing executor ([`runtime::Executor`])
 //!   that every one of those layers submits its parallel work to,
 //!   keeping the sort hot path free of thread spawn/teardown after
@@ -97,6 +100,7 @@
 pub mod analysis;
 pub mod baselines;
 pub mod campaign;
+pub mod cluster;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

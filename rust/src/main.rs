@@ -10,7 +10,10 @@
 //! * `serve`    — the in-process multi-tenant sort service over a
 //!   jobfile / stdin job stream.
 //! * `loadgen`  — deterministic open-/closed-loop load generation
-//!   against an in-process service, with a JSON latency report.
+//!   against an in-process service (or a sharded cluster with
+//!   `--shards`), with a JSON latency report.
+//! * `cluster`  — shard-scaling sweep: the same seeded load replayed
+//!   against 1/2/4/8-shard clusters, jobs/sec per shard count.
 //! * `figures`  — regenerate paper tables/figures into CSV + stdout.
 //! * `sweep`    — the paper's full 216-run sweep, CSV per cell.
 //! * `topo`     — topology properties (OHHC and baselines).
@@ -25,6 +28,7 @@ use std::path::PathBuf;
 use ohhc_qsort::analysis::validate;
 use ohhc_qsort::bail;
 use ohhc_qsort::campaign::{Campaign, SweepSpec};
+use ohhc_qsort::cluster::{Cluster, ClusterConfig};
 use ohhc_qsort::config::{
     Backend, Construction, Distribution, DivideEngine, DivideStrategy, ExperimentConfig,
 };
@@ -78,6 +82,9 @@ COMMANDS
              --seed N             workload seed
              --fault-rates LIST   link-failure axis in permille, e.g. 0,100,250
                                   (seeded, bridge-free; default 0 = healthy)
+             --shards LIST        cluster-shards axis, e.g. 1,2,4 (default 1 =
+                                  single OHHC; the report gains a
+                                  per_shard_count scaling table)
              --spec FILE          key=value sweep spec (axis flags override it)
              --out FILE           aggregated JSON (default results/campaign.json)
              --csv FILE           also write a per-cell CSV table
@@ -115,8 +122,22 @@ COMMANDS
              --fault-rate/--fault-links/--fault-nodes/--fault-seed/--retry-budget
                                   service knobs as in `serve`
              --admit-rate R       service token-bucket admit rate, jobs/s
+             --shards N           drive an N-shard cluster instead of one
+                                  service; the JSON gains a `cluster` object
+                                  with per-shard snapshots
+             --split-threshold N  scatter/merge jobs above N keys (cluster
+                                  mode only; default 65536)
              --assert-no-rejects  exit nonzero if anything was rejected
              --out FILE           write the throughput/latency report JSON
+  cluster    shard-scaling sweep: seeded closed-loop load vs shard count
+             --shards-list LIST   shard counts to sweep (default 1,2,4,8)
+             --jobs N             jobs per shard count (default 400)
+             --seed N             schedule seed (default 7)
+             --workers N          sorter threads per shard (default 2)
+             --min-keys N         smallest job (default 500)
+             --max-keys N         largest job, log-uniform (default 4000)
+             --split-threshold N  scatter/merge above N keys (default 65536)
+             --out FILE           write the scaling table JSON
   figures    regenerate paper tables/figures
              --out DIR            CSV output directory (default results)
              --only ID[,ID...]    subset (default: all 26 ids)
@@ -233,6 +254,7 @@ fn main() -> CliResult {
         "campaign" => cmd_campaign(&mut args)?,
         "serve" => cmd_serve(&mut args)?,
         "loadgen" => cmd_loadgen(&mut args)?,
+        "cluster" => cmd_cluster(&mut args)?,
         "figures" => cmd_figures(&mut args)?,
         "baselines" => cmd_baselines(&mut args)?,
         "sweep" => cmd_sweep(&mut args)?,
@@ -361,6 +383,9 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     if let Some(v) = args.opt("--fault-rates")? {
         spec.fault_permille = SweepSpec::parse_fault_rates(&v)?;
     }
+    if let Some(v) = args.opt("--shards")? {
+        spec.shards = SweepSpec::parse_shards(&v)?;
+    }
     spec.workers = args.parse_or("--workers", spec.workers)?;
     spec.jobs = args.parse_or("--jobs", spec.jobs)?;
     spec.repetitions = args.parse_or("--reps", spec.repetitions)?;
@@ -369,7 +394,7 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
     let planned = spec.expand()?.len();
     eprintln!(
         "campaign: {planned} cells ({} dims × {} constructions × {} dists × {} sizes × {} \
-         backends × {} strategies × {} fault rates, deduplicated), {} job(s)",
+         backends × {} strategies × {} fault rates × {} shard counts, deduplicated), {} job(s)",
         spec.dimensions.len(),
         spec.constructions.len(),
         spec.distributions.len(),
@@ -377,6 +402,7 @@ fn cmd_campaign(args: &mut Args) -> CliResult {
         spec.backends.len(),
         spec.strategies.len(),
         spec.fault_permille.len(),
+        spec.shards.len(),
         spec.jobs.max(1)
     );
 
@@ -581,6 +607,10 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
     )?;
     let deadline_ms = args.opt_parse::<u64>("--deadline-ms")?;
     let admit_rate = args.opt_parse::<f64>("--admit-rate")?;
+    let shards: usize = args.parse_or("--shards", 1)?;
+    ensure!(shards >= 1, "loadgen: --shards must be at least 1");
+    let split_threshold: usize =
+        args.parse_or("--split-threshold", ClusterConfig::default().split_threshold)?;
     let mut cfg = service_config(args)?;
     cfg.rate = admit_rate;
     let faults_active = cfg.faults.is_active();
@@ -601,21 +631,48 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
         ..Default::default()
     };
     eprintln!(
-        "loadgen: {jobs} jobs seed {seed}, {} over {} workers",
+        "loadgen: {jobs} jobs seed {seed}, {} over {} worker(s){}",
         match gen_cfg.mode {
             LoadMode::Open { rate } => format!("open loop at {rate} jobs/s"),
             LoadMode::Closed { concurrency } => format!("closed loop, {concurrency} in flight"),
         },
-        cfg.workers
+        cfg.workers,
+        if shards > 1 {
+            format!(" × {shards} shards")
+        } else {
+            String::new()
+        }
     );
 
-    let service = SortService::start(cfg);
-    let report = loadgen::run(&service, &gen_cfg);
-    service.shutdown();
+    let (report, cluster_snap) = if shards > 1 {
+        let cluster = Cluster::start(ClusterConfig {
+            shards,
+            split_threshold,
+            shard: cfg,
+            ..Default::default()
+        });
+        let report = loadgen::run_on(&cluster, &gen_cfg);
+        let (snap, _leftovers) = cluster.shutdown();
+        (report, Some(snap))
+    } else {
+        let service = SortService::start(cfg);
+        let report = loadgen::run(&service, &gen_cfg);
+        service.shutdown();
+        (report, None)
+    };
 
     print!("{}", report.summary_text());
+    if let Some(snap) = &cluster_snap {
+        print!("{}", snap.summary_text());
+    }
     if let Some(path) = out {
-        let mut text = report.to_json().pretty();
+        // Cluster runs nest the loadgen report next to the cluster
+        // snapshot, so per-shard accounting rides in the same file.
+        let doc = match &cluster_snap {
+            Some(snap) => Json::obj([("cluster", snap.to_json()), ("loadgen", report.to_json())]),
+            None => report.to_json(),
+        };
+        let mut text = doc.pretty();
         text.push('\n');
         if let Some(parent) = PathBuf::from(&path).parent() {
             std::fs::create_dir_all(parent)?;
@@ -651,6 +708,108 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
             "loadgen: {} job(s) rejected under --assert-no-rejects",
             report.rejected
         );
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &mut Args) -> CliResult {
+    let out = args.opt("--out")?;
+    let shard_counts = match args.opt("--shards-list")? {
+        Some(v) => SweepSpec::parse_shards(&v)?,
+        None => vec![1, 2, 4, 8],
+    };
+    let jobs: usize = args.parse_or("--jobs", 400)?;
+    let seed: u64 = args.parse_or("--seed", 7)?;
+    let workers: usize = args.parse_or("--workers", 2)?;
+    let min_keys: usize = args.parse_or("--min-keys", 500)?;
+    let max_keys: usize = args.parse_or("--max-keys", 4_000)?;
+    let split_threshold: usize =
+        args.parse_or("--split-threshold", ClusterConfig::default().split_threshold)?;
+    ensure!(min_keys <= max_keys, "cluster: --min-keys exceeds --max-keys");
+
+    println!(
+        "cluster scaling: {jobs} jobs seed {seed}, {workers} worker(s)/shard, \
+         shard counts {shard_counts:?}"
+    );
+    let mut rows = Vec::new();
+    let mut base_jps = None;
+    for &shards in &shard_counts {
+        // The same seeded schedule replays at every shard count; only
+        // the fleet grows, so jobs/sec isolates shard scaling.
+        let gen_cfg = LoadGenConfig {
+            jobs,
+            seed,
+            dimensions: vec![1],
+            distributions: vec![Distribution::Random],
+            min_elements: min_keys,
+            max_elements: max_keys,
+            mode: LoadMode::Closed {
+                concurrency: 2 * shards,
+            },
+            ..Default::default()
+        };
+        let cluster = Cluster::start(ClusterConfig {
+            shards,
+            split_threshold,
+            shard: ServiceConfig {
+                workers,
+                ..ServiceConfig::default()
+            },
+            ..Default::default()
+        });
+        let report = loadgen::run_on(&cluster, &gen_cfg);
+        let (snap, _leftovers) = cluster.shutdown();
+        ensure!(
+            report.failures == 0,
+            "cluster: {} job(s) failed verification at {shards} shard(s)",
+            report.failures
+        );
+        ensure!(
+            report.completed + report.failures == report.accepted,
+            "cluster: {} accepted job(s) never produced results at {shards} shard(s)",
+            report.accepted - report.completed - report.failures
+        );
+        let speedup = match base_jps {
+            None => {
+                base_jps = Some(report.throughput_jps);
+                1.0
+            }
+            Some(base) if base > 0.0 => report.throughput_jps / base,
+            Some(_) => 0.0,
+        };
+        println!(
+            "  x{shards}: {:>8.1} jobs/s ({speedup:.2}x), p99 total {:?}, \
+             {} routed / {} split, {} cross-shard bytes",
+            report.throughput_jps,
+            snap.merged.total.p99,
+            snap.routed,
+            snap.split_jobs,
+            snap.cross_shard_bytes
+        );
+        rows.push(Json::obj([
+            ("completed", Json::int(report.completed)),
+            ("cross_shard_bytes", Json::int(snap.cross_shard_bytes as usize)),
+            ("p99_total_ns", Json::int(snap.merged.total.p99.as_nanos() as usize)),
+            ("shards", Json::int(shards)),
+            ("speedup", Json::num(speedup)),
+            ("split_jobs", Json::int(snap.split_jobs as usize)),
+            ("throughput_jps", Json::num(report.throughput_jps)),
+        ]));
+    }
+    if let Some(path) = out {
+        let doc = Json::obj([
+            ("jobs", Json::int(jobs)),
+            ("rows", Json::arr(rows)),
+            ("seed", Json::int(seed as usize)),
+            ("workers_per_shard", Json::int(workers)),
+        ]);
+        let mut text = doc.pretty();
+        text.push('\n');
+        if let Some(parent) = PathBuf::from(&path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, text)?;
+        println!("scaling table       → {path}");
     }
     Ok(())
 }

@@ -295,6 +295,62 @@ mod tests {
     }
 
     #[test]
+    fn many_way_merge_percentiles_track_the_sorted_oracle() {
+        // The cluster merges one histogram per shard; whatever the
+        // shard count, percentiles of the merged histogram must stay
+        // within bucket resolution of the exact order statistic over
+        // the union of all shards' samples.
+        let mut rng = crate::util::rng::Rng::new(0x5A4D);
+        for shards in [2usize, 4, 8] {
+            let mut parts: Vec<Histogram> = (0..shards).map(|_| Histogram::new()).collect();
+            let mut values = Vec::new();
+            for i in 0..4_000u64 {
+                // Skewed per-shard ranges, so no single shard sees the
+                // full distribution.
+                let shard = (i as usize) % shards;
+                let v = rng.below(10_000 * (shard as u64 + 1)) + 1;
+                parts[shard].record(v);
+                values.push(v);
+            }
+            let mut merged = Histogram::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            values.sort_unstable();
+            assert_eq!(merged.count(), values.len() as u64);
+            assert_eq!(merged.min(), values[0]);
+            assert_eq!(merged.max(), *values.last().unwrap());
+            for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+                let exact = oracle(&values, q);
+                let approx = merged.percentile(q);
+                let tol = exact / 8 + 1;
+                assert!(
+                    approx.abs_diff(exact) <= tol,
+                    "{shards} shards q {q}: approx {approx} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_preserves_min_and_max() {
+        let mut h = Histogram::new();
+        h.record(40);
+        h.record(9_000);
+        h.merge(&Histogram::new());
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 40);
+        assert_eq!(h.max(), 9_000);
+        // And the other direction: empty absorbing non-empty adopts
+        // its extremes instead of keeping the empty sentinels.
+        let mut e = Histogram::new();
+        e.merge(&h);
+        assert_eq!(e.min(), 40);
+        assert_eq!(e.max(), 9_000);
+        assert_eq!(e.percentile(1.0), 9_000);
+    }
+
+    #[test]
     fn histogram_small_values_are_exact() {
         let mut h = Histogram::new();
         for v in [0u64, 1, 2, 3, 4, 5, 6, 7] {

@@ -23,6 +23,33 @@ use crate::service::stats::ServiceSnapshot;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+/// Anything loadgen can drive: offer a job, drain a completion, freeze
+/// a stats snapshot.  [`SortService`] is the single-node sink; the
+/// cluster layer ([`crate::cluster::Cluster`]) is the sharded one —
+/// the generator itself is identical either way.
+pub trait JobSink {
+    /// Offer one job; `true` iff it was accepted.
+    fn offer(&self, spec: JobSpec) -> bool;
+    /// Wait up to `timeout` for any undelivered finished job.
+    fn drain_next(&self, timeout: Duration) -> Option<JobResult>;
+    /// Freeze the sink's service-level stats.
+    fn stats_snapshot(&self) -> ServiceSnapshot;
+}
+
+impl JobSink for SortService {
+    fn offer(&self, spec: JobSpec) -> bool {
+        self.submit(spec).is_accepted()
+    }
+
+    fn drain_next(&self, timeout: Duration) -> Option<JobResult> {
+        self.next_completion(timeout)
+    }
+
+    fn stats_snapshot(&self) -> ServiceSnapshot {
+        self.stats().snapshot()
+    }
+}
+
 /// How jobs are offered to the service.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LoadMode {
@@ -177,16 +204,22 @@ impl LoadReport {
     }
 }
 
-/// Drive a running service with the config's schedule and collect the
+/// Drive a running [`SortService`] with the config's schedule — see
+/// [`run_on`] for the generic version that also drives a
+/// [`Cluster`](crate::cluster::Cluster).
+pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
+    run_on(service, cfg)
+}
+
+/// Drive any [`JobSink`] with the config's schedule and collect the
 /// report.  Waits (bounded) for every accepted job's result — the
-/// service contract is one result per accepted (and uncancelled) job,
-/// so a stall here is a service bug, surfaced by the timeout rather
+/// sink contract is one result per accepted (and uncancelled) job,
+/// so a stall here is a sink bug, surfaced by the timeout rather
 /// than a hang.  The generator deliberately drops its tickets and
-/// consumes the service's completion drain
-/// ([`SortService::next_completion`]): it wants *any* finished job,
+/// consumes the sink's completion drain: it wants *any* finished job,
 /// whichever tenant's it is — exactly the consumer that API exists
 /// for.
-pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
+pub fn run_on<S: JobSink>(service: &S, cfg: &LoadGenConfig) -> LoadReport {
     const STALL: Duration = Duration::from_secs(120);
     let specs = schedule(cfg);
     let t0 = Instant::now();
@@ -201,7 +234,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
             let mut inflight = 0usize;
             loop {
                 while next < specs.len() && inflight < target {
-                    if service.submit(specs[next].clone()).is_accepted() {
+                    if service.offer(specs[next].clone()) {
                         accepted += 1;
                         inflight += 1;
                     } else {
@@ -212,7 +245,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
                 if inflight == 0 {
                     break;
                 }
-                match service.next_completion(STALL) {
+                match service.drain_next(STALL) {
                     Some(r) => {
                         results.push(r);
                         inflight -= 1;
@@ -232,18 +265,18 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
                         break;
                     }
                     let wait = (due - now).min(Duration::from_millis(2));
-                    if let Some(r) = service.next_completion(wait) {
+                    if let Some(r) = service.drain_next(wait) {
                         results.push(r);
                     }
                 }
-                if service.submit(spec.clone()).is_accepted() {
+                if service.offer(spec.clone()) {
                     accepted += 1;
                 } else {
                     rejected += 1;
                 }
             }
             while results.len() < accepted {
-                match service.next_completion(STALL) {
+                match service.drain_next(STALL) {
                     Some(r) => results.push(r),
                     None => break,
                 }
@@ -266,7 +299,7 @@ pub fn run(service: &SortService, cfg: &LoadGenConfig) -> LoadReport {
         deadline_missed,
         wall,
         throughput_jps: completed as f64 / wall.as_secs_f64().max(1e-9),
-        snapshot: service.stats().snapshot(),
+        snapshot: service.stats_snapshot(),
         checksums,
     }
 }

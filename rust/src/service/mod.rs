@@ -57,14 +57,13 @@
 //!   before a worker claims the job (claim and cancel race; the
 //!   winner decides);
 //! * a **dropped** ticket leaks nothing: the worker still completes
-//!   the job's slot and [`SortService::next_completion`] (or the
-//!   deprecated `try_recv`/`recv_timeout` shims over it) hands the
+//!   the job's slot and [`SortService::next_completion`] hands the
 //!   result to whoever drains completions.
 //!
-//! Served by the `serve` and `loadgen` CLI subcommands; every future
-//! scaling layer (sharding, async backends, multi-cell placement) plugs
-//! into this seam — per-job completion slots are exactly the shape an
-//! async front door awaits on.
+//! Served by the `serve` and `loadgen` CLI subcommands.  The
+//! [`crate::cluster`] layer is the first scaling layer built on this
+//! seam: it fronts N independent `SortService` shards with a
+//! deterministic router and forwards the same per-job tickets.
 //!
 //! [`TopologyBundle`]: crate::schedule::TopologyBundle
 
@@ -82,7 +81,7 @@ pub use admission::{AdmissionControl, TokenBucket};
 pub use batcher::{allot_buckets, coalesce, order_by_deadline, CoalescedBatch};
 pub use faults::FaultPlan;
 pub use job::{fnv1a, fnv1a_bytes, multiset_fingerprint, JobResult, JobSpec};
-pub use loadgen::{schedule, LoadGenConfig, LoadMode, LoadReport};
+pub use loadgen::{schedule, JobSink, LoadGenConfig, LoadMode, LoadReport};
 pub use pool::{ServiceConfig, SortService};
 pub use queue::{JobQueue, RejectReason, Submit};
 pub use stats::{LatencySummary, ServiceSnapshot, ServiceStats};

@@ -24,8 +24,7 @@
 //! job before a worker claims it.  There is **no** shared result
 //! channel; [`SortService::next_completion`] drains finished jobs
 //! whose results nobody has taken yet (the compatibility path for
-//! callers that drop their tickets), with `try_recv`/`recv_timeout`
-//! kept as thin deprecated shims over that drain.
+//! callers that drop their tickets).
 //!
 //! Faults are first-class: the configured [`FaultPlan`] can panic a
 //! worker mid-pipeline or hand the session a seeded network
@@ -285,18 +284,6 @@ impl SortService {
     /// Non-blocking [`Self::next_completion`].
     pub fn try_next_completion(&self) -> Option<JobResult> {
         self.next_completion(Duration::ZERO)
-    }
-
-    /// Shim over [`Self::try_next_completion`].
-    #[deprecated(note = "hold the JobTicket from submit(), or drain via try_next_completion()")]
-    pub fn try_recv(&self) -> Option<JobResult> {
-        self.try_next_completion()
-    }
-
-    /// Shim over [`Self::next_completion`].
-    #[deprecated(note = "wait on the JobTicket from submit(), or drain via next_completion()")]
-    pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
-        self.next_completion(timeout)
     }
 
     /// Live queue depth (cancelled-but-not-yet-skipped jobs included).

@@ -155,6 +155,46 @@ impl ServiceStats {
         self.retries.load(Ordering::Relaxed)
     }
 
+    /// Fold `other` into `self`: counters add, histograms merge
+    /// element-wise.  This is how the cluster layer rolls N shards up
+    /// into one service view — percentiles are computed *after* the
+    /// histogram merge (never averaged across shards), and nothing is
+    /// lost: `degraded_jobs`, `skew_redivides`, and the imbalance
+    /// histogram (hence `max_imbalance`) all carry over.
+    pub fn merge(&self, other: &ServiceStats) {
+        for (mine, theirs) in [
+            (&self.submitted, &other.submitted),
+            (&self.accepted, &other.accepted),
+            (&self.rejected, &other.rejected),
+            (&self.completed, &other.completed),
+            (&self.failed, &other.failed),
+            (&self.cancelled, &other.cancelled),
+            (&self.deadline_missed, &other.deadline_missed),
+            (&self.batches, &other.batches),
+            (&self.batched_jobs, &other.batched_jobs),
+            (&self.worker_panics, &other.worker_panics),
+            (&self.link_failures, &other.link_failures),
+            (&self.retries, &other.retries),
+            (&self.retries_exhausted, &other.retries_exhausted),
+            (&self.degraded_jobs, &other.degraded_jobs),
+            (&self.skew_redivides, &other.skew_redivides),
+        ] {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        for (mine, theirs) in [
+            (&self.imbalance_milli, &other.imbalance_milli),
+            (&self.queue_ns, &other.queue_ns),
+            (&self.sort_ns, &other.sort_ns),
+            (&self.total_ns, &other.total_ns),
+            (&self.stage_divide_ns, &other.stage_divide_ns),
+            (&self.stage_sort_ns, &other.stage_sort_ns),
+            (&self.stage_gather_ns, &other.stage_gather_ns),
+            (&self.degraded_total_ns, &other.degraded_total_ns),
+        ] {
+            mine.lock().unwrap().merge(&theirs.lock().unwrap());
+        }
+    }
+
     /// Freeze everything into a snapshot.
     pub fn snapshot(&self) -> ServiceSnapshot {
         ServiceSnapshot {
@@ -478,6 +518,62 @@ mod tests {
         let stages = j.get("stage_latency").unwrap();
         assert_eq!(stages.get("local_sort").unwrap().get("count").unwrap().as_usize(), Some(3));
         assert!(stats.snapshot().summary_text().contains("1 cancelled"));
+    }
+
+    #[test]
+    fn merged_shards_equal_one_service_that_saw_everything() {
+        // Two "shards" record disjoint halves of a workload; merging
+        // them must be indistinguishable from one service that saw all
+        // of it — counters, percentiles, and the fault/skew witnesses.
+        let all = ServiceStats::new();
+        let a = ServiceStats::new();
+        let b = ServiceStats::new();
+        for i in 1..=200u64 {
+            let shard = if i % 2 == 0 { &a } else { &b };
+            let mut r = result(i, 10 * i, true, None);
+            if i % 50 == 0 {
+                r.retries = 1;
+                r.skew_redivides = 2;
+                r.imbalance = 1.0 + i as f64 / 100.0;
+            }
+            shard.on_submit(true);
+            shard.on_result(&r);
+            all.on_submit(true);
+            all.on_result(&r);
+        }
+        a.on_worker_panic();
+        b.on_retry_exhausted();
+        all.on_worker_panic();
+        all.on_retry_exhausted();
+        let merged = ServiceStats::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        let (m, reference) = (merged.snapshot(), all.snapshot());
+        assert_eq!(m.submitted, reference.submitted);
+        assert_eq!(m.completed, reference.completed);
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.retries_exhausted, 1);
+        assert_eq!(m.degraded_jobs, reference.degraded_jobs);
+        assert_eq!(m.skew_redivides, reference.skew_redivides);
+        assert_eq!(m.max_imbalance, reference.max_imbalance);
+        // Histogram-level merge: every percentile matches exactly.
+        assert_eq!(m.queue, reference.queue);
+        assert_eq!(m.sort, reference.sort);
+        assert_eq!(m.total, reference.total);
+        assert_eq!(m.degraded_total, reference.degraded_total);
+    }
+
+    #[test]
+    fn merging_empty_stats_changes_nothing() {
+        let stats = ServiceStats::new();
+        stats.on_submit(true);
+        stats.on_result(&result(10, 100, true, None));
+        let before = stats.snapshot();
+        stats.merge(&ServiceStats::new());
+        let after = stats.snapshot();
+        assert_eq!(after.completed, before.completed);
+        assert_eq!(after.total, before.total);
+        assert_eq!(after.max_imbalance, before.max_imbalance);
     }
 
     #[test]

@@ -262,6 +262,8 @@ mod tests {
             deadline_met: None,
             sorted_ok: true,
             checksum: 0,
+            imbalance: 0.0,
+            skew_redivides: 0,
             retries: 0,
             error: None,
             output: None,

@@ -13,14 +13,20 @@
 //!   time, per-message delays and communication-step traces.  This is the
 //!   engine that lets us check Theorems 3 and 6 empirically, which the
 //!   paper could only derive analytically.
+//!
+//! [`transfer`] extends the same price list to cluster scale: the
+//! sharded service's cross-shard scatter/merge traffic is charged at
+//! the DES's optical-hop prices (see [`crate::cluster`]).
 
 pub mod engine;
 pub mod event;
 pub mod message;
 pub mod threaded;
 pub mod trace;
+pub mod transfer;
 
 pub use engine::{DesOutcome, DesSimulator};
 pub use message::{Batch, SubArray};
 pub use threaded::{DirectRun, LocalSortStats, ThreadedOutcome, ThreadedSimulator};
 pub use trace::CommTrace;
+pub use transfer::{InterShardModel, SplitTransfer};

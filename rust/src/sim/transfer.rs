@@ -1,0 +1,124 @@
+//! Inter-shard transfer cost model: the cluster's scatter/merge
+//! traffic priced at optical-hop prices.
+//!
+//! The cluster layer ([`crate::cluster`]) maps OTIS groups to shards:
+//! traffic inside a shard rides the electronic intra-group links the
+//! shard's own DES runs already charge for, while a split job's spans
+//! cross the **optical transpose fabric** to reach the other shards
+//! and cross it again on the way back to the merger.  This model
+//! extends the paper's §5 analytical story to cluster scale by pricing
+//! exactly that cross-shard traffic with the *same* store-and-forward
+//! optical parameters the DES engine uses for a single optical hop
+//! (`latency + bytes / bandwidth`, see
+//! [`DesSimulator`](crate::sim::DesSimulator)).
+//!
+//! The shape of the charge: the home shard's router serializes the
+//! remote spans onto its transpose port, so one direction costs one
+//! optical latency plus the serialized remote bytes; the merge-side
+//! return path is symmetric.  Spans that stay on the home shard are
+//! free — they never leave the group.
+
+use crate::config::LinkModel;
+
+/// Bytes per key — the DES charges `i32` keys at 4 bytes and so do we.
+pub const KEY_BYTES: u64 = 4;
+
+/// What one split job's scatter + merge-return traffic costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitTransfer {
+    /// Bytes that crossed the optical fabric, both directions summed.
+    pub cross_shard_bytes: u64,
+    /// Virtual ns of the scatter + return transfers at optical prices.
+    pub transfer_ns: f64,
+}
+
+/// Prices cross-shard span traffic over the optical transpose fabric.
+#[derive(Debug, Clone)]
+pub struct InterShardModel {
+    link: LinkModel,
+}
+
+impl InterShardModel {
+    /// A model over the given link parameters (only the optical pair is
+    /// consulted; electronic traffic stays inside the shards).
+    pub fn new(link: LinkModel) -> Self {
+        InterShardModel { link }
+    }
+
+    /// The link parameters in use.
+    pub fn link(&self) -> &LinkModel {
+        &self.link
+    }
+
+    /// One store-and-forward optical hop carrying `bytes` — identical
+    /// arithmetic to the DES engine's optical hop cost.
+    pub fn optical_hop_ns(&self, bytes: u64) -> f64 {
+        self.link.optical_latency_ns + bytes as f64 / self.link.optical_bandwidth
+    }
+
+    /// Price one split job: `span_keys[i]` keys go to shard `i`, the
+    /// span staying on `home` never leaves the group.  Both directions
+    /// (scatter out, sorted spans back to the merger) are charged; a
+    /// job whose every key stays home costs nothing.
+    pub fn split_transfer(&self, home: usize, span_keys: &[usize]) -> SplitTransfer {
+        let remote_keys: u64 = span_keys
+            .iter()
+            .enumerate()
+            .filter(|&(shard, _)| shard != home)
+            .map(|(_, &keys)| keys as u64)
+            .sum();
+        let one_way = remote_keys * KEY_BYTES;
+        if one_way == 0 {
+            return SplitTransfer {
+                cross_shard_bytes: 0,
+                transfer_ns: 0.0,
+            };
+        }
+        SplitTransfer {
+            cross_shard_bytes: 2 * one_way,
+            transfer_ns: 2.0 * self.optical_hop_ns(one_way),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optical_hop_matches_the_des_formula() {
+        let m = InterShardModel::new(LinkModel::default());
+        // Defaults: 25 ns latency, 16 B/ns — 4000 bytes = 25 + 250 ns.
+        assert!((m.optical_hop_ns(4_000) - 275.0).abs() < 1e-9);
+        assert!((m.optical_hop_ns(0) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn home_only_traffic_is_free() {
+        let m = InterShardModel::new(LinkModel::default());
+        let t = m.split_transfer(0, &[10_000, 0, 0, 0]);
+        assert_eq!(t.cross_shard_bytes, 0);
+        assert_eq!(t.transfer_ns, 0.0);
+    }
+
+    #[test]
+    fn remote_spans_pay_both_directions() {
+        let m = InterShardModel::new(LinkModel::default());
+        // Home is shard 1; shards 0 and 2 hold 500 keys each.
+        let t = m.split_transfer(1, &[500, 9_000, 500]);
+        assert_eq!(t.cross_shard_bytes, 2 * 1_000 * KEY_BYTES);
+        let expect = 2.0 * (25.0 + (1_000.0 * KEY_BYTES as f64) / 16.0);
+        assert!((t.transfer_ns - expect).abs() < 1e-9, "{}", t.transfer_ns);
+    }
+
+    #[test]
+    fn transfer_cost_is_monotone_in_remote_bytes() {
+        let m = InterShardModel::new(LinkModel::default());
+        let mut last = 0.0;
+        for keys in [1usize, 10, 100, 1_000, 100_000] {
+            let t = m.split_transfer(0, &[0, keys]);
+            assert!(t.transfer_ns > last, "{keys}");
+            last = t.transfer_ns;
+        }
+    }
+}

@@ -171,9 +171,6 @@ fn output_really_is_sorted_spot_check() {
 }
 
 #[test]
-// Deliberately exercises the deprecated recv_timeout shim — it must
-// keep draining completions for pre-ticket callers.
-#[allow(deprecated)]
 fn campaign_and_service_share_one_executor_pool() {
     // The tentpole contract of the persistent executor: a campaign sweep
     // and a burst of service jobs run concurrently, both submitting all
@@ -182,6 +179,7 @@ fn campaign_and_service_share_one_executor_pool() {
     use std::time::Duration;
 
     use ohhc_qsort::campaign::{Campaign, SweepSpec};
+    use ohhc_qsort::config::DivideStrategy;
     use ohhc_qsort::service::{JobSpec, ServiceConfig, SortService};
 
     let service = SortService::start(ServiceConfig {
@@ -196,6 +194,7 @@ fn campaign_and_service_share_one_executor_pool() {
             seed: 400 + id,
             dimension: 1,
             construction: Construction::FullGroup,
+            strategy: DivideStrategy::PaperFixed,
             deadline: None,
         });
         assert!(accepted.is_accepted(), "job {id} rejected");
@@ -216,7 +215,7 @@ fn campaign_and_service_share_one_executor_pool() {
 
     let mut done = 0;
     while done < 12 {
-        let r = service.recv_timeout(Duration::from_secs(60)).expect("service stalled");
+        let r = service.next_completion(Duration::from_secs(60)).expect("service stalled");
         assert!(r.sorted_ok, "job {} failed verification", r.id);
         done += 1;
     }
