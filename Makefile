@@ -36,16 +36,18 @@ bench:
 # Non-criterion JSON benches: the data-plane phase medians (flat arena
 # vs legacy nested, EXPERIMENTS.md §Perf), the service offered-load
 # levels (jobs/sec + p50/p99, EXPERIMENTS.md §Service), the cluster
-# shard-scaling sweep (jobs/sec at 1/2/4/8 shards, EXPERIMENTS.md
-# §Cluster), the persistent-executor small-array / fan-out medians
-# (pooled vs scoped spawn, EXPERIMENTS.md §Perf), the typestate-session
-# vs monolithic pipeline medians (EXPERIMENTS.md §Perf), and the
-# divide-strategy × distribution robustness grid (EXPERIMENTS.md
-# §Adversarial).
+# shard-scaling sweep plus its degraded-mode blackout/recovery section
+# (jobs/sec at 1/2/4/8 shards and healthy-vs-blackout at 4,
+# EXPERIMENTS.md §Cluster and §Cluster chaos), the persistent-executor
+# small-array / fan-out medians (pooled vs scoped spawn, EXPERIMENTS.md
+# §Perf), the typestate-session vs monolithic pipeline medians
+# (EXPERIMENTS.md §Perf), and the divide-strategy × distribution
+# robustness grid (EXPERIMENTS.md §Adversarial).
 bench-json:
 	cd rust && OHHC_BENCH_JSON=../BENCH_dataplane.json $(CARGO) bench --bench dataplane
 	cd rust && OHHC_BENCH_JSON=../BENCH_service.json $(CARGO) bench --bench service
-	cd rust && OHHC_BENCH_JSON=../BENCH_cluster.json $(CARGO) bench --bench cluster
+	cd rust && OHHC_BENCH_JSON=../BENCH_cluster.json \
+		OHHC_BENCH_CHAOS_JSON=../BENCH_cluster_chaos.json $(CARGO) bench --bench cluster
 	cd rust && OHHC_BENCH_JSON=../BENCH_executor.json $(CARGO) bench --bench executor
 	cd rust && OHHC_BENCH_JSON=../BENCH_pipeline.json $(CARGO) bench --bench pipeline
 	cd rust && OHHC_BENCH_JSON=../BENCH_divide.json $(CARGO) bench --bench divide

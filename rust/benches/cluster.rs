@@ -8,9 +8,13 @@
 //! so the sweep isolates the routed path: near-linear jobs/sec is the
 //! headline the cluster layer exists for.
 
-use ohhc_qsort::cluster::{Cluster, ClusterConfig};
-use ohhc_qsort::config::Distribution;
-use ohhc_qsort::service::{loadgen, LoadGenConfig, LoadMode, ServiceConfig};
+use std::time::{Duration, Instant};
+
+use ohhc_qsort::cluster::{
+    Cluster, ClusterConfig, ClusterFaultPlan, ClusterSubmission, FaultWindow, HealthState,
+};
+use ohhc_qsort::config::{Construction, Distribution, DivideStrategy};
+use ohhc_qsort::service::{loadgen, JobSpec, LoadGenConfig, LoadMode, ServiceConfig};
 use ohhc_qsort::util::json::Json;
 
 fn main() {
@@ -88,4 +92,149 @@ fn main() {
     text.push('\n');
     std::fs::write(&out, text).expect("write BENCH_cluster.json");
     println!("\nshard scaling → {out}");
+
+    degraded_mode(jobs);
+}
+
+/// Degraded-mode section: the same 4-shard closed-loop load, healthy
+/// vs with shard 1 blacked out for the middle half of the run, plus a
+/// recovery probe — how many trickle jobs (and how long) until the
+/// breaker walks Down → Probing → Healthy.  Writes
+/// `BENCH_cluster_chaos.json` (`OHHC_BENCH_CHAOS_JSON` overrides).
+fn degraded_mode(jobs: usize) {
+    const SHARDS: usize = 4;
+    const DEAD: usize = 1;
+    let gen_cfg = LoadGenConfig {
+        jobs,
+        seed: 7,
+        dimensions: vec![1],
+        distributions: Distribution::ALL.to_vec(),
+        min_elements: 500,
+        max_elements: 4_000,
+        deadline: None,
+        mode: LoadMode::Closed { concurrency: 8 },
+        ..Default::default()
+    };
+    let window = FaultWindow::blackout(DEAD, (jobs / 4) as u64, (3 * jobs / 4) as u64);
+
+    println!("\n== cluster chaos: 4 shards, shard {DEAD} blacked out mid-run, {jobs} jobs");
+    let run = |faults: ClusterFaultPlan| {
+        let cluster = Cluster::start(ClusterConfig {
+            shards: SHARDS,
+            shard: ServiceConfig {
+                workers: 1,
+                ..ServiceConfig::default()
+            },
+            faults,
+            ..Default::default()
+        });
+        let report = loadgen::run_on(&cluster, &gen_cfg);
+        assert_eq!(
+            report.completed + report.failures,
+            report.accepted,
+            "no silent drops under chaos"
+        );
+        (cluster, report)
+    };
+
+    let (healthy_cluster, healthy) = run(ClusterFaultPlan::none());
+    let (healthy_snap, _) = healthy_cluster.shutdown();
+    let (cluster, degraded) = run(ClusterFaultPlan {
+        windows: vec![window.clone()],
+        ..ClusterFaultPlan::none()
+    });
+
+    // Recovery probe: trickle routed jobs until the breaker closes.
+    // Each submission ticks the event clock, so this measures the walk
+    // past the probe schedule (Down -> Probing) plus the probe
+    // successes needed to close (Probing -> Healthy).
+    let t0 = Instant::now();
+    let mut probe_jobs = 0usize;
+    let mut recovered = false;
+    for i in 0..2_000u64 {
+        let spec = JobSpec {
+            id: 1_000_000 + i,
+            distribution: Distribution::Random,
+            elements: 2_000,
+            seed: i,
+            dimension: 1,
+            construction: Construction::FullGroup,
+            strategy: DivideStrategy::PaperFixed,
+            deadline: None,
+        };
+        if let ClusterSubmission::Accepted { ticket, .. } = cluster.submit(spec) {
+            let _ = ticket.wait_timeout(Duration::from_secs(30));
+        }
+        probe_jobs += 1;
+        if cluster.snapshot().health[DEAD].state == HealthState::Healthy {
+            recovered = true;
+            break;
+        }
+    }
+    let recovery_wall = t0.elapsed();
+    let (snap, _leftovers) = cluster.shutdown();
+
+    println!(
+        "healthy : {:>8.1} jobs/s  p99 {:>10.3?}",
+        healthy.throughput_jps, healthy_snap.merged.total.p99
+    );
+    println!(
+        "blackout: {:>8.1} jobs/s  p99 {:>10.3?}  {} failovers ({} exhausted), {} re-issues",
+        degraded.throughput_jps,
+        snap.merged.total.p99,
+        snap.failovers,
+        snap.failover_exhausted,
+        snap.span_reissues
+    );
+    println!(
+        "recovery: {} probe job(s) over {:.3?} (recovered: {recovered}, incidents: {})",
+        probe_jobs, recovery_wall, snap.health[DEAD].incidents
+    );
+
+    let chaos_doc = Json::obj([
+        (
+            "blackout",
+            Json::obj([
+                ("completed", Json::int(degraded.completed)),
+                ("explicit_failures", Json::int(degraded.failures)),
+                ("failover_exhausted", Json::int(snap.failover_exhausted as usize)),
+                ("failovers", Json::int(snap.failovers as usize)),
+                ("incidents", Json::int(snap.health[DEAD].incidents as usize)),
+                ("jobs_per_sec", Json::num(degraded.throughput_jps)),
+                ("p99_total_ns", Json::num(snap.merged.total.p99.as_nanos() as f64)),
+                ("span_reissues", Json::int(snap.span_reissues as usize)),
+            ]),
+        ),
+        (
+            "healthy",
+            Json::obj([
+                ("completed", Json::int(healthy.completed)),
+                ("jobs_per_sec", Json::num(healthy.throughput_jps)),
+                ("p99_total_ns", Json::num(healthy_snap.merged.total.p99.as_nanos() as f64)),
+            ]),
+        ),
+        (
+            "recovery",
+            Json::obj([
+                ("probe_jobs", Json::int(probe_jobs)),
+                ("recovered", Json::int(usize::from(recovered))),
+                ("wall_secs", Json::num(recovery_wall.as_secs_f64())),
+            ]),
+        ),
+        ("shards", Json::int(SHARDS)),
+        (
+            "window",
+            Json::obj([
+                ("from_event", Json::int(window.from_event as usize)),
+                ("shard", Json::int(window.shard)),
+                ("until_event", Json::int(window.until_event as usize)),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("OHHC_BENCH_CHAOS_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster_chaos.json".into());
+    let mut text = chaos_doc.pretty();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_cluster_chaos.json");
+    println!("degraded mode → {out}");
 }

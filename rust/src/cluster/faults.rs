@@ -1,0 +1,291 @@
+//! Cluster-level fault injection: seeded shard blackouts and
+//! brownouts, layered *above* the per-shard service
+//! [`FaultPlan`](crate::service::FaultPlan).
+//!
+//! The service plan breaks processors and links *inside* one shard;
+//! this plan breaks whole shards, which is the failure mode the
+//! OHHC's two-level story actually cares about: a group (shard) drops
+//! off the optical fabric and the rest of the cluster must keep
+//! serving.  Two mechanisms:
+//!
+//! * **Windows** ([`FaultWindow`]) — deterministic outage intervals on
+//!   the cluster's submission **event clock** (never wall time, so a
+//!   replay blacks out the same jobs).  A *blackout* fails every
+//!   attempt dispatched to the shard while the window is open; a
+//!   *brownout* lets attempts run but inflates their reported latency
+//!   by a fixed virtual delay, priced exactly like the
+//!   [`InterShardModel`](crate::sim::InterShardModel)'s optical
+//!   charge — no thread ever sleeps.
+//! * **Rate** (`shard_fail_rate`) — a seeded per-(shard, job, attempt)
+//!   [`splitmix64`] draw, the cluster-scale analogue of the service
+//!   plan's worker-panic rate.  Failovers redraw with `attempt + 1`,
+//!   so a transient shard fault clears on retry just as service
+//!   retries redraw their fault sets.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::topology::fault::splitmix64;
+
+/// Domain separator for the shard-failure stream, so cluster draws
+/// never correlate with the service plan's panic/link/node streams.
+const SHARD_STREAM: u64 = 0x5AA2_DF41;
+
+/// What a [`FaultWindow`] does to the shard while open.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowKind {
+    /// Every attempt on the shard fails explicitly.
+    Blackout,
+    /// Attempts run, but each is charged this much extra virtual
+    /// latency (deadline accounting included).
+    Brownout {
+        /// Virtual extra latency per attempt.
+        delay: Duration,
+    },
+}
+
+/// One outage interval on the cluster's submission event clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWindow {
+    /// Shard the window applies to.
+    pub shard: usize,
+    /// First event (inclusive) the window covers.
+    pub from_event: u64,
+    /// First event *past* the window (exclusive).
+    pub until_event: u64,
+    /// Blackout or brownout.
+    pub kind: WindowKind,
+}
+
+impl FaultWindow {
+    /// A blackout of `shard` over events `[from, until)`.
+    pub fn blackout(shard: usize, from: u64, until: u64) -> FaultWindow {
+        FaultWindow {
+            shard,
+            from_event: from,
+            until_event: until,
+            kind: WindowKind::Blackout,
+        }
+    }
+
+    /// A brownout of `shard` over events `[from, until)` adding
+    /// `delay` of virtual latency per attempt.
+    pub fn brownout(shard: usize, from: u64, until: u64, delay: Duration) -> FaultWindow {
+        FaultWindow {
+            shard,
+            from_event: from,
+            until_event: until,
+            kind: WindowKind::Brownout { delay },
+        }
+    }
+
+    /// Parse a comma-separated CLI window list.  Each item is
+    /// `SHARD:FROM:UNTIL` (blackout) or `SHARD:FROM:UNTIL:SLOW_MS`
+    /// (brownout adding `SLOW_MS` milliseconds), e.g. `1:40:140` or
+    /// `1:40:140,2:200:260:5`.
+    pub fn parse_list(text: &str) -> Result<Vec<FaultWindow>> {
+        let mut windows = Vec::new();
+        for item in text.split(',').filter(|s| !s.trim().is_empty()) {
+            let fields: Vec<&str> = item.trim().split(':').collect();
+            if !(3..=4).contains(&fields.len()) {
+                return Err(Error::Config(format!(
+                    "fault window '{item}': want SHARD:FROM:UNTIL[:SLOW_MS]"
+                )));
+            }
+            let parse = |what: &str, s: &str| -> Result<u64> {
+                s.parse::<u64>()
+                    .map_err(|_| Error::Config(format!("fault window '{item}': bad {what} '{s}'")))
+            };
+            let shard = parse("shard", fields[0])? as usize;
+            let from = parse("from", fields[1])?;
+            let until = parse("until", fields[2])?;
+            if until <= from {
+                return Err(Error::Config(format!(
+                    "fault window '{item}': until must be > from"
+                )));
+            }
+            windows.push(match fields.get(3) {
+                None => FaultWindow::blackout(shard, from, until),
+                Some(ms) => {
+                    let delay = Duration::from_millis(parse("slow_ms", ms)?);
+                    FaultWindow::brownout(shard, from, until, delay)
+                }
+            });
+        }
+        Ok(windows)
+    }
+}
+
+/// The fault injected into one dispatch attempt, if any.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShardFault {
+    /// The attempt fails outright, with this cause named in the
+    /// result's error.
+    Fail {
+        /// Human-readable cause.
+        reason: &'static str,
+    },
+    /// The attempt runs, charged `delay` of extra virtual latency.
+    Slow {
+        /// Virtual extra latency.
+        delay: Duration,
+    },
+}
+
+/// The cluster's seeded shard-outage schedule.
+#[derive(Debug, Clone)]
+pub struct ClusterFaultPlan {
+    /// Seeds the `shard_fail_rate` draws — same seed, same outages.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that any single dispatch attempt fails
+    /// at the shard boundary (drawn per shard, job, and attempt).
+    pub shard_fail_rate: f64,
+    /// Deterministic outage intervals on the event clock.
+    pub windows: Vec<FaultWindow>,
+}
+
+impl ClusterFaultPlan {
+    /// No cluster-level faults (the default).
+    pub fn none() -> ClusterFaultPlan {
+        ClusterFaultPlan {
+            seed: 0xC1A0_FA11,
+            shard_fail_rate: 0.0,
+            windows: Vec::new(),
+        }
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.shard_fail_rate > 0.0 || !self.windows.is_empty()
+    }
+
+    /// Reject nonsensical plans before the cluster starts.
+    pub fn validate(&self, shards: usize) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.shard_fail_rate) {
+            return Err(Error::Config(format!(
+                "shard_fail_rate must be in [0, 1], got {}",
+                self.shard_fail_rate
+            )));
+        }
+        for w in &self.windows {
+            if w.shard >= shards {
+                return Err(Error::Config(format!(
+                    "fault window names shard {} but the cluster has {shards}",
+                    w.shard
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The fault injected into dispatching (`job_id`, `attempt`) onto
+    /// `shard` at event-clock value `event` — `None` for a clean
+    /// dispatch.  Windows win over the rate draw; the first matching
+    /// window applies.
+    pub fn draw(&self, shard: usize, event: u64, job_id: u64, attempt: u32) -> Option<ShardFault> {
+        for w in &self.windows {
+            if w.shard == shard && (w.from_event..w.until_event).contains(&event) {
+                return Some(match w.kind {
+                    WindowKind::Blackout => ShardFault::Fail {
+                        reason: "shard blackout window",
+                    },
+                    WindowKind::Brownout { delay } => ShardFault::Slow { delay },
+                });
+            }
+        }
+        if self.shard_fail_rate > 0.0 {
+            let salt = (shard as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+            let mixed = splitmix64(SHARD_STREAM ^ job_id ^ salt);
+            let word = splitmix64(self.seed ^ mixed ^ ((attempt as u64) << 48));
+            let unit = (word >> 11) as f64 / (1u64 << 53) as f64;
+            if unit < self.shard_fail_rate {
+                return Some(ShardFault::Fail {
+                    reason: "injected shard failure",
+                });
+            }
+        }
+        None
+    }
+}
+
+impl Default for ClusterFaultPlan {
+    fn default() -> Self {
+        ClusterFaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_their_half_open_interval_only() {
+        let plan = ClusterFaultPlan {
+            windows: vec![FaultWindow::blackout(1, 10, 20)],
+            ..ClusterFaultPlan::none()
+        };
+        assert_eq!(plan.draw(1, 9, 7, 0), None);
+        assert!(matches!(plan.draw(1, 10, 7, 0), Some(ShardFault::Fail { .. })));
+        assert!(matches!(plan.draw(1, 19, 7, 0), Some(ShardFault::Fail { .. })));
+        assert_eq!(plan.draw(1, 20, 7, 0), None);
+        // Other shards never see the window.
+        assert_eq!(plan.draw(0, 15, 7, 0), None);
+    }
+
+    #[test]
+    fn brownout_windows_slow_instead_of_failing() {
+        let delay = Duration::from_millis(5);
+        let plan = ClusterFaultPlan {
+            windows: vec![FaultWindow::brownout(0, 0, 100, delay)],
+            ..ClusterFaultPlan::none()
+        };
+        assert_eq!(plan.draw(0, 50, 1, 0), Some(ShardFault::Slow { delay }));
+    }
+
+    #[test]
+    fn rate_draws_are_deterministic_and_redraw_per_attempt() {
+        let plan = ClusterFaultPlan {
+            shard_fail_rate: 0.5,
+            ..ClusterFaultPlan::none()
+        };
+        for shard in 0..4 {
+            for job in 0..32u64 {
+                assert_eq!(plan.draw(shard, 0, job, 0), plan.draw(shard, 99, job, 0));
+            }
+        }
+        // Attempt is part of the draw: across many jobs, some must
+        // flip between attempt 0 and attempt 1.
+        let flips = (0..256u64)
+            .filter(|&job| plan.draw(0, 0, job, 0) != plan.draw(0, 0, job, 1))
+            .count();
+        assert!(flips > 0, "attempt must be folded into the draw");
+        let none = ClusterFaultPlan::none();
+        assert!(!none.is_active());
+        assert_eq!(none.draw(0, 0, 1, 0), None);
+    }
+
+    #[test]
+    fn parse_list_round_trips_and_rejects_garbage() {
+        let windows = FaultWindow::parse_list("1:40:140,2:200:260:5").unwrap();
+        assert_eq!(windows[0], FaultWindow::blackout(1, 40, 140));
+        assert_eq!(
+            windows[1],
+            FaultWindow::brownout(2, 200, 260, Duration::from_millis(5))
+        );
+        assert!(FaultWindow::parse_list("").unwrap().is_empty());
+        assert!(FaultWindow::parse_list("1:40").is_err());
+        assert!(FaultWindow::parse_list("1:40:x").is_err());
+        assert!(FaultWindow::parse_list("1:40:40").is_err(), "empty window");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_plans() {
+        let mut plan = ClusterFaultPlan::none();
+        plan.shard_fail_rate = 1.5;
+        assert!(plan.validate(4).is_err());
+        plan.shard_fail_rate = 0.0;
+        plan.windows = vec![FaultWindow::blackout(4, 0, 10)];
+        assert!(plan.validate(4).is_err(), "shard index out of range");
+        assert!(plan.validate(5).is_ok());
+    }
+}

@@ -1,0 +1,634 @@
+//! Per-shard health: a hand-rolled circuit breaker.
+//!
+//! Every shard carries a [`ShardHealth`] state machine —
+//! Healthy → Suspect → Down → Probing — fed by two signals: the
+//! outcome of every cluster-observed attempt (success / failure /
+//! admission reject) and the failure deltas the supervisor absorbs
+//! from each shard's [`ServiceStats`](crate::service::ServiceStats)
+//! between scans.  Consecutive failures trip the breaker (Down);
+//! a seeded, **event-count-based** probe schedule reopens it half-way
+//! (Probing) after an exponential backoff, and a short streak of probe
+//! successes closes it again (Healthy).  Nothing here reads the wall
+//! clock to make a decision — the clock is a submission counter and
+//! the probe jitter is a [`splitmix64`] draw, so a replayed run trips,
+//! probes, and recovers at exactly the same points.  (Wall time *is*
+//! recorded, but only as measurement: `blackout_seconds` in the
+//! snapshot.)
+//!
+//! The [`HealthBoard`] owns one machine per shard plus the shared
+//! event clock, and renders the two masks the routing layer consumes:
+//!
+//! * [`HealthBoard::routing_mask`] — where *new* jobs may be homed.
+//!   Down and drained shards are excluded; a Probing shard is admitted
+//!   only every `probe_stride`-th tick, the half-open trickle that
+//!   tests recovery without re-flooding a struggling shard.
+//! * [`HealthBoard::alive_mask`] — where failover retries and span
+//!   re-issues may land.  Pure view, no probe accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::topology::fault::splitmix64;
+use crate::util::json::Json;
+
+/// Breaker states, in the order a failing shard walks them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full traffic.
+    Healthy,
+    /// Failures observed but below the trip threshold; still routable.
+    Suspect,
+    /// Breaker open: no new routes until the probe schedule fires.
+    Down,
+    /// Half-open: a trickle of probe jobs decides Healthy vs Down.
+    Probing,
+}
+
+impl HealthState {
+    /// Lower-case label used in snapshots and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Down => "down",
+            HealthState::Probing => "probing",
+        }
+    }
+}
+
+/// Breaker thresholds and the probe schedule seed.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Consecutive failures that turn Healthy into Suspect.
+    pub suspect_after: u32,
+    /// Consecutive failures that open the breaker (Down).
+    pub down_after: u32,
+    /// Consecutive admission rejects that open the breaker — a shard
+    /// that sheds everything is as useless as one that fails.
+    pub reject_down_after: u32,
+    /// Base probe delay in **events** (submissions), doubled per
+    /// incident up to 16x.
+    pub probe_after: u64,
+    /// While Probing, admit a route only every this-many ticks.
+    pub probe_stride: u64,
+    /// Consecutive probe successes that close the breaker.
+    pub probe_successes: u32,
+    /// Seeds the probe-delay jitter: same seed, same schedule.
+    pub seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            suspect_after: 2,
+            down_after: 4,
+            reject_down_after: 16,
+            probe_after: 32,
+            probe_stride: 4,
+            probe_successes: 2,
+            seed: 0xB12E_A4E5,
+        }
+    }
+}
+
+/// One recorded state transition (event clock, from, to).
+#[derive(Debug, Clone)]
+pub struct HealthTransition {
+    /// Event-clock value when the transition fired.
+    pub event: u64,
+    /// State left.
+    pub from: HealthState,
+    /// State entered.
+    pub to: HealthState,
+}
+
+/// How many transitions each shard's history ring keeps.
+const HISTORY_CAP: usize = 64;
+
+/// The per-shard breaker state machine.
+///
+/// Deliberately a plain (non-thread-safe) struct so the transitions
+/// can be unit-tested as a pure event walk; [`HealthBoard`] provides
+/// the locking.
+#[derive(Debug)]
+pub struct ShardHealth {
+    cfg: HealthConfig,
+    shard: usize,
+    state: HealthState,
+    failure_streak: u32,
+    rejection_streak: u32,
+    probe_wins: u32,
+    probe_ticks: u64,
+    incidents: u32,
+    probe_at: u64,
+    drained: bool,
+    down_since: Option<Instant>,
+    down_total: Duration,
+    history: Vec<HealthTransition>,
+}
+
+impl ShardHealth {
+    /// A fresh, healthy machine for shard `shard`.
+    pub fn new(cfg: HealthConfig, shard: usize) -> ShardHealth {
+        ShardHealth {
+            cfg,
+            shard,
+            state: HealthState::Healthy,
+            failure_streak: 0,
+            rejection_streak: 0,
+            probe_wins: 0,
+            probe_ticks: 0,
+            incidents: 0,
+            probe_at: 0,
+            drained: false,
+            down_since: None,
+            down_total: Duration::ZERO,
+            history: Vec::new(),
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// How many times the breaker has opened.
+    pub fn incidents(&self) -> u32 {
+        self.incidents
+    }
+
+    /// Is the shard administratively drained?
+    pub fn is_drained(&self) -> bool {
+        self.drained
+    }
+
+    /// May failover retries / span re-issues land here?  (Drained and
+    /// Down shards: no.  Probing counts as alive — a retry is as good
+    /// a probe as a fresh route.)
+    pub fn alive(&self) -> bool {
+        !self.drained && self.state != HealthState::Down
+    }
+
+    /// May a *new* job be homed here right now?  Mutates the probe
+    /// tick counter: while Probing, only every `probe_stride`-th call
+    /// answers yes (the half-open trickle).
+    pub fn admit_route(&mut self) -> bool {
+        if self.drained {
+            return false;
+        }
+        match self.state {
+            HealthState::Healthy | HealthState::Suspect => true,
+            HealthState::Down => false,
+            HealthState::Probing => {
+                let tick = self.probe_ticks;
+                self.probe_ticks += 1;
+                tick % self.cfg.probe_stride.max(1) == 0
+            }
+        }
+    }
+
+    /// Event-clock advance: promotes Down → Probing once the seeded
+    /// probe schedule fires.
+    pub fn on_tick(&mut self, clock: u64) {
+        if self.state == HealthState::Down && clock >= self.probe_at {
+            self.probe_wins = 0;
+            self.probe_ticks = 0;
+            self.transition(HealthState::Probing, clock);
+        }
+    }
+
+    /// An attempt on this shard succeeded.
+    pub fn on_success(&mut self, clock: u64) {
+        self.failure_streak = 0;
+        self.rejection_streak = 0;
+        match self.state {
+            HealthState::Healthy => {}
+            HealthState::Probing => {
+                self.probe_wins += 1;
+                if self.probe_wins >= self.cfg.probe_successes {
+                    self.transition(HealthState::Healthy, clock);
+                }
+            }
+            HealthState::Suspect | HealthState::Down => {
+                // A Down shard can still finish in-flight work; one
+                // success is evidence enough to close from Suspect,
+                // and from Down it shortcuts the probe dance.
+                self.transition(HealthState::Healthy, clock);
+            }
+        }
+    }
+
+    /// An attempt on this shard failed.
+    pub fn on_failure(&mut self, clock: u64) {
+        self.probe_wins = 0;
+        self.failure_streak += 1;
+        match self.state {
+            HealthState::Probing => self.open(clock),
+            HealthState::Down => {}
+            HealthState::Healthy | HealthState::Suspect => {
+                if self.failure_streak >= self.cfg.down_after {
+                    self.open(clock);
+                } else if self.failure_streak >= self.cfg.suspect_after
+                    && self.state == HealthState::Healthy
+                {
+                    self.transition(HealthState::Suspect, clock);
+                }
+            }
+        }
+    }
+
+    /// The shard's admission control rejected an attempt.
+    pub fn on_rejection(&mut self, clock: u64) {
+        self.rejection_streak += 1;
+        let open = self.rejection_streak >= self.cfg.reject_down_after;
+        if open && self.state != HealthState::Down {
+            self.open(clock);
+        }
+    }
+
+    /// Administrative drain: no new routes, failovers, or re-issues.
+    pub fn drain(&mut self) {
+        self.drained = true;
+    }
+
+    /// Undo [`Self::drain`]; rendezvous assignment is restored because
+    /// routing never stopped *hashing* the shard, only admitting it.
+    pub fn rejoin(&mut self) {
+        self.drained = false;
+    }
+
+    /// Open the breaker and schedule the next probe.
+    fn open(&mut self, clock: u64) {
+        self.incidents += 1;
+        let backoff = self.cfg.probe_after << (self.incidents - 1).min(4);
+        let jitter_span = self.cfg.probe_after / 2 + 1;
+        let salt = (self.shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let jitter = splitmix64(self.cfg.seed ^ salt ^ u64::from(self.incidents)) % jitter_span;
+        self.probe_at = clock + backoff + jitter;
+        self.failure_streak = 0;
+        self.rejection_streak = 0;
+        self.transition(HealthState::Down, clock);
+    }
+
+    fn transition(&mut self, to: HealthState, clock: u64) {
+        let from = self.state;
+        if from == to {
+            return;
+        }
+        if to == HealthState::Down {
+            self.down_since = Some(Instant::now());
+        } else if from == HealthState::Down {
+            if let Some(t) = self.down_since.take() {
+                self.down_total += t.elapsed();
+            }
+        }
+        if self.history.len() == HISTORY_CAP {
+            self.history.remove(0);
+        }
+        self.history.push(HealthTransition {
+            event: clock,
+            from,
+            to,
+        });
+        self.state = to;
+    }
+
+    /// Freeze this machine's view for reporting.
+    pub fn snapshot(&self) -> ShardHealthSnapshot {
+        let mut blackout = self.down_total;
+        if let Some(t) = self.down_since {
+            blackout += t.elapsed();
+        }
+        ShardHealthSnapshot {
+            state: self.state,
+            incidents: self.incidents,
+            drained: self.drained,
+            blackout,
+            history: self
+                .history
+                .iter()
+                .map(|t| format!("e{} {}->{}", t.event, t.from.label(), t.to.label()))
+                .collect(),
+        }
+    }
+}
+
+/// A frozen per-shard health view, embedded in
+/// [`ClusterSnapshot`](crate::cluster::ClusterSnapshot).
+#[derive(Debug, Clone)]
+pub struct ShardHealthSnapshot {
+    /// Breaker state at freeze time.
+    pub state: HealthState,
+    /// Times the breaker opened.
+    pub incidents: u32,
+    /// Administratively drained?
+    pub drained: bool,
+    /// Total wall time spent Down (measurement only — decisions are
+    /// event-driven).
+    pub blackout: Duration,
+    /// Recent transitions, oldest first, e.g. `"e41 suspect->down"`.
+    pub history: Vec<String>,
+}
+
+impl ShardHealthSnapshot {
+    /// JSON object (alphabetical keys, crate-wide convention).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("blackout_seconds", Json::num(self.blackout.as_secs_f64())),
+            ("drained", Json::int(usize::from(self.drained))),
+            ("history", Json::arr(self.history.iter().map(Json::str).collect::<Vec<_>>())),
+            ("incidents", Json::int(self.incidents as usize)),
+            ("state", Json::str(self.state.label())),
+        ])
+    }
+}
+
+/// Baselines for deduplicating the two signal paths: outcomes the
+/// supervisor sees directly vs the stats deltas it absorbs per scan.
+#[derive(Debug, Default, Clone)]
+struct Seen {
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+}
+
+/// The cluster-wide health registry: one [`ShardHealth`] per shard
+/// behind one lock, plus the shared event clock.
+#[derive(Debug)]
+pub struct HealthBoard {
+    clock: AtomicU64,
+    inner: Mutex<BoardInner>,
+}
+
+#[derive(Debug)]
+struct BoardInner {
+    shards: Vec<ShardHealth>,
+    seen: Vec<Seen>,
+}
+
+/// Cap on breaker events fed from one stats-delta absorption, so a
+/// huge backlog of failures counts as "the shard is failing", not as
+/// thousands of individual trips replayed at once.
+const ABSORB_CAP: u64 = 8;
+
+impl HealthBoard {
+    /// A board of `shards` healthy machines.
+    pub fn new(shards: usize, cfg: HealthConfig) -> HealthBoard {
+        HealthBoard {
+            clock: AtomicU64::new(0),
+            inner: Mutex::new(BoardInner {
+                shards: (0..shards).map(|i| ShardHealth::new(cfg.clone(), i)).collect(),
+                seen: vec![Seen::default(); shards],
+            }),
+        }
+    }
+
+    /// Advance the event clock (one tick per submission) and run the
+    /// probe schedule.  Returns the new clock value.
+    pub fn tick(&self) -> u64 {
+        let clock = self.clock.fetch_add(1, Ordering::AcqRel) + 1;
+        let mut inner = self.inner.lock().unwrap();
+        for s in &mut inner.shards {
+            s.on_tick(clock);
+        }
+        clock
+    }
+
+    /// Current event clock.
+    pub fn clock(&self) -> u64 {
+        self.clock.load(Ordering::Acquire)
+    }
+
+    /// Where may a new job be homed?  Consumes probe-stride ticks on
+    /// Probing shards.
+    pub fn routing_mask(&self) -> Vec<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shards.iter_mut().map(ShardHealth::admit_route).collect()
+    }
+
+    /// Where may failover retries / span re-issues land?  Pure view.
+    pub fn alive_mask(&self) -> Vec<bool> {
+        let inner = self.inner.lock().unwrap();
+        inner.shards.iter().map(ShardHealth::alive).collect()
+    }
+
+    /// A cluster-observed attempt on `shard` succeeded.
+    pub fn record_success(&self, shard: usize) {
+        let clock = self.clock();
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen[shard].completed += 1;
+        inner.shards[shard].on_success(clock);
+    }
+
+    /// A cluster-observed attempt on `shard` failed.
+    pub fn record_failure(&self, shard: usize) {
+        let clock = self.clock();
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen[shard].failed += 1;
+        inner.shards[shard].on_failure(clock);
+    }
+
+    /// `shard`'s admission control rejected a cluster submission.
+    pub fn record_rejection(&self, shard: usize) {
+        let clock = self.clock();
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen[shard].rejected += 1;
+        inner.shards[shard].on_rejection(clock);
+    }
+
+    /// Feed the breaker from a shard's cumulative [`ServiceStats`]
+    /// counters (completed / failed / rejected), deduplicated against
+    /// everything already recorded directly.  This is how failures the
+    /// supervisor never sees first-hand — e.g. jobs submitted straight
+    /// to a shard, or retries inside the service — still move the
+    /// breaker.
+    pub fn absorb_stats(&self, shard: usize, completed: u64, failed: u64, rejected: u64) {
+        let clock = self.clock();
+        let mut inner = self.inner.lock().unwrap();
+        let seen = &mut inner.seen[shard];
+        let d_completed = completed.saturating_sub(seen.completed).min(ABSORB_CAP);
+        let d_failed = failed.saturating_sub(seen.failed).min(ABSORB_CAP);
+        let d_rejected = rejected.saturating_sub(seen.rejected).min(ABSORB_CAP);
+        seen.completed = seen.completed.max(completed);
+        seen.failed = seen.failed.max(failed);
+        seen.rejected = seen.rejected.max(rejected);
+        let machine = &mut inner.shards[shard];
+        // Failures first: a mixed delta should leave the streak
+        // reflecting the most recent evidence (successes clear it).
+        for _ in 0..d_failed {
+            machine.on_failure(clock);
+        }
+        for _ in 0..d_rejected {
+            machine.on_rejection(clock);
+        }
+        for _ in 0..d_completed {
+            machine.on_success(clock);
+        }
+    }
+
+    /// Administratively drain `shard` (see [`ShardHealth::drain`]).
+    pub fn drain(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].drain();
+    }
+
+    /// Rejoin a drained `shard`.
+    pub fn rejoin(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].rejoin();
+    }
+
+    /// Freeze every shard's health view.
+    pub fn snapshot(&self) -> Vec<ShardHealthSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.shards.iter().map(ShardHealth::snapshot).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            suspect_after: 2,
+            down_after: 4,
+            reject_down_after: 3,
+            probe_after: 8,
+            probe_stride: 2,
+            probe_successes: 2,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn consecutive_failures_walk_healthy_suspect_down() {
+        let mut h = ShardHealth::new(cfg(), 0);
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_failure(1);
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_failure(2);
+        assert_eq!(h.state(), HealthState::Suspect);
+        h.on_failure(3);
+        h.on_failure(4);
+        assert_eq!(h.state(), HealthState::Down);
+        assert_eq!(h.incidents(), 1);
+        assert!(!h.alive());
+        assert!(!h.admit_route());
+    }
+
+    #[test]
+    fn one_success_clears_a_suspect_streak() {
+        let mut h = ShardHealth::new(cfg(), 0);
+        h.on_failure(1);
+        h.on_failure(2);
+        assert_eq!(h.state(), HealthState::Suspect);
+        h.on_success(3);
+        assert_eq!(h.state(), HealthState::Healthy);
+        // Streak reset: it takes a full fresh run of failures to trip.
+        h.on_failure(4);
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn probe_schedule_is_deterministic_and_probes_close_the_breaker() {
+        let trip = |h: &mut ShardHealth| {
+            for e in 1..=4 {
+                h.on_failure(e);
+            }
+        };
+        let mut a = ShardHealth::new(cfg(), 3);
+        let mut b = ShardHealth::new(cfg(), 3);
+        trip(&mut a);
+        trip(&mut b);
+        assert_eq!(a.probe_at, b.probe_at, "same seed, same schedule");
+
+        // Before the schedule fires, ticks do nothing.
+        a.on_tick(a.probe_at - 1);
+        assert_eq!(a.state(), HealthState::Down);
+        let fire = a.probe_at;
+        a.on_tick(fire);
+        assert_eq!(a.state(), HealthState::Probing);
+        // Half-open: stride 2 admits every other route.
+        assert!(a.admit_route());
+        assert!(!a.admit_route());
+        assert!(a.admit_route());
+        // Two probe wins close it.
+        a.on_success(fire + 1);
+        assert_eq!(a.state(), HealthState::Probing);
+        a.on_success(fire + 2);
+        assert_eq!(a.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn a_failed_probe_reopens_with_backoff() {
+        let mut h = ShardHealth::new(cfg(), 0);
+        for e in 1..=4 {
+            h.on_failure(e);
+        }
+        let first = h.probe_at;
+        h.on_tick(first);
+        assert_eq!(h.state(), HealthState::Probing);
+        h.on_failure(first + 1);
+        assert_eq!(h.state(), HealthState::Down);
+        assert_eq!(h.incidents(), 2);
+        assert!(
+            h.probe_at - (first + 1) >= 2 * 8,
+            "second incident must back off at least 2x the base delay"
+        );
+    }
+
+    #[test]
+    fn rejection_streak_opens_the_breaker() {
+        let mut h = ShardHealth::new(cfg(), 0);
+        h.on_rejection(1);
+        h.on_rejection(2);
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_rejection(3);
+        assert_eq!(h.state(), HealthState::Down);
+    }
+
+    #[test]
+    fn drain_excludes_from_both_masks_and_rejoin_restores() {
+        let board = HealthBoard::new(3, cfg());
+        board.drain(1);
+        assert_eq!(board.routing_mask(), vec![true, false, true]);
+        assert_eq!(board.alive_mask(), vec![true, false, true]);
+        assert!(board.snapshot()[1].drained);
+        board.rejoin(1);
+        assert_eq!(board.routing_mask(), vec![true, true, true]);
+        assert!(!board.snapshot()[1].drained);
+    }
+
+    #[test]
+    fn absorbed_stats_deltas_are_deduplicated_against_direct_records() {
+        let board = HealthBoard::new(1, cfg());
+        // Two failures recorded directly...
+        board.record_failure(0);
+        board.record_failure(0);
+        assert_eq!(board.snapshot()[0].state, HealthState::Suspect);
+        // ...then a stats scan reporting those same two failures must
+        // not double-count them into a trip.
+        board.absorb_stats(0, 0, 2, 0);
+        assert_eq!(board.snapshot()[0].state, HealthState::Suspect);
+        // A scan with genuinely new failures does move the machine.
+        board.absorb_stats(0, 0, 4, 0);
+        assert_eq!(board.snapshot()[0].state, HealthState::Down);
+    }
+
+    #[test]
+    fn history_records_the_walk() {
+        let mut h = ShardHealth::new(cfg(), 0);
+        for e in 1..=4 {
+            h.on_failure(e);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.state, HealthState::Down);
+        assert_eq!(snap.incidents, 1);
+        assert_eq!(
+            snap.history,
+            vec!["e2 healthy->suspect".to_string(), "e4 suspect->down".to_string()]
+        );
+        let json = snap.to_json().dump();
+        assert!(json.contains("\"state\""), "{json}");
+    }
+}

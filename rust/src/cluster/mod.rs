@@ -22,31 +22,53 @@
 //!   cross-shard traffic at the DES's optical-hop prices — the paper's
 //!   §5 analytical story extended to cluster scale;
 //! * ticket forwarding: [`Cluster::submit`] returns a
-//!   [`ClusterSubmission`] whose [`ClusterTicket`] wraps the shard's
-//!   own [`JobTicket`] (routed jobs) or a cluster-owned completion
-//!   slot (split jobs) — poll, wait, cancel, exactly the service's
-//!   per-job contract;
+//!   [`ClusterSubmission`] whose [`ClusterTicket`] wraps a
+//!   cluster-owned completion slot — poll, wait, cancel, exactly the
+//!   service's per-job contract;
 //! * observability: [`Cluster::snapshot`] merges every shard's
 //!   [`ServiceStats`] at histogram level ([`ServiceStats::merge`]) so
 //!   cluster percentiles are computed after the merge, never averaged,
 //!   plus the cluster-only counters in [`ClusterStats`] (routed vs
-//!   split, cross-shard bytes, virtual transfer charge).
+//!   split, cross-shard bytes, failovers, span re-issues).
 //!
-//! A dead shard is handled at the router: [`Router::route_alive`]
-//! remaps only the dead shard's keys (rendezvous hashing's minimal
-//! disruption), and in-flight jobs on the dying shard fail explicitly
-//! through the service's fault plan / retry budget — never silently.
+//! # Resilience
+//!
+//! OTIS networks stay connected when the base graph is faulty (Ghosh
+//! et al., arXiv:1109.1706), and the cluster honors that at serving
+//! scale.  A [`HealthBoard`] runs one circuit breaker per shard
+//! (Healthy → Suspect → Down → Probing, event-driven and seeded —
+//! see [`health`](self::ShardHealth)); [`Cluster::submit`] routes
+//! through [`Router::route_alive`] under the live routing mask, so a
+//! Down shard's keys remap to their next-ranked survivor while every
+//! healthy shard keeps its keyspace (minimal disruption, end to end).
+//! A routed job whose shard fails it gets **exactly one** cross-shard
+//! failover: the supervisor re-routes it via [`Router::route_failover`]
+//! to the next-ranked live shard and counts it in
+//! [`ClusterStats::failovers`]; a second failure (or nowhere to go) is
+//! an explicit, named failure — never a silent drop.  A split job
+//! whose span fails on one shard re-issues *only that span* to a
+//! healthy shard before the merge; an unrecoverable span fails the
+//! whole job with the span and shards named.  [`ClusterFaultPlan`]
+//! injects seeded shard blackouts/brownouts above the per-shard
+//! service [`FaultPlan`](crate::service::FaultPlan)s, and
+//! [`Cluster::drain_shard`] / [`Cluster::rejoin_shard`] cover planned
+//! maintenance.  Every path preserves the ledger:
+//! `accepted == completed + failed`, per shard and cluster-wide.
 
+mod faults;
+mod health;
 mod merge;
 mod router;
 mod stats;
 
+pub use faults::{ClusterFaultPlan, FaultWindow, ShardFault, WindowKind};
+pub use health::{HealthBoard, HealthConfig, HealthState, ShardHealth, ShardHealthSnapshot};
 pub use merge::kway_merge;
 pub use router::{job_key, Router};
 pub use stats::{ClusterSnapshot, ClusterStats};
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -63,6 +85,7 @@ use crate::service::ticket::{JobTicket, Slot, Submission};
 use crate::service::{ServiceConfig, SortService};
 use crate::sim::transfer::InterShardModel;
 use crate::sort::is_sorted;
+use crate::topology::fault::splitmix64;
 
 /// Cluster knobs.
 #[derive(Debug, Clone)]
@@ -81,6 +104,10 @@ pub struct ClusterConfig {
     pub router_seed: u64,
     /// Link parameters pricing the cross-shard optical traffic.
     pub link: LinkModel,
+    /// Cluster-level fault injection (shard blackouts/brownouts).
+    pub faults: ClusterFaultPlan,
+    /// Per-shard circuit-breaker thresholds and probe schedule.
+    pub health: HealthConfig,
 }
 
 impl Default for ClusterConfig {
@@ -92,6 +119,8 @@ impl Default for ClusterConfig {
             max_inflight_splits: 8,
             router_seed: 0x0715C,
             link: LinkModel::default(),
+            faults: ClusterFaultPlan::none(),
+            health: HealthConfig::default(),
         }
     }
 }
@@ -109,8 +138,9 @@ impl ClusterTicket {
         self.inner.id()
     }
 
-    /// The home shard of a routed job; `None` for a split job (it ran
-    /// on every shard).
+    /// The home shard a routed job was first dispatched to (a failover
+    /// may finish it elsewhere); `None` for a split job (it ran on
+    /// every shard).
     pub fn shard(&self) -> Option<usize> {
         self.shard
     }
@@ -137,9 +167,12 @@ impl ClusterTicket {
         self.inner.wait_timeout(timeout)
     }
 
-    /// Cancel if nothing claimed the job yet.  Split jobs claim their
-    /// slot at submit, so they always lose this race — by design: the
-    /// scatter begins immediately.
+    /// Cancel delivery.  A routed job stays cancellable until the
+    /// failover supervisor publishes its result (the shard-side work
+    /// may still run to completion, but its result is discarded, never
+    /// delivered).  Split jobs claim their slot at submit, so they
+    /// always lose this race — by design: the scatter begins
+    /// immediately.
     pub fn try_cancel(&self) -> bool {
         self.inner.try_cancel()
     }
@@ -177,68 +210,159 @@ impl ClusterSubmission {
     }
 }
 
-/// Split-path shared state: completed split slots for the drain, plus
-/// the in-flight gauge the front door sheds on.
+/// Finished cluster-owned slots (routed and split) for the drain,
+/// plus the split in-flight gauge the front door sheds on.
 #[derive(Debug, Default)]
-struct SplitShared {
-    completed: Mutex<VecDeque<Arc<Slot>>>,
+struct Completions {
+    done: Mutex<VecDeque<Arc<Slot>>>,
     ready: Condvar,
-    inflight: AtomicUsize,
+    inflight_splits: AtomicUsize,
 }
 
-/// N sort-service shards behind one deterministic router.
-pub struct Cluster {
+/// One routed job the supervisor is tracking: the shard-side ticket
+/// it polls and the cluster-owned outer slot it publishes into.
+#[derive(Debug)]
+struct RoutedPending {
+    spec: JobSpec,
+    key: u64,
+    shard: usize,
+    first_shard: usize,
+    attempt: u32,
+    event: u64,
+    slow: Duration,
+    inner: JobTicket,
+    outer: Arc<Slot>,
+    accepted_at: Instant,
+}
+
+/// Supervisor shared state.
+#[derive(Debug, Default)]
+struct RoutedShared {
+    pending: Mutex<Vec<RoutedPending>>,
+    wake: Condvar,
+    closing: AtomicBool,
+}
+
+/// Everything the cluster's threads share.
+struct Core {
     cfg: ClusterConfig,
-    shards: Arc<Vec<SortService>>,
+    shards: Vec<SortService>,
     router: Router,
     transfer: InterShardModel,
-    stats: Arc<ClusterStats>,
-    split: Arc<SplitShared>,
+    stats: ClusterStats,
+    health: HealthBoard,
+    completions: Completions,
+    routed: RoutedShared,
+}
+
+/// Outcome of dispatching one attempt onto one shard.
+enum Dispatch {
+    /// The shard queued it; the supervisor will poll `inner`.
+    Inflight { inner: JobTicket, slow: Duration },
+    /// The shard's admission control said no.
+    Rejected { reason: RejectReason },
+    /// The cluster fault plan failed the attempt at the shard
+    /// boundary (charged to that shard's ledger).
+    Failed { error: String },
+}
+
+/// Outcome of the one allowed cross-shard failover.
+enum Failover {
+    /// Re-routed; the retry is in flight on `shard`.
+    Inflight {
+        shard: usize,
+        inner: JobTicket,
+        slow: Duration,
+    },
+    /// Nothing could save the job; fail it explicitly with `error`.
+    Exhausted { error: String },
+}
+
+/// N sort-service shards behind one deterministic router, plus the
+/// failover supervisor and split workers.
+pub struct Cluster {
+    core: Arc<Core>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
     splitters: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Cluster {
-    /// Start `cfg.shards` independent shards.
+    /// Start `cfg.shards` independent shards and the failover
+    /// supervisor.
+    ///
+    /// # Panics
+    /// When `cfg.faults` names a shard the cluster does not have or
+    /// carries an out-of-range rate (the CLI validates first and
+    /// reports nicely; programmatic callers get the panic).
     pub fn start(cfg: ClusterConfig) -> Cluster {
         let n = cfg.shards.max(1);
+        cfg.faults.validate(n).expect("cluster fault plan");
         let shards: Vec<SortService> =
             (0..n).map(|_| SortService::start(cfg.shard.clone())).collect();
-        Cluster {
+        let core = Arc::new(Core {
             router: Router::new(n, cfg.router_seed),
             transfer: InterShardModel::new(cfg.link),
-            shards: Arc::new(shards),
-            stats: Arc::new(ClusterStats::new()),
-            split: Arc::new(SplitShared::default()),
-            splitters: Mutex::new(Vec::new()),
+            shards,
+            stats: ClusterStats::new(),
+            health: HealthBoard::new(n, cfg.health.clone()),
+            completions: Completions::default(),
+            routed: RoutedShared::default(),
             cfg,
+        });
+        let supervisor = {
+            let core = Arc::clone(&core);
+            std::thread::Builder::new()
+                .name("ohhc-cluster-supervisor".into())
+                .spawn(move || supervise(&core))
+                .expect("spawn cluster supervisor")
+        };
+        Cluster {
+            core,
+            supervisor: Mutex::new(Some(supervisor)),
+            splitters: Mutex::new(Vec::new()),
         }
     }
 
     /// Number of shards.
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.core.shards.len()
     }
 
     /// Shard `i`'s service (tests, diagnostics).
     pub fn shard(&self, i: usize) -> &SortService {
-        &self.shards[i]
+        &self.core.shards[i]
     }
 
     /// The router in use.
     pub fn router(&self) -> &Router {
-        &self.router
+        &self.core.router
     }
 
     /// Live cluster-level counters.
     pub fn stats(&self) -> &ClusterStats {
-        &self.stats
+        &self.core.stats
     }
 
-    /// Submit one job.  Small jobs route to their home shard
-    /// (consistent hashing on [`job_key`]); jobs above the split
-    /// threshold scatter across every shard and merge back.
+    /// Administratively drain shard `i`: no new routes, failovers, or
+    /// span re-issues land on it, while everything already queued
+    /// there finishes normally.
+    pub fn drain_shard(&self, i: usize) {
+        self.core.health.drain(i);
+    }
+
+    /// Rejoin a drained shard.  Its full rendezvous assignment comes
+    /// straight back — the router never stopped *hashing* the shard,
+    /// only admitting it — so exactly the keys that left return.
+    pub fn rejoin_shard(&self, i: usize) {
+        self.core.health.rejoin(i);
+    }
+
+    /// Submit one job.  Small jobs route to a live home shard
+    /// (consistent hashing on [`job_key`] over the health board's
+    /// routing mask); jobs above the split threshold scatter across
+    /// every shard and merge back.
     pub fn submit(&self, spec: JobSpec) -> ClusterSubmission {
-        if self.shards.len() > 1 && spec.elements > self.cfg.split_threshold {
+        if self.core.shards.len() > 1 && spec.elements > self.core.cfg.split_threshold {
             self.submit_split(spec)
         } else {
             self.submit_routed(spec)
@@ -246,23 +370,79 @@ impl Cluster {
     }
 
     fn submit_routed(&self, spec: JobSpec) -> ClusterSubmission {
-        let shard = self.router.route(job_key(&spec));
-        match self.shards[shard].submit(spec) {
-            Submission::Accepted { ticket, .. } => {
-                self.stats.on_routed();
+        let core = &self.core;
+        let event = core.health.tick();
+        let key = job_key(&spec);
+        let mask = core.health.routing_mask();
+        let Some(shard) = core.router.route_alive(key, &mask) else {
+            return ClusterSubmission::Rejected {
+                reason: RejectReason::Unavailable,
+            };
+        };
+        let outer = Slot::new(spec.id);
+        let ticket = ClusterTicket {
+            shard: Some(shard),
+            inner: JobTicket::new(Arc::clone(&outer)),
+        };
+        let accepted_at = Instant::now();
+        match core.dispatch_routed(&spec, shard, event, 0) {
+            Dispatch::Inflight { inner, slow } => {
+                core.stats.on_routed();
+                core.enqueue_pending(RoutedPending {
+                    spec,
+                    key,
+                    shard,
+                    first_shard: shard,
+                    attempt: 0,
+                    event,
+                    slow,
+                    inner,
+                    outer,
+                    accepted_at,
+                });
                 ClusterSubmission::Accepted {
                     shard: Some(shard),
-                    ticket: ClusterTicket {
-                        shard: Some(shard),
-                        inner: ticket,
-                    },
+                    ticket,
                 }
             }
-            Submission::Rejected { reason } => ClusterSubmission::Rejected { reason },
+            Dispatch::Rejected { reason } => ClusterSubmission::Rejected { reason },
+            Dispatch::Failed { error } => {
+                // The fault plan killed the attempt at the shard
+                // boundary.  The job *is* accepted at the cluster —
+                // it fails over right now, synchronously.
+                core.stats.on_routed();
+                match core.failover_routed(&spec, key, shard, event) {
+                    Failover::Inflight {
+                        shard: next,
+                        inner,
+                        slow,
+                    } => core.enqueue_pending(RoutedPending {
+                        spec,
+                        key,
+                        shard: next,
+                        first_shard: shard,
+                        attempt: 1,
+                        event,
+                        slow,
+                        inner,
+                        outer,
+                        accepted_at,
+                    }),
+                    Failover::Exhausted { error: then } => {
+                        let why = format!("{error}; {then}");
+                        core.publish(outer, synth_cluster_failure(&spec, accepted_at, why));
+                    }
+                }
+                ClusterSubmission::Accepted {
+                    shard: Some(shard),
+                    ticket,
+                }
+            }
         }
     }
 
     fn submit_split(&self, spec: JobSpec) -> ClusterSubmission {
+        let core = &self.core;
         if let Err(e) = spec.validate() {
             return ClusterSubmission::Rejected {
                 reason: RejectReason::Invalid {
@@ -270,17 +450,19 @@ impl Cluster {
                 },
             };
         }
-        let inflight = self.split.inflight.fetch_add(1, Ordering::AcqRel);
-        if inflight >= self.cfg.max_inflight_splits {
-            self.split.inflight.fetch_sub(1, Ordering::AcqRel);
-            self.stats.on_split_rejected();
+        let event = core.health.tick();
+        let inflight = core.completions.inflight_splits.fetch_add(1, Ordering::AcqRel);
+        if inflight >= core.cfg.max_inflight_splits {
+            core.completions.inflight_splits.fetch_sub(1, Ordering::AcqRel);
+            core.stats.on_split_rejected();
             return ClusterSubmission::Rejected {
                 reason: RejectReason::Overloaded {
                     depth: inflight,
-                    shed_depth: self.cfg.max_inflight_splits,
+                    shed_depth: core.cfg.max_inflight_splits,
                 },
             };
         }
+        core.stats.on_split_accepted();
         let slot = Slot::new(spec.id);
         // The scatter begins immediately: claim now so a cancel can
         // never race a job that is already generating its input.
@@ -290,23 +472,20 @@ impl Cluster {
             inner: JobTicket::new(Arc::clone(&slot)),
         };
         let accepted_at = Instant::now();
-        let home = self.router.route(job_key(&spec));
-        let shards = Arc::clone(&self.shards);
-        let split = Arc::clone(&self.split);
-        let stats = Arc::clone(&self.stats);
-        let transfer = self.transfer.clone();
-        let retain = self.cfg.shard.retain_output;
+        let home = core.router.route(job_key(&spec));
+        let core_handle = Arc::clone(core);
+        let retain = core.cfg.shard.retain_output;
         let handle = std::thread::Builder::new()
             .name(format!("ohhc-split-{}", spec.id))
             .spawn(move || {
-                let result =
-                    execute_split(&shards, &spec, home, &transfer, &stats, retain, accepted_at);
+                let core = &*core_handle;
+                let result = execute_split(core, &spec, home, event, retain, accepted_at);
                 slot.complete(result);
-                let mut q = split.completed.lock().unwrap();
+                let mut q = core.completions.done.lock().unwrap();
                 q.push_back(slot);
                 drop(q);
-                split.ready.notify_all();
-                split.inflight.fetch_sub(1, Ordering::AcqRel);
+                core.completions.ready.notify_all();
+                core.completions.inflight_splits.fetch_sub(1, Ordering::AcqRel);
             })
             .expect("spawn split worker");
         self.splitters.lock().unwrap().push(handle);
@@ -316,23 +495,21 @@ impl Cluster {
         }
     }
 
-    /// Wait up to `timeout` for any finished job (routed on any shard,
-    /// or split) whose result nobody has taken yet, and take it.
+    /// Wait up to `timeout` for any finished job (routed or split)
+    /// whose result nobody has taken yet, and take it.  Routed results
+    /// arrive here through the supervisor's outer slots — never by
+    /// raiding the shards' own completion queues, which the supervisor
+    /// owns.
     pub fn next_completion(&self, timeout: Duration) -> Option<JobResult> {
         const TICK: Duration = Duration::from_millis(1);
         let deadline = Instant::now().checked_add(timeout);
         loop {
             {
-                let mut q = self.split.completed.lock().unwrap();
+                let mut q = self.core.completions.done.lock().unwrap();
                 while let Some(slot) = q.pop_front() {
                     if let Some(r) = slot.take() {
                         return Some(r);
                     }
-                }
-            }
-            for shard in self.shards.iter() {
-                if let Some(r) = shard.try_next_completion() {
-                    return Some(r);
                 }
             }
             let wait = match deadline {
@@ -345,10 +522,8 @@ impl Cluster {
                 }
                 None => TICK,
             };
-            // Split completions signal this condvar; shard completions
-            // are picked up on the next tick.
-            let q = self.split.completed.lock().unwrap();
-            let _ = self.split.ready.wait_timeout(q, wait).unwrap();
+            let q = self.core.completions.done.lock().unwrap();
+            let _ = self.core.completions.ready.wait_timeout(q, wait).unwrap();
         }
     }
 
@@ -357,57 +532,69 @@ impl Cluster {
         self.next_completion(Duration::ZERO)
     }
 
-    /// Freeze the cluster view: per-shard snapshots plus the
-    /// histogram-level merge ([`ServiceStats::merge`]).
+    /// Freeze the cluster view: per-shard snapshots, the
+    /// histogram-level merge ([`ServiceStats::merge`]), and per-shard
+    /// breaker health.
     pub fn snapshot(&self) -> ClusterSnapshot {
         let merged = ServiceStats::new();
-        let mut per = Vec::with_capacity(self.shards.len());
-        for shard in self.shards.iter() {
+        let mut per = Vec::with_capacity(self.core.shards.len());
+        for shard in &self.core.shards {
             merged.merge(shard.stats());
             per.push(shard.stats().snapshot());
         }
-        self.stats.freeze(per, merged.snapshot())
+        self.core.stats.freeze(per, merged.snapshot(), self.core.health.snapshot())
     }
 
-    /// Graceful shutdown: join every split worker, shut each shard
-    /// down (their backlogs still execute), and return the final
-    /// snapshot plus every result nobody took.  Drain completions
-    /// first (as loadgen does) if the merged histograms must cover
-    /// every job — the merge is frozen as the shards close.
+    /// Graceful shutdown: join every split worker, let the supervisor
+    /// drain its in-flight routed jobs, shut each shard down (their
+    /// backlogs still execute), and return the final snapshot plus
+    /// every result nobody took.  Drain completions first (as loadgen
+    /// does) if the merged histograms must cover every job — the merge
+    /// is frozen as the shards close.
     pub fn shutdown(self) -> (ClusterSnapshot, Vec<JobResult>) {
         let Cluster {
-            shards,
-            stats,
-            split,
+            core,
+            supervisor,
             splitters,
-            ..
         } = self;
         for h in splitters.into_inner().unwrap() {
             let _ = h.join();
         }
+        core.routed.closing.store(true, Ordering::Release);
+        core.routed.wake.notify_all();
+        if let Some(h) = supervisor.into_inner().unwrap().take() {
+            let _ = h.join();
+        }
         let mut rest = Vec::new();
         {
-            let mut q = split.completed.lock().unwrap();
+            let mut q = core.completions.done.lock().unwrap();
             while let Some(slot) = q.pop_front() {
                 if let Some(r) = slot.take() {
                     rest.push(r);
                 }
             }
         }
-        let shards = Arc::try_unwrap(shards)
-            .ok()
-            .expect("split workers joined; no shard handle outlives the cluster");
+        let Ok(core) = Arc::try_unwrap(core) else {
+            unreachable!("supervisor and split workers joined; no handle outlives the cluster")
+        };
+        let Core {
+            shards,
+            stats,
+            health,
+            ..
+        } = core;
         let merged = ServiceStats::new();
         for shard in &shards {
             merged.merge(shard.stats());
         }
+        let health_snap = health.snapshot();
         let mut finals = Vec::with_capacity(shards.len());
         for shard in shards {
             let (snap, leftover) = shard.shutdown();
             finals.push(snap);
             rest.extend(leftover);
         }
-        (stats.freeze(finals, merged.snapshot()), rest)
+        (stats.freeze(finals, merged.snapshot(), health_snap), rest)
     }
 }
 
@@ -425,52 +612,381 @@ impl JobSink for Cluster {
     }
 }
 
+impl Core {
+    /// Dispatch one attempt of a routed job onto `shard`, applying the
+    /// cluster fault plan first.  A blackout (window or rate draw)
+    /// fails the attempt at the shard boundary, charged to that
+    /// shard's ledger (`accepted == completed + failed` holds for
+    /// synthesized failures too); a brownout lets it run and returns
+    /// the virtual latency to charge.
+    fn dispatch_routed(&self, spec: &JobSpec, shard: usize, event: u64, attempt: u32) -> Dispatch {
+        let mut slow = Duration::ZERO;
+        match self.cfg.faults.draw(shard, event, spec.id, attempt) {
+            Some(ShardFault::Fail { reason }) => {
+                let error = format!("shard {shard}: {reason}");
+                let stats = self.shards[shard].stats();
+                stats.on_submit(true);
+                stats.on_result(&synth_shard_failure(spec, spec.elements, &error));
+                self.health.record_failure(shard);
+                return Dispatch::Failed { error };
+            }
+            Some(ShardFault::Slow { delay }) => slow = delay,
+            None => {}
+        }
+        match self.shards[shard].submit(spec.clone()) {
+            Submission::Accepted { ticket, .. } => Dispatch::Inflight {
+                inner: ticket,
+                slow,
+            },
+            Submission::Rejected { reason } => {
+                self.health.record_rejection(shard);
+                Dispatch::Rejected { reason }
+            }
+        }
+    }
+
+    /// The one allowed cross-shard failover of a routed job whose
+    /// attempt on `failed` did not survive: re-route via rendezvous to
+    /// the next-ranked live shard and dispatch attempt 1 there.
+    fn failover_routed(&self, spec: &JobSpec, key: u64, failed: usize, event: u64) -> Failover {
+        let alive = self.health.alive_mask();
+        let Some(next) = self.router.route_failover(key, &alive, failed) else {
+            self.stats.on_failover_exhausted();
+            return Failover::Exhausted {
+                error: format!("no live shard left to fail job {} over to", spec.id),
+            };
+        };
+        match self.dispatch_routed(spec, next, event, 1) {
+            Dispatch::Inflight { inner, slow } => {
+                self.stats.on_failover();
+                Failover::Inflight {
+                    shard: next,
+                    inner,
+                    slow,
+                }
+            }
+            Dispatch::Rejected { reason } => {
+                self.stats.on_failover_exhausted();
+                Failover::Exhausted {
+                    error: format!("failover to shard {next} rejected: {reason}"),
+                }
+            }
+            Dispatch::Failed { error } => {
+                self.stats.on_failover();
+                self.stats.on_failover_exhausted();
+                Failover::Exhausted {
+                    error: format!("failover to shard {next} failed: {error}"),
+                }
+            }
+        }
+    }
+
+    fn enqueue_pending(&self, entry: RoutedPending) {
+        let mut p = self.routed.pending.lock().unwrap();
+        p.push(entry);
+        drop(p);
+        self.routed.wake.notify_all();
+    }
+
+    /// Advance one tracked routed job.  Returns the entry back when it
+    /// is still in flight, `None` once it has been resolved (published,
+    /// failed over into a new entry, or cancelled away).
+    fn step_pending(&self, entry: RoutedPending) -> Option<RoutedPending> {
+        if entry.outer.is_cancelled() && entry.inner.try_cancel() {
+            // Tenant cancelled before the shard started the job:
+            // nothing ran, nothing to deliver.  (If the shard already
+            // claimed it, the result arrives below and is discarded by
+            // the cancelled outer slot.)
+            return None;
+        }
+        let Some(mut r) = entry.inner.try_result() else {
+            return Some(entry);
+        };
+        let RoutedPending {
+            spec,
+            key,
+            shard,
+            first_shard,
+            attempt,
+            event,
+            slow,
+            outer,
+            accepted_at,
+            ..
+        } = entry;
+        charge_slow(&mut r, slow);
+        let failed = r.error.is_some() || !r.sorted_ok;
+        if !failed {
+            self.health.record_success(shard);
+            if attempt > 0 {
+                finalize_failover(&mut r, spec.deadline, accepted_at.elapsed(), true);
+            }
+            self.publish(outer, r);
+            return None;
+        }
+        self.health.record_failure(shard);
+        if attempt == 0 {
+            match self.failover_routed(&spec, key, shard, event) {
+                Failover::Inflight {
+                    shard: next,
+                    inner,
+                    slow,
+                } => {
+                    return Some(RoutedPending {
+                        spec,
+                        key,
+                        shard: next,
+                        first_shard,
+                        attempt: 1,
+                        event,
+                        slow,
+                        inner,
+                        outer,
+                        accepted_at,
+                    });
+                }
+                Failover::Exhausted { error } => {
+                    let cause = r.error.take().unwrap_or_else(|| "failed verification".into());
+                    r.error = Some(format!("shard {shard}: {cause}; {error}"));
+                    finalize_failover(&mut r, spec.deadline, accepted_at.elapsed(), false);
+                    self.publish(outer, r);
+                    return None;
+                }
+            }
+        }
+        // Failed again after the one allowed failover: explicit.
+        self.stats.on_failover_exhausted();
+        let cause = r.error.take().unwrap_or_else(|| "failed verification".into());
+        r.error = Some(format!(
+            "job {} failed over from shard {first_shard} to {shard} and failed again: {cause}",
+            spec.id
+        ));
+        finalize_failover(&mut r, spec.deadline, accepted_at.elapsed(), true);
+        self.publish(outer, r);
+        None
+    }
+
+    /// Publish a routed result into the cluster completion queue
+    /// through its outer slot.  A cancelled slot refuses the claim and
+    /// the result is dropped — the tenant asked for exactly that.
+    fn publish(&self, outer: Arc<Slot>, r: JobResult) {
+        if outer.claim() {
+            outer.complete(r);
+            let mut q = self.completions.done.lock().unwrap();
+            q.push_back(outer);
+            drop(q);
+            self.completions.ready.notify_all();
+        }
+    }
+}
+
+/// The supervisor loop: poll every tracked routed job, drive
+/// failovers, and feed the health board from each shard's stats
+/// deltas.  Exits once the cluster is closing and nothing is pending.
+fn supervise(core: &Core) {
+    const TICK: Duration = Duration::from_millis(1);
+    loop {
+        let batch = std::mem::take(&mut *core.routed.pending.lock().unwrap());
+        let mut keep = Vec::with_capacity(batch.len());
+        for entry in batch {
+            if let Some(still) = core.step_pending(entry) {
+                keep.push(still);
+            }
+        }
+        let empty = {
+            let mut p = core.routed.pending.lock().unwrap();
+            // Submissions that arrived mid-scan sit in `p` already.
+            p.extend(keep);
+            p.is_empty()
+        };
+        for (i, shard) in core.shards.iter().enumerate() {
+            let s = shard.stats();
+            core.health.absorb_stats(i, s.completed(), s.failed(), s.rejected());
+        }
+        if empty && core.routed.closing.load(Ordering::Acquire) {
+            return;
+        }
+        let guard = core.routed.pending.lock().unwrap();
+        let _ = core.routed.wake.wait_timeout(guard, TICK).unwrap();
+    }
+}
+
+/// Fold a brownout's virtual latency into a result and re-judge its
+/// deadline — the same virtual-pricing treatment the
+/// [`InterShardModel`] gives cross-shard bytes; no thread ever slept.
+fn charge_slow(r: &mut JobResult, slow: Duration) {
+    if slow.is_zero() {
+        return;
+    }
+    r.sort_latency += slow;
+    r.total_latency += slow;
+    if let Some(d) = r.deadline {
+        r.deadline_met = Some(r.total_latency <= d);
+    }
+}
+
+/// Re-judge a routed result that reached the tenant through the
+/// failover path.  The deadline is judged against the *whole journey*
+/// — queue, failed first attempt, failover, retry — never the winning
+/// attempt alone, and the extra attempt is visible in `retries`.
+fn finalize_failover(
+    r: &mut JobResult,
+    deadline: Option<Duration>,
+    elapsed: Duration,
+    retried: bool,
+) {
+    if retried {
+        r.retries += 1;
+    }
+    if elapsed > r.total_latency {
+        r.queue_latency = elapsed.saturating_sub(r.sort_latency);
+        r.total_latency = elapsed;
+    }
+    r.deadline = deadline;
+    r.deadline_met = deadline.map(|d| r.total_latency <= d);
+}
+
+/// A zero-latency failed result charged to a shard's ledger for an
+/// attempt the fault plan killed before the shard ever ran it — the
+/// synthesized counterpart of a real pipeline failure, keeping
+/// `accepted == completed + failed` exact under blackouts.
+fn synth_shard_failure(spec: &JobSpec, elements: usize, error: &str) -> JobResult {
+    JobResult {
+        id: spec.id,
+        elements,
+        dimension: spec.dimension,
+        batched: false,
+        queue_latency: Duration::ZERO,
+        sort_latency: Duration::ZERO,
+        total_latency: Duration::ZERO,
+        deadline: None,
+        deadline_met: None,
+        sorted_ok: false,
+        checksum: 0,
+        imbalance: 0.0,
+        skew_redivides: 0,
+        retries: 0,
+        error: Some(error.to_string()),
+        output: None,
+    }
+}
+
+/// The explicit cluster-level failure delivered to the tenant when a
+/// routed job could not be saved (its shard attempts are already on
+/// the shard ledgers; this is the tenant-facing copy).
+fn synth_cluster_failure(spec: &JobSpec, accepted_at: Instant, error: String) -> JobResult {
+    let total = accepted_at.elapsed();
+    JobResult {
+        id: spec.id,
+        elements: spec.elements,
+        dimension: spec.dimension,
+        batched: false,
+        queue_latency: total,
+        sort_latency: Duration::ZERO,
+        total_latency: total,
+        deadline: spec.deadline,
+        deadline_met: spec.deadline.map(|d| total <= d),
+        sorted_ok: false,
+        checksum: 0,
+        imbalance: 0.0,
+        skew_redivides: 0,
+        retries: 0,
+        error: Some(error),
+        output: None,
+    }
+}
+
 /// The scatter/merge path, run on a dedicated split worker thread:
 /// sampled split into per-shard spans, one pipeline session per shard
 /// on that shard's leased topology (accounted into that shard's
-/// stats), k-way merge, full verification, optical transfer charge.
+/// stats), per-span failure recovery, k-way merge, full verification,
+/// optical transfer charge.
 fn execute_split(
-    shards: &[SortService],
+    core: &Core,
     spec: &JobSpec,
     home: usize,
-    transfer: &InterShardModel,
-    stats: &ClusterStats,
+    event: u64,
     retain: bool,
     accepted_at: Instant,
 ) -> JobResult {
     let data = spec.generate();
     let t0 = Instant::now();
     let queue_latency = t0.duration_since(accepted_at);
+    let n = core.shards.len();
+    let span_faults: Vec<Option<ShardFault>> =
+        (0..n).map(|i| core.cfg.faults.draw(i, event, spec.id, 0)).collect();
+    // Brownouts price the job, not a thread: spans run concurrently,
+    // so the virtual charge is the worst shard's delay.
+    let slow = span_faults.iter().flatten().fold(Duration::ZERO, |acc, f| match f {
+        ShardFault::Slow { delay } => acc.max(*delay),
+        ShardFault::Fail { .. } => acc,
+    });
     let run = (|| -> Result<(Vec<i32>, f64, u64, Duration, f64)> {
-        let n = shards.len();
         let divided = divide_sampled(&data, n)?;
         let imbalance = divided.imbalance();
         let sizes = divided.sizes();
         // One session per shard, concurrently; each shard leases its
         // own (dimension, construction) bundle from its own PlanCache
-        // and its stats observe the session's stage boundaries.
+        // and its stats observe the session's stage boundaries.  A
+        // span blacked out by the fault plan fails at the shard
+        // boundary, charged to that shard's ledger.
         let spans: Vec<&[i32]> = (0..n).map(|b| divided.buckets.bucket(b)).collect();
         let parts: Vec<Result<Option<Vec<i32>>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = spans
                 .iter()
                 .enumerate()
                 .map(|(i, &span)| {
-                    let shard = &shards[i];
-                    scope.spawn(move || sort_span_on_shard(shard, spec, span))
+                    let shard = &core.shards[i];
+                    let fault = span_faults[i];
+                    scope.spawn(move || -> Result<Option<Vec<i32>>> {
+                        if span.is_empty() {
+                            return Ok(None);
+                        }
+                        if let Some(ShardFault::Fail { reason }) = fault {
+                            let error = format!("shard {i}: {reason}");
+                            shard.stats().on_submit(true);
+                            shard.stats().on_result(&synth_shard_failure(
+                                spec,
+                                span.len(),
+                                &error,
+                            ));
+                            return Err(Error::Invariant(error));
+                        }
+                        shard.stats().on_submit(true);
+                        sort_span_on_shard(shard, spec, span)
+                    })
                 })
                 .collect();
             handles
                 .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::Invariant("span sorter panicked".into())))
+                .enumerate()
+                .map(|(i, h)| {
+                    h.join().unwrap_or_else(|_| {
+                        // A panicked span sorter is an explicit
+                        // per-span failure on that shard's ledger
+                        // (the span's accepted mark is balanced by
+                        // this failed result), never a bare invariant.
+                        let error = format!("shard {i}: span sorter panicked");
+                        let stats = core.shards[i].stats();
+                        stats.on_worker_panic();
+                        stats.on_result(&synth_shard_failure(spec, spans[i].len(), &error));
+                        Err(Error::Invariant(error))
+                    })
                 })
                 .collect()
         });
         let mut sorted_parts: Vec<Vec<i32>> = Vec::with_capacity(n);
-        for part in parts {
-            if let Some(p) = part? {
-                sorted_parts.push(p);
+        for (i, part) in parts.into_iter().enumerate() {
+            match part {
+                Ok(Some(p)) => {
+                    core.health.record_success(i);
+                    sorted_parts.push(p);
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    core.health.record_failure(i);
+                    sorted_parts.push(reissue_span(core, spec, event, i, spans[i], &e)?);
+                }
             }
         }
         let refs: Vec<&[i32]> = sorted_parts.iter().map(Vec::as_slice).collect();
@@ -485,7 +1001,7 @@ fn execute_split(
                 "cluster merge is not a sorted permutation of the input".into(),
             ));
         }
-        let charge = transfer.split_transfer(home, &sizes);
+        let charge = core.transfer.split_transfer(home, &sizes);
         Ok((
             merged,
             imbalance,
@@ -494,12 +1010,12 @@ fn execute_split(
             charge.transfer_ns,
         ))
     })();
-    let sort_latency = t0.elapsed();
-    let total_latency = accepted_at.elapsed();
+    let sort_latency = t0.elapsed() + slow;
+    let total_latency = accepted_at.elapsed() + slow;
     let deadline_met = spec.deadline.map(|d| total_latency <= d);
     match run {
         Ok((merged, imbalance, bytes, merge_wall, transfer_ns)) => {
-            stats.on_split(bytes, transfer_ns, merge_wall);
+            core.stats.on_split_transfer(bytes, transfer_ns, merge_wall);
             JobResult {
                 id: spec.id,
                 elements: data.len(),
@@ -540,9 +1056,63 @@ fn execute_split(
     }
 }
 
-/// Sort one span through the shard's normal pipeline path, accounting
-/// the sub-job into the shard's stats (one accepted, one completed or
-/// failed — the per-shard invariant holds for split traffic too).
+/// Re-issue one failed span to the next-ranked live shard — exactly
+/// one attempt, charged to the target shard's ledger and counted in
+/// [`ClusterStats::span_reissues`].  An unrecoverable span fails the
+/// whole split job with the span and every shard involved named.
+fn reissue_span(
+    core: &Core,
+    spec: &JobSpec,
+    event: u64,
+    from: usize,
+    span: &[i32],
+    cause: &Error,
+) -> Result<Vec<i32>> {
+    let key = splitmix64(job_key(spec) ^ (from as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let alive = core.health.alive_mask();
+    let Some(target) = core.router.route_failover(key, &alive, from) else {
+        return Err(Error::Invariant(format!(
+            "split job {}: span {from} failed on shard {from} ({cause}) \
+             and no live shard remains to re-issue it",
+            spec.id
+        )));
+    };
+    if let Some(ShardFault::Fail { reason }) = core.cfg.faults.draw(target, event, spec.id, 1) {
+        let error = format!("shard {target}: {reason}");
+        let stats = core.shards[target].stats();
+        stats.on_submit(true);
+        stats.on_result(&synth_shard_failure(spec, span.len(), &error));
+        core.health.record_failure(target);
+        return Err(Error::Invariant(format!(
+            "split job {}: span {from} failed on shard {from} ({cause}); \
+             re-issue to shard {target} failed: {error}",
+            spec.id
+        )));
+    }
+    core.stats.on_span_reissue();
+    core.shards[target].stats().on_submit(true);
+    match sort_span_on_shard(&core.shards[target], spec, span) {
+        Ok(Some(p)) => {
+            core.health.record_success(target);
+            Ok(p)
+        }
+        Ok(None) => unreachable!("failed spans are never empty"),
+        Err(e) => {
+            core.health.record_failure(target);
+            Err(Error::Invariant(format!(
+                "split job {}: span {from} failed on shard {from} ({cause}); \
+                 re-issue to shard {target} failed: {e}",
+                spec.id
+            )))
+        }
+    }
+}
+
+/// Sort one span through the shard's normal pipeline path.  The
+/// caller has already recorded the accepted submission
+/// (`on_submit(true)`); this function records exactly one matching
+/// result on every non-panic path — lease errors included — so the
+/// per-shard invariant holds for split traffic too.
 fn sort_span_on_shard(
     shard: &SortService,
     spec: &JobSpec,
@@ -551,10 +1121,9 @@ fn sort_span_on_shard(
     if span.is_empty() {
         return Ok(None);
     }
-    let lease = shard.plan_cache().lease(spec.dimension, spec.construction)?;
-    shard.stats().on_submit(true);
     let t0 = Instant::now();
     let run = (|| -> Result<crate::pipeline::Outcome> {
+        let lease = shard.plan_cache().lease(spec.dimension, spec.construction)?;
         Ok(Session::single(&lease.net, &lease.plans, span)
             .with_divide_strategy(spec.strategy)
             .with_observer(shard.stats())
@@ -660,11 +1229,13 @@ mod tests {
         let snap = cluster.snapshot();
         assert_eq!(snap.routed, 8);
         assert_eq!(snap.split_jobs, 0);
+        assert_eq!(snap.failovers, 0);
         assert_eq!(snap.merged.completed, 8);
         assert_eq!(
             snap.shards.iter().map(|s| s.completed).sum::<u64>(),
             snap.merged.completed
         );
+        assert!(snap.health.iter().all(|h| h.state == HealthState::Healthy));
         let (final_snap, rest) = cluster.shutdown();
         assert!(rest.is_empty(), "all results already taken");
         assert_eq!(final_snap.merged.completed, 8);
@@ -740,5 +1311,89 @@ mod tests {
         assert_eq!(got, vec![0, 1, 2, 3]);
         assert!(cluster.try_next_completion().is_none());
         cluster.shutdown();
+    }
+
+    #[test]
+    fn drained_shard_gets_no_new_routes_and_rejoin_restores_its_keys() {
+        let cluster = tiny_cluster(3, usize::MAX);
+        // Find ids homed on shard 2 under the default router seed.
+        let homed: Vec<u64> = (0..200u64)
+            .filter(|&id| cluster.router().route(job_key(&spec(id, 1_000))) == 2)
+            .collect();
+        assert!(!homed.is_empty(), "some key must home on shard 2");
+        cluster.drain_shard(2);
+        for &id in homed.iter().take(4) {
+            match cluster.submit(spec(id, 1_000)) {
+                ClusterSubmission::Accepted { shard, .. } => {
+                    assert_ne!(shard, Some(2), "drained shard took a new route")
+                }
+                ClusterSubmission::Rejected { reason } => panic!("rejected: {reason}"),
+            }
+        }
+        cluster.rejoin_shard(2);
+        let id = homed[homed.len() - 1];
+        match cluster.submit(spec(id, 1_000)) {
+            ClusterSubmission::Accepted { shard, .. } => {
+                assert_eq!(shard, Some(2), "rejoined shard must win its keys back")
+            }
+            ClusterSubmission::Rejected { reason } => panic!("rejected: {reason}"),
+        }
+        for n in 0..5 {
+            assert!(
+                cluster.next_completion(Duration::from_secs(60)).is_some(),
+                "routed job {n} of 5 never resolved"
+            );
+        }
+        let (snap, rest) = cluster.shutdown();
+        assert!(rest.is_empty());
+        assert!(!snap.health[2].drained, "rejoin must clear the drain flag");
+    }
+
+    #[test]
+    fn failover_deadline_judges_the_whole_journey() {
+        let mut r = synth_shard_failure(&spec(9, 100), 100, "x");
+        r.sorted_ok = true;
+        r.error = None;
+        r.sort_latency = Duration::from_millis(1);
+        r.total_latency = Duration::from_millis(2);
+        // The retry itself met the 5 ms deadline, but the journey —
+        // including the failed first attempt — took 12 ms.
+        finalize_failover(
+            &mut r,
+            Some(Duration::from_millis(5)),
+            Duration::from_millis(12),
+            true,
+        );
+        assert_eq!(r.retries, 1);
+        assert_eq!(r.total_latency, Duration::from_millis(12));
+        assert_eq!(r.queue_latency, Duration::from_millis(11));
+        assert_eq!(
+            r.deadline_met,
+            Some(false),
+            "deadline must be judged against the whole journey, not the winning attempt"
+        );
+        // A journey inside the deadline still passes.
+        let mut ok = synth_shard_failure(&spec(9, 100), 100, "x");
+        ok.total_latency = Duration::from_millis(2);
+        finalize_failover(
+            &mut ok,
+            Some(Duration::from_millis(50)),
+            Duration::from_millis(3),
+            true,
+        );
+        assert_eq!(ok.deadline_met, Some(true));
+    }
+
+    #[test]
+    fn brownout_charge_is_virtual_and_rejudges_the_deadline() {
+        let mut r = synth_shard_failure(&spec(1, 100), 100, "x");
+        r.sorted_ok = true;
+        r.error = None;
+        r.total_latency = Duration::from_millis(1);
+        r.deadline = Some(Duration::from_millis(4));
+        r.deadline_met = Some(true);
+        charge_slow(&mut r, Duration::from_millis(5));
+        assert_eq!(r.total_latency, Duration::from_millis(6));
+        assert_eq!(r.deadline_met, Some(false), "brownout must count against the SLO");
     }
 }

@@ -79,6 +79,18 @@ impl Router {
             .filter(|&s| alive.get(s).copied().unwrap_or(false))
             .max_by_key(|&s| self.weight(key, s))
     }
+
+    /// The failover target for `key` after `exclude` failed it: the
+    /// highest-weight live shard *other than* `exclude`.  Rendezvous
+    /// order makes this deterministic — every retry of the same key
+    /// lands on the same next-ranked shard.  `None` when no other live
+    /// shard exists.
+    pub fn route_failover(&self, key: u64, alive: &[bool], exclude: usize) -> Option<usize> {
+        debug_assert_eq!(alive.len(), self.shards);
+        (0..self.shards)
+            .filter(|&s| s != exclude && alive.get(s).copied().unwrap_or(false))
+            .max_by_key(|&s| self.weight(key, s))
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +179,24 @@ mod tests {
             assert_eq!(router.route_alive(key, &all), Some(router.route(key)));
         }
         assert_eq!(router.route_alive(1, &[false; 8]), None);
+    }
+
+    #[test]
+    fn failover_target_is_the_next_ranked_live_shard() {
+        let router = Router::new(4, 11);
+        let alive = [true; 4];
+        for id in 0..500u64 {
+            let key = job_key(&spec(id, id));
+            let home = router.route(key);
+            let next = router.route_failover(key, &alive, home).unwrap();
+            assert_ne!(next, home, "failover must leave the failed shard");
+            // Identical to masking the failed shard out of route_alive.
+            let mut masked = alive;
+            masked[home] = false;
+            assert_eq!(Some(next), router.route_alive(key, &masked));
+        }
+        // Nobody left to fail over to.
+        assert_eq!(router.route_failover(1, &[false, true, false, false], 1), None);
     }
 
     #[test]

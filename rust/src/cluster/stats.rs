@@ -1,23 +1,29 @@
 //! Cluster observability: per-shard [`ServiceSnapshot`]s, one merged
 //! roll-up (histogram-accurate, via [`ServiceStats::merge`]), and the
 //! cluster-level counters no single shard can see — routed vs split
-//! jobs, cross-shard bytes, and the virtual optical transfer charge.
+//! jobs, cross-shard bytes, the virtual optical transfer charge, and
+//! the degraded-mode ledger (failovers, span re-issues, per-shard
+//! breaker health).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::cluster::health::ShardHealthSnapshot;
 use crate::metrics::Histogram;
 use crate::service::stats::{LatencySummary, ServiceSnapshot};
 use crate::util::json::Json;
 
-/// Live cluster-level counters, shared by the router front door and
-/// every split worker.
+/// Live cluster-level counters, shared by the router front door,
+/// every split worker, and the failover supervisor.
 #[derive(Debug, Default)]
 pub struct ClusterStats {
     routed: AtomicU64,
     split_jobs: AtomicU64,
     split_rejected: AtomicU64,
+    failovers: AtomicU64,
+    failover_exhausted: AtomicU64,
+    span_reissues: AtomicU64,
     cross_shard_bytes: AtomicU64,
     transfer_ns: Mutex<Histogram>,
     merge_ns: Mutex<Histogram>,
@@ -34,12 +40,18 @@ impl ClusterStats {
         self.routed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One split job accepted at the cluster front door.  Counted at
+    /// accept — not at completion — so `routed + split_jobs ==
+    /// accepted` holds even when a split later fails under chaos.
+    pub fn on_split_accepted(&self) {
+        self.split_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One split job finished its scatter/merge: `bytes` crossed the
     /// optical fabric (both directions), charged `transfer_ns` of
     /// virtual optical time, and the host-side k-way merge took
     /// `merge_wall`.
-    pub fn on_split(&self, bytes: u64, transfer_ns: f64, merge_wall: Duration) {
-        self.split_jobs.fetch_add(1, Ordering::Relaxed);
+    pub fn on_split_transfer(&self, bytes: u64, transfer_ns: f64, merge_wall: Duration) {
         self.cross_shard_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.transfer_ns.lock().unwrap().record(transfer_ns.max(0.0) as u64);
         self.merge_ns.lock().unwrap().record_duration(merge_wall);
@@ -50,14 +62,46 @@ impl ClusterStats {
         self.split_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One routed job re-routed to the next-ranked live shard after
+    /// its home shard failed it.
+    pub fn on_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One routed job whose failover could not be placed or failed
+    /// again — it was failed explicitly, never retried a second time.
+    pub fn on_failover_exhausted(&self) {
+        self.failover_exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One failed split span re-issued to a healthy shard.
+    pub fn on_span_reissue(&self) {
+        self.span_reissues.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Jobs routed whole to a shard so far.
     pub fn routed(&self) -> u64 {
         self.routed.load(Ordering::Relaxed)
     }
 
-    /// Split jobs finished so far.
+    /// Split jobs accepted so far.
     pub fn split_jobs(&self) -> u64 {
         self.split_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Cross-shard failover retries so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Failovers that could not save the job.
+    pub fn failover_exhausted(&self) -> u64 {
+        self.failover_exhausted.load(Ordering::Relaxed)
+    }
+
+    /// Split spans re-issued so far.
+    pub fn span_reissues(&self) -> u64 {
+        self.span_reissues.load(Ordering::Relaxed)
     }
 
     /// Cross-shard bytes accumulated so far.
@@ -66,14 +110,24 @@ impl ClusterStats {
     }
 
     /// Freeze the cluster-level half of a snapshot (the caller supplies
-    /// the per-shard and merged service views).
-    pub fn freeze(&self, shards: Vec<ServiceSnapshot>, merged: ServiceSnapshot) -> ClusterSnapshot {
+    /// the per-shard and merged service views plus the health board's
+    /// per-shard breaker snapshots).
+    pub fn freeze(
+        &self,
+        shards: Vec<ServiceSnapshot>,
+        merged: ServiceSnapshot,
+        health: Vec<ShardHealthSnapshot>,
+    ) -> ClusterSnapshot {
         ClusterSnapshot {
             shards,
             merged,
+            health,
             routed: self.routed(),
             split_jobs: self.split_jobs(),
             split_rejected: self.split_rejected.load(Ordering::Relaxed),
+            failovers: self.failovers(),
+            failover_exhausted: self.failover_exhausted(),
+            span_reissues: self.span_reissues(),
             cross_shard_bytes: self.cross_shard_bytes(),
             transfer: LatencySummary::of(&self.transfer_ns.lock().unwrap()),
             merge: LatencySummary::of(&self.merge_ns.lock().unwrap()),
@@ -82,7 +136,7 @@ impl ClusterStats {
 }
 
 /// Frozen cluster view: every shard's service snapshot, the merged
-/// roll-up, and the cluster-level counters.
+/// roll-up, per-shard breaker health, and the cluster-level counters.
 #[derive(Debug, Clone)]
 pub struct ClusterSnapshot {
     /// Per-shard service snapshots, shard order.
@@ -90,12 +144,23 @@ pub struct ClusterSnapshot {
     /// All shards merged at histogram level — percentiles are computed
     /// *after* the merge, not averaged across shards.
     pub merged: ServiceSnapshot,
+    /// Per-shard breaker health (state, incidents, blackout seconds,
+    /// transition history), shard order.
+    pub health: Vec<ShardHealthSnapshot>,
     /// Jobs routed whole to their home shard.
     pub routed: u64,
-    /// Jobs that took the scatter/merge path.
+    /// Jobs that took the scatter/merge path (counted at accept).
     pub split_jobs: u64,
     /// Split jobs shed at the cluster front door.
     pub split_rejected: u64,
+    /// Routed jobs re-routed to another live shard after their home
+    /// shard failed them (at most one per job).
+    pub failovers: u64,
+    /// Routed jobs failed explicitly because no failover could save
+    /// them (no live shard, rejected, or failed twice).
+    pub failover_exhausted: u64,
+    /// Failed split spans re-issued to a healthy shard.
+    pub span_reissues: u64,
     /// Bytes that crossed the optical fabric (both directions).
     pub cross_shard_bytes: u64,
     /// Virtual optical transfer charge per split job (ns).
@@ -109,6 +174,12 @@ impl ClusterSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("cross_shard_bytes", Json::int(self.cross_shard_bytes as usize)),
+            ("failover_exhausted", Json::int(self.failover_exhausted as usize)),
+            ("failovers", Json::int(self.failovers as usize)),
+            (
+                "health",
+                Json::arr(self.health.iter().map(ShardHealthSnapshot::to_json)),
+            ),
             ("merge_latency", self.merge.to_json()),
             ("merged", self.merged.to_json()),
             ("routed", Json::int(self.routed as usize)),
@@ -116,6 +187,7 @@ impl ClusterSnapshot {
                 "shards",
                 Json::arr(self.shards.iter().map(ServiceSnapshot::to_json)),
             ),
+            ("span_reissues", Json::int(self.span_reissues as usize)),
             ("split_jobs", Json::int(self.split_jobs as usize)),
             ("split_rejected", Json::int(self.split_rejected as usize)),
             ("transfer_ns", self.transfer.to_json()),
@@ -127,6 +199,7 @@ impl ClusterSnapshot {
         let mut out = format!(
             "cluster: {} shards, {} routed, {} split ({} shed), \
              {} cross-shard bytes\n\
+             resilience: {} failovers ({} exhausted), {} span re-issues\n\
              transfer (virtual): p50 {} ns p99 {} ns; merge: p50 {:.3?} p99 {:.3?}\n\
              merged {}",
             self.shards.len(),
@@ -134,6 +207,9 @@ impl ClusterSnapshot {
             self.split_jobs,
             self.split_rejected,
             self.cross_shard_bytes,
+            self.failovers,
+            self.failover_exhausted,
+            self.span_reissues,
             self.transfer.p50.as_nanos(),
             self.transfer.p99.as_nanos(),
             self.merge.p50,
@@ -141,8 +217,13 @@ impl ClusterSnapshot {
             self.merged.summary_text(),
         );
         for (i, s) in self.shards.iter().enumerate() {
+            let health = match self.health.get(i) {
+                Some(h) if h.drained => format!(" [{} drained]", h.state.label()),
+                Some(h) => format!(" [{}]", h.state.label()),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "shard {i}: {} accepted, {} completed, {} failed, {} rejected\n",
+                "shard {i}: {} accepted, {} completed, {} failed, {} rejected{health}\n",
                 s.accepted, s.completed, s.failed, s.rejected
             ));
         }
@@ -153,6 +234,7 @@ impl ClusterSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::health::{HealthBoard, HealthConfig};
     use crate::service::stats::ServiceStats;
 
     #[test]
@@ -160,23 +242,37 @@ mod tests {
         let stats = ClusterStats::new();
         stats.on_routed();
         stats.on_routed();
-        stats.on_split(8_000, 525.0, Duration::from_micros(40));
+        stats.on_split_accepted();
+        stats.on_split_transfer(8_000, 525.0, Duration::from_micros(40));
         stats.on_split_rejected();
+        stats.on_failover();
+        stats.on_failover_exhausted();
+        stats.on_span_reissue();
+        let board = HealthBoard::new(2, HealthConfig::default());
         let empty = ServiceStats::new().snapshot();
-        let snap = stats.freeze(vec![empty.clone(), empty.clone()], empty);
+        let snap = stats.freeze(vec![empty.clone(), empty.clone()], empty, board.snapshot());
         assert_eq!(snap.routed, 2);
         assert_eq!(snap.split_jobs, 1);
         assert_eq!(snap.split_rejected, 1);
+        assert_eq!(snap.failovers, 1);
+        assert_eq!(snap.failover_exhausted, 1);
+        assert_eq!(snap.span_reissues, 1);
         assert_eq!(snap.cross_shard_bytes, 8_000);
         assert_eq!(snap.transfer.count, 1);
         assert_eq!(snap.merge.count, 1);
+        assert_eq!(snap.health.len(), 2);
         let j = snap.to_json();
         assert_eq!(j.get("routed").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("cross_shard_bytes").unwrap().as_usize(), Some(8_000));
+        assert_eq!(j.get("failovers").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("span_reissues").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("shards").unwrap().as_arr().map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("health").unwrap().as_arr().map(<[Json]>::len), Some(2));
         assert!(j.get("merged").unwrap().get("completed").is_some());
         let text = snap.summary_text();
         assert!(text.contains("2 routed"));
+        assert!(text.contains("1 failovers"));
         assert!(text.contains("shard 1:"));
+        assert!(text.contains("[healthy]"));
     }
 }

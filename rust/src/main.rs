@@ -28,7 +28,7 @@ use std::path::PathBuf;
 use ohhc_qsort::analysis::validate;
 use ohhc_qsort::bail;
 use ohhc_qsort::campaign::{Campaign, SweepSpec};
-use ohhc_qsort::cluster::{Cluster, ClusterConfig};
+use ohhc_qsort::cluster::{Cluster, ClusterConfig, ClusterFaultPlan, FaultWindow};
 use ohhc_qsort::config::{
     Backend, Construction, Distribution, DivideEngine, DivideStrategy, ExperimentConfig,
 };
@@ -127,6 +127,13 @@ COMMANDS
                                   with per-shard snapshots
              --split-threshold N  scatter/merge jobs above N keys (cluster
                                   mode only; default 65536)
+             --shard-fault-rate P fail dispatch attempts at the shard boundary
+                                  with probability P (cluster mode; seeded,
+                                  failovers redraw)
+             --blackout LIST      shard outage windows on the submission event
+                                  clock: SHARD:FROM:UNTIL fails the shard,
+                                  SHARD:FROM:UNTIL:SLOW_MS brownouts it, comma
+                                  separated (cluster mode)
              --assert-no-rejects  exit nonzero if anything was rejected
              --out FILE           write the throughput/latency report JSON
   cluster    shard-scaling sweep: seeded closed-loop load vs shard count
@@ -137,6 +144,8 @@ COMMANDS
              --min-keys N         smallest job (default 500)
              --max-keys N         largest job, log-uniform (default 4000)
              --split-threshold N  scatter/merge above N keys (default 65536)
+             --shard-fault-rate P seeded shard-boundary failure probability
+             --blackout LIST      shard outage windows as in loadgen
              --out FILE           write the scaling table JSON
   figures    regenerate paper tables/figures
              --out DIR            CSV output directory (default results)
@@ -585,6 +594,22 @@ fn cmd_serve(args: &mut Args) -> CliResult {
     Ok(())
 }
 
+/// Consume the cluster chaos knobs shared by `loadgen` and `cluster`.
+/// The plan reuses the service fault seed (`--fault-seed`) so one knob
+/// replays both layers of injection.
+fn cluster_fault_plan(args: &mut Args, seed: u64) -> CliResult<ClusterFaultPlan> {
+    let shard_fail_rate: f64 = args.parse_or("--shard-fault-rate", 0.0)?;
+    let windows = match args.opt("--blackout")? {
+        Some(list) => FaultWindow::parse_list(&list)?,
+        None => Vec::new(),
+    };
+    Ok(ClusterFaultPlan {
+        seed,
+        shard_fail_rate,
+        windows,
+    })
+}
+
 fn cmd_loadgen(args: &mut Args) -> CliResult {
     let out = args.opt("--out")?;
     let assert_no_rejects = args.flag("--assert-no-rejects");
@@ -613,7 +638,15 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
         args.parse_or("--split-threshold", ClusterConfig::default().split_threshold)?;
     let mut cfg = service_config(args)?;
     cfg.rate = admit_rate;
-    let faults_active = cfg.faults.is_active();
+    let cluster_faults = cluster_fault_plan(args, cfg.faults.seed)?;
+    ensure!(
+        shards > 1 || !cluster_faults.is_active(),
+        "loadgen: --shard-fault-rate/--blackout need --shards > 1"
+    );
+    if let Err(e) = cluster_faults.validate(shards) {
+        bail!("loadgen: {e}");
+    }
+    let faults_active = cfg.faults.is_active() || cluster_faults.is_active();
 
     let gen_cfg = LoadGenConfig {
         jobs,
@@ -649,6 +682,7 @@ fn cmd_loadgen(args: &mut Args) -> CliResult {
             shards,
             split_threshold,
             shard: cfg,
+            faults: cluster_faults,
             ..Default::default()
         });
         let report = loadgen::run_on(&cluster, &gen_cfg);
@@ -726,10 +760,17 @@ fn cmd_cluster(args: &mut Args) -> CliResult {
     let split_threshold: usize =
         args.parse_or("--split-threshold", ClusterConfig::default().split_threshold)?;
     ensure!(min_keys <= max_keys, "cluster: --min-keys exceeds --max-keys");
+    let chaos = cluster_fault_plan(args, ServiceConfig::default().faults.seed)?;
+    for &shards in &shard_counts {
+        if let Err(e) = chaos.validate(shards) {
+            bail!("cluster: at {shards} shard(s): {e}");
+        }
+    }
 
     println!(
         "cluster scaling: {jobs} jobs seed {seed}, {workers} worker(s)/shard, \
-         shard counts {shard_counts:?}"
+         shard counts {shard_counts:?}{}",
+        if chaos.is_active() { " (chaos injected)" } else { "" }
     );
     let mut rows = Vec::new();
     let mut base_jps = None;
@@ -755,15 +796,25 @@ fn cmd_cluster(args: &mut Args) -> CliResult {
                 workers,
                 ..ServiceConfig::default()
             },
+            faults: chaos.clone(),
             ..Default::default()
         });
         let report = loadgen::run_on(&cluster, &gen_cfg);
         let (snap, _leftovers) = cluster.shutdown();
-        ensure!(
-            report.failures == 0,
-            "cluster: {} job(s) failed verification at {shards} shard(s)",
-            report.failures
-        );
+        if chaos.is_active() {
+            if report.failures > 0 {
+                eprintln!(
+                    "cluster: {} job(s) failed explicitly under chaos at {shards} shard(s)",
+                    report.failures
+                );
+            }
+        } else {
+            ensure!(
+                report.failures == 0,
+                "cluster: {} job(s) failed verification at {shards} shard(s)",
+                report.failures
+            );
+        }
         ensure!(
             report.completed + report.failures == report.accepted,
             "cluster: {} accepted job(s) never produced results at {shards} shard(s)",
@@ -779,18 +830,24 @@ fn cmd_cluster(args: &mut Args) -> CliResult {
         };
         println!(
             "  x{shards}: {:>8.1} jobs/s ({speedup:.2}x), p99 total {:?}, \
-             {} routed / {} split, {} cross-shard bytes",
+             {} routed / {} split, {} cross-shard bytes, {} failovers / {} re-issues",
             report.throughput_jps,
             snap.merged.total.p99,
             snap.routed,
             snap.split_jobs,
-            snap.cross_shard_bytes
+            snap.cross_shard_bytes,
+            snap.failovers,
+            snap.span_reissues
         );
         rows.push(Json::obj([
             ("completed", Json::int(report.completed)),
             ("cross_shard_bytes", Json::int(snap.cross_shard_bytes as usize)),
+            ("failover_exhausted", Json::int(snap.failover_exhausted as usize)),
+            ("failovers", Json::int(snap.failovers as usize)),
+            ("failures", Json::int(report.failures)),
             ("p99_total_ns", Json::int(snap.merged.total.p99.as_nanos() as usize)),
             ("shards", Json::int(shards)),
+            ("span_reissues", Json::int(snap.span_reissues as usize)),
             ("speedup", Json::num(speedup)),
             ("split_jobs", Json::int(snap.split_jobs as usize)),
             ("throughput_jps", Json::num(report.throughput_jps)),

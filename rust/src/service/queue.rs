@@ -28,6 +28,10 @@ pub enum RejectReason {
         /// The shedding threshold.
         shed_depth: usize,
     },
+    /// No live shard can take the job: the cluster's health board has
+    /// every shard down or drained.  Cluster routing only — a single
+    /// service never emits this.
+    Unavailable,
     /// The service is shutting down.
     Closed,
     /// The spec failed validation (never enqueued).
@@ -46,6 +50,9 @@ impl fmt::Display for RejectReason {
             RejectReason::RateLimited => write!(f, "rate limited"),
             RejectReason::Overloaded { depth, shed_depth } => {
                 write!(f, "overloaded (depth {depth} >= shed threshold {shed_depth})")
+            }
+            RejectReason::Unavailable => {
+                write!(f, "no live shard (every shard is down or drained)")
             }
             RejectReason::Closed => write!(f, "service closed"),
             RejectReason::Invalid { detail } => write!(f, "invalid job: {detail}"),

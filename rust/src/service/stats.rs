@@ -145,6 +145,14 @@ impl ServiceStats {
         self.completed.load(Ordering::Relaxed)
     }
 
+    /// Jobs failed explicitly so far.  The cluster's health board
+    /// polls this between scans: the *delta* since the last poll is
+    /// the failure signal feeding each shard's breaker, covering
+    /// failures the cluster supervisor never observes first-hand.
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
     /// Jobs that coalesced into multi-job batches so far.
     pub fn batched_jobs(&self) -> u64 {
         self.batched_jobs.load(Ordering::Relaxed)

@@ -128,6 +128,14 @@ impl Slot {
         matches!(*self.state.lock().unwrap(), SlotState::Taken)
     }
 
+    /// Did the tenant cancel the job?  The cluster's failover
+    /// supervisor checks this on its outer slots: a cancelled slot
+    /// means no result can ever be delivered, so the shard-side work
+    /// is cancelled (or its result discarded) instead of failed over.
+    pub(crate) fn is_cancelled(&self) -> bool {
+        matches!(*self.state.lock().unwrap(), SlotState::Cancelled)
+    }
+
     fn status(&self) -> TicketStatus {
         match *self.state.lock().unwrap() {
             SlotState::Queued => TicketStatus::Queued,

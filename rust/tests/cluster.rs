@@ -5,7 +5,9 @@
 
 use std::time::Duration;
 
-use ohhc_qsort::cluster::{Cluster, ClusterConfig};
+use ohhc_qsort::cluster::{
+    job_key, Cluster, ClusterConfig, ClusterFaultPlan, ClusterSubmission, FaultWindow,
+};
 use ohhc_qsort::config::{Construction, Distribution, DivideStrategy};
 use ohhc_qsort::service::{loadgen, JobSpec, LoadGenConfig, LoadMode, ServiceConfig};
 
@@ -132,6 +134,103 @@ fn routed_load_drains_with_no_silent_drops() {
         snap.shards.iter().filter(|s| s.accepted > 0).count() >= 2,
         "90 jobs over 3 shards must not pile onto one shard"
     );
+}
+
+/// Blackout of 1 shard in 4 under mixed routed + split load, covering
+/// all 8 registered distributions.  Nothing is silently dropped: every
+/// accepted job resolves with output equal to the sequential sort of
+/// its own input.  Jobs homed on the dead shard fail over (exactly
+/// once) to the next-ranked live shard, split jobs re-issue only their
+/// dead-shard spans, and jobs homed on healthy shards never move.
+#[test]
+fn blackout_of_one_shard_in_four_loses_nothing_and_moves_only_its_keys() {
+    const DEAD: usize = 1;
+    let dists: Vec<Distribution> = Distribution::ALL
+        .iter()
+        .chain(Distribution::ADVERSARIAL.iter())
+        .copied()
+        .collect();
+    let c = Cluster::start(ClusterConfig {
+        shards: 4,
+        shard: ServiceConfig {
+            workers: 1,
+            retain_output: true,
+            ..Default::default()
+        },
+        split_threshold: 4_000,
+        max_inflight_splits: 64,
+        // 32 sequential submissions tick the event clock 1..=32; the
+        // window blacks the shard out for the whole run.
+        faults: ClusterFaultPlan {
+            windows: vec![FaultWindow::blackout(DEAD, 1, 33)],
+            ..ClusterFaultPlan::none()
+        },
+        ..Default::default()
+    });
+    // The router is a pure function of (id, seed), so the schedule can
+    // be built to provably exercise the dead shard: 4 routed jobs homed
+    // on it, 12 homed elsewhere, then 16 splits (scatter touches every
+    // shard regardless of homes).
+    let home_of = |id: u64| c.router().route(job_key(&spec(id, Distribution::Random, 1)));
+    let dead_homed: Vec<u64> = (0..400).filter(|&id| home_of(id) == DEAD).take(4).collect();
+    let alive_homed: Vec<u64> = (0..400).filter(|&id| home_of(id) != DEAD).take(12).collect();
+    assert_eq!(dead_homed.len(), 4, "400 keys over 4 shards: impossible");
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for (i, &id) in dead_homed.iter().chain(alive_homed.iter()).enumerate() {
+        jobs.push(spec(id, dists[i % 8], 2_500));
+    }
+    for i in 0..16u64 {
+        jobs.push(spec(1_000 + i, dists[(i % 8) as usize], 9_000));
+    }
+    let mut pending = Vec::new();
+    for job in &jobs {
+        let home = c.router().route(job_key(job));
+        let mut expect = job.generate();
+        expect.sort_unstable();
+        match c.submit(job.clone()) {
+            ClusterSubmission::Accepted { shard, ticket } => {
+                if job.elements < 4_000 && home != DEAD {
+                    assert_eq!(
+                        shard,
+                        Some(home),
+                        "job {}: healthy-shard keys must never move",
+                        job.id
+                    );
+                }
+                pending.push((ticket, expect));
+            }
+            ClusterSubmission::Rejected { reason } => {
+                panic!("job {} rejected: {reason}", job.id)
+            }
+        }
+    }
+    for (ticket, expect) in &pending {
+        let r = ticket
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("job {} silently dropped", ticket.id()));
+        assert_eq!(r.error, None, "job {} must survive the blackout", r.id);
+        assert!(r.sorted_ok, "job {} unverified", r.id);
+        assert_eq!(
+            r.output.as_deref(),
+            Some(expect.as_slice()),
+            "job {} output differs from the sequential sort",
+            r.id
+        );
+    }
+    let (snap, leftovers) = c.shutdown();
+    assert!(leftovers.is_empty(), "all results were taken by ticket");
+    assert_eq!(snap.routed, 16);
+    assert_eq!(snap.split_jobs, 16);
+    assert!(snap.failovers >= 1, "dead-homed routed jobs must fail over");
+    assert_eq!(snap.failover_exhausted, 0, "three shards stayed alive");
+    assert!(snap.span_reissues >= 1, "dead-shard spans must be re-issued");
+    assert!(snap.health[DEAD].incidents >= 1, "the breaker must open");
+    for (i, s) in snap.shards.iter().enumerate() {
+        assert_eq!(s.accepted, s.completed + s.failed, "shard {i} books");
+        if i != DEAD {
+            assert_eq!(s.failed, 0, "shard {i} is healthy");
+        }
+    }
 }
 
 /// The same seed replayed against a fresh cluster lands every job on

@@ -12,13 +12,18 @@
 //! hang, a silent drop, or a quietly wrong answer.
 
 use ohhc_qsort::campaign::{Campaign, SweepSpec};
-use ohhc_qsort::config::{Backend, Construction, Distribution, ExperimentConfig, LinkModel};
+use ohhc_qsort::cluster::{
+    Cluster, ClusterConfig, ClusterFaultPlan, ClusterSubmission, FaultWindow,
+};
+use ohhc_qsort::config::{
+    Backend, Construction, Distribution, DivideStrategy, ExperimentConfig, LinkModel,
+};
 use ohhc_qsort::coordinator::{divide_native, OhhcSorter};
 use ohhc_qsort::dataplane::FlatBuckets;
 use ohhc_qsort::pipeline::{Engine, Session};
 use ohhc_qsort::runtime::ArtifactRegistry;
 use ohhc_qsort::schedule::gather_plan;
-use ohhc_qsort::service::{fnv1a, FaultPlan, JobSpec, ServiceConfig, SortService};
+use ohhc_qsort::service::{fnv1a, FaultPlan, JobSpec, RejectReason, ServiceConfig, SortService};
 use ohhc_qsort::sim::threaded::ThreadedSimulator;
 use ohhc_qsort::sort::quicksort;
 use ohhc_qsort::topology::fault::{cheapest_path, route_avoiding, FaultSet, RouteOutcome};
@@ -263,6 +268,7 @@ fn chaos_spec(id: u64, dimension: u32, elements: usize) -> JobSpec {
         seed: 9_000 + id,
         dimension,
         construction: Construction::FullGroup,
+        strategy: DivideStrategy::PaperFixed,
         deadline: None,
     }
 }
@@ -384,6 +390,124 @@ fn campaign_failure_axis_builds_a_monotone_degradation_curve() {
     assert_eq!(
         curve.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
         vec![0, 150, 400]
+    );
+}
+
+/// Cluster failover only helps while *some* shard still works.  With a
+/// dead node baked into every shard's fault plan, each routed job fails
+/// on its home shard, is failed over exactly once, fails again, and
+/// surfaces an explicit journey error — the books stay balanced and
+/// nothing hangs or vanishes.
+#[test]
+fn cluster_failover_exhausts_explicitly_when_every_shard_is_faulty() {
+    let cluster = Cluster::start(ClusterConfig {
+        shards: 2,
+        shard: ServiceConfig {
+            workers: 1,
+            faults: FaultPlan {
+                node_failures: 1,
+                ..FaultPlan::none()
+            },
+            retry_budget: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    // Submissions can start bouncing once the breakers open mid-batch;
+    // an `Unavailable` reject is the only legal alternative to a ticket.
+    let mut tickets = Vec::new();
+    for id in 0..6 {
+        match cluster.submit(chaos_spec(id, 1, 3_000)) {
+            ClusterSubmission::Accepted { ticket, .. } => tickets.push(ticket),
+            ClusterSubmission::Rejected { reason } => {
+                assert_eq!(reason, RejectReason::Unavailable, "job {id}");
+            }
+        }
+    }
+    assert!(!tickets.is_empty(), "healthy breakers must admit the first job");
+    let mut journeys = 0usize;
+    for t in &tickets {
+        let r = t
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("job {} silently dropped", t.id()));
+        let msg = r.error.expect("no shard can complete anything");
+        if msg.contains("failed over from shard") {
+            journeys += 1;
+        } else {
+            // Breakers opened before this job's retry could be placed.
+            assert!(msg.contains("no live shard"), "{msg}");
+        }
+    }
+    let (snap, rest) = cluster.shutdown();
+    assert!(rest.is_empty(), "results escaped their tickets");
+    assert!(journeys > 0, "the first job must travel the full journey");
+    assert!(snap.failovers as usize >= journeys, "each journey is one failover");
+    assert_eq!(
+        snap.failover_exhausted as usize,
+        tickets.len(),
+        "every accepted job exhausts its single failover"
+    );
+    assert_eq!(snap.routed as usize, tickets.len());
+    assert_eq!(snap.split_jobs, 0);
+    for (i, s) in snap.shards.iter().enumerate() {
+        assert_eq!(s.accepted, s.completed + s.failed, "shard {i} books");
+        assert_eq!(s.completed, 0, "shard {i} completed on a dead node");
+    }
+}
+
+/// Blackout windows covering **every** shard for the whole run: jobs
+/// accepted before the breakers open fail explicitly at the shard
+/// boundary (never silently), and once both breakers trip the front
+/// door turns submissions away with `Unavailable` instead of accepting
+/// work it cannot place.
+#[test]
+fn full_cluster_blackout_fails_explicitly_then_rejects_unavailable() {
+    let cluster = Cluster::start(ClusterConfig {
+        shards: 2,
+        shard: ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        faults: ClusterFaultPlan {
+            windows: vec![
+                FaultWindow::blackout(0, 0, u64::MAX),
+                FaultWindow::blackout(1, 0, u64::MAX),
+            ],
+            ..ClusterFaultPlan::none()
+        },
+        ..Default::default()
+    });
+    let mut failed_jobs = 0usize;
+    let mut unavailable = 0usize;
+    for id in 0..12 {
+        match cluster.submit(chaos_spec(id, 1, 2_000)) {
+            ClusterSubmission::Accepted { ticket, .. } => {
+                let r = ticket
+                    .wait_timeout(Duration::from_secs(60))
+                    .unwrap_or_else(|| panic!("job {id} silently dropped"));
+                let msg = r.error.expect("blacked-out shards cannot complete jobs");
+                assert!(msg.contains("blackout"), "{msg}");
+                failed_jobs += 1;
+            }
+            ClusterSubmission::Rejected { reason } => {
+                assert_eq!(reason, RejectReason::Unavailable, "job {id}: {reason}");
+                unavailable += 1;
+            }
+        }
+    }
+    let (snap, rest) = cluster.shutdown();
+    assert!(rest.is_empty(), "results escaped their tickets");
+    assert!(failed_jobs >= 1, "the first submission races no breaker");
+    assert!(unavailable >= 1, "open breakers must surface as Unavailable");
+    assert_eq!(snap.failover_exhausted as usize, failed_jobs);
+    for (i, s) in snap.shards.iter().enumerate() {
+        assert_eq!(s.accepted, s.completed + s.failed, "shard {i} books");
+        assert_eq!(s.completed, 0, "shard {i} completed inside a blackout");
+    }
+    assert!(
+        snap.health.iter().all(|h| h.incidents >= 1),
+        "both breakers must open: {:?}",
+        snap.health
     );
 }
 
