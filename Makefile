@@ -3,7 +3,13 @@
 #   make build      release build of the rust crate
 #   make test       tier-1 gate: cargo build --release && cargo test -q
 #   make fmt        rustfmt across the tree (check with make fmt-check)
-#   make lint       clippy, warnings denied
+#   make lint       clippy (warnings denied) + the repolint invariant gate
+#   make repolint   just the repo-invariant lint (SAFETY comments,
+#                   wall-clock bans, spawn allowlist, unwrap ratchet)
+#   make fuzz-schedules  the seeded schedule-fuzz smoke (64 seeds;
+#                   a failure prints the seed to replay)
+#   make miri       nightly: cargo miri test over the unsafe-bearing suites
+#   make tsan       nightly: ThreadSanitizer over executor/cluster suites
 #   make bench-json data-plane phase bench → BENCH_dataplane.json
 #   make doc        rustdoc with warnings denied + doc-test run
 #   make campaign   the acceptance-criteria campaign grid
@@ -13,7 +19,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test fmt fmt-check lint bench bench-json doc campaign artifacts pytest clean
+.PHONY: build test fmt fmt-check lint repolint fuzz-schedules miri tsan bench bench-json doc campaign artifacts pytest clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -27,8 +33,33 @@ fmt:
 fmt-check:
 	cd rust && $(CARGO) fmt --check
 
-lint:
+lint: repolint
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+repolint:
+	cd rust && $(CARGO) run --quiet --bin repolint
+
+# Schedule-fuzz smoke: compile the interleave points in and sweep the
+# race scenarios across 64 seeds.  A failing assertion names its seed;
+# replay with `cargo test --features schedules <test> -- --nocapture`.
+fuzz-schedules:
+	cd rust && $(CARGO) test --features schedules -q
+
+# Nightly-only sanitizers (CI runs these allowed-to-fail; locally they
+# need `rustup +nightly component add miri rust-src`).
+miri:
+	cd rust && MIRIFLAGS="-Zmiri-disable-isolation -Zmiri-ignore-leaks" \
+		$(CARGO) +nightly miri test --lib -- coordinator::divide util::par runtime service::ticket
+	cd rust && MIRIFLAGS="-Zmiri-disable-isolation -Zmiri-ignore-leaks" \
+		$(CARGO) +nightly miri test --test dataplane --test pipeline
+
+tsan:
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" \
+		$(CARGO) +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--lib -- runtime util::par service::ticket
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" \
+		$(CARGO) +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test cluster --test integration
 
 bench:
 	cd rust && OHHC_BENCH_FAST=1 $(CARGO) bench

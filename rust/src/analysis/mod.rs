@@ -1,6 +1,9 @@
 //! Analytical model — closed forms of the paper's Theorems 1–6 (§4,
-//! Table 4.1) and their validation against the simulators.
+//! Table 4.1) and their validation against the simulators — plus the
+//! repo-invariant lint ([`repolint`]) that keeps the crate's safety
+//! and determinism conventions machine-checked.
 
+pub mod repolint;
 pub mod theorems;
 pub mod validate;
 

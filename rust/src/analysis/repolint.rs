@@ -1,0 +1,402 @@
+//! Repo-invariant lint: machine-checks the crate's safety and
+//! determinism conventions that clippy cannot see.
+//!
+//! Four rules, each born from a convention this codebase already
+//! follows and must not regress:
+//!
+//! * **`unsafe-safety-comment`** — every `unsafe` block, fn, or impl
+//!   must be preceded by a `// SAFETY:` comment within the previous
+//!   [`SAFETY_LOOKBACK`] lines (or carry one on the same line).  The
+//!   divide scatter, `util::par`'s slot arrays, and the executor's
+//!   lifetime erasure all document their proof obligations this way;
+//!   new unsafe must too.
+//! * **`wall-clock`** — `Instant::now` / `SystemTime` are banned inside
+//!   `sim/` and the cluster's health/fault decision logic.  Those
+//!   layers are event-clock driven (deterministic, replayable); wall
+//!   time belongs only to measurement instruments.  `sim/threaded.rs`
+//!   *is* such an instrument (the paper-faithful timed backend), so it
+//!   is exempt wholesale; single measurement-only sites elsewhere carry
+//!   an inline `repolint: allow(wall-clock)` waiver.
+//! * **`thread-spawn`** — raw `thread::spawn` / `thread::Builder` is
+//!   restricted to the deliberate sites (the executor's worker pool,
+//!   the paper-threads simulator, the service pool, the cluster's
+//!   split/supervisor workers).  Everything else must submit to the
+//!   shared executor, which is what keeps the hot path spawn-free.
+//! * **`unwrap-budget`** — `.unwrap()` in `service/` and `cluster/`
+//!   non-test code is ratcheted against [`UNWRAP_BUDGET`].  The checked
+//!   counts are lock poisoning and similar crate-internal invariants;
+//!   the budget must never grow, and when a file sheds unwraps the
+//!   table must be ratcheted *down* to match (drift in either
+//!   direction fails).
+//!
+//! Rules scan only the non-test region of each file — everything above
+//! the first `#[cfg(test)]` line (the crate convention keeps a single
+//! trailing test module per file).  Comment lines never trigger rules;
+//! they only satisfy them (SAFETY comments, waivers).
+//!
+//! The `repolint` binary (src/bin/repolint.rs) runs [`lint_tree`] over
+//! the crate and exits nonzero on any violation; `make lint` and CI
+//! gate on it.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// How far back (in lines) a `SAFETY` comment may sit from its
+/// `unsafe` site.
+pub const SAFETY_LOOKBACK: usize = 10;
+
+/// Files allowed to call `thread::spawn` / `thread::Builder` directly.
+pub const SPAWN_ALLOWLIST: &[&str] = &[
+    "runtime/executor.rs", // the pool's worker threads
+    "sim/threaded.rs",     // paper-faithful one-thread-per-processor mode
+    "service/pool.rs",     // service worker threads
+    "cluster/mod.rs",      // split scatter/merge + failover supervisor
+];
+
+/// Files under the wall-clock ban (event-clock layers).  `sim/` is
+/// matched as a prefix; the exemptions list overrides it.
+const WALL_CLOCK_SCOPES: &[&str] = &["sim/", "cluster/health.rs", "cluster/faults.rs"];
+
+/// The wall-clock measurement instrument inside `sim/`: its whole job
+/// is timing real threads, so the ban does not apply.
+const WALL_CLOCK_EXEMPT: &[&str] = &["sim/threaded.rs"];
+
+/// Inline waiver marker for a single deliberate wall-clock site (same
+/// line or the line above).
+const WALL_CLOCK_WAIVER: &str = "repolint: allow(wall-clock)";
+
+/// The `.unwrap()` ratchet for `service/` and `cluster/` non-test
+/// code: exact counts, checked in.  Files not listed budget zero.
+pub const UNWRAP_BUDGET: &[(&str, usize)] = &[
+    ("cluster/health.rs", 10),
+    ("cluster/mod.rs", 14),
+    ("cluster/stats.rs", 4),
+    ("service/admission.rs", 1),
+    ("service/pool.rs", 5),
+    ("service/queue.rs", 9),
+    ("service/stats.rs", 16),
+    ("service/ticket.rs", 11),
+];
+
+/// One broken invariant, pinned to a file and line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Which rule fired (`unsafe-safety-comment`, `wall-clock`,
+    /// `thread-spawn`, `unwrap-budget`).
+    pub rule: &'static str,
+    /// Path relative to `src/`, forward slashes.
+    pub file: String,
+    /// 1-indexed line (0 for whole-file findings like budget drift).
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Violation {
+    /// The violation as a JSON object (for `repolint --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("file", Json::str(&self.file)),
+            ("line", Json::int(self.line)),
+            ("message", Json::str(&self.message)),
+            ("rule", Json::str(self.rule)),
+        ])
+    }
+}
+
+/// Lint every `.rs` file under `<root>/src`, returning all violations
+/// sorted by file and line.  `root` is the crate directory (the one
+/// holding `Cargo.toml`).
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let src = root.join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files)?;
+    let mut violations = Vec::new();
+    for path in files {
+        let text = fs::read_to_string(&path)?;
+        let label = path
+            .strip_prefix(&src)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        violations.extend(lint_source(&label, &text));
+    }
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(violations)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source.  `label` is the `src/`-relative path with
+/// forward slashes (e.g. `"cluster/health.rs"`).
+pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = text.lines().collect();
+    // The non-test region: everything above the file's (single,
+    // trailing) test module.
+    let test_start = lines
+        .iter()
+        .position(|l| l.trim_start().starts_with(concat!("#[cfg(", "test)]")))
+        .unwrap_or(lines.len());
+    let region = &lines[..test_start];
+
+    let mut v = Vec::new();
+    check_unsafe_comments(label, region, &mut v);
+    check_wall_clock(label, region, &mut v);
+    check_thread_spawn(label, region, &mut v);
+    check_unwrap_budget(label, region, &mut v);
+    v
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Does `needle` occur in `line` as a standalone word (not an
+/// identifier fragment like `unsafe_op_in_unsafe_fn`)?  Returns the
+/// byte offset just past the match.
+fn find_word(line: &str, needle: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(needle) {
+        let start = from + rel;
+        let end = start + needle.len();
+        let boundary = |c: char| !c.is_alphanumeric() && c != '_';
+        let before_ok = line[..start].chars().next_back().map_or(true, boundary);
+        let after_ok = line[end..].chars().next().map_or(true, boundary);
+        if before_ok && after_ok {
+            return Some(end);
+        }
+        from = end;
+    }
+    None
+}
+
+fn check_unsafe_comments(label: &str, region: &[&str], out: &mut Vec<Violation>) {
+    let keyword = concat!("uns", "afe");
+    for (i, line) in region.iter().enumerate() {
+        if is_comment(line) {
+            continue;
+        }
+        let Some(end) = find_word(line, keyword) else {
+            continue;
+        };
+        // Only blocks, fns, and impls need the proof comment; `unsafe`
+        // inside a string or attribute has no following token of that
+        // shape on the same line in this codebase.
+        let rest = line[end..].trim_start();
+        let introduces = rest.starts_with('{')
+            || rest.starts_with("fn ")
+            || rest.starts_with("impl ")
+            || rest.starts_with("impl<")
+            || rest.is_empty(); // `let run = unsafe` + `{` on the next line
+        if !introduces {
+            continue;
+        }
+        let lookback_start = i.saturating_sub(SAFETY_LOOKBACK);
+        let documented = line.contains("SAFETY")
+            || region[lookback_start..i].iter().any(|l| l.contains("SAFETY"));
+        if !documented {
+            out.push(Violation {
+                rule: "unsafe-safety-comment",
+                file: label.to_string(),
+                line: i + 1,
+                message: format!(
+                    "`{keyword}` without a `// SAFETY:` comment in the previous \
+                     {SAFETY_LOOKBACK} lines"
+                ),
+            });
+        }
+    }
+}
+
+fn check_wall_clock(label: &str, region: &[&str], out: &mut Vec<Violation>) {
+    let scoped = WALL_CLOCK_SCOPES
+        .iter()
+        .any(|s| if s.ends_with('/') { label.starts_with(s) } else { label == *s });
+    if !scoped || WALL_CLOCK_EXEMPT.contains(&label) {
+        return;
+    }
+    let needles = [concat!("Instant::", "now"), concat!("System", "Time")];
+    for (i, line) in region.iter().enumerate() {
+        if is_comment(line) {
+            continue;
+        }
+        let Some(needle) = needles.iter().find(|n| line.contains(**n)) else {
+            continue;
+        };
+        let waived = line.contains(WALL_CLOCK_WAIVER)
+            || (i > 0 && region[i - 1].contains(WALL_CLOCK_WAIVER));
+        if !waived {
+            out.push(Violation {
+                rule: "wall-clock",
+                file: label.to_string(),
+                line: i + 1,
+                message: format!(
+                    "`{needle}` in an event-clock layer (decisions must be driven by \
+                     event ids, not wall time); a measurement-only site may carry a \
+                     `{WALL_CLOCK_WAIVER}` comment"
+                ),
+            });
+        }
+    }
+}
+
+fn check_thread_spawn(label: &str, region: &[&str], out: &mut Vec<Violation>) {
+    if SPAWN_ALLOWLIST.contains(&label) {
+        return;
+    }
+    let needles = [concat!("thread::", "spawn"), concat!("thread::", "Builder")];
+    for (i, line) in region.iter().enumerate() {
+        if is_comment(line) {
+            continue;
+        }
+        if let Some(needle) = needles.iter().find(|n| line.contains(**n)) {
+            out.push(Violation {
+                rule: "thread-spawn",
+                file: label.to_string(),
+                line: i + 1,
+                message: format!(
+                    "`{needle}` outside the deliberate-spawn allowlist — submit to \
+                     `runtime::Executor::global()` instead"
+                ),
+            });
+        }
+    }
+}
+
+fn check_unwrap_budget(label: &str, region: &[&str], out: &mut Vec<Violation>) {
+    if !label.starts_with("service/") && !label.starts_with("cluster/") {
+        return;
+    }
+    let needle = concat!(".unw", "rap()");
+    let count: usize = region
+        .iter()
+        .filter(|l| !is_comment(l))
+        .map(|l| l.matches(needle).count())
+        .sum();
+    let budget =
+        UNWRAP_BUDGET.iter().find(|(f, _)| *f == label).map(|&(_, n)| n).unwrap_or(0);
+    if count > budget {
+        out.push(Violation {
+            rule: "unwrap-budget",
+            file: label.to_string(),
+            line: 0,
+            message: format!(
+                "{count} `{needle}` calls in non-test code exceed the checked-in \
+                 budget of {budget} — handle the error or use expect with an \
+                 invariant message"
+            ),
+        });
+    } else if count < budget {
+        out.push(Violation {
+            rule: "unwrap-budget",
+            file: label.to_string(),
+            line: 0,
+            message: format!(
+                "{count} `{needle}` calls against a stale budget of {budget} — \
+                 ratchet UNWRAP_BUDGET down so the count cannot silently regrow"
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn documented_unsafe_passes_and_bare_unsafe_fails() {
+        let good = "// SAFETY: slot handed to exactly one task.\nlet x = unsafe { p.read() };\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        let bad = "let x = unsafe { p.read() };\n";
+        assert_eq!(rules(&lint_source("util/x.rs", bad)), ["unsafe-safety-comment"]);
+        // The comment must be within the lookback window.
+        let gap = "\n".repeat(SAFETY_LOOKBACK + 1);
+        let far = format!("// SAFETY: too far away.\n{gap}unsafe impl Send for X {{}}\n");
+        assert_eq!(rules(&lint_source("util/x.rs", &far)), ["unsafe-safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_as_identifier_fragment_or_comment_is_ignored() {
+        let attr = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(lint_source("lib.rs", attr).is_empty());
+        let comment = "// unsafe is spelled out here in prose only\n";
+        assert!(lint_source("util/x.rs", comment).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scoping_exemption_and_waiver() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(rules(&lint_source("sim/des.rs", src)), ["wall-clock"]);
+        assert_eq!(rules(&lint_source("cluster/health.rs", src)), ["wall-clock"]);
+        // Out of scope: wall time is fine elsewhere.
+        assert!(lint_source("service/pool.rs", src).is_empty());
+        // The measurement instrument is exempt wholesale.
+        assert!(lint_source("sim/threaded.rs", src).is_empty());
+        // A waiver on the previous line admits a measurement-only site.
+        let waived =
+            format!("// {WALL_CLOCK_WAIVER} — measurement only\nlet t = Instant::now();\n");
+        assert!(lint_source("cluster/health.rs", &waived).is_empty());
+        let sys = "let t = SystemTime::now();\n";
+        assert_eq!(rules(&lint_source("cluster/faults.rs", sys)), ["wall-clock"]);
+    }
+
+    #[test]
+    fn spawn_allowlist_is_enforced() {
+        let src = "std::thread::spawn(|| {});\n";
+        assert_eq!(rules(&lint_source("coordinator/divide.rs", src)), ["thread-spawn"]);
+        assert!(lint_source("runtime/executor.rs", src).is_empty());
+        let builder = "let h = thread::Builder::new();\n";
+        assert_eq!(rules(&lint_source("metrics/mod.rs", builder)), ["thread-spawn"]);
+        assert!(lint_source("cluster/mod.rs", builder).is_empty());
+    }
+
+    #[test]
+    fn unwrap_budget_ratchets_both_directions() {
+        // An unlisted service file budgets zero.
+        let one = "let x = m.lock().unwrap();\n";
+        assert_eq!(rules(&lint_source("service/new_file.rs", one)), ["unwrap-budget"]);
+        // Out of scope entirely.
+        assert!(lint_source("topology/fault.rs", one).is_empty());
+        // Exactly on budget: clean.  service/admission.rs budgets 1.
+        assert!(lint_source("service/admission.rs", one).is_empty());
+        // Under budget: stale table must be ratcheted down.
+        let zero = "let x = 1;\n";
+        let v = lint_source("service/admission.rs", zero);
+        assert_eq!(rules(&v), ["unwrap-budget"]);
+        assert!(v[0].message.contains("stale"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn test_region_is_not_linted() {
+        let src = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn f() { \
+                   let x = unsafe { p() }; std::thread::spawn(|| {}); }\n}\n";
+        assert!(lint_source("service/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn violations_serialize_to_json() {
+        let v = lint_source("util/x.rs", "let x = unsafe { p.read() };\n");
+        let json = v[0].to_json().dump();
+        assert!(json.contains("unsafe-safety-comment"), "{json}");
+        assert!(json.contains("util/x.rs"), "{json}");
+    }
+}

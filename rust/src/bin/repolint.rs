@@ -1,0 +1,67 @@
+//! Repo-invariant lint gate — runs [`analysis::repolint::lint_tree`]
+//! over the crate and exits nonzero on any violation.
+//!
+//! ```text
+//! cargo run --bin repolint             # lint this crate's src/
+//! cargo run --bin repolint -- --json   # machine-readable report
+//! cargo run --bin repolint -- <dir>    # lint another crate root
+//! ```
+//!
+//! Wired into `make lint` and CI; the rules themselves (SAFETY
+//! comments on unsafe, wall-clock bans in event-clock layers, the
+//! thread-spawn allowlist, the unwrap ratchet) are documented on
+//! [`analysis::repolint`].
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ohhc_qsort::analysis::repolint;
+use ohhc_qsort::util::json::Json;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                eprintln!("usage: repolint [--json] [crate-root]");
+                return ExitCode::SUCCESS;
+            }
+            other => root = Some(PathBuf::from(other)),
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+
+    let violations = match repolint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("repolint: cannot read {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    if json {
+        let report = Json::obj([
+            ("root", Json::str(root.display().to_string())),
+            ("violations", Json::Arr(violations.iter().map(|v| v.to_json()).collect())),
+        ]);
+        println!("{}", report.dump());
+    } else if violations.is_empty() {
+        println!("repolint: clean ({})", root.join("src").display());
+    } else {
+        for v in &violations {
+            if v.line > 0 {
+                eprintln!("src/{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+            } else {
+                eprintln!("src/{}: [{}] {}", v.file, v.rule, v.message);
+            }
+        }
+        eprintln!("repolint: {} violation(s)", violations.len());
+    }
+    if violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -277,6 +277,9 @@ impl ShardHealth {
             return;
         }
         if to == HealthState::Down {
+            // Measurement only: feeds the blackout snapshot field,
+            // never a decision.
+            // repolint: allow(wall-clock)
             self.down_since = Some(Instant::now());
         } else if from == HealthState::Down {
             if let Some(t) = self.down_since.take() {
@@ -292,6 +295,14 @@ impl ShardHealth {
             to,
         });
         self.state = to;
+    }
+
+    /// The recorded transition history (oldest first, ring-capped).
+    /// Every entry's `event` is the event-clock value of the call that
+    /// fired it — the model tests assert the machine never stamps a
+    /// stale id.
+    pub fn transitions(&self) -> &[HealthTransition] {
+        &self.history
     }
 
     /// Freeze this machine's view for reporting.
@@ -613,6 +624,107 @@ mod tests {
         // A scan with genuinely new failures does move the machine.
         board.absorb_stats(0, 0, 4, 0);
         assert_eq!(board.snapshot()[0].state, HealthState::Down);
+    }
+
+    /// Exhaustive model check: every interleaving of four failure
+    /// reports with three clock ticks (C(7,3) = 35 schedules) drives a
+    /// real machine, and in every one the breaker only ever stamps the
+    /// event id of the call that fired the transition — never a stale
+    /// one — the history stays monotone in the event clock, an open
+    /// always schedules its probe strictly in the future, and a tick
+    /// promotes Down -> Probing only once the schedule has fired.
+    #[test]
+    fn every_failure_tick_interleaving_keeps_event_clock_invariants() {
+        let small = HealthConfig {
+            probe_after: 2,
+            ..cfg()
+        };
+        let schedules = crate::runtime::check::interleavings(4, 3);
+        assert_eq!(schedules.len(), 35, "C(7,3) merge orders");
+        for schedule in &schedules {
+            let mut h = ShardHealth::new(small.clone(), 0);
+            let mut clock = 0u64;
+            let mut failures = 0u32;
+            for &is_failure in schedule {
+                clock += 1;
+                let seen = h.transitions().len();
+                let was = h.state();
+                if is_failure {
+                    failures += 1;
+                    h.on_failure(clock);
+                } else {
+                    h.on_tick(clock);
+                }
+                // Any transition this op fired carries exactly this
+                // op's event id.
+                for t in &h.transitions()[seen..] {
+                    assert_eq!(t.event, clock, "stale event id under {schedule:?}");
+                    assert_eq!(t.from, was, "{schedule:?}");
+                }
+                let events: Vec<u64> = h.transitions().iter().map(|t| t.event).collect();
+                assert!(
+                    events.windows(2).all(|w| w[0] <= w[1]),
+                    "history not monotone under {schedule:?}: {events:?}"
+                );
+                if h.state() == HealthState::Down && h.transitions().len() > seen {
+                    assert!(h.probe_at > clock, "open must schedule a future probe");
+                }
+                if h.state() == HealthState::Probing && was == HealthState::Down {
+                    assert!(clock >= h.probe_at, "premature probe under {schedule:?}");
+                }
+            }
+            // Terminal shape is schedule-independent: ticks never
+            // create or absorb failure evidence.
+            assert_eq!(failures, 4);
+            assert_eq!(h.incidents(), 1, "{schedule:?}");
+            let walk: Vec<(HealthState, HealthState)> =
+                h.transitions().iter().map(|t| (t.from, t.to)).collect();
+            assert_eq!(walk[0], (HealthState::Healthy, HealthState::Suspect), "{schedule:?}");
+            assert_eq!(walk[1], (HealthState::Suspect, HealthState::Down), "{schedule:?}");
+            assert!(walk.len() <= 3, "{schedule:?}: {walk:?}");
+            if let Some(&last) = walk.get(2) {
+                assert_eq!(last, (HealthState::Down, HealthState::Probing), "{schedule:?}");
+            }
+        }
+    }
+
+    /// The probe backoff is monotone across incidents: with
+    /// `probe_after = 2` the jitter span is {0, 1} while the per-
+    /// incident floors are 2, 4, 8, 16, 32 — strictly separated — so
+    /// each failed probe must push the next probe strictly further
+    /// out, until the shift cap holds the floor at 32.
+    #[test]
+    fn probe_backoff_is_monotone_across_incidents() {
+        let small = HealthConfig {
+            probe_after: 2,
+            ..cfg()
+        };
+        let mut h = ShardHealth::new(small, 0);
+        let mut clock = 0u64;
+        let mut last_delta = 0u64;
+        for incident in 1u32..=6 {
+            while h.state() != HealthState::Down {
+                clock += 1;
+                h.on_failure(clock);
+            }
+            assert_eq!(h.incidents(), incident);
+            let delta = h.probe_at - clock;
+            let floor = 2u64 << (incident - 1).min(4);
+            assert!(
+                delta >= floor && delta <= floor + 1,
+                "incident {incident}: delta {delta} outside [{floor}, {}]",
+                floor + 1
+            );
+            if incident <= 5 {
+                assert!(delta > last_delta, "incident {incident}: {delta} <= {last_delta}");
+            }
+            last_delta = delta;
+            // Walk the clock to the probe, then fail the probe to
+            // reopen at the next incident.
+            clock = h.probe_at;
+            h.on_tick(clock);
+            assert_eq!(h.state(), HealthState::Probing);
+        }
     }
 
     #[test]

@@ -480,7 +480,11 @@ impl Cluster {
             .spawn(move || {
                 let core = &*core_handle;
                 let result = execute_split(core, &spec, home, event, retain, accepted_at);
+                // Publication races the drain loop in `next_completion`
+                // and any direct ticket wait.
+                crate::interleave!("cluster/split-complete");
                 slot.complete(result);
+                crate::interleave!("cluster/split-enqueue");
                 let mut q = core.completions.done.lock().unwrap();
                 q.push_back(slot);
                 drop(q);
@@ -505,6 +509,9 @@ impl Cluster {
         let deadline = Instant::now().checked_add(timeout);
         loop {
             {
+                // Drain racing concurrent drains and the split workers'
+                // complete-then-enqueue publication sequence.
+                crate::interleave!("cluster/drain");
                 let mut q = self.core.completions.done.lock().unwrap();
                 while let Some(slot) = q.pop_front() {
                     if let Some(r) = slot.take() {

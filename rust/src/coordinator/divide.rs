@@ -141,15 +141,39 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
             .collect();
         let ptr_ref = &ptr;
         let table_ref = &table;
-        par::par_map(work, workers, move |((s, e), (ids, _), mut offs)| {
+        let final_cursors = par::par_map(work, workers, move |((s, e), (ids, _), mut offs)| {
             for (&v, &b) in data[s..e].iter().zip(&ids) {
                 let b = b as usize;
+                debug_assert!(
+                    table_ref[b] + offs[b] < table_ref[b + 1],
+                    "scatter overran bucket {b}: cursor {} at segment end {}",
+                    table_ref[b] + offs[b],
+                    table_ref[b + 1]
+                );
                 // SAFETY: table[b] + offs[b] stays inside bucket b's
-                // chunk-private range (prefix-scan construction above).
+                // chunk-private range (prefix-scan construction above,
+                // span-checked per write in debug builds).
                 unsafe { ptr_ref.0.add(table_ref[b] + offs[b]).write(v) };
                 offs[b] += 1;
             }
+            offs
         });
+        // Cross-check of the written-slot count: the prefix scan seeds
+        // each chunk's cursors where the previous chunk ends, so the
+        // last chunk must finish exactly at every bucket's occupancy —
+        // i.e. all `data.len()` slots written once, none skipped.  The
+        // asserts compile out of release builds.
+        if let Some(last) = final_cursors.last() {
+            for b in 0..num_buckets {
+                debug_assert_eq!(
+                    table[b] + last[b],
+                    table[b + 1],
+                    "bucket {b}: scatter wrote {} of {} slots",
+                    last[b],
+                    table[b + 1] - table[b]
+                );
+            }
+        }
     }
     // SAFETY: capacity is exactly `data.len()` and every slot was written.
     unsafe { arena.set_len(data.len()) };
@@ -164,7 +188,13 @@ pub fn divide_native(data: &[i32], num_buckets: usize) -> Result<Divided> {
 }
 
 /// Below this input length the parallel machinery is pure overhead.
+#[cfg(not(miri))]
 const CHUNK_MIN: usize = 64 * 1024;
+/// Under Miri every instruction costs orders of magnitude more, so the
+/// chunk floor drops: the multi-chunk parallel scatter — the unsafe
+/// path worth interpreting — stays covered at tractable input sizes.
+#[cfg(miri)]
+const CHUNK_MIN: usize = 256;
 
 /// Shared raw arena pointer for the scatter waves.
 struct ArenaPtr(*mut i32);
@@ -309,16 +339,38 @@ fn scatter_by_ids(data: &[i32], ids: &[u32], table: &[usize]) -> Result<Vec<i32>
         let ptr_ref = &ptr;
         let work: Vec<((usize, usize), Vec<usize>)> =
             chunk_ranges.into_iter().zip(offsets).collect();
-        par::par_map(work, workers, move |((s, e), mut offs)| {
+        let final_cursors = par::par_map(work, workers, move |((s, e), mut offs)| {
             for (&v, &b) in data[s..e].iter().zip(&ids[s..e]) {
                 let b = b as usize;
+                debug_assert!(
+                    table[b] + offs[b] < table[b + 1],
+                    "id-scatter overran bucket {b}: cursor {} at segment end {}",
+                    table[b] + offs[b],
+                    table[b + 1]
+                );
                 // SAFETY: table[b] + offs[b] stays inside bucket b's
                 // chunk-private range (prefix-scan construction, verified
-                // against `table` above).
+                // against `table` above, span-checked per write in debug
+                // builds).
                 unsafe { ptr_ref.0.add(table[b] + offs[b]).write(v) };
                 offs[b] += 1;
             }
+            offs
         });
+        // Written-slot cross-check, mirroring the native scatter: the
+        // last chunk's final cursors must land on each bucket's
+        // occupancy exactly.
+        if let Some(last) = final_cursors.last() {
+            for b in 0..num_buckets {
+                debug_assert_eq!(
+                    table[b] + last[b],
+                    table[b + 1],
+                    "bucket {b}: id-scatter wrote {} of {} slots",
+                    last[b],
+                    table[b + 1] - table[b]
+                );
+            }
+        }
     }
     // SAFETY: capacity is exactly `data.len()` and every slot was written.
     unsafe { arena.set_len(data.len()) };
@@ -490,10 +542,21 @@ mod tests {
     use crate::config::Distribution;
     use crate::workload;
 
+    /// Size-heavy tests shrink under Miri; with the reduced
+    /// [`CHUNK_MIN`] the shrunken inputs still drive the multi-chunk
+    /// scatter, so the raw-pointer writes run under the interpreter.
+    fn n(full: usize) -> usize {
+        if cfg!(miri) {
+            full / 50
+        } else {
+            full
+        }
+    }
+
     #[test]
     fn conservation_and_order_preservation() {
         for dist in Distribution::ALL {
-            let data = workload::generate(dist, 50_000, 3);
+            let data = workload::generate(dist, n(50_000), 3);
             let d = divide_native(&data, 36).unwrap();
             assert_eq!(d.buckets.total_keys(), data.len(), "{dist:?}");
             assert_eq!(d.sizes().iter().sum::<usize>(), data.len(), "{dist:?}");
@@ -513,7 +576,7 @@ mod tests {
 
     #[test]
     fn in_place_sorted_arena_is_globally_sorted() {
-        let data = workload::random(20_000, 9);
+        let data = workload::random(n(20_000), 9);
         let mut d = divide_native(&data, 144).unwrap();
         for seg in d.buckets.segments_mut() {
             seg.sort_unstable();
@@ -544,7 +607,7 @@ mod tests {
 
     #[test]
     fn sorted_input_gives_contiguous_buckets() {
-        let data = workload::sorted(10_000, 5);
+        let data = workload::sorted(n(10_000), 5);
         let d = divide_native(&data, 18).unwrap();
         // The arena in rank order equals the input directly.
         assert_eq!(d.buckets.arena(), data.as_slice());
@@ -562,13 +625,14 @@ mod tests {
         // (value, step-point) combination we can throw at it.
         use crate::util::rng::Rng;
         let mut rng = Rng::new(0xD117);
-        for _ in 0..200 {
+        let (step_points, probes) = if cfg!(miri) { (8, 40) } else { (200, 300) };
+        for _ in 0..step_points {
             let lo = rng.range_i64(i32::MIN as i64, i32::MAX as i64 - 10) as i32;
             let span = rng.range_i64(1, (i32::MAX as i64 - lo as i64).min(1 << 31)) as i64;
             let p = 1 + rng.below(3000) as usize;
             let sub = ((span / p as i64).max(1)) as i32;
             let f = BucketFn::new(lo, sub, p);
-            for _ in 0..300 {
+            for _ in 0..probes {
                 let v = (lo as i64 + rng.below(span as u64 + 1) as i64) as i32;
                 assert_eq!(
                     f.of(v),
@@ -588,7 +652,7 @@ mod tests {
         // The XLA branch's parallel scatter must land every key exactly
         // where the native pass-3 scatter does, given the same ids.
         for dist in Distribution::ALL {
-            let data = workload::generate(dist, 30_000, 13);
+            let data = workload::generate(dist, n(30_000), 13);
             let d = divide_native(&data, 36).unwrap();
             let classify = BucketFn::new(d.lo, d.sub, 36);
             let ids: Vec<u32> = data.iter().map(|&v| classify.of(v) as u32).collect();
@@ -616,8 +680,8 @@ mod tests {
     fn local_distribution_is_better_balanced_than_random_is_not() {
         // Both local and random spread roughly uniformly over the range —
         // the paper's observation that they behave alike (§6.2).
-        let r = divide_native(&workload::random(100_000, 1), 36).unwrap();
-        let l = divide_native(&workload::local_distribution(100_000, 1), 36).unwrap();
+        let r = divide_native(&workload::random(n(100_000), 1), 36).unwrap();
+        let l = divide_native(&workload::local_distribution(n(100_000), 1), 36).unwrap();
         assert!(r.imbalance() < 1.5);
         assert!(l.imbalance() < 1.5);
     }
@@ -625,7 +689,7 @@ mod tests {
     #[test]
     fn sampled_conservation_and_order_on_every_distribution() {
         for dist in Distribution::ALL.iter().chain(&Distribution::ADVERSARIAL) {
-            let data = workload::generate(*dist, 50_000, 3);
+            let data = workload::generate(*dist, n(50_000), 3);
             let d = divide_sampled(&data, 36).unwrap();
             assert_eq!(d.buckets.total_keys(), data.len(), "{dist:?}");
             // Cross-bucket order still holds (equal keys may straddle
@@ -656,7 +720,7 @@ mod tests {
         // The acceptance headline at unit scope: anti_pivot dumps all but
         // one key into bucket 0 under the fixed rule; sampled splitters
         // keep max bucket ≤ 2× ideal.
-        let data = workload::generate(Distribution::AntiPivot, 60_000, 7);
+        let data = workload::generate(Distribution::AntiPivot, n(60_000), 7);
         let fixed = divide_native(&data, 144).unwrap();
         let sampled = divide_sampled(&data, 144).unwrap();
         assert!(fixed.imbalance() > 2.0, "attack failed: {}", fixed.imbalance());
@@ -667,10 +731,10 @@ mod tests {
     fn sampled_splits_heavy_duplicates_across_tied_buckets() {
         // A constant array is the extreme duplicate case: round-robin tie
         // routing must spread it near-evenly instead of bucket 0.
-        let data = vec![42i32; 36_000];
+        let data = vec![42i32; n(36_000)];
         let d = divide_sampled(&data, 36).unwrap();
         assert!(d.imbalance() <= 1.5, "{}", d.imbalance());
-        assert_eq!(d.buckets.total_keys(), 36_000);
+        assert_eq!(d.buckets.total_keys(), n(36_000));
     }
 
     #[test]
@@ -686,8 +750,8 @@ mod tests {
 
     #[test]
     fn strategy_dispatch_counts_redivides() {
-        let attack = workload::generate(Distribution::AntiPivot, 40_000, 5);
-        let friendly = workload::random(40_000, 5);
+        let attack = workload::generate(Distribution::AntiPivot, n(40_000), 5);
+        let friendly = workload::random(n(40_000), 5);
 
         // PaperFixed and RegularSampling never re-divide.
         let (d, r) = divide_with_strategy(

@@ -97,6 +97,12 @@
 //! println!("{}", report.to_json().dump());
 //! ```
 
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block (with its own SAFETY comment — see `repolint`),
+// and dropped `Result`s/`MustUse` values are hard errors crate-wide.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_must_use)]
+
 pub mod analysis;
 pub mod baselines;
 pub mod campaign;

@@ -124,7 +124,11 @@ impl Pool {
             sh.injector.push_back(task);
             self.injector_len.store(sh.injector.len(), Ordering::SeqCst);
         }
+        // The scan-then-park race window: a worker may be between its
+        // empty scan and its epoch re-check right now.
+        crate::interleave!("executor/push-epoch");
         self.epoch.fetch_add(1, Ordering::SeqCst);
+        crate::interleave!("executor/push-sleepers");
         if self.sleepers.load(Ordering::SeqCst) > 0 {
             // Lock-then-notify: a parking worker holds `shared` from its
             // final epoch re-check until `wait` releases it, so this
@@ -198,6 +202,8 @@ impl Pool {
     fn run_task(&self, task: Task) {
         let Task { run, scope } = task;
         let result = catch_unwind(AssertUnwindSafe(run));
+        // Completion racing the scope waiter's pending re-check.
+        crate::interleave!("executor/task-complete");
         let mut sync = scope.sync.lock().unwrap();
         if let Err(payload) = result {
             if sync.panic.is_none() {
@@ -220,6 +226,7 @@ impl Pool {
     /// fork/join tree, so the threads executing them make progress).
     fn wait_scope(&self, state: &ScopeState) {
         loop {
+            crate::interleave!("executor/wait-scope");
             if state.sync.lock().unwrap().pending == 0 {
                 return;
             }
@@ -259,7 +266,9 @@ impl Pool {
             // bumps the epoch before the re-check below (we rescan), or
             // its later sleeper-count read sees the increment we publish
             // first (it notifies).
+            crate::interleave!("executor/park-announce");
             self.sleepers.fetch_add(1, Ordering::SeqCst);
+            crate::interleave!("executor/park-recheck");
             if self.epoch.load(Ordering::SeqCst) == seen {
                 sh = self.idle.wait(sh).unwrap();
             }

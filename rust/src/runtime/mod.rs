@@ -7,6 +7,11 @@
 //! * XLA/PJRT loading ([`ArtifactRegistry`], [`XlaDivide`], …) — loads
 //!   the AOT-compiled L1/L2 artifacts and runs them from the rust hot
 //!   path; Python never executes at request time.
+//! * [`check`] — the schedule-fuzzing race harness: seeded preemption
+//!   injection behind the zero-cost [`crate::interleave!`] points
+//!   threaded through the executor, `util::par`, the ticket slot
+//!   machine, and the cluster completion slots, plus the exhaustive
+//!   interleaving enumerator the model tests run on.
 //!
 //! XLA flow (see /opt/xla-example/load_hlo/ for the reference wiring):
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file(artifact)` →
@@ -17,6 +22,7 @@
 //! parser reassigns ids (aot.py documents the same constraint).
 
 mod artifact;
+pub mod check;
 mod executor;
 mod xla_exec;
 

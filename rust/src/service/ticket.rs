@@ -73,6 +73,8 @@ impl Slot {
     /// Worker-side: claim the job for execution.  Returns `false` when
     /// the tenant cancelled first — the worker must skip the job.
     pub(crate) fn claim(&self) -> bool {
+        // The claim side of the cancel-vs-claim race.
+        crate::interleave!("ticket/claim");
         let mut st = self.state.lock().unwrap();
         match *st {
             SlotState::Queued => {
@@ -97,6 +99,8 @@ impl Slot {
 
     /// Worker-side: publish the result and wake every waiter.
     pub(crate) fn complete(&self, result: JobResult) {
+        // Publication racing a ticket wait / completion drain.
+        crate::interleave!("ticket/complete");
         let mut st = self.state.lock().unwrap();
         debug_assert!(matches!(*st, SlotState::Claimed), "complete on {st:?}");
         *st = SlotState::Done(Box::new(result));
@@ -206,6 +210,8 @@ impl JobTicket {
     /// exactly once, on the call that actually cancelled; `false` when
     /// the job is already running, finished, or was cancelled before.
     pub fn try_cancel(&self) -> bool {
+        // The cancel side of the cancel-vs-claim race.
+        crate::interleave!("ticket/cancel");
         let mut st = self.slot.state.lock().unwrap();
         if matches!(*st, SlotState::Queued) {
             *st = SlotState::Cancelled;
@@ -332,6 +338,63 @@ mod tests {
         assert_eq!(ticket.wait_timeout(Duration::ZERO).unwrap().id, 2);
     }
 
+    /// Exhaustive model test of the cancel-vs-claim race: run the
+    /// *real* slot machine through every merge order of the tenant's
+    /// ops `[try_cancel, try_cancel]` and the worker's ops
+    /// `[claim, complete-if-claimed]` — all C(4,2) = 6 schedules — and
+    /// assert the race has exactly one winner in each.
+    #[test]
+    fn every_cancel_claim_interleaving_has_exactly_one_winner() {
+        let schedules = crate::runtime::check::interleavings(2, 2);
+        assert_eq!(schedules.len(), 6);
+        for schedule in &schedules {
+            let slot = Slot::new(11);
+            let ticket = JobTicket::new(Arc::clone(&slot));
+            // `true` = next tenant op, `false` = next worker op.
+            let cancel_first = *schedule.first().unwrap();
+            let mut cancel_wins = 0usize;
+            let mut claimed = false;
+            let mut tenant_op = 0usize;
+            let mut worker_op = 0usize;
+            for &is_tenant in schedule {
+                if is_tenant {
+                    if ticket.try_cancel() {
+                        cancel_wins += 1;
+                    }
+                    tenant_op += 1;
+                } else {
+                    match worker_op {
+                        0 => claimed = slot.claim(),
+                        1 => {
+                            // The worker only publishes what it claimed;
+                            // a lost claim means it skipped the job.
+                            if claimed {
+                                slot.complete(result(11));
+                            }
+                        }
+                        _ => unreachable!(),
+                    }
+                    worker_op += 1;
+                }
+            }
+            assert_eq!(tenant_op, 2);
+            assert_eq!(worker_op, 2);
+            // In every schedule the first tenant op and the first worker
+            // op race; whichever ran first wins, and wins exactly once.
+            if cancel_first {
+                assert_eq!(cancel_wins, 1, "cancel-before-claim must win once: {schedule:?}");
+                assert!(!claimed, "a cancelled job must not be claimable: {schedule:?}");
+                assert_eq!(ticket.poll(), TicketStatus::Cancelled);
+                assert!(ticket.try_result().is_none());
+            } else {
+                assert_eq!(cancel_wins, 0, "claim-before-cancel must block it: {schedule:?}");
+                assert!(claimed, "an uncancelled job must claim: {schedule:?}");
+                assert_eq!(ticket.poll(), TicketStatus::Done);
+                assert_eq!(ticket.try_result().expect("result published").id, 11);
+            }
+        }
+    }
+
     #[test]
     fn wait_blocks_until_completion_from_another_thread() {
         let slot = Slot::new(3);
@@ -344,5 +407,68 @@ mod tests {
             let got = waiter.join().unwrap().expect("completion must wake waiter");
             assert_eq!(got.id, 3);
         });
+    }
+
+    /// Slot-level schedule fuzzing (the slot type is crate-private, so
+    /// these live here rather than in `tests/schedules.rs`): the real
+    /// two-thread races, perturbed per seed through the interleave
+    /// points in `claim` / `try_cancel` / `complete`.
+    #[cfg(feature = "schedules")]
+    mod fuzzed {
+        use super::*;
+        use crate::runtime::check;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        #[test]
+        fn cancel_vs_claim_has_one_winner_under_every_seed() {
+            for seed in 0..64u64 {
+                check::fuzz(seed, || {
+                    let slot = Slot::new(seed);
+                    let ticket = JobTicket::new(Arc::clone(&slot));
+                    let cancel_wins = AtomicUsize::new(0);
+                    std::thread::scope(|scope| {
+                        scope.spawn(|| {
+                            if ticket.try_cancel() {
+                                cancel_wins.fetch_add(1, Ordering::SeqCst);
+                            }
+                        });
+                        scope.spawn(|| {
+                            if slot.claim() {
+                                slot.complete(result(seed));
+                            }
+                        });
+                    });
+                    let wins = cancel_wins.load(Ordering::SeqCst);
+                    match ticket.poll() {
+                        TicketStatus::Cancelled => {
+                            assert_eq!(wins, 1, "seed {seed}: cancelled without a cancel win");
+                            assert!(ticket.try_result().is_none(), "seed {seed}: ghost result");
+                        }
+                        TicketStatus::Done => {
+                            assert_eq!(wins, 0, "seed {seed}: done despite a cancel win");
+                            assert!(ticket.try_result().is_some(), "seed {seed}: result lost");
+                        }
+                        other => panic!("seed {seed}: non-terminal state {other:?}"),
+                    }
+                });
+            }
+        }
+
+        #[test]
+        fn completion_wakeup_never_lost_under_any_seed() {
+            for seed in 0..64u64 {
+                check::fuzz(seed, || {
+                    let slot = Slot::new(seed);
+                    let ticket = JobTicket::new(Arc::clone(&slot));
+                    assert!(slot.claim(), "seed {seed}: fresh claim failed");
+                    std::thread::scope(|scope| {
+                        let waiter = scope.spawn(|| ticket.wait_timeout(Duration::from_secs(30)));
+                        scope.spawn(|| slot.complete(result(seed)));
+                        let got = waiter.join().expect("waiter panicked");
+                        assert!(got.is_some(), "seed {seed}: completion wakeup lost");
+                    });
+                });
+            }
+        }
     }
 }

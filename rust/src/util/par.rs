@@ -13,8 +13,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::runtime::Executor;
 
-/// Host parallelism (≥ 1).
+/// Host parallelism (≥ 1).  Under Miri the interpreter multiplies the
+/// cost of every simulated thread, so the pool is capped at two
+/// workers — enough to exercise every cross-thread path, small enough
+/// to keep `cargo miri test` tractable.
 pub fn available_workers() -> usize {
+    if cfg!(miri) {
+        return 2;
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -68,10 +74,14 @@ where
             let input_slots = &input_slots;
             let output_slots = &output_slots;
             s.submit(move || loop {
+                // The index claim: exactly-once slot handoff between
+                // racing runners.
+                crate::interleave!("par/claim");
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
+                crate::interleave!("par/slot-write");
                 // SAFETY: the fetch_add hands index `i` to exactly one
                 // runner; the input slot was initialized above and is
                 // moved out exactly once, the output slot written

@@ -13,6 +13,17 @@ use ohhc_qsort::sim::threaded::{ThreadMode, ThreadedSimulator};
 use ohhc_qsort::topology::ohhc::Ohhc;
 use ohhc_qsort::workload;
 
+/// Interpreter-tractable sizes: Miri still crosses the multi-chunk
+/// scatter (divide shrinks its chunk floor under `cfg(miri)`), so the
+/// pointer-equality and equivalence claims keep their force.
+fn n(full: usize) -> usize {
+    if cfg!(miri) {
+        full / 100
+    } else {
+        full
+    }
+}
+
 /// Reference nested-bucket division — the pre-arena data plane, kept
 /// here as the semantic oracle.
 fn nested_reference(data: &[i32], p: usize) -> (Vec<Vec<i32>>, i32, i32) {
@@ -29,11 +40,12 @@ fn nested_reference(data: &[i32], p: usize) -> (Vec<Vec<i32>>, i32, i32) {
 
 #[test]
 fn flat_divide_matches_nested_reference_on_all_distributions() {
+    let processor_counts: &[usize] = if cfg!(miri) { &[18, 36] } else { &[18, 36, 144, 2304] };
     for dist in Distribution::ALL {
-        for p in [18usize, 36, 144, 2304] {
+        for &p in processor_counts {
             // 150k keys spans multiple scatter chunks on multi-core
             // hosts, so chunk-order stability is exercised too.
-            let data = workload::generate(dist, 150_000, 11);
+            let data = workload::generate(dist, n(150_000), 11);
             let d = divide_native(&data, p).unwrap();
             let (nested, lo, sub) = nested_reference(&data, p);
 
@@ -71,7 +83,7 @@ fn flat_divide_matches_nested_reference_on_all_distributions() {
 #[test]
 fn flat_divide_preserves_cross_bucket_order() {
     for dist in Distribution::ALL {
-        let data = workload::generate(dist, 60_000, 5);
+        let data = workload::generate(dist, n(60_000), 5);
         let d = divide_native(&data, 288).unwrap();
         let mut last_max = i64::MIN;
         for b in d.buckets.iter() {
@@ -84,6 +96,7 @@ fn flat_divide_preserves_cross_bucket_order() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "Direct mode spawns one OS thread per processor")]
 fn direct_and_waves_agree_on_all_observables_d1_to_d3() {
     for d in 1..=3u32 {
         for c in [Construction::FullGroup, Construction::HalfGroup] {
@@ -122,7 +135,7 @@ fn waves_gather_performs_zero_key_copies() {
     // as the divide arena (pointer and capacity identical).
     let net = Ohhc::new(2, Construction::FullGroup).unwrap();
     let plans = gather_plan(&net);
-    let data = workload::random(200_000, 3);
+    let data = workload::random(n(200_000), 3);
     let divided = divide_native(&data, net.total_processors()).unwrap();
     let arena_ptr = divided.buckets.arena().as_ptr();
     let arena_cap = divided.buckets.arena_capacity();

@@ -1,0 +1,98 @@
+//! The repolint gate, as a test: the tree must be clean, and each rule
+//! must fire on a seeded violation fixture — so a silently broken rule
+//! (one that stops firing) fails CI just like a broken invariant.
+
+use std::path::Path;
+
+use ohhc_qsort::analysis::repolint::{lint_source, lint_tree, SPAWN_ALLOWLIST, UNWRAP_BUDGET};
+
+/// The whole crate passes its own invariant lint.  This is the same
+/// check `make lint` and CI run via the `repolint` binary.
+#[test]
+fn the_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = lint_tree(root).expect("src/ must be readable");
+    assert!(
+        violations.is_empty(),
+        "repolint violations:\n{}",
+        violations
+            .iter()
+            .map(|v| format!("  src/{}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// Seeded fixture: an undocumented unsafe block must fire the rule —
+/// and the same code with a SAFETY comment must not.
+#[test]
+fn fixture_undocumented_unsafe_fires() {
+    let bad = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let v = lint_source("sort/fixture.rs", bad);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "unsafe-safety-comment");
+    assert_eq!(v[0].line, 2);
+
+    let good = "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller contract.\n    \
+                unsafe { *p }\n}\n";
+    assert!(lint_source("sort/fixture.rs", good).is_empty());
+}
+
+/// Seeded fixture: wall-clock reads in the event-clock layers fire,
+/// the waiver marker admits a measurement-only site, and the
+/// `sim/threaded.rs` instrument stays exempt.
+#[test]
+fn fixture_wall_clock_fires_in_event_clock_layers() {
+    let bad = "fn tick(&mut self) {\n    self.t = Instant::now();\n}\n";
+    for file in ["sim/des.rs", "cluster/health.rs", "cluster/faults.rs"] {
+        let v = lint_source(file, bad);
+        assert_eq!(v.len(), 1, "{file}: {v:?}");
+        assert_eq!(v[0].rule, "wall-clock", "{file}");
+        assert_eq!(v[0].line, 2, "{file}");
+    }
+    assert!(lint_source("sim/threaded.rs", bad).is_empty(), "instrument must stay exempt");
+    assert!(lint_source("campaign/mod.rs", bad).is_empty(), "out-of-scope file flagged");
+
+    let waived = "fn measure(&mut self) {\n    // repolint: allow(wall-clock) measure.\n    \
+                  self.t = Instant::now();\n}\n";
+    assert!(lint_source("cluster/health.rs", waived).is_empty());
+}
+
+/// Seeded fixture: a raw spawn outside the allowlist fires; the four
+/// deliberate sites stay allowed.
+#[test]
+fn fixture_raw_spawn_outside_allowlist_fires() {
+    let bad = "fn go() {\n    std::thread::spawn(|| work());\n}\n";
+    let v = lint_source("coordinator/mod.rs", bad);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "thread-spawn");
+    for file in SPAWN_ALLOWLIST {
+        assert!(lint_source(file, bad).is_empty(), "{file} is a deliberate spawn site");
+    }
+}
+
+/// Seeded fixture: the unwrap ratchet fires in both directions — over
+/// budget (new unwraps) and under budget (stale table).
+#[test]
+fn fixture_unwrap_ratchet_fires_both_ways() {
+    let over = "fn f(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let v = lint_source("service/brand_new.rs", over);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "unwrap-budget");
+    assert!(v[0].message.contains("exceed"), "{}", v[0].message);
+
+    // service/admission.rs budgets exactly 1: zero unwraps = stale.
+    let (file, budget) = UNWRAP_BUDGET
+        .iter()
+        .find(|(f, _)| *f == "service/admission.rs")
+        .expect("admission.rs stays in the budget table");
+    assert_eq!(*budget, 1);
+    let v = lint_source(file, "fn clean() {}\n");
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert!(v[0].message.contains("stale"), "{}", v[0].message);
+
+    // Unwraps in the trailing test module never count.
+    let test_only = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t(m: &Mutex<u32>) \
+                     -> u32 { *m.lock().unwrap() }\n}\n";
+    assert!(lint_source("service/brand_new.rs", test_only).is_empty());
+}
